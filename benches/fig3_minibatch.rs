@@ -1,0 +1,15 @@
+//! Bench: Fig. 3(a)(b) — mini-batch sweep on USPS-like.
+use csadmm::runtime::NativeEngine;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let traces = csadmm::experiments::fig3::minibatch(quick, &mut NativeEngine::new())
+        .expect("fig3 minibatch");
+    println!(
+        "fig3(a)(b): {} series, wall {:.2?} (series in results/fig3_minibatch.json)",
+        traces.len(),
+        t0.elapsed()
+    );
+}

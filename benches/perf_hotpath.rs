@@ -1,0 +1,139 @@
+//! Bench: hot-path micro-benchmarks for the §Perf pass.
+//!
+//! Measures, per dataset shape: (1) the mini-batch gradient kernel
+//! (native vs PJRT artifact when present), (2) the fused ADMM step,
+//! (3) end-to-end coordinator iterations/second, (4) a full coded
+//! gradient round. Prints ns/op medians so before/after optimization
+//! deltas are visible (recorded in EXPERIMENTS.md §Perf).
+
+use csadmm::coordinator::{Driver, RunConfig};
+use csadmm::data::synthetic_small;
+use csadmm::linalg::Matrix;
+use csadmm::rng::{Rng, Xoshiro256pp};
+use csadmm::runtime::{native_admm_step, Engine, NativeEngine, PjrtEngine};
+use csadmm::util::table::Table;
+use std::time::Instant;
+
+fn time_it<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    // Warm up.
+    for _ in 0..iters.min(16) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn rand_matrix(r: usize, c: usize, rng: &mut Xoshiro256pp) -> Matrix {
+    Matrix::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect()).unwrap()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 200 } else { 2_000 };
+    let mut rng = Xoshiro256pp::seed_from_u64(1234);
+    let mut table = Table::new(
+        "perf_hotpath — medians (ns/op unless stated)",
+        &["op", "shape", "native", "pjrt"],
+    );
+
+    // Per-dataset gradient shapes: (batch rows m, p, d).
+    let shapes = [(8usize, 3usize, 1usize), (8, 64, 10), (8, 22, 2), (64, 64, 10)];
+    let mut pjrt = PjrtEngine::new("artifacts").ok();
+    for (m, p, d) in shapes {
+        let o = rand_matrix(m, p, &mut rng);
+        let t = rand_matrix(m, d, &mut rng);
+        let x = rand_matrix(p, d, &mut rng);
+        let mut native = NativeEngine::new();
+        let t_native = time_it(reps, || {
+            let _ = native.grad_batch(&o, &t, &x).unwrap();
+        });
+        let t_pjrt = match &mut pjrt {
+            Some(eng) if eng.has_grad_artifact(m, p, d) => {
+                let v = time_it(reps, || {
+                    let _ = eng.grad_batch(&o, &t, &x).unwrap();
+                });
+                format!("{v:.0}")
+            }
+            _ => "-".into(),
+        };
+        table.row(&[
+            "grad_batch".into(),
+            format!("{m}x{p}x{d}"),
+            format!("{t_native:.0}"),
+            t_pjrt,
+        ]);
+        // §Perf optimization: the zero-copy row-range path the ECN pool
+        // actually uses (no slice copies, no output allocation).
+        let full_o = rand_matrix(4 * m, p, &mut rng);
+        let full_t = rand_matrix(4 * m, d, &mut rng);
+        let mut out = Matrix::zeros(p, d);
+        let t_range = time_it(reps, || {
+            native
+                .grad_batch_range(&full_o, &full_t, m, 2 * m, &x, &mut out)
+                .unwrap();
+        });
+        table.row(&[
+            "grad_batch_range".into(),
+            format!("{m}x{p}x{d}"),
+            format!("{t_range:.0}"),
+            "-".into(),
+        ]);
+    }
+
+    // Fused ADMM step.
+    for (p, d) in [(3usize, 1usize), (64, 10), (22, 2)] {
+        let x = rand_matrix(p, d, &mut rng);
+        let y = rand_matrix(p, d, &mut rng);
+        let z = rand_matrix(p, d, &mut rng);
+        let g = rand_matrix(p, d, &mut rng);
+        let t_native = time_it(reps, || {
+            let _ = native_admm_step(&x, &y, &z, &g, 0.1, 0.5, 2.0, 10);
+        });
+        let t_pjrt = match &mut pjrt {
+            Some(eng) => {
+                let ok = eng.admm_step(&x, &y, &z, &g, 0.1, 0.5, 2.0, 10).is_ok();
+                if ok {
+                    let v = time_it(reps, || {
+                        let _ = eng.admm_step(&x, &y, &z, &g, 0.1, 0.5, 2.0, 10).unwrap();
+                    });
+                    format!("{v:.0}")
+                } else {
+                    "-".into()
+                }
+            }
+            None => "-".into(),
+        };
+        table.row(&[
+            "admm_step".into(),
+            format!("{p}x{d}"),
+            format!("{t_native:.0}"),
+            t_pjrt,
+        ]);
+    }
+
+    // End-to-end coordinator throughput (iterations/second).
+    let ds = synthetic_small(2_000, 100, 0.1, 5);
+    let iters = if quick { 2_000 } else { 10_000 };
+    let cfg = RunConfig {
+        n_agents: 10,
+        k_ecn: 2,
+        minibatch: 8,
+        max_iters: iters,
+        eval_every: iters,
+        ..Default::default()
+    };
+    let mut driver = Driver::new(cfg, &ds).unwrap();
+    let t0 = Instant::now();
+    let _ = driver.run(&mut NativeEngine::new()).unwrap();
+    let e2e = iters as f64 / t0.elapsed().as_secs_f64();
+    table.row(&[
+        "coordinator e2e".into(),
+        format!("{iters} iters"),
+        format!("{e2e:.0} it/s"),
+        "-".into(),
+    ]);
+    table.print();
+}

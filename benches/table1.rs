@@ -1,0 +1,9 @@
+//! Bench: regenerate Table I (dataset inventory) and time generation.
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    csadmm::experiments::table1::run(quick);
+    println!("table1 generated+verified in {:.2?}", t0.elapsed());
+}

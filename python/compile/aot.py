@@ -1,0 +1,95 @@
+"""AOT lowering: JAX/Pallas (L1+L2) → HLO text artifacts for the Rust
+PJRT runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written (matching ``csadmm::runtime::artifact_name``):
+
+* ``grad_{m}x{p}x{d}.hlo.txt``  — ECN gradient kernel per batch shape.
+* ``step_{p}x{d}.hlo.txt``      — fused sI-ADMM update per model shape.
+
+Usage::
+
+    python -m compile.aot --out ../artifacts [--shapes small]
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Model shapes (p, d) of the three Table-I datasets.
+MODEL_SHAPES = [(3, 1), (64, 10), (22, 2)]
+# Per-partition batch sizes the experiments use (per-ECN rows).
+BATCH_SIZES = [2, 3, 4, 6, 8, 12, 16, 24, 32, 64]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_grad(m: int, p: int, d: int) -> str:
+    spec = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.float64)  # noqa: E731
+    lowered = jax.jit(model.grad_fn).lower(spec(m, p), spec(m, d), spec(p, d))
+    return to_hlo_text(lowered)
+
+
+def lower_step(p: int, d: int) -> str:
+    mat = jax.ShapeDtypeStruct((p, d), jnp.float64)
+    scalar = jax.ShapeDtypeStruct((), jnp.float64)
+    lowered = jax.jit(model.admm_step_fn).lower(
+        mat, mat, mat, mat, scalar, scalar, scalar, scalar
+    )
+    return to_hlo_text(lowered)
+
+
+def write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--shapes",
+        default="full",
+        choices=["full", "small"],
+        help="'small' emits only the quickstart shapes (fast CI)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    model_shapes = MODEL_SHAPES if args.shapes == "full" else [(3, 1)]
+    batch_sizes = BATCH_SIZES if args.shapes == "full" else [4, 8]
+
+    for p, d in model_shapes:
+        write(os.path.join(args.out, f"step_{p}x{d}.hlo.txt"), lower_step(p, d))
+        for m in batch_sizes:
+            write(
+                os.path.join(args.out, f"grad_{m}x{p}x{d}.hlo.txt"),
+                lower_grad(m, p, d),
+            )
+    # Stamp for make's up-to-date check.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

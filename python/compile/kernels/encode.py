@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: MDS gradient encoding (Fig. 2 / §III-B).
+
+Each ECN j sends the linear combination ``sum_p B[j, p] * g_p`` of the
+per-partition gradients it holds. Stacking the K partition gradients as
+``G: [K, p*d]``, all K coded messages are one small matmul
+``B @ G : [K, p*d]`` — fused into a single Pallas kernel so a whole
+agent-side encode round is one call.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(b_ref, g_ref, out_ref):
+    out_ref[...] = b_ref[...] @ g_ref[...]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def mds_encode(b, grads, *, interpret=True):
+    """Encode per-partition gradients with the scheme matrix ``B``.
+
+    Args:
+      b: ``[K, K]`` encoding matrix (row j = ECN j's coefficients;
+         zero outside its cyclic support).
+      grads: ``[K, p, d]`` stacked per-partition gradients.
+
+    Returns:
+      ``[K, p, d]`` coded gradients (row j is ECN j's message).
+    """
+    k, p, d = grads.shape
+    flat = grads.reshape(k, p * d)
+    out = pl.pallas_call(
+        _encode_kernel,
+        out_shape=jax.ShapeDtypeStruct((k, p * d), grads.dtype),
+        interpret=interpret,
+    )(b, flat)
+    return out.reshape(k, p, d)
+
+
+def mds_decode_coeffs(b_f):
+    """Solve ``a^T B_F = 1^T`` by least squares (the decode step the
+    Rust coordinator runs natively; exposed here for cross-checking the
+    two implementations in tests).
+
+    Args:
+      b_f: ``[r, K]`` rows of B for the arrived ECNs.
+
+    Returns:
+      ``[r]`` combination coefficients.
+    """
+    gram = b_f @ b_f.T
+    rhs = b_f @ jnp.ones((b_f.shape[1],), b_f.dtype)
+    return jnp.linalg.solve(gram, rhs)

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: the mini-batch least-squares gradient.
+
+The compute hot-spot of the paper's system is the per-ECN gradient
+(Alg. 1 step 17):
+
+    g = (1/m) * O^T (O @ x - T),     O: [m, p], T: [m, d], x: [p, d]
+
+The kernel tiles the batch dimension ``m`` into ``BM``-row blocks that
+live in VMEM (BlockSpec grid over ``m``) and accumulates the partial
+``O_blk^T @ resid_blk`` products into the output ref — the TPU analogue
+of the per-ECN partition loop, with both matmuls in MXU-friendly layout.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's edge
+nodes are generic CPUs; on TPU the same schedule expresses the
+HBM→VMEM pipeline. ``interpret=True`` is mandatory on this CPU-only
+image — real TPU lowering emits a Mosaic custom-call the CPU PJRT
+client cannot execute.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Largest batch tile held in VMEM at once. For the paper's shapes
+# (p <= 64, d <= 10, f64) a 128-row tile keeps the working set
+# (128*p + 128*d + p*d doubles) well under 1 MiB — far below the ~16 MiB
+# VMEM budget, leaving room for double-buffering on real hardware.
+MAX_BLOCK_M = 128
+
+
+def _block_m(m: int) -> int:
+    """Largest divisor of ``m`` that is <= MAX_BLOCK_M (grid must tile
+    the batch exactly)."""
+    bm = min(m, MAX_BLOCK_M)
+    while m % bm != 0:
+        bm -= 1
+    return bm
+
+
+def _grad_kernel(o_ref, t_ref, x_ref, acc_ref):
+    """One grid step: acc += O_blk^T @ (O_blk @ x - T_blk)."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    o = o_ref[...]
+    resid = o @ x_ref[...] - t_ref[...]
+    acc_ref[...] += o.T @ resid
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def lsq_grad(o, t, x, *, interpret=True):
+    """Mean mini-batch gradient ``(1/m) O^T (O x - T)`` via Pallas.
+
+    Args:
+      o: inputs ``[m, p]``.
+      t: targets ``[m, d]``.
+      x: model ``[p, d]``.
+      interpret: keep True on CPU (see module docstring).
+
+    Returns:
+      ``[p, d]`` gradient with the dtype of the inputs.
+    """
+    m, p = o.shape
+    d = t.shape[1]
+    bm = _block_m(m)
+    grid = (m // bm,)
+    acc = pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, p), lambda i: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((p, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((p, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, d), x.dtype),
+        interpret=interpret,
+    )(o, t, x)
+    return acc / m
+
+
+def vmem_footprint_bytes(m: int, p: int, d: int, itemsize: int = 8) -> int:
+    """Estimated per-step VMEM working set of the kernel (perf model for
+    DESIGN.md §Perf; interpret-mode wallclock is NOT a TPU proxy)."""
+    bm = _block_m(m)
+    return itemsize * (bm * p + bm * d + 2 * p * d)
+
+
+def mxu_utilization_estimate(m: int, p: int, d: int) -> float:
+    """Fraction of MXU 128x128 tile lanes the kernel's matmuls fill —
+    the structural efficiency bound for these small shapes."""
+    bm = _block_m(m)
+    # Two matmuls: [bm,p]@[p,d] and [p,bm]@[bm,d]; lane fill is limited
+    # by how much of the 128-wide systolic dimensions p, d and bm cover.
+    fill1 = min(bm, 128) / 128 * min(p, 128) / 128 * min(d, 128) / 128
+    fill2 = min(p, 128) / 128 * min(bm, 128) / 128 * min(d, 128) / 128
+    return max(fill1, fill2)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness reference
+pytest checks every kernel against (the CORE correctness signal of the
+L1 layer)."""
+
+import jax.numpy as jnp
+
+
+def lsq_grad_ref(o, t, x):
+    """Reference mean least-squares gradient ``(1/m) O^T (O x - T)``."""
+    m = o.shape[0]
+    return o.T @ (o @ x - t) / m
+
+
+def mds_encode_ref(b, grads):
+    """Reference MDS encode: ``coded[j] = sum_p B[j,p] grads[p]``."""
+    return jnp.einsum("jk,kpd->jpd", b, grads)
+
+
+def admm_step_ref(x, y, z, g, rho, tau, gamma, inv_n):
+    """Reference fused sI-ADMM update (Eqs. 5a, 5b, 4c):
+
+        x+ = (rho z + tau x + y - g) / (rho + tau)
+        y+ = y + rho gamma (z - x+)
+        z+ = z + inv_n ((x+ - x) - (y+ - y)/rho)
+    """
+    x_new = (rho * z + tau * x + y - g) / (rho + tau)
+    y_new = y + rho * gamma * (z - x_new)
+    z_new = z + inv_n * ((x_new - x) - (y_new - y) / rho)
+    return x_new, y_new, z_new

@@ -1,0 +1,48 @@
+"""L2: the per-agent JAX compute graph.
+
+Two jitted functions are lowered to HLO by :mod:`compile.aot`:
+
+* :func:`grad_fn` — the ECN-side mini-batch gradient, calling the L1
+  Pallas kernel (:mod:`compile.kernels.lsq_grad`) so the kernel lowers
+  into the same HLO module.
+* :func:`admm_step_fn` — the agent-side fused variable update
+  (Eqs. 5a, 5b, 4c) with ρ, τ^k, γ^k and 1/N as runtime scalars, so one
+  artifact serves every iteration and network size.
+
+Everything is float64 (``jax_enable_x64``): the Rust coordinator works
+in f64 and integration tests cross-check PJRT vs native to ≤1e-10.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels.lsq_grad import lsq_grad  # noqa: E402
+
+
+def grad_fn(o, t, x):
+    """ECN gradient: mean least-squares gradient over the batch.
+
+    Returned as a 1-tuple (the AOT bridge lowers with
+    ``return_tuple=True``; the Rust side unwraps with ``to_tuple1``).
+    """
+    return (lsq_grad(o, t, x),)
+
+
+def admm_step_fn(x, y, z, g, rho, tau, gamma, inv_n):
+    """Fused sI-ADMM update (Eqs. 5a, 5b, 4c). Scalars are 0-d f64
+    tensors supplied at call time from the Rust hot path."""
+    x_new = (rho * z + tau * x + y - g) / (rho + tau)
+    y_new = y + rho * gamma * (z - x_new)
+    z_new = z + inv_n * ((x_new - x) - (y_new - y) / rho)
+    return (x_new, y_new, z_new)
+
+
+def loss_fn(o, t, x):
+    """Per-agent loss (Eq. 24): ``1/(2m) ||O x - T||_F^2`` — used by the
+    python-side tests to finite-difference-check the kernel gradient."""
+    m = o.shape[0]
+    resid = o @ x - t
+    return 0.5 * jnp.sum(resid * resid) / m

@@ -1,0 +1,132 @@
+"""L1 kernel correctness: Pallas vs the pure-jnp oracle — the CORE
+correctness signal. Hypothesis sweeps shapes and dtypes."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.encode import mds_decode_coeffs, mds_encode
+from compile.kernels.lsq_grad import (
+    _block_m,
+    lsq_grad,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import lsq_grad_ref, mds_encode_ref
+
+
+def rand(shape, seed, dtype=jnp.float64):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+class TestLsqGrad:
+    @pytest.mark.parametrize(
+        "m,p,d",
+        [
+            (1, 1, 1),
+            (4, 3, 1),
+            (8, 64, 10),
+            (8, 22, 2),
+            (64, 64, 10),
+            (128, 3, 1),
+            (130, 5, 3),  # m not a multiple of MAX_BLOCK_M
+            (256, 22, 2),
+        ],
+    )
+    def test_matches_reference(self, m, p, d):
+        o = rand((m, p), seed=m * 7 + p)
+        t = rand((m, d), seed=m * 11 + d)
+        x = rand((p, d), seed=p * 13 + d)
+        got = lsq_grad(o, t, x)
+        want = lsq_grad_ref(o, t, x)
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(1, 200),
+        p=st.integers(1, 64),
+        d=st.integers(1, 10),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, m, p, d, seed):
+        o = rand((m, p), seed=seed)
+        t = rand((m, d), seed=seed + 1)
+        x = rand((p, d), seed=seed + 2)
+        got = lsq_grad(o, t, x)
+        want = lsq_grad_ref(o, t, x)
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+    def test_dtypes(self, dtype):
+        o = rand((16, 5), 1, dtype)
+        t = rand((16, 2), 2, dtype)
+        x = rand((5, 2), 3, dtype)
+        got = lsq_grad(o, t, x)
+        assert got.dtype == dtype
+        tol = 1e-5 if dtype == jnp.float32 else 1e-12
+        np.testing.assert_allclose(got, lsq_grad_ref(o, t, x), rtol=tol, atol=tol)
+
+    def test_gradient_is_gradient_of_loss(self):
+        # Finite-difference check against the L2 loss.
+        from compile.model import loss_fn
+
+        o = rand((32, 4), 10)
+        t = rand((32, 2), 11)
+        x = rand((4, 2), 12)
+        g = lsq_grad(o, t, x)
+        eps = 1e-6
+        for i in range(4):
+            for j in range(2):
+                dx = jnp.zeros_like(x).at[i, j].set(eps)
+                fd = (loss_fn(o, t, x + dx) - loss_fn(o, t, x - dx)) / (2 * eps)
+                np.testing.assert_allclose(g[i, j], fd, rtol=1e-5, atol=1e-7)
+
+    def test_block_m_divides(self):
+        for m in [1, 7, 128, 130, 1000, 997]:
+            bm = _block_m(m)
+            assert m % bm == 0
+            assert 1 <= bm <= 128
+
+    def test_perf_model_sane(self):
+        # VMEM footprint well under a 16 MiB budget for all paper shapes.
+        for m, p, d in [(512, 64, 10), (512, 22, 2), (512, 3, 1)]:
+            assert vmem_footprint_bytes(m, p, d) < 16 * 2**20 / 4
+        assert 0.0 < mxu_utilization_estimate(128, 64, 10) <= 1.0
+
+
+class TestMdsEncode:
+    def test_matches_reference(self):
+        b = rand((4, 4), 20)
+        grads = rand((4, 5, 3), 21)
+        got = mds_encode(b, grads)
+        np.testing.assert_allclose(got, mds_encode_ref(b, grads), rtol=1e-12)
+
+    def test_paper_fig2_example(self):
+        # g1 = .5 g~1 + g~2 ; g2 = g~2 - g~3 ; g3 = .5 g~1 + g~3.
+        b = jnp.array([[0.5, 1.0, 0.0], [0.0, 1.0, -1.0], [0.5, 0.0, 1.0]])
+        grads = rand((3, 2, 2), 22)
+        coded = mds_encode(b, grads)
+        np.testing.assert_allclose(coded[0], 0.5 * grads[0] + grads[1], rtol=1e-12)
+        np.testing.assert_allclose(coded[1], grads[1] - grads[2], rtol=1e-12)
+        np.testing.assert_allclose(coded[2], 0.5 * grads[0] + grads[2], rtol=1e-12)
+        # Any 2 of 3 recover the sum via decode coefficients.
+        total = grads.sum(axis=0)
+        for pair in [(0, 1), (0, 2), (1, 2)]:
+            bf = b[jnp.array(pair), :]
+            a = mds_decode_coeffs(bf)
+            rec = jnp.tensordot(a, coded[jnp.array(pair)], axes=1)
+            np.testing.assert_allclose(rec, total, rtol=1e-10, atol=1e-10)
+
+    @settings(max_examples=20, deadline=None)
+    @given(k=st.integers(2, 8), pd=st.integers(1, 20), seed=st.integers(0, 10**6))
+    def test_hypothesis_encode(self, k, pd, seed):
+        b = rand((k, k), seed)
+        grads = rand((k, pd, 1), seed + 1)
+        got = mds_encode(b, grads)
+        np.testing.assert_allclose(got, mds_encode_ref(b, grads), rtol=1e-10, atol=1e-10)

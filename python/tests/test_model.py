@@ -1,0 +1,81 @@
+"""L2 model tests: the fused ADMM step algebra and its invariants."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import admm_step_ref
+from compile.model import admm_step_fn, grad_fn, loss_fn
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape))
+
+
+class TestAdmmStep:
+    def test_matches_reference(self):
+        x, y, z, g = (rand((5, 2), s) for s in range(4))
+        args = (0.3, 1.7, 0.9, 0.1)
+        got = admm_step_fn(x, y, z, g, *map(jnp.float64, args))
+        want = admm_step_ref(x, y, z, g, *args)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=1e-12)
+
+    def test_5a_optimality_condition(self):
+        # x+ minimizes <g, x> - <y, x> + rho/2 |z-x|^2 + tau/2 |x-x_old|^2:
+        # g - y - rho (z - x+) + tau (x+ - x_old) = 0.
+        x, y, z, g = (rand((4, 3), s + 10) for s in range(4))
+        rho, tau, gamma, inv_n = 0.7, 2.1, 0.5, 0.2
+        x_new, _, _ = admm_step_fn(
+            x, y, z, g, *map(jnp.float64, (rho, tau, gamma, inv_n))
+        )
+        kkt = g - y - rho * (z - x_new) + tau * (x_new - x)
+        np.testing.assert_allclose(kkt, jnp.zeros_like(kkt), atol=1e-12)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        p=st.integers(1, 32),
+        d=st.integers(1, 8),
+        rho=st.floats(0.01, 5.0),
+        tau=st.floats(0.01, 50.0),
+        gamma=st.floats(0.01, 20.0),
+        n=st.integers(1, 64),
+        seed=st.integers(0, 10**6),
+    )
+    def test_hypothesis_conservation_delta(self, p, d, rho, tau, gamma, n, seed):
+        # The z-update must equal z + ((x+-x) - (y+-y)/rho)/N exactly —
+        # this is what preserves the coordinator's conservation law.
+        x, y, z, g = (rand((p, d), seed + s) for s in range(4))
+        inv_n = 1.0 / n
+        x_new, y_new, z_new = admm_step_fn(
+            x, y, z, g, *map(jnp.float64, (rho, tau, gamma, inv_n))
+        )
+        z_expect = z + inv_n * ((x_new - x) - (y_new - y) / rho)
+        np.testing.assert_allclose(z_new, z_expect, rtol=1e-10, atol=1e-12)
+
+    def test_fixed_point_at_optimum(self):
+        # With g = 0 (zero gradient), y = 0 and x = z, the step is a
+        # no-op: the consensus optimum is a fixed point.
+        x = rand((6, 2), 50)
+        z = x
+        y = jnp.zeros_like(x)
+        g = jnp.zeros_like(x)
+        x_new, y_new, z_new = admm_step_fn(
+            x, y, z, g, *map(jnp.float64, (0.5, 1.0, 1.0, 0.1))
+        )
+        np.testing.assert_allclose(x_new, x, atol=1e-12)
+        np.testing.assert_allclose(y_new, y, atol=1e-12)
+        np.testing.assert_allclose(z_new, z, atol=1e-12)
+
+
+class TestGradFn:
+    def test_returns_tuple_and_matches_autodiff(self):
+        o, t, x = rand((24, 5), 60), rand((24, 2), 61), rand((5, 2), 62)
+        (g,) = grad_fn(o, t, x)
+        auto = jax.grad(loss_fn, argnums=2)(o, t, x)
+        np.testing.assert_allclose(g, auto, rtol=1e-11, atol=1e-11)

@@ -1,0 +1,24 @@
+//! The paper's ADMM algorithms.
+//!
+//! * [`AdmmParams`] — penalty ρ and the Theorem-2 schedules
+//!   `τ^k = c_τ·√k`, `γ^k = c_γ/√k` with the Corollary-1 defaults
+//!   `c_τ = 1/N`, `c_γ = N`.
+//! * [`ConsensusState`] — per-agent `(x_i, y_i)` plus the token's global
+//!   `z`, with the I-ADMM conservation invariant
+//!   `N·z = Σ_i (x_i − y_i/ρ)` checked in tests.
+//! * [`iadmm`] — exact incremental ADMM (Eqs. 4a–4c), the [34]
+//!   baseline whose x-update solves the full proximal subproblem.
+//! * The stochastic inexact update (Eqs. 5a/5b/4c) itself lives in
+//!   [`crate::runtime::native_admm_step`] so the AOT artifact and the
+//!   native path share one definition; the full sI-ADMM / csI-ADMM
+//!   drivers (Algorithms 1 and 2) are in [`crate::coordinator`].
+
+mod iadmm;
+mod lagrangian;
+mod params;
+mod state;
+
+pub use iadmm::iadmm_step;
+pub use lagrangian::augmented_lagrangian;
+pub use params::AdmmParams;
+pub use state::ConsensusState;

@@ -1,0 +1,98 @@
+//! ADMM parameter schedules (Theorem 2, Corollary 1).
+
+/// Penalty and step-size schedules for (c)sI-ADMM.
+///
+/// Theorem 2 requires `τ^k = c_τ √k`, `γ^k = c_γ/√k` with
+/// `c_τ > 2/((N+1)N)` and `1/(μ−3ρ) < c_γ < 1/ρ`; Corollary 1 fixes
+/// `c_τ = 1/N`, `c_γ = N` for the O(1/υ²) communication bound. Those
+/// are the defaults of [`AdmmParams::for_network`].
+#[derive(Clone, Debug)]
+pub struct AdmmParams {
+    /// Augmented-Lagrangian penalty ρ.
+    pub rho: f64,
+    /// τ-schedule constant.
+    pub c_tau: f64,
+    /// γ-schedule constant.
+    pub c_gamma: f64,
+}
+
+impl AdmmParams {
+    /// Corollary-1 defaults for an N-agent network.
+    pub fn for_network(n: usize, rho: f64) -> Self {
+        assert!(n > 0 && rho > 0.0);
+        Self { rho, c_tau: 1.0 / n as f64, c_gamma: n as f64 }
+    }
+
+    /// Proximal weight `τ^k = c_τ √k` (k ≥ 1).
+    pub fn tau(&self, k: usize) -> f64 {
+        self.c_tau * (k as f64).sqrt()
+    }
+
+    /// Dual step size `γ^k = c_γ / √k` (k ≥ 1).
+    pub fn gamma(&self, k: usize) -> f64 {
+        self.c_gamma / (k as f64).sqrt()
+    }
+
+    /// Check the Theorem-2 constraint set (18) against a strong-
+    /// convexity constant μ; returns the violated constraints (empty ⇒
+    /// all satisfied). Used by config validation to warn users running
+    /// outside the analyzed regime.
+    pub fn check_constraints(&self, n: usize, mu: f64) -> Vec<String> {
+        let mut v = vec![];
+        if !(mu > 3.0 * self.rho) {
+            v.push(format!("need mu > 3*rho: mu={mu}, rho={}", self.rho));
+        }
+        let lo = 2.0 / ((n as f64 + 1.0) * n as f64);
+        if !(self.c_tau > lo) {
+            v.push(format!("need c_tau > 2/((N+1)N) = {lo}: c_tau={}", self.c_tau));
+        }
+        if mu > 3.0 * self.rho {
+            let lower = 1.0 / (mu - 3.0 * self.rho);
+            let upper = 1.0 / self.rho;
+            if !(self.c_gamma > lower && self.c_gamma < upper) {
+                v.push(format!(
+                    "need 1/(mu-3rho) < c_gamma < 1/rho: ({lower}, {upper}), c_gamma={}",
+                    self.c_gamma
+                ));
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_follow_sqrt_k() {
+        let p = AdmmParams::for_network(10, 0.05);
+        assert!((p.tau(1) - 0.1).abs() < 1e-12);
+        assert!((p.tau(4) - 0.2).abs() < 1e-12);
+        assert!((p.gamma(1) - 10.0).abs() < 1e-12);
+        assert!((p.gamma(100) - 1.0).abs() < 1e-12);
+        // tau grows, gamma decays.
+        assert!(p.tau(100) > p.tau(10));
+        assert!(p.gamma(100) < p.gamma(10));
+    }
+
+    #[test]
+    fn corollary1_defaults() {
+        let p = AdmmParams::for_network(8, 0.1);
+        assert!((p.c_tau - 0.125).abs() < 1e-12);
+        assert!((p.c_gamma - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constraint_check() {
+        // Satisfiable setting: rho small, mu big.
+        let p = AdmmParams { rho: 0.01, c_tau: 0.2, c_gamma: 50.0 };
+        assert!(p.check_constraints(5, 1.0).is_empty());
+        // mu too small.
+        let v = p.check_constraints(5, 0.02);
+        assert!(!v.is_empty());
+        // c_gamma out of band.
+        let p2 = AdmmParams { rho: 0.01, c_tau: 0.2, c_gamma: 200.0 };
+        assert!(!p2.check_constraints(5, 1.0).is_empty());
+    }
+}

@@ -1,0 +1,101 @@
+//! Consensus state: per-agent primal/dual pairs and the token's global
+//! variable.
+
+use crate::linalg::Matrix;
+
+/// Full algorithm state for N agents with model shape (p, d).
+///
+/// Initialization follows the paper: `x_i¹ = y_i¹ = z¹ = 0`, which
+/// establishes the conservation law `N·z^k = Σ_i (x_i^k − y_i^k/ρ)`
+/// preserved by every (4c)-style z-update — the key structural
+/// invariant of incremental ADMM (it makes the single-token z a running
+/// average of the agents' local models).
+#[derive(Clone, Debug)]
+pub struct ConsensusState {
+    pub x: Vec<Matrix>,
+    pub y: Vec<Matrix>,
+    pub z: Matrix,
+}
+
+impl ConsensusState {
+    /// All-zeros initialization.
+    pub fn zeros(n: usize, p: usize, d: usize) -> Self {
+        Self {
+            x: (0..n).map(|_| Matrix::zeros(p, d)).collect(),
+            y: (0..n).map(|_| Matrix::zeros(p, d)).collect(),
+            z: Matrix::zeros(p, d),
+        }
+    }
+
+    /// Number of agents.
+    pub fn n(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Conservation residual `‖Σ_i (x_i − y_i/ρ) − N z‖` — zero (to fp
+    /// round-off) under exact (4c) updates.
+    pub fn conservation_residual(&self, rho: f64) -> f64 {
+        let (p, d) = self.z.shape();
+        let mut acc = Matrix::zeros(p, d);
+        for (x, y) in self.x.iter().zip(&self.y) {
+            acc += x;
+            acc.add_scaled(-1.0 / rho, y);
+        }
+        acc.add_scaled(-(self.n() as f64), &self.z);
+        acc.norm()
+    }
+
+    /// Consensus residual `(1/N)Σ‖z − x_i‖` (the feasibility gap the
+    /// analysis bounds).
+    pub fn consensus_residual(&self) -> f64 {
+        self.x.iter().map(|x| (&self.z - x).norm()).sum::<f64>() / self.n() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::runtime::native_admm_step;
+    use crate::util::prop::property;
+
+    #[test]
+    fn zeros_satisfy_conservation() {
+        let s = ConsensusState::zeros(5, 3, 2);
+        assert_eq!(s.conservation_residual(0.7), 0.0);
+        assert_eq!(s.consensus_residual(), 0.0);
+    }
+
+    #[test]
+    fn conservation_preserved_by_step_updates() {
+        // Apply random sI-ADMM steps to random agents: the invariant
+        // must hold after every update.
+        property("conservation law", 20, |rng| {
+            let n = 3 + rng.below(6) as usize;
+            let (p, d) = (1 + rng.below(4) as usize, 1 + rng.below(3) as usize);
+            let rho = 0.2 + rng.next_f64();
+            let mut s = ConsensusState::zeros(n, p, d);
+            for k in 1..40usize {
+                let i = rng.below(n as u64) as usize;
+                let g = Matrix::from_vec(
+                    p,
+                    d,
+                    (0..p * d).map(|_| rng.normal()).collect(),
+                )
+                .unwrap();
+                let tau = 0.3 * (k as f64).sqrt();
+                let gamma = (n as f64) / (k as f64).sqrt();
+                let (xn, yn, zn) =
+                    native_admm_step(&s.x[i], &s.y[i], &s.z, &g, rho, tau, gamma, n);
+                s.x[i] = xn;
+                s.y[i] = yn;
+                s.z = zn;
+                assert!(
+                    s.conservation_residual(rho) < 1e-9,
+                    "k={k}: residual {}",
+                    s.conservation_residual(rho)
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,209 @@
+//! Decentralized consensus ADMM (D-ADMM, [14]/[9] node-based form):
+//!
+//! ```text
+//! x_i^{k+1} = argmin_x f_i(x) + ⟨φ_i^k, x⟩ + ρ Σ_{j∈N_i} ‖x − (x_i^k + x_j^k)/2‖²
+//! φ_i^{k+1} = φ_i^k + ρ Σ_{j∈N_i} (x_i^{k+1} − x_j^{k+1})
+//! ```
+//!
+//! For least squares the x-update is a linear solve with the cached
+//! matrix `(OᵀO/b + 2ρ d_i I)`; each agent factors it once.
+
+use super::GossipAlgorithm;
+use crate::error::Result;
+use crate::graph::Topology;
+use crate::linalg::{cholesky_factor, matmul_at_b, CholeskyFactor, Matrix};
+use crate::problem::LeastSquares;
+
+/// D-ADMM baseline.
+pub struct DAdmm {
+    /// Penalty ρ.
+    pub rho: f64,
+    /// Linearized x-update step size; `None` = exact prox solve.
+    ///
+    /// The paper's D-ADMM reference [14] leaves the local solver
+    /// abstract. With quadratic losses an *exact* solve is extremely
+    /// strong (it converges in a handful of gossip rounds); the
+    /// linearized variant (one gradient step per round, COLA-style
+    /// [16]) is the computationally comparable baseline. Both are
+    /// benchmarked — see EXPERIMENTS.md.
+    pub linearize_alpha: Option<f64>,
+    /// Accumulated duals φ_i.
+    phi: Vec<Matrix>,
+    /// Cached per-agent factors and crosses.
+    factors: Vec<CholeskyFactor>,
+    crosses: Vec<Matrix>,
+    ready: bool,
+}
+
+impl DAdmm {
+    /// New D-ADMM with penalty ρ and exact local solves.
+    pub fn new(rho: f64) -> Self {
+        Self { rho, linearize_alpha: None, phi: vec![], factors: vec![], crosses: vec![], ready: false }
+    }
+
+    /// New linearized D-ADMM (one proximal-gradient step per round).
+    pub fn linearized(rho: f64, alpha: f64) -> Self {
+        Self {
+            rho,
+            linearize_alpha: Some(alpha),
+            phi: vec![],
+            factors: vec![],
+            crosses: vec![],
+            ready: false,
+        }
+    }
+
+    fn prepare(&mut self, topo: &Topology, objs: &[LeastSquares], p: usize, d: usize) {
+        self.phi = (0..objs.len()).map(|_| Matrix::zeros(p, d)).collect();
+        if self.linearize_alpha.is_some() {
+            self.ready = true;
+            return; // gradient path needs no factors
+        }
+        for (i, obj) in objs.iter().enumerate() {
+            let o = &obj.data().inputs;
+            let t = &obj.data().targets;
+            let b = obj.data().len() as f64;
+            let mut gram = Matrix::zeros(p, p);
+            matmul_at_b(o, o, &mut gram);
+            gram.scale(1.0 / b);
+            let deg = topo.degree(i) as f64;
+            for r in 0..p {
+                gram[(r, r)] += 2.0 * self.rho * deg;
+            }
+            self.factors.push(cholesky_factor(&gram).expect("SPD"));
+            let mut cross = Matrix::zeros(p, d);
+            matmul_at_b(o, t, &mut cross);
+            cross.scale(1.0 / b);
+            self.crosses.push(cross);
+        }
+        self.ready = true;
+    }
+}
+
+impl GossipAlgorithm for DAdmm {
+    fn label(&self) -> String {
+        if self.linearize_alpha.is_some() {
+            "D-LADMM".into()
+        } else {
+            "D-ADMM".into()
+        }
+    }
+
+    fn step(
+        &mut self,
+        _k: usize,
+        topo: &Topology,
+        objs: &[LeastSquares],
+        xs: &mut [Matrix],
+    ) -> Result<()> {
+        use crate::problem::Objective;
+        let n = xs.len();
+        let (p, d) = xs[0].shape();
+        if !self.ready {
+            self.prepare(topo, objs, p, d);
+        }
+        // x-update (all agents in parallel on the k-th iterates).
+        let mut next = Vec::with_capacity(n);
+        let mut grad = Matrix::zeros(p, d);
+        for i in 0..n {
+            if let Some(alpha) = self.linearize_alpha {
+                // Linearized: x⁺ = (x/α + ρΣ(x_i+x_j) − ∇f − φ) /
+                //                  (1/α + 2ρ d_i).
+                objs[i].grad(&xs[i], &mut grad);
+                let deg = topo.degree(i) as f64;
+                let mut num = xs[i].scaled(1.0 / alpha);
+                for &j in topo.neighbors(i) {
+                    num.add_scaled(self.rho, &xs[i]);
+                    num.add_scaled(self.rho, &xs[j]);
+                }
+                num -= &grad;
+                num -= &self.phi[i];
+                num.scale(1.0 / (1.0 / alpha + 2.0 * self.rho * deg));
+                next.push(num);
+                continue;
+            }
+            // Exact: rhs = OᵀT/b − φ_i + ρ Σ_j (x_i + x_j).
+            let mut rhs = self.crosses[i].clone();
+            rhs -= &self.phi[i];
+            for &j in topo.neighbors(i) {
+                rhs.add_scaled(self.rho, &xs[i]);
+                rhs.add_scaled(self.rho, &xs[j]);
+            }
+            next.push(self.factors[i].solve(&rhs));
+        }
+        // Dual update on the fresh iterates.
+        for i in 0..n {
+            for &j in topo.neighbors(i) {
+                let diff = &next[i] - &next[j];
+                self.phi[i].add_scaled(self.rho, &diff);
+            }
+        }
+        xs.clone_from_slice(&next);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::harness::{comparable_setup, GossipHarness};
+    use super::*;
+    use crate::data::synthetic_small;
+
+    #[test]
+    fn dadmm_converges_to_consensus_optimum() {
+        let ds = synthetic_small(600, 60, 0.05, 115);
+        let (topo, objs, xstar) = comparable_setup(&ds, 5, 0.6, 7).unwrap();
+        let h = GossipHarness {
+            topo,
+            response: Default::default(),
+            comm: Default::default(),
+            max_iters: 400,
+            eval_every: 20,
+            seed: 7,
+        };
+        let trace = h.run(DAdmm::new(0.5), &objs, &xstar, &ds.test).unwrap();
+        let acc = trace.final_accuracy();
+        assert!(acc < 1e-3, "D-ADMM exact updates converge fast, got {acc}");
+    }
+
+    #[test]
+    fn linearized_variant_converges_but_slower() {
+        let ds = synthetic_small(600, 60, 0.05, 117);
+        let (topo, objs, xstar) = comparable_setup(&ds, 5, 0.6, 9).unwrap();
+        let h = GossipHarness {
+            topo,
+            response: Default::default(),
+            comm: Default::default(),
+            max_iters: 400,
+            eval_every: 20,
+            seed: 9,
+        };
+        let exact = h.run(DAdmm::new(0.5), &objs, &xstar, &ds.test).unwrap();
+        let lin = h.run(DAdmm::linearized(0.5, 0.3), &objs, &xstar, &ds.test).unwrap();
+        assert_eq!(lin.label, "D-LADMM");
+        assert!(lin.final_accuracy() < 0.5, "linearized still improves");
+        assert!(
+            exact.final_accuracy() <= lin.final_accuracy(),
+            "exact solves converge at least as fast"
+        );
+    }
+
+    #[test]
+    fn duals_stay_balanced() {
+        // Σ_i φ_i = ρ Σ_i Σ_j (x_i − x_j) = 0 by antisymmetry — the
+        // dual sum must remain (numerically) zero.
+        let ds = synthetic_small(300, 30, 0.05, 116);
+        let (topo, objs, _xstar) = comparable_setup(&ds, 5, 0.6, 8).unwrap();
+        let mut alg = DAdmm::new(0.4);
+        let (p, d) = (3, 1);
+        let mut xs: Vec<Matrix> = (0..5).map(|_| Matrix::zeros(p, d)).collect();
+        for k in 1..=50 {
+            alg.step(k, &topo, &objs, &mut xs).unwrap();
+            let mut sum = Matrix::zeros(p, d);
+            for phi in &alg.phi {
+                sum += phi;
+            }
+            assert!(sum.max_abs() < 1e-9, "dual sum {} at k={k}", sum.max_abs());
+        }
+    }
+}

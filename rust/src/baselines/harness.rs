@@ -1,0 +1,106 @@
+//! Shared harness for the gossip (all-agents-parallel) baselines.
+
+use crate::data::Split;
+use crate::ecn::{CommModel, ResponseModel, SimClock};
+use crate::error::Result;
+use crate::graph::Topology;
+use crate::linalg::Matrix;
+use crate::metrics::{accuracy, test_mse, CommCost, Trace, TracePoint};
+use crate::problem::{LeastSquares, Objective};
+use crate::rng::Xoshiro256pp;
+
+/// One gossip-style decentralized algorithm: holds per-agent state and
+/// advances all agents once per `step`.
+pub trait GossipAlgorithm {
+    /// Algorithm label for traces.
+    fn label(&self) -> String;
+
+    /// Advance one synchronized iteration `k` (1-based). `xs` is the
+    /// per-agent primal state to update in place.
+    fn step(
+        &mut self,
+        k: usize,
+        topo: &Topology,
+        objs: &[LeastSquares],
+        xs: &mut [Matrix],
+    ) -> Result<()>;
+}
+
+/// Runs a [`GossipAlgorithm`] over the same metrics pipeline as the
+/// incremental driver, charging `2E` comm units per iteration and a
+/// max-over-agents response time (agents work in parallel).
+pub struct GossipHarness {
+    pub topo: Topology,
+    pub response: ResponseModel,
+    pub comm: CommModel,
+    pub max_iters: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl GossipHarness {
+    /// Execute `alg`, evaluating accuracy against `xstar`.
+    pub fn run<A: GossipAlgorithm>(
+        &self,
+        mut alg: A,
+        objs: &[LeastSquares],
+        xstar: &Matrix,
+        test: &Split,
+    ) -> Result<Trace> {
+        let n = objs.len();
+        let (p, d) = (xstar.rows(), xstar.cols());
+        let mut xs: Vec<Matrix> = (0..n).map(|_| Matrix::zeros(p, d)).collect();
+        let mut clock = SimClock::new();
+        let mut comm = CommCost::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(self.seed ^ 0x60551);
+        let mut trace = Trace::new(&alg.label());
+        let links = self.topo.num_edges();
+        for k in 1..=self.max_iters {
+            alg.step(k, &self.topo, objs, &mut xs)?;
+            // Every link carries one variable in each direction.
+            comm.charge(2 * links);
+            // Parallel round time: slowest agent compute + slowest link.
+            let mut t_iter: f64 = 0.0;
+            for obj in objs {
+                let t = self.response.base + self.response.per_row * obj.num_examples() as f64;
+                t_iter = t_iter.max(t);
+            }
+            t_iter += self.comm.sample_hops(1, &mut rng);
+            clock.advance(t_iter);
+
+            if k == 1 || k % self.eval_every == 0 || k == self.max_iters {
+                // Gossip consensus estimate: network average of x_i.
+                let mut zbar = Matrix::zeros(p, d);
+                for x in &xs {
+                    zbar.add_scaled(1.0 / n as f64, x);
+                }
+                trace.push(TracePoint {
+                    iter: k,
+                    comm_units: comm.total(),
+                    sim_time: clock.now(),
+                    accuracy: accuracy(&xs, xstar),
+                    test_mse: test_mse(&zbar, test),
+                });
+            }
+        }
+        Ok(trace)
+    }
+}
+
+/// Convenience: build objectives + optimum + harness from a dataset the
+/// same way the incremental driver does (same shards, same topology
+/// seed) so baselines are directly comparable.
+pub fn comparable_setup(
+    ds: &crate::data::Dataset,
+    n_agents: usize,
+    eta: f64,
+    seed: u64,
+) -> Result<(Topology, Vec<LeastSquares>, Matrix)> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let topo = Topology::random_connected(n_agents, eta, &mut rng)?;
+    let shards = crate::data::shard_to_agents(&ds.train, n_agents)?;
+    let objs: Vec<LeastSquares> =
+        shards.into_iter().map(|s| LeastSquares::new(s.data)).collect();
+    let xstar = crate::problem::global_optimum(&objs, 0.0)?;
+    Ok((topo, objs, xstar))
+}

@@ -1,0 +1,24 @@
+//! State-of-the-art baselines the paper compares against (§V-A):
+//!
+//! * [`dgd`] — decentralized gradient descent (Yuan, Ling, Yin [6]).
+//! * [`extra`] — EXTRA, the exact first-order method (Shi et al. [7]).
+//! * [`dadmm`] — decentralized consensus ADMM with neighbor gossip
+//!   (Shi et al. [9] / Mota et al. [14] style node-based recursion).
+//! * W-ADMM [3] is the incremental random-walk variant and runs through
+//!   [`crate::coordinator::Algorithm::WAdmm`].
+//!
+//! All gossip baselines share the [`GossipHarness`]: per iteration every
+//! agent computes locally and exchanges its variable with all one-hop
+//! neighbors, costing `2E` communication units (one unit per direction
+//! per link) — this is exactly why the incremental methods win the
+//! comm-efficiency plots (Fig. 3c/3d).
+
+mod dadmm;
+mod dgd;
+mod extra;
+mod harness;
+
+pub use dadmm::DAdmm;
+pub use dgd::Dgd;
+pub use extra::Extra;
+pub use harness::{comparable_setup, GossipAlgorithm, GossipHarness};

@@ -1,0 +1,109 @@
+//! Derive-free CLI argument parsing (no `clap` offline).
+//!
+//! Grammar: `csadmm <command> [--flag value] [--switch] [positional…]`.
+//! Flags beginning with `--` take a value unless registered as boolean
+//! switches by the caller via [`Args::has`]-style access: a flag
+//! followed by another flag (or nothing) parses as a switch.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand (first positional), if any.
+    pub command: Option<String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    /// `--flag value` pairs and bare `--switch`es (value `""`).
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare switch.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    let take_value = matches!(iter.peek(), Some(next) if !next.starts_with("--"));
+                    let v = if take_value { iter.next().unwrap() } else { String::new() };
+                    out.flags.insert(name.to_string(), v);
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String flag.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Numeric flag.
+    pub fn get_num(&self, name: &str) -> Option<f64> {
+        self.get(name)?.parse().ok()
+    }
+
+    /// Integer flag.
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name)?.parse().ok()
+    }
+
+    /// Boolean switch (present at all).
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("fig3-stragglers --quick --eps 0.01 --out results/x.json extra");
+        assert_eq!(a.command.as_deref(), Some("fig3-stragglers"));
+        assert!(a.has("quick"));
+        assert_eq!(a.get_num("eps"), Some(0.01));
+        assert_eq!(a.get("out"), Some("results/x.json"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --config=exp.toml --seed=7");
+        assert_eq!(a.get("config"), Some("exp.toml"));
+        assert_eq!(a.get_usize("seed"), Some(7));
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse("x --quick --n 5");
+        assert!(a.has("quick"));
+        assert_eq!(a.get_usize("n"), Some(5));
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert!(a.command.is_none());
+        assert!(!a.has("anything"));
+    }
+}

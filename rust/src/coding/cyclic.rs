@@ -1,0 +1,372 @@
+//! Cyclic repetition scheme (Tandon et al. §III-B null-space
+//! construction).
+//!
+//! ECN `j` stores the `S+1` cyclically-consecutive partitions
+//! `{j, j+1, …, j+S} (mod K)` and sends `Σ_t B[j, j+t] · g̃_{j+t}`.
+//!
+//! The encoding matrix `B ∈ R^{K×K}` is built so that every row lies in
+//! the null space of a random `H ∈ R^{S×K}` whose rows sum to zero.
+//! Because `1 ∈ null(H)` and any `R = K − S` rows of `B` generically
+//! span all of `null(H)` (dimension `K − S`), the all-ones vector is in
+//! the row span of **any** R responses: decoding solves
+//! `aᵀ B_F = 1ᵀ` by least squares and returns `Σ_f a_f g_f = Σ_p g̃_p`.
+//!
+//! The paper's Fig. 2 example (K=3, S=1):
+//! `g₁ = ½g̃₁ + g̃₂`, `g₂ = g̃₂ − g̃₃`, `g₃ = ½g̃₁ + g̃₃` is one such
+//! matrix (support {1,2}/{2,3}/{3,1}); the tests verify our decoder
+//! recovers the sum from any 2 of those 3 messages.
+
+use super::GradientCode;
+use crate::error::{Error, Result};
+use crate::linalg::{cholesky_solve, lu_solve, Matrix};
+use crate::rng::{Rng, Xoshiro256pp};
+
+/// Cyclic repetition code with Tandon's randomized null-space B.
+#[derive(Clone, Debug)]
+pub struct CyclicRepetition {
+    k: usize,
+    s: usize,
+    /// Dense K×K encoding matrix (row j supported on {j..j+s} mod K).
+    b: Matrix,
+    assignments: Vec<Vec<usize>>,
+}
+
+impl CyclicRepetition {
+    /// Build for K ECNs tolerating S stragglers (any S < K).
+    ///
+    /// Construction retries with fresh randomness in the measure-zero
+    /// event a sub-solve is singular, and *verifies* decodability on a
+    /// set of arrival patterns before returning.
+    pub fn new(k: usize, s: usize, seed: u64) -> Result<Self> {
+        if k == 0 || s >= k {
+            return Err(Error::Coding(format!("cyclic: bad (k={k}, s={s})")));
+        }
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xC7C1_1C0D);
+        for _attempt in 0..16 {
+            match Self::try_construct(k, s, &mut rng) {
+                Ok(b) => {
+                    let assignments =
+                        (0..k).map(|j| (0..=s).map(|t| (j + t) % k).collect()).collect();
+                    let code = Self { k, s, b, assignments };
+                    if code.verify(&mut rng) {
+                        return Ok(code);
+                    }
+                }
+                Err(_) => continue,
+            }
+        }
+        Err(Error::Coding(format!(
+            "cyclic: failed to construct a decodable B for (k={k}, s={s})"
+        )))
+    }
+
+    /// One construction attempt. For S = 0 the identity works (and the
+    /// null-space machinery degenerates).
+    fn try_construct(k: usize, s: usize, rng: &mut Xoshiro256pp) -> Result<Matrix> {
+        if s == 0 {
+            return Ok(Matrix::eye(k));
+        }
+        // H ∈ R^{s×k}, rows sum to zero ⇒ H·1 = 0.
+        let mut h = Matrix::zeros(s, k);
+        for r in 0..s {
+            let mut sum = 0.0;
+            for c in 0..(k - 1) {
+                let v = rng.normal();
+                h[(r, c)] = v;
+                sum += v;
+            }
+            h[(r, k - 1)] = -sum;
+        }
+        // Row j of B: support {j, .., j+s}; first coefficient fixed to 1,
+        // remaining s coefficients solve H[:, rest] · b_rest = −H[:, j].
+        let mut b = Matrix::zeros(k, k);
+        for j in 0..k {
+            let support: Vec<usize> = (0..=s).map(|t| (j + t) % k).collect();
+            let rest = &support[1..];
+            // s×s system.
+            let mut a = Matrix::zeros(s, s);
+            for (ci, &col) in rest.iter().enumerate() {
+                for r in 0..s {
+                    a[(r, ci)] = h[(r, col)];
+                }
+            }
+            let mut rhs = Matrix::zeros(s, 1);
+            for r in 0..s {
+                rhs[(r, 0)] = -h[(r, support[0])];
+            }
+            let coeffs = lu_solve(&a, &rhs)
+                .map_err(|e| Error::Coding(format!("cyclic sub-solve: {e}")))?;
+            b[(j, support[0])] = 1.0;
+            for (ci, &col) in rest.iter().enumerate() {
+                b[(j, col)] = coeffs[(ci, 0)];
+            }
+        }
+        Ok(b)
+    }
+
+    /// Verify decodability: exhaustively for small `C(K, R)`, or on 64
+    /// random arrival patterns otherwise.
+    fn verify(&self, rng: &mut Xoshiro256pp) -> bool {
+        let r = self.r();
+        let patterns = subsets_or_samples(self.k, r, 64, rng);
+        patterns.iter().all(|f| self.decode_coeffs(f).is_ok())
+    }
+
+    /// Solve `aᵀ B_F = 1ᵀ` (least squares via the Gram system
+    /// `B_F B_Fᵀ a = B_F 1`) and check the residual is exact.
+    fn decode_coeffs(&self, arrived_ecns: &[usize]) -> Result<Vec<f64>> {
+        let m = arrived_ecns.len();
+        if m < self.r() {
+            return Err(Error::Coding(format!(
+                "cyclic: need {} responses, got {m}",
+                self.r()
+            )));
+        }
+        let k = self.k;
+        // B_F: m×k.
+        let mut bf = Matrix::zeros(m, k);
+        for (row, &j) in arrived_ecns.iter().enumerate() {
+            for c in 0..k {
+                bf[(row, c)] = self.b[(j, c)];
+            }
+        }
+        // Gram system.
+        let bft = bf.transpose();
+        let gram = bf.matmul(&bft); // m×m
+        let ones = Matrix::full(k, 1, 1.0);
+        let rhs = bf.matmul(&ones); // m×1
+        let a = cholesky_solve(&gram, &rhs)
+            .or_else(|_| lu_solve(&gram, &rhs))
+            .map_err(|e| Error::Coding(format!("cyclic decode solve: {e}")))?;
+        // Verify aᵀ B_F = 1ᵀ exactly (within fp tolerance).
+        let recon = bft.matmul(&a); // k×1
+        for c in 0..k {
+            if (recon[(c, 0)] - 1.0).abs() > 1e-6 {
+                return Err(Error::Coding(format!(
+                    "cyclic: arrival set {arrived_ecns:?} not decodable (residual at {c})"
+                )));
+            }
+        }
+        Ok((0..m).map(|i| a[(i, 0)]).collect())
+    }
+
+    /// The encoding matrix (for inspection / the AOT encode kernel).
+    pub fn matrix(&self) -> &Matrix {
+        &self.b
+    }
+
+    /// Construct directly from a given B (tests / paper's Fig. 2).
+    pub fn from_matrix(s: usize, b: Matrix) -> Result<Self> {
+        let k = b.rows();
+        if b.cols() != k || s >= k {
+            return Err(Error::Coding("from_matrix: bad shape".into()));
+        }
+        let assignments: Vec<Vec<usize>> = (0..k)
+            .map(|j| {
+                (0..k)
+                    .map(|t| (j + t) % k)
+                    .filter(|&c| b[(j, c)] != 0.0)
+                    .collect()
+            })
+            .collect();
+        Ok(Self { k, s, b, assignments })
+    }
+}
+
+/// All C(n, r) subsets when small, else `samples` random r-subsets.
+fn subsets_or_samples(
+    n: usize,
+    r: usize,
+    samples: usize,
+    rng: &mut Xoshiro256pp,
+) -> Vec<Vec<usize>> {
+    fn binom(n: usize, r: usize) -> usize {
+        let mut acc = 1usize;
+        for i in 0..r.min(n - r) {
+            acc = acc * (n - i) / (i + 1);
+        }
+        acc
+    }
+    if binom(n, r) <= 256 {
+        // Exhaustive enumeration.
+        let mut out = vec![];
+        let mut idx: Vec<usize> = (0..r).collect();
+        loop {
+            out.push(idx.clone());
+            // next combination
+            let mut i = r;
+            loop {
+                if i == 0 {
+                    return out;
+                }
+                i -= 1;
+                if idx[i] != i + n - r {
+                    break;
+                }
+            }
+            idx[i] += 1;
+            for j in (i + 1)..r {
+                idx[j] = idx[j - 1] + 1;
+            }
+        }
+    } else {
+        (0..samples)
+            .map(|_| {
+                let mut s = rng.sample_indices(n, r);
+                s.sort_unstable();
+                s
+            })
+            .collect()
+    }
+}
+
+impl GradientCode for CyclicRepetition {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn s(&self) -> usize {
+        self.s
+    }
+
+    fn assignment(&self, ecn: usize) -> &[usize] {
+        &self.assignments[ecn]
+    }
+
+    fn encode(&self, ecn: usize, partial: &[&Matrix]) -> Matrix {
+        let support = &self.assignments[ecn];
+        assert_eq!(partial.len(), support.len(), "encode: partials mismatch");
+        let (p, d) = partial[0].shape();
+        let mut out = Matrix::zeros(p, d);
+        for (t, &part_idx) in support.iter().enumerate() {
+            out.add_scaled(self.b[(ecn, part_idx)], partial[t]);
+        }
+        out
+    }
+
+    fn decode(&self, arrived: &[(usize, Matrix)]) -> Result<Matrix> {
+        // Use the first R arrivals (paper: "until the R-th fast
+        // responded message is received").
+        let take = self.r().min(arrived.len());
+        let ecns: Vec<usize> = arrived[..take].iter().map(|(j, _)| *j).collect();
+        let coeffs = self.decode_coeffs(&ecns)?;
+        let (p, d) = arrived[0].1.shape();
+        let mut out = Matrix::zeros(p, d);
+        for (a, (_, g)) in coeffs.iter().zip(&arrived[..take]) {
+            out.add_scaled(*a, g);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "cyclic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::check_recovers_sum;
+    use super::*;
+    use crate::util::prop::property;
+
+    #[test]
+    fn support_is_cyclic() {
+        let code = CyclicRepetition::new(5, 2, 1).unwrap();
+        assert_eq!(code.assignment(0), &[0, 1, 2]);
+        assert_eq!(code.assignment(3), &[3, 4, 0]);
+        assert_eq!(code.assignment(4), &[4, 0, 1]);
+        // Off-support entries are exactly zero.
+        for j in 0..5 {
+            for c in 0..5 {
+                let on = code.assignment(j).contains(&c);
+                assert_eq!(code.matrix()[(j, c)] != 0.0, on, "B[{j},{c}]");
+            }
+        }
+    }
+
+    #[test]
+    fn recovers_from_any_r_subset() {
+        let mut rng = Xoshiro256pp::seed_from_u64(63);
+        for &(k, s) in &[(2, 1), (3, 1), (4, 1), (5, 2), (6, 2), (7, 3), (6, 5)] {
+            let code = CyclicRepetition::new(k, s, 99).unwrap();
+            check_recovers_sum(&code, &mut rng);
+        }
+    }
+
+    #[test]
+    fn paper_fig2_example() {
+        // g1 = ½g̃1 + g̃2 ; g2 = g̃2 − g̃3 ; g3 = ½g̃1 + g̃3.
+        let b = Matrix::from_rows(&[
+            &[0.5, 1.0, 0.0],
+            &[0.0, 1.0, -1.0],
+            &[0.5, 0.0, 1.0],
+        ]);
+        let code = CyclicRepetition::from_matrix(1, b).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(64);
+        check_recovers_sum(&code, &mut rng);
+        // And explicitly: the fastest-two decode of Fig. 2.
+        let g1 = Matrix::from_rows(&[&[1.0]]);
+        let g2 = Matrix::from_rows(&[&[10.0]]);
+        let g3 = Matrix::from_rows(&[&[100.0]]);
+        let sum = 111.0;
+        let coded = [
+            code.encode(0, &[&g1, &g2]),
+            code.encode(1, &[&g2, &g3]),
+            code.encode(2, &[&g3, &g1]),
+        ];
+        for pair in [[0usize, 1], [0, 2], [1, 2]] {
+            let arrived: Vec<(usize, Matrix)> =
+                pair.iter().map(|&j| (j, coded[j].clone())).collect();
+            let got = code.decode(&arrived).unwrap();
+            assert!((got[(0, 0)] - sum).abs() < 1e-9, "pair {pair:?}: {}", got[(0, 0)]);
+        }
+    }
+
+    #[test]
+    fn rejects_too_few_responses() {
+        let code = CyclicRepetition::new(4, 1, 7).unwrap();
+        let g = Matrix::full(2, 2, 1.0);
+        let arrived = vec![(0usize, g.clone()), (1usize, g)];
+        assert!(code.decode(&arrived).is_err(), "2 < R=3 must fail");
+    }
+
+    #[test]
+    fn s_zero_degenerates_to_identity() {
+        let code = CyclicRepetition::new(4, 0, 7).unwrap();
+        assert_eq!(code.matrix(), &Matrix::eye(4));
+    }
+
+    #[test]
+    fn property_random_configs() {
+        property("cyclic decodes", 12, |rng| {
+            use crate::rng::Rng;
+            let k = 2 + rng.below(7) as usize;
+            let s = rng.below(k as u64) as usize;
+            let code = CyclicRepetition::new(k, s, rng.next_u64()).unwrap();
+            check_recovers_sum(&code, rng);
+        });
+    }
+
+    #[test]
+    fn extra_arrivals_beyond_r_are_fine() {
+        let code = CyclicRepetition::new(5, 2, 3).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(65);
+        use crate::rng::Rng;
+        let parts: Vec<Matrix> = (0..5)
+            .map(|_| Matrix::from_vec(3, 1, (0..3).map(|_| rng.normal()).collect()).unwrap())
+            .collect();
+        let mut expect = Matrix::zeros(3, 1);
+        for p in &parts {
+            expect += p;
+        }
+        let arrived: Vec<(usize, Matrix)> = (0..5)
+            .map(|j| {
+                let partial: Vec<&Matrix> =
+                    code.assignment(j).iter().map(|&pi| &parts[pi]).collect();
+                (j, code.encode(j, &partial))
+            })
+            .collect();
+        let got = code.decode(&arrived).unwrap();
+        assert!(got.max_abs_diff(&expect) < 1e-8);
+    }
+}

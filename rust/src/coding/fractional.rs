@@ -1,0 +1,165 @@
+//! Fractional repetition scheme (Tandon et al. §III-A).
+//!
+//! K ECNs are divided into `K/(S+1)` groups of `S+1`. The K base
+//! partitions are divided into the same number of blocks of `S+1`
+//! consecutive partitions; every ECN in group `g` replicates block `g`
+//! and sends the plain sum of its per-partition gradients. Any
+//! `R = K − S` responders must contain at least one member of every group
+//! (a group has S+1 members and only S can be missing), so decoding is:
+//! pick one responder per group, add them up.
+
+use super::GradientCode;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+/// Fractional repetition code. Requires `(S+1) | K`.
+#[derive(Clone, Debug)]
+pub struct FractionalRepetition {
+    k: usize,
+    s: usize,
+    assignments: Vec<Vec<usize>>,
+}
+
+impl FractionalRepetition {
+    /// Build for K ECNs tolerating S stragglers; `(S+1)` must divide K.
+    pub fn new(k: usize, s: usize) -> Result<Self> {
+        if k == 0 || s >= k {
+            return Err(Error::Coding(format!("fractional: bad (k={k}, s={s})")));
+        }
+        if k % (s + 1) != 0 {
+            return Err(Error::Coding(format!(
+                "fractional repetition needs (S+1)|K, got K={k}, S={s}"
+            )));
+        }
+        let group_size = s + 1;
+        let assignments = (0..k)
+            .map(|j| {
+                let g = j / group_size;
+                // Block g: partitions [g*(S+1), (g+1)*(S+1)).
+                (g * group_size..(g + 1) * group_size).collect()
+            })
+            .collect();
+        Ok(Self { k, s, assignments })
+    }
+
+    /// The group index of an ECN.
+    pub fn group_of(&self, ecn: usize) -> usize {
+        ecn / (self.s + 1)
+    }
+
+    /// Number of groups `K/(S+1)`.
+    pub fn num_groups(&self) -> usize {
+        self.k / (self.s + 1)
+    }
+}
+
+impl GradientCode for FractionalRepetition {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn s(&self) -> usize {
+        self.s
+    }
+
+    fn assignment(&self, ecn: usize) -> &[usize] {
+        &self.assignments[ecn]
+    }
+
+    fn encode(&self, _ecn: usize, partial: &[&Matrix]) -> Matrix {
+        assert_eq!(partial.len(), self.s + 1);
+        let mut out = partial[0].clone();
+        for g in &partial[1..] {
+            out += *g;
+        }
+        out
+    }
+
+    fn decode(&self, arrived: &[(usize, Matrix)]) -> Result<Matrix> {
+        let groups = self.num_groups();
+        let mut have: Vec<Option<&Matrix>> = vec![None; groups];
+        for (ecn, g) in arrived {
+            let grp = self.group_of(*ecn);
+            if have[grp].is_none() {
+                have[grp] = Some(g);
+            }
+        }
+        let mut sum: Option<Matrix> = None;
+        for (grp, rep) in have.iter().enumerate() {
+            let rep = rep.ok_or_else(|| {
+                Error::Coding(format!("fractional: no responder from group {grp}"))
+            })?;
+            match &mut sum {
+                None => sum = Some(rep.clone()),
+                Some(s) => *s += rep,
+            }
+        }
+        sum.ok_or_else(|| Error::Coding("fractional: zero groups".into()))
+    }
+
+    fn name(&self) -> &'static str {
+        "fractional"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::check_recovers_sum;
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+    use crate::util::prop::property;
+
+    #[test]
+    fn divisibility_enforced() {
+        assert!(FractionalRepetition::new(6, 1).is_ok()); // groups of 2
+        assert!(FractionalRepetition::new(6, 2).is_ok()); // groups of 3
+        assert!(FractionalRepetition::new(6, 3).is_err()); // 4 ∤ 6
+        assert!(FractionalRepetition::new(4, 4).is_err()); // s >= k
+    }
+
+    #[test]
+    fn replication_factor_is_s_plus_1() {
+        let code = FractionalRepetition::new(6, 2).unwrap();
+        for j in 0..6 {
+            assert_eq!(code.assignment(j).len(), 3);
+        }
+        // Group members share the same block.
+        assert_eq!(code.assignment(0), code.assignment(1));
+        assert_eq!(code.assignment(0), code.assignment(2));
+        assert_ne!(code.assignment(0), code.assignment(3));
+    }
+
+    #[test]
+    fn recovers_from_any_r_subset() {
+        let mut rng = Xoshiro256pp::seed_from_u64(62);
+        for &(k, s) in &[(2, 1), (4, 1), (6, 1), (6, 2), (8, 3), (9, 2), (12, 3)] {
+            let code = FractionalRepetition::new(k, s).unwrap();
+            check_recovers_sum(&code, &mut rng);
+        }
+    }
+
+    #[test]
+    fn worst_case_group_wipeout_detected() {
+        // If a whole group is missing (more than S stragglers), decode
+        // must fail rather than return a wrong sum.
+        let code = FractionalRepetition::new(4, 1).unwrap();
+        let g = Matrix::full(2, 1, 1.0);
+        // Only responders from group 0 (ECNs 0,1): group 1 missing.
+        let arrived = vec![(0usize, g.clone()), (1usize, g.clone())];
+        assert!(code.decode(&arrived).is_err());
+    }
+
+    #[test]
+    fn property_random_configs() {
+        property("fractional decodes", 20, |rng| {
+            let s = rng.below(3) as usize;
+            let groups = 1 + rng.below(4) as usize;
+            let k = groups * (s + 1);
+            if s >= k {
+                return;
+            }
+            let code = FractionalRepetition::new(k, s).unwrap();
+            check_recovers_sum(&code, rng);
+        });
+    }
+}

@@ -1,0 +1,102 @@
+//! The uncoded baseline: one partition per ECN, decode requires all K
+//! responses (the paper's sI-ADMM / "uncode" scheme in Fig. 3(e)).
+
+use super::GradientCode;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+/// Trivial (K, K) scheme: S = 0.
+#[derive(Clone, Debug)]
+pub struct Uncoded {
+    k: usize,
+    assignments: Vec<Vec<usize>>,
+}
+
+impl Uncoded {
+    /// K ECNs, each holding exactly its own partition.
+    pub fn new(k: usize) -> Result<Self> {
+        if k == 0 {
+            return Err(Error::Coding("uncoded: k must be positive".into()));
+        }
+        Ok(Self { k, assignments: (0..k).map(|j| vec![j]).collect() })
+    }
+}
+
+impl GradientCode for Uncoded {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn s(&self) -> usize {
+        0
+    }
+
+    fn assignment(&self, ecn: usize) -> &[usize] {
+        &self.assignments[ecn]
+    }
+
+    fn encode(&self, _ecn: usize, partial: &[&Matrix]) -> Matrix {
+        assert_eq!(partial.len(), 1, "uncoded ECN holds one partition");
+        partial[0].clone()
+    }
+
+    fn decode(&self, arrived: &[(usize, Matrix)]) -> Result<Matrix> {
+        if arrived.len() < self.k {
+            return Err(Error::Coding(format!(
+                "uncoded needs all {} responses, got {}",
+                self.k,
+                arrived.len()
+            )));
+        }
+        // Deduplicate by ECN id; all K must be present.
+        let mut seen = vec![false; self.k];
+        let mut sum: Option<Matrix> = None;
+        for (ecn, g) in arrived {
+            if seen[*ecn] {
+                continue;
+            }
+            seen[*ecn] = true;
+            match &mut sum {
+                None => sum = Some(g.clone()),
+                Some(s) => *s += g,
+            }
+        }
+        if !seen.iter().all(|&b| b) {
+            return Err(Error::Coding("uncoded: missing some ECN response".into()));
+        }
+        Ok(sum.unwrap())
+    }
+
+    fn name(&self) -> &'static str {
+        "uncoded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::check_recovers_sum;
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn recovers_sum_with_all_responses() {
+        let mut rng = Xoshiro256pp::seed_from_u64(61);
+        for k in [1, 2, 3, 6] {
+            let code = Uncoded::new(k).unwrap();
+            check_recovers_sum(&code, &mut rng);
+        }
+    }
+
+    #[test]
+    fn fails_with_missing_response() {
+        let code = Uncoded::new(3).unwrap();
+        let g = Matrix::full(2, 2, 1.0);
+        let arrived = vec![(0usize, g.clone()), (1usize, g.clone())];
+        assert!(code.decode(&arrived).is_err());
+    }
+
+    #[test]
+    fn zero_k_rejected() {
+        assert!(Uncoded::new(0).is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! Experiment configuration: an INI/TOML-subset parser (no `serde`/
+//! `toml` offline) plus typed conversion into
+//! [`crate::coordinator::RunConfig`].
+//!
+//! Format: `key = value` lines, `[section]` headers, `#`/`;` comments.
+//! Example (`examples/configs/usps.toml` ships with the repo):
+//!
+//! ```text
+//! [run]
+//! algo = csiadmm
+//! scheme = cyclic
+//! dataset = usps
+//! n_agents = 10
+//! k_ecn = 2
+//! s = 1
+//! minibatch = 16
+//! rho = 0.1
+//! max_iters = 4000
+//! ```
+
+mod parser;
+
+pub use parser::{ConfigDoc, Value};
+
+use crate::coding::SchemeKind;
+use crate::coordinator::{Algorithm, RunConfig, TopologyKind};
+use crate::data::DatasetName;
+use crate::ecn::ResponseModel;
+use crate::error::{Error, Result};
+use crate::graph::TraversalKind;
+
+/// Parse a run config (and dataset choice) from a config document's
+/// `[run]` section, starting from defaults.
+pub fn run_config_from_doc(doc: &ConfigDoc) -> Result<(RunConfig, DatasetName)> {
+    let mut cfg = RunConfig::default();
+    let sec = "run";
+    let mut dataset = DatasetName::Synthetic;
+
+    if let Some(v) = doc.get_str(sec, "algo") {
+        cfg.algo = match v.as_str() {
+            "iadmm" => Algorithm::IAdmmExact,
+            "siadmm" => Algorithm::SIAdmm,
+            "wadmm" => Algorithm::WAdmm,
+            "csiadmm" => {
+                let scheme = doc
+                    .get_str(sec, "scheme")
+                    .and_then(|s| SchemeKind::parse(&s))
+                    .unwrap_or(SchemeKind::Cyclic);
+                Algorithm::CsIAdmm(scheme)
+            }
+            other => return Err(Error::Config(format!("unknown algo '{other}'"))),
+        };
+    }
+    if let Some(v) = doc.get_str(sec, "dataset") {
+        dataset = DatasetName::parse(&v)
+            .ok_or_else(|| Error::Config(format!("unknown dataset '{v}'")))?;
+    }
+    if let Some(v) = doc.get_str(sec, "traversal") {
+        cfg.traversal = match v.as_str() {
+            "hamiltonian" => TraversalKind::Hamiltonian,
+            "spc" | "shortest-path" => TraversalKind::ShortestPathCycle,
+            "random-walk" => TraversalKind::RandomWalk,
+            other => return Err(Error::Config(format!("unknown traversal '{other}'"))),
+        };
+    }
+    if let Some(v) = doc.get_str(sec, "topology") {
+        cfg.topology = match v.as_str() {
+            "random" => TopologyKind::Random,
+            "spider" => TopologyKind::Spider,
+            other => return Err(Error::Config(format!("unknown topology '{other}'"))),
+        };
+    }
+    macro_rules! set_num {
+        ($field:ident, $key:literal, $ty:ty) => {
+            if let Some(v) = doc.get_num(sec, $key) {
+                cfg.$field = v as $ty;
+            }
+        };
+    }
+    set_num!(n_agents, "n_agents", usize);
+    set_num!(k_ecn, "k_ecn", usize);
+    set_num!(s_tolerated, "s", usize);
+    set_num!(minibatch, "minibatch", usize);
+    set_num!(rho, "rho", f64);
+    set_num!(eta, "eta", f64);
+    set_num!(max_iters, "max_iters", usize);
+    set_num!(eval_every, "eval_every", usize);
+    set_num!(seed, "seed", u64);
+    if let Some(v) = doc.get_num(sec, "c_tau") {
+        cfg.c_tau = Some(v);
+    }
+    if let Some(v) = doc.get_num(sec, "c_gamma") {
+        cfg.c_gamma = Some(v);
+    }
+    // Straggler / response model.
+    let mut resp = ResponseModel::default();
+    if let Some(v) = doc.get_num("stragglers", "count") {
+        resp.straggler_count = v as usize;
+    }
+    if let Some(v) = doc.get_num("stragglers", "delay") {
+        resp.straggler_delay = v;
+    }
+    if let Some(v) = doc.get_num("stragglers", "per_row") {
+        resp.per_row = v;
+    }
+    cfg.response = resp;
+    Ok((cfg, dataset))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_round_trip() {
+        let text = r#"
+# experiment
+[run]
+algo = csiadmm
+scheme = fractional
+dataset = usps
+n_agents = 8
+k_ecn = 4
+s = 1
+minibatch = 16
+rho = 0.25
+max_iters = 500
+traversal = spc
+
+[stragglers]
+count = 1
+delay = 0.01
+"#;
+        let doc = ConfigDoc::parse(text).unwrap();
+        let (cfg, ds) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.algo, Algorithm::CsIAdmm(SchemeKind::Fractional));
+        assert_eq!(ds, DatasetName::UspsLike);
+        assert_eq!(cfg.n_agents, 8);
+        assert_eq!(cfg.k_ecn, 4);
+        assert_eq!(cfg.s_tolerated, 1);
+        assert!((cfg.rho - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.traversal, TraversalKind::ShortestPathCycle);
+        assert_eq!(cfg.response.straggler_count, 1);
+        assert!((cfg.response.straggler_delay - 0.01).abs() < 1e-15);
+    }
+
+    #[test]
+    fn unknown_algo_rejected() {
+        let doc = ConfigDoc::parse("[run]\nalgo = nope\n").unwrap();
+        assert!(run_config_from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn defaults_without_sections() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let (cfg, ds) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.n_agents, RunConfig::default().n_agents);
+        assert_eq!(ds, DatasetName::Synthetic);
+    }
+}

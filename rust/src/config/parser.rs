@@ -1,0 +1,151 @@
+//! Minimal INI/TOML-subset parser: sections, `key = value`, comments,
+//! strings (optionally quoted), numbers, booleans.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Value {
+        let raw = raw.trim();
+        if (raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2)
+            || (raw.starts_with('\'') && raw.ends_with('\'') && raw.len() >= 2)
+        {
+            return Value::Str(raw[1..raw.len() - 1].to_string());
+        }
+        match raw {
+            "true" => return Value::Bool(true),
+            "false" => return Value::Bool(false),
+            _ => {}
+        }
+        if let Ok(n) = raw.parse::<f64>() {
+            return Value::Num(n);
+        }
+        Value::Str(raw.to_string())
+    }
+}
+
+/// A parsed config document: `section → key → value`. Keys outside any
+/// section land in the `""` section.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigDoc {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl ConfigDoc {
+    /// Parse from text. Errors carry 1-based line numbers.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    return Err(Error::Config(format!(
+                        "line {}: malformed section header '{line}'",
+                        lineno + 1
+                    )));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected 'key = value', got '{line}'", lineno + 1))
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            // Strip trailing comments outside quotes.
+            let mut valpart = line[eq + 1..].trim().to_string();
+            if !valpart.starts_with('"') && !valpart.starts_with('\'') {
+                if let Some(pos) = valpart.find(['#', ';']) {
+                    valpart.truncate(pos);
+                }
+            }
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), Value::parse(&valpart));
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Raw value lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// String lookup (numbers/bools are stringified).
+    pub fn get_str(&self, section: &str, key: &str) -> Option<String> {
+        Some(match self.get(section, key)? {
+            Value::Str(s) => s.clone(),
+            Value::Num(n) => n.to_string(),
+            Value::Bool(b) => b.to_string(),
+        })
+    }
+
+    /// Numeric lookup.
+    pub fn get_num(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            Value::Num(n) => Some(*n),
+            Value::Str(s) => s.parse().ok(),
+            Value::Bool(_) => None,
+        }
+    }
+
+    /// Sections present (tests/validation).
+    pub fn section_names(&self) -> Vec<&str> {
+        self.sections.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = ConfigDoc::parse(
+            "top = 1\n[a]\nx = 2.5\nname = \"hi there\"\nflag = true\n# comment\n[b]\ny = -3 # trailing\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&Value::Num(1.0)));
+        assert_eq!(doc.get_num("a", "x"), Some(2.5));
+        assert_eq!(doc.get_str("a", "name").unwrap(), "hi there");
+        assert_eq!(doc.get("a", "flag"), Some(&Value::Bool(true)));
+        assert_eq!(doc.get_num("b", "y"), Some(-3.0));
+        assert!(doc.get("a", "missing").is_none());
+    }
+
+    #[test]
+    fn malformed_lines_error_with_line_numbers() {
+        let e = ConfigDoc::parse("[run\n").unwrap_err().to_string();
+        assert!(e.contains("line 1"), "{e}");
+        let e2 = ConfigDoc::parse("\njust a line\n").unwrap_err().to_string();
+        assert!(e2.contains("line 2"), "{e2}");
+    }
+
+    #[test]
+    fn quoted_values_keep_hashes() {
+        let doc = ConfigDoc::parse("[s]\nv = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("s", "v").unwrap(), "a#b");
+    }
+}

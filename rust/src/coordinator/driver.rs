@@ -1,0 +1,422 @@
+//! The experiment driver: Algorithm 1 (sI-ADMM) and Algorithm 2
+//! (csI-ADMM) plus the exact I-ADMM and W-ADMM variants, all over the
+//! same network / ECN / metrics substrate.
+
+use crate::admm::{iadmm_step, AdmmParams, ConsensusState};
+use crate::coding::SchemeKind;
+use crate::data::{shard_to_agents, Dataset};
+use crate::ecn::{CommModel, EcnPool, ResponseModel, SimClock};
+use crate::error::{Error, Result};
+use crate::graph::{Topology, Traversal, TraversalKind};
+use crate::metrics::{accuracy, test_mse, CommCost, Trace, TracePoint};
+use crate::problem::{global_optimum, LeastSquares, Objective};
+use crate::rng::Xoshiro256pp;
+use crate::runtime::Engine;
+
+/// Which algorithm the driver runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Exact incremental ADMM (Eqs. 4a–4c) — the [34] baseline.
+    IAdmmExact,
+    /// Mini-batch stochastic incremental ADMM (Algorithm 1).
+    SIAdmm,
+    /// Coded sI-ADMM (Algorithm 2) with the given repetition scheme.
+    CsIAdmm(SchemeKind),
+    /// W-ADMM: the sI-ADMM updates on a random-walk activation order.
+    WAdmm,
+}
+
+impl Algorithm {
+    /// Label used in traces and tables.
+    pub fn label(&self) -> String {
+        match self {
+            Algorithm::IAdmmExact => "I-ADMM".into(),
+            Algorithm::SIAdmm => "sI-ADMM".into(),
+            Algorithm::CsIAdmm(s) => format!("csI-ADMM/{}", s.as_str()),
+            Algorithm::WAdmm => "W-ADMM".into(),
+        }
+    }
+}
+
+/// Network shape for the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Random connected graph with connectivity ratio η (Assumption 1
+    /// holds: the generator plants a Hamiltonian ring).
+    Random,
+    /// Non-Hamiltonian spider graph (Fig. 1b / Fig. 3f experiments);
+    /// forces the shortest-path-cycle traversal.
+    Spider,
+}
+
+/// Full configuration of one experiment run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub algo: Algorithm,
+    pub topology: TopologyKind,
+    pub traversal: TraversalKind,
+    /// N agents.
+    pub n_agents: usize,
+    /// Connectivity ratio η for random topologies.
+    pub eta: f64,
+    /// K ECNs per agent.
+    pub k_ecn: usize,
+    /// Tolerated stragglers S (csI-ADMM code design).
+    pub s_tolerated: usize,
+    /// Mini-batch size M (examples per iteration in the uncoded case;
+    /// csI-ADMM uses M̄ = M/(S+1), Eq. 22).
+    pub minibatch: usize,
+    /// Penalty ρ.
+    pub rho: f64,
+    /// Optional overrides of the Corollary-1 schedule constants.
+    pub c_tau: Option<f64>,
+    pub c_gamma: Option<f64>,
+    /// ECN response-time model (stragglers, ε).
+    pub response: ResponseModel,
+    /// Agent-link communication-time model.
+    pub comm: CommModel,
+    pub max_iters: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Optional token quantization (extension, see
+    /// [`crate::compression`]): the global variable z is stochastically
+    /// quantized to this many bits per entry before each token
+    /// transfer. `None` = exact f64 tokens (the paper's setting).
+    pub quantize_bits: Option<u32>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            algo: Algorithm::SIAdmm,
+            topology: TopologyKind::Random,
+            traversal: TraversalKind::Hamiltonian,
+            n_agents: 10,
+            eta: 0.5,
+            k_ecn: 2,
+            s_tolerated: 0,
+            minibatch: 16,
+            rho: 0.1,
+            c_tau: None,
+            c_gamma: None,
+            response: ResponseModel::default(),
+            comm: CommModel::default(),
+            max_iters: 2_000,
+            eval_every: 20,
+            seed: 1,
+            quantize_bits: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Effective batch M̄ = M/(S+1) (Eq. 22) for coded runs, M otherwise.
+    pub fn effective_minibatch(&self) -> usize {
+        match self.algo {
+            Algorithm::CsIAdmm(_) => self.minibatch / (self.s_tolerated + 1),
+            _ => self.minibatch,
+        }
+    }
+
+    /// Per-partition batch rows (`effective batch / K`).
+    pub fn per_partition_rows(&self) -> Result<usize> {
+        let eff = self.effective_minibatch();
+        if eff == 0 || eff % self.k_ecn != 0 {
+            return Err(Error::Config(format!(
+                "effective minibatch {eff} must be a positive multiple of K={}",
+                self.k_ecn
+            )));
+        }
+        Ok(eff / self.k_ecn)
+    }
+
+    /// Schedule parameters with Corollary-1 defaults.
+    pub fn params(&self) -> AdmmParams {
+        let mut p = AdmmParams::for_network(self.n_agents, self.rho);
+        if let Some(ct) = self.c_tau {
+            p.c_tau = ct;
+        }
+        if let Some(cg) = self.c_gamma {
+            p.c_gamma = cg;
+        }
+        p
+    }
+}
+
+/// A fully-assembled experiment (network + agents + pools + state).
+pub struct Driver {
+    cfg: RunConfig,
+    topo: Topology,
+    objectives: Vec<LeastSquares>,
+    pools: Vec<EcnPool>,
+    xstar: crate::linalg::Matrix,
+    test: crate::data::Split,
+}
+
+impl Driver {
+    /// Build the experiment from a config and dataset.
+    pub fn new(cfg: RunConfig, ds: &Dataset) -> Result<Self> {
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+        let topo = match cfg.topology {
+            TopologyKind::Random => {
+                Topology::random_connected(cfg.n_agents, cfg.eta, &mut rng)?
+            }
+            TopologyKind::Spider => {
+                // legs*len + 1 == n_agents; pick legs=3.
+                let legs = 3;
+                if (cfg.n_agents - 1) % legs != 0 {
+                    return Err(Error::Config(format!(
+                        "spider topology needs n_agents = 3·len + 1, got {}",
+                        cfg.n_agents
+                    )));
+                }
+                Topology::spider(legs, (cfg.n_agents - 1) / legs)?
+            }
+        };
+        let shards = shard_to_agents(&ds.train, cfg.n_agents)?;
+        let per_part = cfg.per_partition_rows()?;
+        let scheme = match cfg.algo {
+            Algorithm::CsIAdmm(s) => s,
+            _ => SchemeKind::Uncoded,
+        };
+        let s_design = match cfg.algo {
+            Algorithm::CsIAdmm(_) => cfg.s_tolerated,
+            _ => 0,
+        };
+        let mut pools = Vec::with_capacity(cfg.n_agents);
+        let mut objectives = Vec::with_capacity(cfg.n_agents);
+        for shard in shards {
+            let code = scheme.build(cfg.k_ecn, s_design, cfg.seed ^ shard.agent as u64)?;
+            let pool_rng = rng.split();
+            pools.push(EcnPool::new(
+                shard.agent,
+                shard.data.clone(),
+                code,
+                per_part,
+                cfg.response.clone(),
+                pool_rng,
+            )?);
+            objectives.push(LeastSquares::new(shard.data));
+        }
+        let xstar = global_optimum(&objectives, 0.0)?;
+        Ok(Self { cfg, topo, objectives, pools, xstar, test: ds.test.clone() })
+    }
+
+    /// Schedule parameters actually used by `run`: Corollary-1 defaults,
+    /// but with `c_τ` floored at the data's smoothness estimate `L` so
+    /// the first inexact step `1/(ρ + τ¹)` is already contractive.
+    /// (Theorem 2 only lower-bounds `c_τ`, so raising it preserves the
+    /// analyzed regime; without this, unnormalized data with L ≫ 1
+    /// diverges in the first few iterations.)
+    pub fn effective_params(&self) -> AdmmParams {
+        let mut params = self.cfg.params();
+        if self.cfg.c_tau.is_none() {
+            let l_max = self
+                .objectives
+                .iter()
+                .map(|o| o.lipschitz())
+                .fold(0.0_f64, f64::max);
+            params.c_tau = params.c_tau.max(l_max);
+        }
+        params
+    }
+
+    /// The run's network (inspection / tests).
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// The global optimum the accuracy metric references.
+    pub fn xstar(&self) -> &crate::linalg::Matrix {
+        &self.xstar
+    }
+
+    /// Execute the run, producing a metrics trace.
+    pub fn run(&mut self, engine: &mut dyn Engine) -> Result<Trace> {
+        let cfg = self.cfg.clone();
+        let n = cfg.n_agents;
+        let (p, d) = self.objectives[0].dims();
+        let params = self.effective_params();
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xD21E);
+        let traversal_kind = match cfg.algo {
+            Algorithm::WAdmm => TraversalKind::RandomWalk,
+            _ => cfg.traversal,
+        };
+        let mut traversal = Traversal::new(&self.topo, traversal_kind, &mut rng)?;
+        let mut state = ConsensusState::zeros(n, p, d);
+        let mut clock = SimClock::new();
+        let mut comm = CommCost::new();
+        let mut trace = Trace::new(&cfg.algo.label());
+        let mut comm_rng = rng.split();
+        let mut quantizer = cfg
+            .quantize_bits
+            .map(|b| crate::compression::StochasticQuantizer::new(b, cfg.seed ^ 0x5154));
+
+        for k in 1..=cfg.max_iters {
+            let (i, hops) = traversal.next();
+            // Token transfer: one z-variable per hop (optionally
+            // quantized on the wire — extension).
+            if hops > 0 {
+                if let Some(q) = &mut quantizer {
+                    q.quantize(&mut state.z);
+                }
+            }
+            comm.charge(hops);
+            clock.advance(cfg.comm.sample_hops(hops, &mut comm_rng));
+
+            let cycle = (k - 1) / n;
+            match cfg.algo {
+                Algorithm::IAdmmExact => {
+                    // Exact local solve at the agent itself: charge its
+                    // full-shard compute time.
+                    let rows = self.objectives[i].num_examples();
+                    clock.advance(cfg.response.base + cfg.response.per_row * rows as f64);
+                    iadmm_step(&mut state, i, &self.objectives[i], cfg.rho);
+                }
+                Algorithm::SIAdmm | Algorithm::CsIAdmm(_) | Algorithm::WAdmm => {
+                    // Alg. 1/2: broadcast x_i to ECNs, coded gradient
+                    // round, then the inexact proximal update.
+                    let round = self.pools[i].gradient_round(&state.x[i], cycle, engine)?;
+                    clock.advance(round.response_time);
+                    let (xn, yn, zn) = engine.admm_step(
+                        &state.x[i],
+                        &state.y[i],
+                        &state.z,
+                        &round.grad,
+                        cfg.rho,
+                        params.tau(k),
+                        params.gamma(k),
+                        n,
+                    )?;
+                    state.x[i] = xn;
+                    state.y[i] = yn;
+                    state.z = zn;
+                }
+            }
+
+            if k == 1 || k % cfg.eval_every == 0 || k == cfg.max_iters {
+                trace.push(TracePoint {
+                    iter: k,
+                    comm_units: comm.total(),
+                    sim_time: clock.now(),
+                    accuracy: accuracy(&state.x, &self.xstar),
+                    test_mse: test_mse(&state.z, &self.test),
+                });
+            }
+        }
+        Ok(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_small;
+    use crate::runtime::NativeEngine;
+
+    fn base_cfg() -> RunConfig {
+        RunConfig {
+            n_agents: 5,
+            k_ecn: 2,
+            minibatch: 8,
+            rho: 0.3,
+            max_iters: 1_500,
+            eval_every: 50,
+            seed: 11,
+            ..Default::default()
+        }
+    }
+
+    fn ds() -> crate::data::Dataset {
+        synthetic_small(1_000, 100, 0.05, 77)
+    }
+
+    #[test]
+    fn siadmm_converges_on_synthetic() {
+        let mut driver = Driver::new(base_cfg(), &ds()).unwrap();
+        let mut eng = NativeEngine::new();
+        let trace = driver.run(&mut eng).unwrap();
+        let acc = trace.final_accuracy();
+        assert!(acc < 0.15, "sI-ADMM accuracy after 1500 iters: {acc}");
+        // Accuracy decreased substantially from 1.0.
+        assert!(trace.points[0].accuracy > 5.0 * acc);
+    }
+
+    #[test]
+    fn csiadmm_matches_siadmm_convergence_without_stragglers() {
+        let ds = ds();
+        let mut t_si = {
+            let mut d = Driver::new(base_cfg(), &ds).unwrap();
+            d.run(&mut NativeEngine::new()).unwrap()
+        };
+        let cfg = RunConfig {
+            algo: Algorithm::CsIAdmm(SchemeKind::Cyclic),
+            s_tolerated: 1,
+            minibatch: 16, // M̄ = 8, same effective batch as sI with M=8
+            ..base_cfg()
+        };
+        let mut t_cs = {
+            let mut d = Driver::new(cfg, &ds).unwrap();
+            d.run(&mut NativeEngine::new()).unwrap()
+        };
+        let a = t_si.points.pop().unwrap().accuracy;
+        let b = t_cs.points.pop().unwrap().accuracy;
+        assert!(b < 0.2, "coded converges too: {b}");
+        assert!((a.ln() - b.ln()).abs() < 1.5, "similar order: {a} vs {b}");
+    }
+
+    #[test]
+    fn exact_iadmm_beats_stochastic_per_iteration() {
+        let ds = ds();
+        let exact = {
+            let cfg = RunConfig { algo: Algorithm::IAdmmExact, max_iters: 500, ..base_cfg() };
+            Driver::new(cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap()
+        };
+        let stoch = {
+            let cfg = RunConfig { max_iters: 500, ..base_cfg() };
+            Driver::new(cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap()
+        };
+        assert!(exact.final_accuracy() < stoch.final_accuracy());
+        assert!(exact.final_accuracy() < 1e-2);
+    }
+
+    #[test]
+    fn runs_are_reproducible() {
+        let ds = ds();
+        let t1 = Driver::new(base_cfg(), &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+        let t2 = Driver::new(base_cfg(), &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+        assert_eq!(t1.points, t2.points);
+    }
+
+    #[test]
+    fn wadmm_uses_one_unit_per_iteration() {
+        let cfg = RunConfig { algo: Algorithm::WAdmm, max_iters: 200, ..base_cfg() };
+        let trace = Driver::new(cfg, &ds()).unwrap().run(&mut NativeEngine::new()).unwrap();
+        let last = trace.points.last().unwrap();
+        // Random walk: exactly one link per iteration (minus the free
+        // first placement).
+        assert_eq!(last.comm_units, 199.0);
+    }
+
+    #[test]
+    fn bad_minibatch_rejected() {
+        let cfg = RunConfig { minibatch: 7, k_ecn: 2, ..base_cfg() };
+        assert!(Driver::new(cfg, &ds()).is_err());
+    }
+
+    #[test]
+    fn spider_topology_with_spc_traversal_runs() {
+        let cfg = RunConfig {
+            topology: TopologyKind::Spider,
+            traversal: TraversalKind::ShortestPathCycle,
+            n_agents: 7, // 3 legs × 2 + 1
+            max_iters: 700,
+            ..base_cfg()
+        };
+        let trace = Driver::new(cfg, &ds()).unwrap().run(&mut NativeEngine::new()).unwrap();
+        assert!(trace.final_accuracy() < 0.5);
+        // Relays cost extra comm units vs Hamiltonian (700 would be the
+        // no-relay floor).
+        assert!(trace.points.last().unwrap().comm_units > 700.0);
+    }
+}

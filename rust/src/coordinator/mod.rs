@@ -1,0 +1,16 @@
+//! The token-passing coordinator — the paper's Algorithms 1 and 2.
+//!
+//! [`Driver`] wires together the full system: network topology + token
+//! traversal ([`crate::graph`]), per-agent objectives
+//! ([`crate::problem`]), ECN pools with gradient coding
+//! ([`crate::ecn`], [`crate::coding`]), the ADMM state and schedules
+//! ([`crate::admm`]), an execution engine ([`crate::runtime`]) and the
+//! metrics pipeline ([`crate::metrics`]).
+//!
+//! One `Driver::run` call is one experiment run; every stochastic
+//! component draws from a stream split off the run's root seed, so runs
+//! are exactly reproducible.
+
+mod driver;
+
+pub use driver::{Algorithm, Driver, RunConfig, TopologyKind};

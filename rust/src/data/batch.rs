@@ -1,0 +1,108 @@
+//! Circulant mini-batch indexing (Alg. 1 step 16 / Alg. 2 step 15).
+//!
+//! Each ECN walks its partition in fixed-size batches, selecting batch
+//! `I_{i,j}^k = m mod ⌊|ξ_{i,j}|·K_i/M⌋` at cycle index `m = ⌊k/N⌋`.
+//! Equivalently: the partition is pre-cut into `num_batches` batches of
+//! `batch_rows` rows and the cycle index selects one round-robin.
+
+use crate::error::{Error, Result};
+
+/// Round-robin batch cursor over one ECN partition.
+#[derive(Clone, Debug)]
+pub struct BatchCursor {
+    /// Rows of this ECN's (possibly replicated) partition.
+    partition_len: usize,
+    /// Rows per batch on this ECN: `M/K` uncoded, `(S+1)·M̄/K` coded.
+    batch_rows: usize,
+    /// Number of whole batches available.
+    num_batches: usize,
+}
+
+impl BatchCursor {
+    /// Create a cursor. `batch_rows` is the per-ECN batch size; the
+    /// partition must hold at least one whole batch.
+    pub fn new(partition_len: usize, batch_rows: usize) -> Result<Self> {
+        if batch_rows == 0 {
+            return Err(Error::Data("batch_rows must be positive".into()));
+        }
+        let num_batches = partition_len / batch_rows;
+        if num_batches == 0 {
+            return Err(Error::Data(format!(
+                "partition of {partition_len} rows can't fit a batch of {batch_rows}"
+            )));
+        }
+        Ok(Self { partition_len, batch_rows, num_batches })
+    }
+
+    /// Rows per batch.
+    pub fn batch_rows(&self) -> usize {
+        self.batch_rows
+    }
+
+    /// Number of distinct batches (⌊|ξ|/batch_rows⌋).
+    pub fn num_batches(&self) -> usize {
+        self.num_batches
+    }
+
+    /// Batch row-range (relative to the partition) for cycle index `m`:
+    /// the paper's `I = m mod num_batches`.
+    pub fn batch_range(&self, cycle: usize) -> (usize, usize) {
+        let b = cycle % self.num_batches;
+        (b * self.batch_rows, (b + 1) * self.batch_rows)
+    }
+
+    /// Total rows in the partition.
+    pub fn partition_len(&self) -> usize {
+        self.partition_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop::property;
+
+    #[test]
+    fn cursor_cycles_round_robin() {
+        let c = BatchCursor::new(10, 3).unwrap();
+        assert_eq!(c.num_batches(), 3);
+        assert_eq!(c.batch_range(0), (0, 3));
+        assert_eq!(c.batch_range(1), (3, 6));
+        assert_eq!(c.batch_range(2), (6, 9));
+        assert_eq!(c.batch_range(3), (0, 3)); // wraps
+    }
+
+    #[test]
+    fn errors() {
+        assert!(BatchCursor::new(10, 0).is_err());
+        assert!(BatchCursor::new(2, 3).is_err());
+    }
+
+    #[test]
+    fn ranges_always_in_bounds_and_aligned() {
+        property("batch ranges in bounds", 50, |rng| {
+            let batch = 1 + rng.below(32) as usize;
+            let len = batch + rng.below(1000) as usize;
+            let c = BatchCursor::new(len, batch).unwrap();
+            for m in 0..(3 * c.num_batches()) {
+                let (lo, hi) = c.batch_range(m);
+                assert!(hi <= len);
+                assert_eq!(hi - lo, batch);
+                assert_eq!(lo % batch, 0);
+            }
+        });
+    }
+
+    #[test]
+    fn matches_paper_formula() {
+        // Paper: I = m mod ⌊|ξ|·K/M⌋ with per-ECN batch M/K rows; our
+        // num_batches = ⌊|ξ| / (M/K)⌋ is the same quantity.
+        let xi_len = 50;
+        let k = 5;
+        let m_batch = 10; // M
+        let per_ecn = m_batch / k; // M/K = 2
+        let c = BatchCursor::new(xi_len, per_ecn).unwrap();
+        assert_eq!(c.num_batches(), xi_len * k / m_batch);
+    }
+}

@@ -1,0 +1,128 @@
+//! Dataset container.
+
+use crate::linalg::Matrix;
+
+/// Which benchmark dataset (Table I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetName {
+    Synthetic,
+    UspsLike,
+    Ijcnn1Like,
+}
+
+impl DatasetName {
+    /// Table I dimensions `(n_train, n_test, p, d)`.
+    pub fn dims(&self) -> (usize, usize, usize, usize) {
+        match self {
+            DatasetName::Synthetic => (50_400, 5_040, 3, 1),
+            DatasetName::UspsLike => (1_000, 100, 64, 10),
+            DatasetName::Ijcnn1Like => (35_000, 3_500, 22, 2),
+        }
+    }
+
+    /// Display name used in tables/JSON.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DatasetName::Synthetic => "synthetic",
+            DatasetName::UspsLike => "usps",
+            DatasetName::Ijcnn1Like => "ijcnn1",
+        }
+    }
+
+    /// Parse from CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "synthetic" => Some(DatasetName::Synthetic),
+            "usps" | "usps-like" => Some(DatasetName::UspsLike),
+            "ijcnn1" | "ijcnn1-like" => Some(DatasetName::Ijcnn1Like),
+            _ => None,
+        }
+    }
+}
+
+/// One split: inputs `O ∈ R^{n×p}` and targets `T ∈ R^{n×d}`.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub inputs: Matrix,
+    pub targets: Matrix,
+}
+
+impl Split {
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.inputs.rows()
+    }
+
+    /// True when the split holds no examples.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Row subset by indices.
+    pub fn gather(&self, idx: &[usize]) -> Split {
+        Split {
+            inputs: self.inputs.gather_rows(idx),
+            targets: self.targets.gather_rows(idx),
+        }
+    }
+
+    /// Contiguous row range `[lo, hi)`.
+    pub fn slice(&self, lo: usize, hi: usize) -> Split {
+        Split {
+            inputs: self.inputs.slice_rows(lo, hi),
+            targets: self.targets.slice_rows(lo, hi),
+        }
+    }
+}
+
+/// A full dataset: train + test splits and metadata.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: DatasetName,
+    pub train: Split,
+    pub test: Split,
+}
+
+impl Dataset {
+    /// Input dimension p.
+    pub fn p(&self) -> usize {
+        self.train.inputs.cols()
+    }
+
+    /// Output dimension d.
+    pub fn d(&self) -> usize {
+        self.train.targets.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_dims() {
+        assert_eq!(DatasetName::Synthetic.dims(), (50_400, 5_040, 3, 1));
+        assert_eq!(DatasetName::UspsLike.dims(), (1_000, 100, 64, 10));
+        assert_eq!(DatasetName::Ijcnn1Like.dims(), (35_000, 3_500, 22, 2));
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(DatasetName::parse("usps"), Some(DatasetName::UspsLike));
+        assert_eq!(DatasetName::parse("nope"), None);
+    }
+
+    #[test]
+    fn split_gather_slice() {
+        let s = Split {
+            inputs: Matrix::from_rows(&[&[0.0], &[1.0], &[2.0], &[3.0]]),
+            targets: Matrix::from_rows(&[&[0.0], &[10.0], &[20.0], &[30.0]]),
+        };
+        let g = s.gather(&[2, 0]);
+        assert_eq!(g.inputs.row(0), &[2.0]);
+        assert_eq!(g.targets.row(1), &[0.0]);
+        let sl = s.slice(1, 3);
+        assert_eq!(sl.len(), 2);
+        assert_eq!(sl.targets.row(0), &[10.0]);
+    }
+}

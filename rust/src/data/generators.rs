@@ -1,0 +1,260 @@
+//! Dataset generators.
+//!
+//! * [`synthetic`] — the paper's synthetic regression: `x_o ∈ R^{3×1}`,
+//!   inputs i.i.d. standard normal, targets `t = x_oᵀ o + e`,
+//!   `e ~ N(0, σ)` (§V-A).
+//! * [`usps_like`] / [`ijcnn1_like`] — offline stand-ins for USPS and
+//!   ijcnn1 with Table I's exact dimensions (see DESIGN.md
+//!   §Substitutions). Both produce targets from a planted linear model
+//!   plus structured noise, so the decentralized least-squares problem
+//!   has the same optimization geometry class as the real data.
+
+use super::{Dataset, DatasetName, Split};
+use crate::linalg::Matrix;
+use crate::rng::{Rng, Xoshiro256pp};
+
+fn gaussian_matrix(rows: usize, cols: usize, rng: &mut Xoshiro256pp) -> Matrix {
+    Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal()).collect()).unwrap()
+}
+
+/// Generate a planted-linear-model regression dataset:
+/// `T = O · X_o + σ·E` with `O, X_o, E` i.i.d. standard normal, and
+/// optionally a feature-correlation structure to control conditioning.
+fn planted(
+    name: DatasetName,
+    n_train: usize,
+    n_test: usize,
+    p: usize,
+    d: usize,
+    sigma: f64,
+    feature_decay: f64,
+    rng: &mut Xoshiro256pp,
+) -> Dataset {
+    let x_o = gaussian_matrix(p, d, rng);
+    // Feature scaling o_j ← o_j * decay^j emulates the decaying spectrum
+    // of real feature matrices (pixel intensities / engineered features).
+    let scales: Vec<f64> = (0..p).map(|j| feature_decay.powi(j as i32 % 8)).collect();
+    let make_split = |n: usize, rng: &mut Xoshiro256pp| -> Split {
+        let mut inputs = gaussian_matrix(n, p, rng);
+        for r in 0..n {
+            let row = inputs.row_mut(r);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v *= scales[j];
+            }
+        }
+        let mut targets = inputs.matmul(&x_o);
+        for v in targets.as_mut_slice() {
+            *v += sigma * rng.normal();
+        }
+        Split { inputs, targets }
+    };
+    let train = make_split(n_train, rng);
+    let test = make_split(n_test, rng);
+    Dataset { name, train, test }
+}
+
+/// The paper's synthetic dataset (Table I row 1): 50 400 train / 5 040
+/// test, `p = 3`, `d = 1`, noise std `sigma`.
+pub fn synthetic(sigma: f64, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let (ntr, nte, p, d) = DatasetName::Synthetic.dims();
+    planted(DatasetName::Synthetic, ntr, nte, p, d, sigma, 1.0, &mut rng)
+}
+
+/// Scaled-down synthetic for fast unit tests (same structure, fewer rows).
+pub fn synthetic_small(n_train: usize, n_test: usize, sigma: f64, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    planted(DatasetName::Synthetic, n_train, n_test, 3, 1, sigma, 1.0, &mut rng)
+}
+
+/// USPS stand-in (Table I row 2): 1 000 / 100, 64 → 10. Ten class
+/// prototypes + within-class scatter, one-hot-style targets regressed —
+/// the multi-output least-squares task the paper runs on USPS.
+pub fn usps_like(seed: u64) -> Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x5059_5053);
+    let (ntr, nte, p, d) = DatasetName::UspsLike.dims();
+    // Class prototypes: d "digit" centers in feature space, scaled so
+    // the input covariance (and hence the loss smoothness L) stays O(1)
+    // — mirrors the usual [0,1]-pixel normalization of real USPS.
+    let proto_scale = (d as f64 / p as f64).sqrt();
+    let mut prototypes = gaussian_matrix(d, p, &mut rng);
+    prototypes.scale(proto_scale);
+    let make_split = |n: usize, rng: &mut Xoshiro256pp| -> Split {
+        let mut inputs = Matrix::zeros(n, p);
+        let mut targets = Matrix::zeros(n, d);
+        for r in 0..n {
+            let class = rng.below(d as u64) as usize;
+            let proto = prototypes.row(class);
+            let row = inputs.row_mut(r);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = proto[j] + 0.6 * rng.normal();
+            }
+            // Soft one-hot targets (+ label noise), as in regression-on-
+            // classification setups.
+            for c in 0..d {
+                targets[(r, c)] = if c == class { 1.0 } else { 0.0 };
+                targets[(r, c)] += 0.05 * rng.normal();
+            }
+        }
+        Split { inputs, targets }
+    };
+    let train = make_split(ntr, &mut rng);
+    let test = make_split(nte, &mut rng);
+    Dataset { name: DatasetName::UspsLike, train, test }
+}
+
+/// ijcnn1 stand-in (Table I row 3): 35 000 / 3 500, 22 → 2. Two-class
+/// structure with overlapping clusters and a planted decision direction.
+pub fn ijcnn1_like(seed: u64) -> Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x494A_434E);
+    let (ntr, nte, p, d) = DatasetName::Ijcnn1Like.dims();
+    let direction = gaussian_matrix(p, 1, &mut rng);
+    let dir_norm = direction.norm();
+    let make_split = |n: usize, rng: &mut Xoshiro256pp| -> Split {
+        let mut inputs = gaussian_matrix(n, p, rng);
+        let mut targets = Matrix::zeros(n, d);
+        for r in 0..n {
+            // Signed margin along the planted direction decides the class.
+            let margin: f64 = inputs
+                .row(r)
+                .iter()
+                .zip(direction.as_slice())
+                .map(|(a, b)| a * b)
+                .sum::<f64>()
+                / dir_norm;
+            // ijcnn1 is imbalanced (~10% positive): shift the threshold.
+            let pos = margin > 1.2;
+            // Shift positives along the direction for separation.
+            if pos {
+                let row = inputs.row_mut(r);
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v += 0.5 * direction.as_slice()[j] / dir_norm;
+                }
+            }
+            targets[(r, 0)] = if pos { 1.0 } else { 0.0 };
+            targets[(r, 1)] = if pos { 0.0 } else { 1.0 };
+            for c in 0..d {
+                targets[(r, c)] += 0.05 * rng.normal();
+            }
+        }
+        Split { inputs, targets }
+    };
+    let train = make_split(ntr, &mut rng);
+    let test = make_split(nte, &mut rng);
+    Dataset { name: DatasetName::Ijcnn1Like, train, test }
+}
+
+/// Scaled-down USPS-like for fast tests and examples.
+pub fn usps_like_small(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let full = usps_like(seed);
+    Dataset {
+        name: full.name,
+        train: full.train.slice(0, n_train.min(full.train.len())),
+        test: full.test.slice(0, n_test.min(full.test.len())),
+    }
+}
+
+/// Scaled-down ijcnn1-like: generates only the requested rows (the full
+/// 35k generator is cheap but tests shouldn't pay it repeatedly).
+pub fn ijcnn1_like_small(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x494A_434E);
+    let p = 22;
+    let d = 2;
+    let direction = gaussian_matrix(p, 1, &mut rng);
+    let dir_norm = direction.norm();
+    let make_split = |n: usize, rng: &mut Xoshiro256pp| -> Split {
+        let inputs = gaussian_matrix(n, p, rng);
+        let mut targets = Matrix::zeros(n, d);
+        for r in 0..n {
+            let margin: f64 = inputs
+                .row(r)
+                .iter()
+                .zip(direction.as_slice())
+                .map(|(a, b)| a * b)
+                .sum::<f64>()
+                / dir_norm;
+            let pos = margin > 1.2;
+            targets[(r, 0)] = if pos { 1.0 } else { 0.0 };
+            targets[(r, 1)] = if pos { 0.0 } else { 1.0 };
+            for c in 0..d {
+                targets[(r, c)] += 0.05 * rng.normal();
+            }
+        }
+        Split { inputs, targets }
+    };
+    let train = make_split(n_train, &mut rng);
+    let test = make_split(n_test, &mut rng);
+    Dataset { name: DatasetName::Ijcnn1Like, train, test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_dims_match_table1() {
+        let ds = synthetic_small(500, 50, 0.1, 7);
+        assert_eq!(ds.train.len(), 500);
+        assert_eq!(ds.p(), 3);
+        assert_eq!(ds.d(), 1);
+    }
+
+    #[test]
+    fn synthetic_is_nearly_linear() {
+        // With tiny noise, the planted model should fit almost exactly:
+        // residual of the LS solution << target norm.
+        use crate::linalg::cholesky_solve;
+        let ds = synthetic_small(2_000, 100, 0.01, 8);
+        let o = &ds.train.inputs;
+        let t = &ds.train.targets;
+        let mut gram = crate::linalg::Matrix::zeros(3, 3);
+        crate::linalg::matmul_at_b(o, o, &mut gram);
+        let mut rhs = crate::linalg::Matrix::zeros(3, 1);
+        crate::linalg::matmul_at_b(o, t, &mut rhs);
+        let x = cholesky_solve(&gram, &rhs).unwrap();
+        let resid = &o.matmul(&x) - t;
+        assert!(resid.norm() / t.norm() < 0.05);
+    }
+
+    #[test]
+    fn usps_like_small_dims() {
+        let ds = usps_like_small(200, 20, 9);
+        assert_eq!(ds.train.len(), 200);
+        assert_eq!(ds.test.len(), 20);
+        assert_eq!(ds.p(), 64);
+        assert_eq!(ds.d(), 10);
+    }
+
+    #[test]
+    fn usps_targets_are_soft_onehot() {
+        let ds = usps_like_small(100, 10, 10);
+        for r in 0..ds.train.len() {
+            let row = ds.train.targets.row(r);
+            let max = row.iter().cloned().fold(f64::MIN, f64::max);
+            let sum: f64 = row.iter().sum();
+            assert!(max > 0.7, "dominant class signal");
+            assert!((sum - 1.0).abs() < 0.8, "approx one-hot sum, got {sum}");
+        }
+    }
+
+    #[test]
+    fn ijcnn1_like_small_dims_and_imbalance() {
+        let ds = ijcnn1_like_small(2_000, 100, 11);
+        assert_eq!(ds.p(), 22);
+        assert_eq!(ds.d(), 2);
+        let positives = (0..ds.train.len())
+            .filter(|&r| ds.train.targets[(r, 0)] > 0.5)
+            .count();
+        let frac = positives as f64 / ds.train.len() as f64;
+        assert!(frac > 0.02 && frac < 0.35, "imbalanced positives: {frac}");
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = usps_like_small(50, 5, 42);
+        let b = usps_like_small(50, 5, 42);
+        assert_eq!(a.train.inputs, b.train.inputs);
+        let c = usps_like_small(50, 5, 43);
+        assert_ne!(a.train.inputs, c.train.inputs);
+    }
+}

@@ -1,0 +1,34 @@
+//! Datasets, agent sharding, ECN partitioning and mini-batch indexing.
+//!
+//! Table I of the paper:
+//!
+//! | dataset   | #train | #test | p  | d  |
+//! |-----------|--------|-------|----|----|
+//! | synthetic | 50 400 | 5 040 | 3  | 1  |
+//! | USPS      | 1 000  | 100   | 64 | 10 |
+//! | ijcnn1    | 35 000 | 3 500 | 22 | 2  |
+//!
+//! USPS and ijcnn1 are not redistributable in this offline environment;
+//! [`usps_like`] and [`ijcnn1_like`] generate synthetic stand-ins with
+//! identical dimensions and comparable structure (documented in
+//! DESIGN.md §Substitutions). All decentralized-least-squares dynamics
+//! the experiments measure depend only on (n, p, d), conditioning and
+//! noise level, which the generators match.
+//!
+//! Data flows: [`Dataset`] → [`partition::shard_to_agents`] (disjoint
+//! per-agent shards) → [`partition::partition_to_ecns`] (per-ECN
+//! partitions ξ_{i,j}, disjoint for sI-ADMM, replicated per the coding
+//! scheme for csI-ADMM) → [`batch::BatchCursor`] (the circulant batch
+//! index `I_{i,j}^k = m mod ⌊|ξ|·K/M⌋` of Alg. 1 step 16).
+
+mod batch;
+mod dataset;
+mod generators;
+mod partition;
+
+pub use batch::BatchCursor;
+pub use dataset::{Dataset, DatasetName, Split};
+pub use generators::{
+    ijcnn1_like, ijcnn1_like_small, synthetic, synthetic_small, usps_like, usps_like_small,
+};
+pub use partition::{partition_to_ecns, shard_to_agents, AgentShard, EcnPartition};

@@ -1,0 +1,148 @@
+//! Data allocation (Alg. 1 / Alg. 2 steps 2–9).
+//!
+//! * [`shard_to_agents`] — the total dataset is disjointly linked to the
+//!   N agents (§V-A: "both USPS and ijcnn1 data are disjointly linked to
+//!   all agents").
+//! * [`partition_to_ecns`] — each agent divides its shard D_i into K_i
+//!   equal disjoint partitions ξ_{i,j} (Alg. 1 step 4). For csI-ADMM the
+//!   coding scheme then assigns each ECN *multiple* partitions (the
+//!   paper's "(S_i + 1) partitions to each ECN"); that replication map
+//!   lives in [`crate::coding`], which only needs partition indices.
+
+use super::Split;
+use crate::error::{Error, Result};
+
+/// One agent's private shard D_i.
+#[derive(Clone, Debug)]
+pub struct AgentShard {
+    /// Owning agent id.
+    pub agent: usize,
+    /// The shard's data.
+    pub data: Split,
+}
+
+/// One ECN's base partition ξ_{i,j} (by row range into the agent shard).
+#[derive(Clone, Debug)]
+pub struct EcnPartition {
+    /// Owning agent id.
+    pub agent: usize,
+    /// Partition index j ∈ {0..K}.
+    pub index: usize,
+    /// Row range `[lo, hi)` into the agent's shard.
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl EcnPartition {
+    /// Partition size |ξ_{i,j}|.
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// True when the partition holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
+/// Split a training split into N disjoint, near-equal agent shards
+/// (contiguous row blocks; remainder rows go to the first shards).
+pub fn shard_to_agents(train: &Split, n_agents: usize) -> Result<Vec<AgentShard>> {
+    if n_agents == 0 {
+        return Err(Error::Data("need at least one agent".into()));
+    }
+    let n = train.len();
+    if n < n_agents {
+        return Err(Error::Data(format!("{n} examples < {n_agents} agents")));
+    }
+    let base = n / n_agents;
+    let rem = n % n_agents;
+    let mut shards = Vec::with_capacity(n_agents);
+    let mut lo = 0;
+    for i in 0..n_agents {
+        let size = base + usize::from(i < rem);
+        shards.push(AgentShard { agent: i, data: train.slice(lo, lo + size) });
+        lo += size;
+    }
+    Ok(shards)
+}
+
+/// Divide an agent shard of `n_rows` into `k` equal disjoint partitions
+/// ξ_{i,j}. Rows that don't divide evenly are dropped from the tail
+/// (paper: "divide D_i labeled data into K_i equally disjoint
+/// partitions" — equality is required so coded groups align).
+pub fn partition_to_ecns(agent: usize, n_rows: usize, k: usize) -> Result<Vec<EcnPartition>> {
+    if k == 0 {
+        return Err(Error::Data("need at least one ECN".into()));
+    }
+    if n_rows < k {
+        return Err(Error::Data(format!("{n_rows} rows < {k} ECNs")));
+    }
+    let size = n_rows / k;
+    Ok((0..k)
+        .map(|j| EcnPartition { agent, index: j, lo: j * size, hi: (j + 1) * size })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+    use crate::util::prop::property;
+
+    fn split_of(n: usize) -> Split {
+        Split {
+            inputs: Matrix::from_vec(n, 2, (0..2 * n).map(|i| i as f64).collect()).unwrap(),
+            targets: Matrix::from_vec(n, 1, (0..n).map(|i| i as f64).collect()).unwrap(),
+        }
+    }
+
+    #[test]
+    fn shards_are_disjoint_and_cover() {
+        let s = split_of(103);
+        let shards = shard_to_agents(&s, 10).unwrap();
+        assert_eq!(shards.len(), 10);
+        let total: usize = shards.iter().map(|sh| sh.data.len()).sum();
+        assert_eq!(total, 103);
+        // Sizes differ by at most 1.
+        let sizes: Vec<usize> = shards.iter().map(|sh| sh.data.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        // First row of shard 1 follows last row of shard 0.
+        assert_eq!(shards[1].data.targets[(0, 0)], shards[0].data.len() as f64);
+    }
+
+    #[test]
+    fn shard_errors() {
+        let s = split_of(3);
+        assert!(shard_to_agents(&s, 0).is_err());
+        assert!(shard_to_agents(&s, 5).is_err());
+    }
+
+    #[test]
+    fn partitions_equal_and_disjoint() {
+        let parts = partition_to_ecns(2, 100, 3).unwrap();
+        assert_eq!(parts.len(), 3);
+        for p in &parts {
+            assert_eq!(p.len(), 33);
+            assert_eq!(p.agent, 2);
+        }
+        assert_eq!(parts[0].hi, parts[1].lo);
+        assert_eq!(parts[1].hi, parts[2].lo);
+    }
+
+    #[test]
+    fn partition_property_no_overlap_equal_size() {
+        property("ecn partitions disjoint equal", 50, |rng| {
+            let k = 1 + rng.below(8) as usize;
+            let n = k + rng.below(500) as usize;
+            let parts = partition_to_ecns(0, n, k).unwrap();
+            let size = n / k;
+            for (j, p) in parts.iter().enumerate() {
+                assert_eq!(p.len(), size);
+                assert_eq!(p.lo, j * size);
+            }
+            assert!(parts.last().unwrap().hi <= n);
+        });
+    }
+}

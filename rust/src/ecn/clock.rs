@@ -1,0 +1,88 @@
+//! Simulated wall clock and the paper's communication-time model.
+
+use crate::rng::{Rng, Xoshiro256pp};
+
+/// Discrete-event simulated clock (seconds). The experiments advance it
+/// with communication and ECN-response delays; "running time" plots use
+/// its value (§V-A: running time = communication time among agents +
+/// response time for updating all variables).
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    now: f64,
+}
+
+impl SimClock {
+    /// New clock at t = 0.
+    pub fn new() -> Self {
+        Self { now: 0.0 }
+    }
+
+    /// Current simulated time (seconds).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by `dt` seconds (panics on negative dt — events cannot
+    /// run backwards).
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0, "negative time step {dt}");
+        self.now += dt;
+    }
+}
+
+/// Per-link communication-time model: the paper assumes each agent-to-
+/// agent transmission takes `U(lo, hi)` seconds (defaults
+/// `U(10⁻⁵, 10⁻⁴)`).
+#[derive(Clone, Debug)]
+pub struct CommModel {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Default for CommModel {
+    fn default() -> Self {
+        Self { lo: 1e-5, hi: 1e-4 }
+    }
+}
+
+impl CommModel {
+    /// Sample the duration of `hops` consecutive link transmissions.
+    pub fn sample_hops(&self, hops: usize, rng: &mut Xoshiro256pp) -> f64 {
+        (0..hops).map(|_| rng.uniform(self.lo, self.hi)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        c.advance(0.0);
+        c.advance(2.5);
+        assert!((c.now() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative")]
+    fn clock_rejects_negative() {
+        SimClock::new().advance(-1.0);
+    }
+
+    #[test]
+    fn comm_samples_in_range() {
+        let m = CommModel::default();
+        let mut rng = Xoshiro256pp::seed_from_u64(71);
+        for _ in 0..1000 {
+            let t = m.sample_hops(1, &mut rng);
+            assert!(t >= 1e-5 && t < 1e-4, "t={t}");
+        }
+        // Multi-hop sums.
+        let t3 = m.sample_hops(3, &mut rng);
+        assert!(t3 >= 3e-5 && t3 < 3e-4);
+        assert_eq!(m.sample_hops(0, &mut rng), 0.0);
+    }
+}

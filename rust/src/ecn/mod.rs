@@ -1,0 +1,26 @@
+//! Edge-compute-node (ECN) simulation (§III-A/B, §V-A).
+//!
+//! Each agent owns `K` ECNs that compute per-partition mini-batch
+//! gradients in parallel. This module provides:
+//!
+//! * [`SimClock`] / [`CommModel`] — the paper's timing model: per-link
+//!   communication time `~ U(10⁻⁵, 10⁻⁴) s`, per-iteration response
+//!   time = time until the agent has enough ECN responses to decode.
+//! * [`ResponseModel`] — ECN compute-time model with straggler
+//!   injection: base time per processed row, exponential jitter, and a
+//!   maximum straggler delay `ε` (the paper's max-delay parameter).
+//! * [`EcnPool`] — the per-agent pool tying data partitions, batch
+//!   cursors, a [`crate::coding::GradientCode`] and the response model
+//!   into one `gradient_round` (Alg. 1 steps 13–20 / Alg. 2 steps
+//!   12–19) on a simulated clock.
+//! * [`ThreadedEcnPool`] — the same round on real OS threads (one per
+//!   ECN) with arrival-order decoding, proving the coded path composes
+//!   with true parallelism; used by examples and integration tests.
+
+mod clock;
+mod pool;
+mod threaded;
+
+pub use clock::{CommModel, SimClock};
+pub use pool::{EcnPool, ResponseModel, RoundResult};
+pub use threaded::ThreadedEcnPool;

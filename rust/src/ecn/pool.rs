@@ -1,0 +1,322 @@
+//! Per-agent ECN pool on the simulated clock (Alg. 1 steps 13–20 /
+//! Alg. 2 steps 12–19).
+
+use crate::coding::GradientCode;
+use crate::data::{partition_to_ecns, BatchCursor, EcnPartition, Split};
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::runtime::Engine;
+
+/// ECN compute-time model with straggler injection.
+///
+/// Response time of a non-straggling ECN processing `rows` examples:
+/// `base + per_row·rows + Exp(jitter_mean)`. Straggling ECNs add the
+/// paper's maximum delay parameter ε on top. `straggler_count` ECNs per
+/// round are chosen uniformly at random to straggle.
+#[derive(Clone, Debug)]
+pub struct ResponseModel {
+    pub base: f64,
+    pub per_row: f64,
+    pub jitter_mean: f64,
+    /// The paper's ε: extra delay a straggler adds (swept in Fig. 3e).
+    pub straggler_delay: f64,
+    /// Actual number of straggling ECNs per round (paper: S_i = 1).
+    pub straggler_count: usize,
+}
+
+impl Default for ResponseModel {
+    fn default() -> Self {
+        Self {
+            base: 1e-5,
+            per_row: 1e-6,
+            jitter_mean: 2e-5,
+            straggler_delay: 5e-3,
+            straggler_count: 0,
+        }
+    }
+}
+
+impl ResponseModel {
+    fn sample(&self, rows: usize, is_straggler: bool, rng: &mut Xoshiro256pp) -> f64 {
+        let mut t = self.base + self.per_row * rows as f64;
+        if self.jitter_mean > 0.0 {
+            t += rng.exponential(1.0 / self.jitter_mean);
+        }
+        if is_straggler {
+            t += self.straggler_delay;
+        }
+        t
+    }
+}
+
+/// Result of one coded gradient round at an agent.
+#[derive(Clone, Debug)]
+pub struct RoundResult {
+    /// Decoded mini-batch gradient `G_i(x; ξ)` (already divided by K).
+    pub grad: Matrix,
+    /// Simulated time until the decode succeeded (the iteration's
+    /// response time).
+    pub response_time: f64,
+    /// Number of ECN responses consumed by the decoder.
+    pub responses_used: usize,
+    /// Whether any used response came from a straggler (i.e., the round
+    /// had to wait out a straggler delay).
+    pub waited_for_straggler: bool,
+}
+
+/// One agent's pool of K ECNs.
+pub struct EcnPool {
+    agent: usize,
+    data: Split,
+    code: Box<dyn GradientCode>,
+    partitions: Vec<EcnPartition>,
+    cursors: Vec<BatchCursor>,
+    response: ResponseModel,
+    rng: Xoshiro256pp,
+    /// Scratch: per-partition gradient buffers, reused every round
+    /// (§Perf: the hot loop allocates nothing after warm-up).
+    part_grads: Vec<Matrix>,
+    /// Which scratch buffers are valid for the current round.
+    part_done: Vec<bool>,
+}
+
+impl EcnPool {
+    /// Build a pool. `per_partition_batch_rows` is the per-partition
+    /// batch size: `M/K` for sI-ADMM, `M̄/K` for csI-ADMM (so that each
+    /// coded ECN computes `(S+1)·M̄/K` rows — Alg. 2 step 7).
+    pub fn new(
+        agent: usize,
+        data: Split,
+        code: Box<dyn GradientCode>,
+        per_partition_batch_rows: usize,
+        response: ResponseModel,
+        rng: Xoshiro256pp,
+    ) -> Result<Self> {
+        let k = code.k();
+        let partitions = partition_to_ecns(agent, data.len(), k)?;
+        let cursors = partitions
+            .iter()
+            .map(|p| BatchCursor::new(p.len(), per_partition_batch_rows))
+            .collect::<Result<Vec<_>>>()?;
+        let part_grads = vec![];
+        let part_done = vec![false; k];
+        Ok(Self { agent, data, code, partitions, cursors, response, rng, part_grads, part_done })
+    }
+
+    /// Owning agent id.
+    pub fn agent(&self) -> usize {
+        self.agent
+    }
+
+    /// The pool's coding scheme.
+    pub fn code(&self) -> &dyn GradientCode {
+        self.code.as_ref()
+    }
+
+    /// Effective mini-batch rows per iteration (distinct examples):
+    /// `K · per_partition_batch_rows`.
+    pub fn effective_batch(&self) -> usize {
+        self.code.k() * self.cursors[0].batch_rows()
+    }
+
+    /// Run one gradient round at cycle index `m = ⌊k/N⌋`:
+    /// broadcast `x`, compute per-partition gradients on the selected
+    /// batches, encode per ECN, simulate response times, decode from the
+    /// earliest decodable prefix.
+    pub fn gradient_round(
+        &mut self,
+        x: &Matrix,
+        cycle: usize,
+        engine: &mut dyn Engine,
+    ) -> Result<RoundResult> {
+        let k = self.code.k();
+        let (px, dx) = x.shape();
+        // Warm-up: size the reusable per-partition gradient buffers.
+        if self.part_grads.len() != k || self.part_grads[0].shape() != (px, dx) {
+            self.part_grads = (0..k).map(|_| Matrix::zeros(px, dx)).collect();
+        }
+        // 1. Per-partition gradients (computed once even when replicated
+        //    on several ECNs; the simulated clock still charges each ECN
+        //    for its own compute). Zero-copy row-range path — no
+        //    allocation in the steady state.
+        for done in &mut self.part_done {
+            *done = false;
+        }
+        for j in 0..k {
+            for &p in self.code.assignment(j) {
+                if !self.part_done[p] {
+                    let (blo, bhi) = self.cursors[p].batch_range(cycle);
+                    let lo = self.partitions[p].lo + blo;
+                    let hi = self.partitions[p].lo + bhi;
+                    engine.grad_batch_range(
+                        &self.data.inputs,
+                        &self.data.targets,
+                        lo,
+                        hi,
+                        x,
+                        &mut self.part_grads[p],
+                    )?;
+                    self.part_done[p] = true;
+                }
+            }
+        }
+        // 2. Encode per ECN + sample response times.
+        let stragglers: Vec<usize> = if self.response.straggler_count > 0 {
+            self.rng.sample_indices(k, self.response.straggler_count.min(k))
+        } else {
+            vec![]
+        };
+        let mut responses: Vec<(f64, usize, Matrix, bool)> = (0..k)
+            .map(|j| {
+                let partial: Vec<&Matrix> =
+                    self.code.assignment(j).iter().map(|&p| &self.part_grads[p]).collect();
+                let coded = self.code.encode(j, &partial);
+                let rows = self.code.assignment(j).len() * self.cursors[0].batch_rows();
+                let is_straggler = stragglers.contains(&j);
+                let t = self.response.sample(rows, is_straggler, &mut self.rng);
+                (t, j, coded, is_straggler)
+            })
+            .collect();
+        // 3. Arrival order.
+        responses.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // 4. Decode from the earliest decodable prefix (paper: wait for
+        //    the R-th fastest; uncoded degenerates to all K).
+        let r = self.code.r();
+        let mut arrived: Vec<(usize, Matrix)> = Vec::with_capacity(k);
+        let mut used = 0;
+        let mut response_time = 0.0;
+        let mut waited_for_straggler = false;
+        let mut decoded: Option<Matrix> = None;
+        for (t, j, coded, is_straggler) in responses {
+            arrived.push((j, coded));
+            used += 1;
+            response_time = t;
+            waited_for_straggler |= is_straggler;
+            if used < r {
+                continue;
+            }
+            match self.code.decode(&arrived) {
+                Ok(sum) => {
+                    decoded = Some(sum);
+                    break;
+                }
+                Err(_) if used < k => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        let sum = decoded
+            .ok_or_else(|| Error::Coding(format!("agent {}: round undecodable", self.agent)))?;
+        // G = (1/K) Σ_p g̃_p (Eq. 6).
+        let grad = sum.scaled(1.0 / k as f64);
+        Ok(RoundResult { grad, response_time, responses_used: used, waited_for_straggler })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CyclicRepetition, FractionalRepetition, Uncoded};
+    use crate::data::synthetic_small;
+    use crate::runtime::NativeEngine;
+
+    fn make_pool(code: Box<dyn GradientCode>, per_part: usize, resp: ResponseModel) -> EcnPool {
+        let ds = synthetic_small(600, 10, 0.1, 91);
+        EcnPool::new(0, ds.train, code, per_part, resp, Xoshiro256pp::seed_from_u64(92)).unwrap()
+    }
+
+    /// Reference: plain mini-batch gradient over the same rows the pool
+    /// selects.
+    fn reference_grad(pool: &EcnPool, x: &Matrix, cycle: usize) -> Matrix {
+        let k = pool.code.k();
+        let (p, d) = x.shape();
+        let mut acc = Matrix::zeros(p, d);
+        let mut eng = NativeEngine::new();
+        for pi in 0..k {
+            let (blo, bhi) = pool.cursors[pi].batch_range(cycle);
+            let lo = pool.partitions[pi].lo + blo;
+            let hi = pool.partitions[pi].lo + bhi;
+            let o = pool.data.inputs.slice_rows(lo, hi);
+            let t = pool.data.targets.slice_rows(lo, hi);
+            acc += &eng.grad_batch(&o, &t, x).unwrap();
+        }
+        acc.scaled(1.0 / k as f64)
+    }
+
+    #[test]
+    fn uncoded_round_equals_minibatch_gradient() {
+        let mut pool = make_pool(Box::new(Uncoded::new(3).unwrap()), 8, ResponseModel::default());
+        let x = Matrix::full(3, 1, 0.5);
+        let mut eng = NativeEngine::new();
+        for cycle in 0..5 {
+            let expect = reference_grad(&pool, &x, cycle);
+            let res = pool.gradient_round(&x, cycle, &mut eng).unwrap();
+            assert!(res.grad.max_abs_diff(&expect) < 1e-12);
+            assert_eq!(res.responses_used, 3, "uncoded waits for all");
+        }
+    }
+
+    #[test]
+    fn coded_rounds_match_uncoded_gradient() {
+        // Same batch geometry ⇒ cyclic and fractional must decode to the
+        // exact same mini-batch gradient as computing everything.
+        let x = Matrix::full(3, 1, -0.3);
+        let mut eng = NativeEngine::new();
+        for code in [
+            Box::new(FractionalRepetition::new(4, 1).unwrap()) as Box<dyn GradientCode>,
+            Box::new(CyclicRepetition::new(4, 1, 5).unwrap()) as Box<dyn GradientCode>,
+        ] {
+            let mut pool = make_pool(code, 8, ResponseModel::default());
+            for cycle in 0..4 {
+                let expect = reference_grad(&pool, &x, cycle);
+                let res = pool.gradient_round(&x, cycle, &mut eng).unwrap();
+                assert!(
+                    res.grad.max_abs_diff(&expect) < 1e-9,
+                    "cycle {cycle}: {}",
+                    res.grad.max_abs_diff(&expect)
+                );
+                assert!(res.responses_used <= 4);
+            }
+        }
+    }
+
+    #[test]
+    fn coded_avoids_straggler_delay_uncoded_pays_it() {
+        let eps = 1.0; // huge straggler delay
+        let resp = ResponseModel { straggler_count: 1, straggler_delay: eps, ..Default::default() };
+        let x = Matrix::zeros(3, 1);
+        let mut eng = NativeEngine::new();
+
+        let mut uncoded = make_pool(Box::new(Uncoded::new(4).unwrap()), 8, resp.clone());
+        let mut coded =
+            make_pool(Box::new(CyclicRepetition::new(4, 1, 5).unwrap()), 8, resp.clone());
+
+        let mut t_unc = 0.0;
+        let mut t_cod = 0.0;
+        for cycle in 0..20 {
+            t_unc += uncoded.gradient_round(&x, cycle, &mut eng).unwrap().response_time;
+            t_cod += coded.gradient_round(&x, cycle, &mut eng).unwrap().response_time;
+        }
+        // Uncoded waits out ε every round; coded should dodge nearly all.
+        assert!(t_unc > 20.0 * eps * 0.9, "uncoded total {t_unc}");
+        assert!(t_cod < t_unc / 10.0, "coded {t_cod} vs uncoded {t_unc}");
+    }
+
+    #[test]
+    fn responses_used_is_r_for_coded() {
+        let resp = ResponseModel { straggler_count: 1, ..Default::default() };
+        let mut pool = make_pool(Box::new(FractionalRepetition::new(4, 1).unwrap()), 4, resp);
+        let x = Matrix::zeros(3, 1);
+        let mut eng = NativeEngine::new();
+        let res = pool.gradient_round(&x, 0, &mut eng).unwrap();
+        // FRC on (4,1) needs one member of each of 2 groups — the first
+        // R=3 arrivals always contain both groups.
+        assert!(res.responses_used <= 3);
+    }
+
+    #[test]
+    fn effective_batch_accounting() {
+        let pool = make_pool(Box::new(CyclicRepetition::new(5, 2, 1).unwrap()), 6, Default::default());
+        assert_eq!(pool.effective_batch(), 30);
+    }
+}

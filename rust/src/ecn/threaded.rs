@@ -1,0 +1,170 @@
+//! Real-thread ECN pool: one OS thread per ECN, arrival-order decoding.
+//!
+//! The simulated [`super::EcnPool`] drives the paper's timing studies;
+//! this pool demonstrates the same coded round on genuine parallel
+//! hardware — gradients are computed concurrently, responses arrive over
+//! an mpsc channel in true completion order, and the agent decodes as
+//! soon as the earliest decodable prefix is in. Used by the
+//! `straggler_tolerance` example and integration tests.
+
+use crate::coding::GradientCode;
+use crate::data::{partition_to_ecns, BatchCursor, Split};
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::runtime::{Engine, NativeEngine};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Thread-parallel ECN pool over one agent's shard.
+pub struct ThreadedEcnPool {
+    data: Arc<Split>,
+    code: Arc<dyn GradientCode>,
+    cursors: Vec<BatchCursor>,
+    part_lo: Vec<usize>,
+    /// Artificial per-ECN delay injected before responding (for
+    /// straggler demonstrations); indexed by ECN.
+    pub inject_delay: Vec<Duration>,
+}
+
+impl ThreadedEcnPool {
+    /// Build over an owned shard.
+    pub fn new(
+        data: Split,
+        code: Arc<dyn GradientCode>,
+        per_partition_batch_rows: usize,
+    ) -> Result<Self> {
+        let k = code.k();
+        let partitions = partition_to_ecns(0, data.len(), k)?;
+        let cursors = partitions
+            .iter()
+            .map(|p| BatchCursor::new(p.len(), per_partition_batch_rows))
+            .collect::<Result<Vec<_>>>()?;
+        let part_lo = partitions.iter().map(|p| p.lo).collect();
+        Ok(Self { data: Arc::new(data), code, cursors, part_lo, inject_delay: vec![Duration::ZERO; k] })
+    }
+
+    /// One coded gradient round on real threads. Returns the decoded
+    /// mini-batch gradient `G` and the number of responses consumed.
+    pub fn gradient_round(&self, x: &Matrix, cycle: usize) -> Result<(Matrix, usize)> {
+        let k = self.code.k();
+        let (tx, rx) = mpsc::channel::<(usize, Matrix)>();
+        let mut handles = vec![];
+        for j in 0..k {
+            let tx = tx.clone();
+            let data = Arc::clone(&self.data);
+            let code = Arc::clone(&self.code);
+            let x = x.clone();
+            let delay = self.inject_delay[j];
+            // Snapshot this ECN's batch ranges.
+            let ranges: Vec<(usize, usize)> = code
+                .assignment(j)
+                .iter()
+                .map(|&p| {
+                    let (blo, bhi) = self.cursors[p].batch_range(cycle);
+                    (self.part_lo[p] + blo, self.part_lo[p] + bhi)
+                })
+                .collect();
+            handles.push(std::thread::spawn(move || {
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+                let mut eng = NativeEngine::new();
+                let partials: Vec<Matrix> = ranges
+                    .iter()
+                    .map(|&(lo, hi)| {
+                        let o = data.inputs.slice_rows(lo, hi);
+                        let t = data.targets.slice_rows(lo, hi);
+                        eng.grad_batch(&o, &t, &x).expect("grad")
+                    })
+                    .collect();
+                let refs: Vec<&Matrix> = partials.iter().collect();
+                let coded = code.encode(j, &refs);
+                // Receiver may have hung up after early decode — fine.
+                let _ = tx.send((j, coded));
+            }));
+        }
+        drop(tx);
+
+        let r = self.code.r();
+        let mut arrived: Vec<(usize, Matrix)> = Vec::with_capacity(k);
+        let mut decoded: Option<Matrix> = None;
+        for msg in rx {
+            arrived.push(msg);
+            if arrived.len() >= r {
+                if let Ok(sum) = self.code.decode(&arrived) {
+                    decoded = Some(sum);
+                    break;
+                }
+            }
+        }
+        let used = arrived.len();
+        // Stragglers keep running detached; their send to the dropped
+        // receiver fails harmlessly. Joining here would re-introduce the
+        // very straggler stall the code avoids.
+        drop(handles);
+        let sum = decoded.ok_or_else(|| Error::Coding("threaded round undecodable".into()))?;
+        Ok((sum.scaled(1.0 / k as f64), used))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CyclicRepetition, Uncoded};
+    use crate::data::synthetic_small;
+    use crate::runtime::Engine;
+
+    fn reference_grad(pool: &ThreadedEcnPool, x: &Matrix, cycle: usize) -> Matrix {
+        let k = pool.code.k();
+        let (p, d) = x.shape();
+        let mut acc = Matrix::zeros(p, d);
+        let mut eng = NativeEngine::new();
+        for pi in 0..k {
+            let (blo, bhi) = pool.cursors[pi].batch_range(cycle);
+            let (lo, hi) = (pool.part_lo[pi] + blo, pool.part_lo[pi] + bhi);
+            let o = pool.data.inputs.slice_rows(lo, hi);
+            let t = pool.data.targets.slice_rows(lo, hi);
+            acc += &eng.grad_batch(&o, &t, x).unwrap();
+        }
+        acc.scaled(1.0 / k as f64)
+    }
+
+    #[test]
+    fn threaded_uncoded_matches_reference() {
+        let ds = synthetic_small(240, 10, 0.1, 95);
+        let pool =
+            ThreadedEcnPool::new(ds.train, Arc::new(Uncoded::new(4).unwrap()), 10).unwrap();
+        let x = Matrix::full(3, 1, 0.2);
+        for cycle in 0..3 {
+            let expect = reference_grad(&pool, &x, cycle);
+            let (g, used) = pool.gradient_round(&x, cycle).unwrap();
+            assert_eq!(used, 4);
+            assert!(g.max_abs_diff(&expect) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn threaded_coded_decodes_despite_slow_ecn() {
+        let ds = synthetic_small(240, 10, 0.1, 96);
+        let mut pool = ThreadedEcnPool::new(
+            ds.train,
+            Arc::new(CyclicRepetition::new(4, 1, 7).unwrap()),
+            10,
+        )
+        .unwrap();
+        // ECN 2 sleeps far longer than the rest take to compute.
+        pool.inject_delay[2] = Duration::from_millis(300);
+        let x = Matrix::full(3, 1, -0.4);
+        let t0 = std::time::Instant::now();
+        let expect = reference_grad(&pool, &x, 0);
+        let (g, used) = pool.gradient_round(&x, 0).unwrap();
+        let elapsed = t0.elapsed();
+        assert!(g.max_abs_diff(&expect) < 1e-9);
+        assert!(used < 4, "decoded from {used} < K responses");
+        assert!(
+            elapsed < Duration::from_millis(250),
+            "must not wait for the straggler; took {elapsed:?}"
+        );
+    }
+}

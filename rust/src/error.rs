@@ -1,0 +1,46 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error type for the csadmm library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Linear-algebra failure (singular matrix, shape mismatch, ...).
+    #[error("linear algebra error: {0}")]
+    Linalg(String),
+
+    /// Graph construction / traversal failure.
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    /// Gradient-coding failure (undecodable arrival pattern, bad scheme).
+    #[error("coding error: {0}")]
+    Coding(String),
+
+    /// Dataset generation / partitioning failure.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// Experiment / algorithm configuration error.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// PJRT runtime failure (artifact missing, compile/execute error).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper for runtime errors from the `xla` crate (its error type is
+    /// not `Send + Sync`, so we stringify at the boundary).
+    pub fn runtime<E: std::fmt::Display>(e: E) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

@@ -1,0 +1,128 @@
+//! Fig. 4 — the same consensus-optimization suite on the larger ijcnn1
+//! (stand-in) dataset with a bigger test network (N = 20).
+
+use super::{budget, load_dataset, write_traces, ROOT_SEED};
+use crate::baselines::{comparable_setup, DAdmm, Dgd, Extra, GossipHarness};
+use crate::coding::SchemeKind;
+use crate::coordinator::{Algorithm, Driver, RunConfig};
+use crate::data::DatasetName;
+use crate::ecn::ResponseModel;
+use crate::error::Result;
+use crate::metrics::Trace;
+use crate::runtime::Engine;
+use crate::util::table::{fnum, Table};
+
+fn ijcnn_cfg(quick: bool) -> RunConfig {
+    RunConfig {
+        n_agents: 20,
+        eta: 0.4,
+        k_ecn: 4,
+        minibatch: 32,
+        rho: 0.08,
+        max_iters: budget(6_000, quick),
+        eval_every: 40,
+        seed: ROOT_SEED ^ 4,
+        ..Default::default()
+    }
+}
+
+/// Run the Fig. 4 suite: (a)(b) mini-batch sweep, (c)(d) baselines,
+/// (e) straggler robustness — all on ijcnn1-like, N=20.
+pub fn run(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
+    let ds = load_dataset(DatasetName::Ijcnn1Like, quick);
+    let base = ijcnn_cfg(quick);
+    let mut traces = vec![];
+
+    // (a)(b) mini-batch sweep.
+    for &m in &[8usize, 32, 128] {
+        let cfg = RunConfig { minibatch: m, ..base.clone() };
+        let mut tr = Driver::new(cfg, &ds)?.run(engine)?;
+        tr.label = format!("sI-ADMM M={m}");
+        traces.push(tr);
+    }
+
+    // (c)(d) baselines at equal comm budget.
+    for algo in [Algorithm::WAdmm] {
+        let cfg = RunConfig { algo, ..base.clone() };
+        traces.push(Driver::new(cfg, &ds)?.run(engine)?);
+    }
+    let (topo, objs, xstar) = comparable_setup(&ds, base.n_agents, base.eta, base.seed)?;
+    let gossip_iters = (base.max_iters / (2 * topo.num_edges())).max(10);
+    let h = GossipHarness {
+        topo,
+        response: base.response.clone(),
+        comm: base.comm.clone(),
+        max_iters: gossip_iters,
+        eval_every: 1,
+        seed: base.seed,
+    };
+    traces.push(h.run(DAdmm::new(0.4), &objs, &xstar, &ds.test)?);
+    traces.push(h.run(Dgd::new(0.05), &objs, &xstar, &ds.test)?);
+    traces.push(h.run(Extra::new(0.02), &objs, &xstar, &ds.test)?);
+
+    // (e) straggler robustness.
+    for (algo, label) in [
+        (Algorithm::SIAdmm, "uncoded"),
+        (Algorithm::CsIAdmm(SchemeKind::Cyclic), "cyclic"),
+        (Algorithm::CsIAdmm(SchemeKind::Fractional), "fractional"),
+    ] {
+        let cfg = RunConfig {
+            algo,
+            s_tolerated: 1,
+            response: ResponseModel {
+                straggler_count: 1,
+                straggler_delay: 5e-3,
+                ..Default::default()
+            },
+            ..base.clone()
+        };
+        let mut tr = Driver::new(cfg, &ds)?.run(engine)?;
+        tr.label = format!("{label} eps=5e-3");
+        traces.push(tr);
+    }
+
+    let mut t = Table::new(
+        "Fig. 4 — ijcnn1-like, N=20",
+        &["series", "comm units", "sim time (s)", "accuracy", "test MSE"],
+    );
+    for tr in &traces {
+        let last = tr.points.last().unwrap();
+        t.row(&[
+            tr.label.clone(),
+            fnum(last.comm_units),
+            fnum(last.sim_time),
+            fnum(last.accuracy),
+            fnum(last.test_mse),
+        ]);
+    }
+    t.print();
+    write_traces("fig4_ijcnn1", &traces)?;
+    Ok(traces)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngine;
+
+    #[test]
+    fn fig4_shapes_hold_on_quick_run() {
+        let traces = run(true, &mut NativeEngine::new()).unwrap();
+        // Same qualitative findings as Fig. 3 on the larger network.
+        let acc = |label: &str| {
+            traces.iter().find(|t| t.label.starts_with(label)).unwrap().final_accuracy()
+        };
+        assert!(acc("sI-ADMM M=128") < acc("sI-ADMM M=8"), "larger batch wins");
+        let time = |label: &str| {
+            traces
+                .iter()
+                .find(|t| t.label.starts_with(label))
+                .unwrap()
+                .points
+                .last()
+                .unwrap()
+                .sim_time
+        };
+        assert!(time("cyclic") < time("uncoded"), "coded dodges stragglers");
+    }
+}

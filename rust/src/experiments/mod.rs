@@ -1,0 +1,68 @@
+//! Experiment drivers — one per table/figure of the paper (§V).
+//!
+//! Every driver prints the paper's rows/series as ASCII tables and
+//! writes the raw series as JSON under `results/`. The `quick` flag
+//! runs a scaled-down version (fewer iterations, smaller stand-in
+//! datasets) for tests; benches run the full version.
+//!
+//! | Paper artifact | Function |
+//! |----------------|----------|
+//! | Table I        | [`table1::run`] |
+//! | Fig. 3(a)(b)   | [`fig3::minibatch`] |
+//! | Fig. 3(c)(d)   | [`fig3::baselines`] |
+//! | Fig. 3(e)      | [`fig3::stragglers`] |
+//! | Fig. 3(f)      | [`fig3::shortest_path_cycle`] |
+//! | Fig. 4         | [`fig4::run`] |
+//! | Fig. 5         | [`fig5::run`] |
+//! | Thm. 2 / Cor. 1| [`rate_check::run`] |
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod rate_check;
+pub mod table1;
+
+use crate::data::{
+    ijcnn1_like, ijcnn1_like_small, synthetic, synthetic_small, usps_like, usps_like_small,
+    Dataset, DatasetName,
+};
+use crate::error::Result;
+use crate::metrics::Trace;
+use crate::util::json::{write_json_file, Json};
+use std::path::Path;
+
+/// Root random seed shared by all experiments (per-experiment streams
+/// are derived from it).
+pub const ROOT_SEED: u64 = 20200417;
+
+/// Load a dataset at full (paper) or quick (test) scale.
+pub fn load_dataset(name: DatasetName, quick: bool) -> Dataset {
+    match (name, quick) {
+        (DatasetName::Synthetic, false) => synthetic(0.1, ROOT_SEED),
+        (DatasetName::Synthetic, true) => synthetic_small(2_000, 200, 0.1, ROOT_SEED),
+        (DatasetName::UspsLike, false) => usps_like(ROOT_SEED),
+        (DatasetName::UspsLike, true) => usps_like_small(600, 60, ROOT_SEED),
+        (DatasetName::Ijcnn1Like, false) => ijcnn1_like(ROOT_SEED),
+        (DatasetName::Ijcnn1Like, true) => ijcnn1_like_small(8_000, 400, ROOT_SEED),
+    }
+}
+
+/// Write a set of traces as `results/<name>.json`.
+pub fn write_traces(name: &str, traces: &[Trace]) -> Result<()> {
+    let json = Json::obj()
+        .str("experiment", name)
+        .field("traces", Json::Arr(traces.iter().map(|t| t.to_json()).collect()))
+        .build();
+    write_json_file(Path::new("results").join(format!("{name}.json")).as_path(), &json)?;
+    Ok(())
+}
+
+/// Iteration budget helper: quick runs use a fraction of the full
+/// budget (at least `min`).
+pub fn budget(full: usize, quick: bool) -> usize {
+    if quick {
+        (full / 8).max(200)
+    } else {
+        full
+    }
+}

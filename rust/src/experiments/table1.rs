@@ -1,0 +1,48 @@
+//! Table I: the simulation datasets for decentralized consensus
+//! optimization (train/test sizes and dimensions).
+
+use super::load_dataset;
+use crate::data::DatasetName;
+use crate::util::table::Table;
+
+/// Print Table I (verifying the generated datasets against the paper's
+/// declared dimensions) and return the rendered table.
+pub fn run(quick: bool) -> String {
+    let mut t = Table::new(
+        "Table I — simulation datasets",
+        &["dataset", "#training", "#test", "Dim p", "Dim d", "generated-as"],
+    );
+    for name in [DatasetName::Synthetic, DatasetName::UspsLike, DatasetName::Ijcnn1Like] {
+        let (ntr, nte, p, d) = name.dims();
+        let ds = load_dataset(name, quick);
+        t.row(&[
+            name.as_str().to_string(),
+            format!("{ntr}"),
+            format!("{nte}"),
+            format!("{p}"),
+            format!("{d}"),
+            format!("{}x{} / {}x{}", ds.train.len(), ds.p(), ds.test.len(), ds.d()),
+        ]);
+        // The generated dims must match Table I exactly at full scale.
+        if !quick {
+            assert_eq!(ds.train.len(), ntr);
+            assert_eq!(ds.test.len(), nte);
+        }
+        assert_eq!(ds.p(), p);
+        assert_eq!(ds.d(), d);
+    }
+    let rendered = t.render();
+    println!("{rendered}");
+    rendered
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table1_quick_has_all_rows() {
+        let s = super::run(true);
+        for name in ["synthetic", "usps", "ijcnn1"] {
+            assert!(s.contains(name), "{name} missing");
+        }
+    }
+}

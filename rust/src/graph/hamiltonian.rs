@@ -1,0 +1,147 @@
+//! Hamiltonian-cycle search (Assumption 1 / Fig. 1a).
+//!
+//! Exact backtracking with least-degree-first branching and a
+//! connectivity prune. All paper experiments use N ≤ 32, where this is
+//! instantaneous on the ring-plus-chords graphs the generator emits.
+
+use super::Topology;
+
+/// Find a Hamiltonian cycle, returned as an agent visiting order
+/// `v_0 → v_1 → … → v_{n−1} → v_0`, or `None` if the graph has none.
+pub fn find_hamiltonian_cycle(g: &Topology) -> Option<Vec<usize>> {
+    let n = g.n();
+    if n == 0 {
+        return None;
+    }
+    if n == 1 {
+        return Some(vec![0]);
+    }
+    if !g.is_connected() {
+        return None;
+    }
+    // Dirac-style cheap necessary condition: every vertex needs degree ≥ 2.
+    if (0..n).any(|v| g.degree(v) < 2) {
+        return None;
+    }
+    let mut path = vec![0usize];
+    let mut used = vec![false; n];
+    used[0] = true;
+    if backtrack(g, &mut path, &mut used) {
+        Some(path)
+    } else {
+        None
+    }
+}
+
+fn backtrack(g: &Topology, path: &mut Vec<usize>, used: &mut [bool]) -> bool {
+    let n = g.n();
+    if path.len() == n {
+        return g.has_edge(*path.last().unwrap(), path[0]);
+    }
+    let last = *path.last().unwrap();
+    // Branch in ascending-degree order: forced moves first.
+    let mut cands: Vec<usize> = g
+        .neighbors(last)
+        .iter()
+        .copied()
+        .filter(|&v| !used[v])
+        .collect();
+    cands.sort_by_key(|&v| g.degree(v));
+    for v in cands {
+        // Prune: if some unused vertex (other than v) would be left with
+        // no unused neighbor, this branch is dead.
+        path.push(v);
+        used[v] = true;
+        if !strands_someone(g, used, path[0]) && backtrack(g, path, used) {
+            return true;
+        }
+        used[v] = false;
+        path.pop();
+    }
+    false
+}
+
+/// Quick prune: any unused vertex whose unused-or-endpoint neighborhood
+/// is empty can never be reached.
+fn strands_someone(g: &Topology, used: &[bool], start: usize) -> bool {
+    for v in 0..g.n() {
+        if used[v] {
+            continue;
+        }
+        let reachable = g
+            .neighbors(v)
+            .iter()
+            .any(|&u| !used[u] || u == start);
+        if !reachable {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+    use crate::util::prop::property;
+
+    fn assert_valid_cycle(g: &Topology, cycle: &[usize]) {
+        assert_eq!(cycle.len(), g.n());
+        let mut seen = vec![false; g.n()];
+        for &v in cycle {
+            assert!(!seen[v], "vertex repeated");
+            seen[v] = true;
+        }
+        for w in cycle.windows(2) {
+            assert!(g.has_edge(w[0], w[1]), "missing edge {:?}", w);
+        }
+        assert!(g.has_edge(cycle[g.n() - 1], cycle[0]), "no closing edge");
+    }
+
+    #[test]
+    fn ring_has_cycle() {
+        let n = 9;
+        let edges: Vec<(usize, usize)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        let g = Topology::from_edges(n, &edges).unwrap();
+        let c = find_hamiltonian_cycle(&g).unwrap();
+        assert_valid_cycle(&g, &c);
+    }
+
+    #[test]
+    fn fig1a_style_graph() {
+        // Paper Fig. 1(a): 5 agents, Hamiltonian order 1→2→4→5→3 (1-based).
+        let g = Topology::from_edges(
+            5,
+            &[(0, 1), (1, 3), (3, 4), (4, 2), (2, 0), (1, 2), (0, 3)],
+        )
+        .unwrap();
+        let c = find_hamiltonian_cycle(&g).unwrap();
+        assert_valid_cycle(&g, &c);
+    }
+
+    #[test]
+    fn star_has_none() {
+        let g = Topology::from_edges(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]).unwrap();
+        assert!(find_hamiltonian_cycle(&g).is_none());
+    }
+
+    #[test]
+    fn spider_has_none() {
+        let g = Topology::spider(3, 2).unwrap();
+        assert!(find_hamiltonian_cycle(&g).is_none());
+    }
+
+    #[test]
+    fn random_connected_graphs_always_have_cycle() {
+        // The generator seeds every graph with a random ring, so a
+        // Hamiltonian cycle must always be found.
+        property("hamiltonian on generator output", 24, |rng| {
+            use crate::rng::Rng;
+            let n = 5 + rng.below(14) as usize;
+            let eta = 0.2 + 0.6 * rng.next_f64();
+            let g = Topology::random_connected(n, eta, rng).unwrap();
+            let c = find_hamiltonian_cycle(&g).expect("generator guarantees a ring");
+            assert_valid_cycle(&g, &c);
+        });
+    }
+}

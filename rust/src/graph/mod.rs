@@ -1,0 +1,25 @@
+//! Decentralized network topology and token-traversal patterns.
+//!
+//! The paper's network `G = (N, E)` has `E = η·N(N−1)/2` links for a
+//! connectivity ratio η (§V-A). Tokens traverse agents either along a
+//! Hamiltonian cycle (Fig. 1a) or, for non-Hamiltonian graphs, along a
+//! cycle obtained by concatenating shortest paths (Fig. 1b, [5]).
+//!
+//! * [`Topology`] — undirected graph with adjacency queries, Metropolis
+//!   mixing weights (for the DGD / EXTRA / D-ADMM baselines), and the
+//!   random generator used by the experiments.
+//! * [`hamiltonian`] — exact backtracking Hamiltonian-cycle search with
+//!   degree-sorted branching (N ≤ 32 in all experiments).
+//! * [`shortest_path`] — BFS shortest paths and the shortest-path-cycle
+//!   construction.
+//! * [`Traversal`] — the cycle abstraction the coordinator walks.
+
+mod hamiltonian;
+mod shortest_path;
+mod topology;
+mod traversal;
+
+pub use hamiltonian::find_hamiltonian_cycle;
+pub use shortest_path::{bfs_shortest_path, shortest_path_cycle};
+pub use topology::Topology;
+pub use traversal::{Traversal, TraversalKind};

@@ -1,0 +1,134 @@
+//! BFS shortest paths and the shortest-path-cycle traversal (Fig. 1b).
+//!
+//! For networks without a (findable) Hamiltonian cycle, the paper [5]
+//! forms the token route by concatenating shortest paths between
+//! consecutive agents: the token still visits every agent once per cycle
+//! but may pass *through* intermediate agents, each hop costing one
+//! communication unit.
+
+use super::Topology;
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+
+/// BFS shortest path from `src` to `dst` (inclusive of both endpoints).
+pub fn bfs_shortest_path(g: &Topology, src: usize, dst: usize) -> Option<Vec<usize>> {
+    if src == dst {
+        return Some(vec![src]);
+    }
+    let n = g.n();
+    let mut prev = vec![usize::MAX; n];
+    let mut queue = VecDeque::from([src]);
+    prev[src] = src;
+    while let Some(u) = queue.pop_front() {
+        for &v in g.neighbors(u) {
+            if prev[v] == usize::MAX {
+                prev[v] = u;
+                if v == dst {
+                    let mut path = vec![dst];
+                    let mut cur = dst;
+                    while cur != src {
+                        cur = prev[cur];
+                        path.push(cur);
+                    }
+                    path.reverse();
+                    return Some(path);
+                }
+                queue.push_back(v);
+            }
+        }
+    }
+    None
+}
+
+/// Build a closed token route that visits every agent at least once by
+/// concatenating shortest paths `order[0] → order[1] → … → order[0]`
+/// (paper §V-A, [35]). Returns the full hop sequence, where consecutive
+/// entries are always adjacent in `g`; the sequence starts at
+/// `order[0]` and ends just before returning to it.
+///
+/// The *update* order remains `order` (each agent's visit is the hop
+/// where it appears as a path endpoint); intermediate relay hops only
+/// cost communication.
+pub fn shortest_path_cycle(g: &Topology, order: &[usize]) -> Result<Vec<usize>> {
+    if order.is_empty() {
+        return Err(Error::Graph("empty traversal order".into()));
+    }
+    if !g.is_connected() {
+        return Err(Error::Graph("graph not connected".into()));
+    }
+    let mut route = vec![];
+    let m = order.len();
+    for i in 0..m {
+        let src = order[i];
+        let dst = order[(i + 1) % m];
+        let path = bfs_shortest_path(g, src, dst)
+            .ok_or_else(|| Error::Graph(format!("no path {src}->{dst}")))?;
+        // Append path excluding its final node (start of next leg).
+        route.extend_from_slice(&path[..path.len() - 1]);
+    }
+    Ok(route)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+    use crate::rng::Rng;
+    use crate::util::prop::property;
+
+    #[test]
+    fn path_on_line_graph() {
+        let g = Topology::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        assert_eq!(bfs_shortest_path(&g, 0, 3).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(bfs_shortest_path(&g, 2, 2).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn path_is_shortest() {
+        // Square with diagonal: 0-1-2-3-0 plus (0,2).
+        let g = Topology::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)]).unwrap();
+        assert_eq!(bfs_shortest_path(&g, 0, 2).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn no_path_disconnected() {
+        let g = Topology::from_edges(4, &[(0, 1), (2, 3)]).unwrap();
+        assert!(bfs_shortest_path(&g, 0, 3).is_none());
+    }
+
+    #[test]
+    fn spc_on_spider_visits_everyone() {
+        let g = Topology::spider(3, 2).unwrap();
+        let order: Vec<usize> = (0..g.n()).collect();
+        let route = shortest_path_cycle(&g, &order).unwrap();
+        // Every agent appears.
+        for v in 0..g.n() {
+            assert!(route.contains(&v), "agent {v} missing from route");
+        }
+        // Consecutive hops adjacent (cyclically).
+        for w in route.windows(2) {
+            assert!(g.has_edge(w[0], w[1]), "hop {:?} not an edge", w);
+        }
+        assert!(g.has_edge(*route.last().unwrap(), route[0]));
+        // Relay hops make the route longer than the agent count.
+        assert!(route.len() > g.n());
+    }
+
+    #[test]
+    fn spc_property_random_graphs() {
+        property("spc valid on random graphs", 20, |rng| {
+            let n = 5 + rng.below(12) as usize;
+            let g = Topology::random_connected(n, 0.3, rng).unwrap();
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            let route = shortest_path_cycle(&g, &order).unwrap();
+            for v in 0..n {
+                assert!(route.contains(&v));
+            }
+            for w in route.windows(2) {
+                assert!(g.has_edge(w[0], w[1]));
+            }
+            assert!(g.has_edge(*route.last().unwrap(), route[0]));
+        });
+    }
+}

@@ -1,0 +1,247 @@
+//! Undirected network topology.
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::rng::{Rng, Xoshiro256pp};
+
+/// Undirected graph over agents `0..n`.
+///
+/// Stored both as an adjacency matrix (O(1) edge queries, Metropolis
+/// weights) and adjacency lists (iteration).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    n: usize,
+    adj: Vec<Vec<usize>>,  // sorted neighbor lists
+    edges: Vec<(usize, usize)>, // i < j
+}
+
+impl Topology {
+    /// Build from an explicit edge list.
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Result<Self> {
+        let mut adj = vec![vec![]; n];
+        let mut canon: Vec<(usize, usize)> = vec![];
+        for &(a, b) in edges {
+            if a >= n || b >= n || a == b {
+                return Err(Error::Graph(format!("bad edge ({a},{b}) for n={n}")));
+            }
+            let (lo, hi) = (a.min(b), a.max(b));
+            if canon.contains(&(lo, hi)) {
+                continue;
+            }
+            canon.push((lo, hi));
+            adj[lo].push(hi);
+            adj[hi].push(lo);
+        }
+        for list in &mut adj {
+            list.sort_unstable();
+        }
+        canon.sort_unstable();
+        Ok(Self { n, adj, edges: canon })
+    }
+
+    /// The paper's experimental network: a random connected graph with
+    /// `E = round(η·N(N−1)/2)` links that *contains a Hamiltonian cycle*
+    /// (Assumption 1). Construction: start from a random ring (the
+    /// Hamiltonian cycle), then add random extra edges until the target
+    /// link count is met.
+    pub fn random_connected(n: usize, eta: f64, rng: &mut Xoshiro256pp) -> Result<Self> {
+        if n < 3 {
+            return Err(Error::Graph(format!("need n >= 3 agents, got {n}")));
+        }
+        if !(0.0..=1.0).contains(&eta) {
+            return Err(Error::Graph(format!("connectivity ratio eta={eta} not in [0,1]")));
+        }
+        let max_e = n * (n - 1) / 2;
+        let target_e = ((eta * max_e as f64).round() as usize).clamp(n, max_e);
+
+        // Random ring through a shuffled agent order.
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut edges: Vec<(usize, usize)> = (0..n)
+            .map(|i| {
+                let a = order[i];
+                let b = order[(i + 1) % n];
+                (a.min(b), a.max(b))
+            })
+            .collect();
+        edges.sort_unstable();
+        edges.dedup();
+
+        // Candidate extra edges, shuffled.
+        let mut extra: Vec<(usize, usize)> = vec![];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if !edges.contains(&(i, j)) {
+                    extra.push((i, j));
+                }
+            }
+        }
+        rng.shuffle(&mut extra);
+        while edges.len() < target_e {
+            match extra.pop() {
+                Some(e) => edges.push(e),
+                None => break,
+            }
+        }
+        Self::from_edges(n, &edges)
+    }
+
+    /// A deliberately non-Hamiltonian connected graph for the Fig. 1(b)/
+    /// Fig. 3(f) experiments: a star-of-paths ("spider") topology whose
+    /// cut vertices rule out a Hamiltonian cycle, so the traversal must
+    /// fall back to the shortest-path cycle.
+    pub fn spider(legs: usize, leg_len: usize) -> Result<Self> {
+        if legs < 3 || leg_len < 1 {
+            return Err(Error::Graph("spider needs >=3 legs of len >=1".into()));
+        }
+        let n = 1 + legs * leg_len;
+        let mut edges = vec![];
+        for l in 0..legs {
+            let mut prev = 0; // hub
+            for s in 0..leg_len {
+                let node = 1 + l * leg_len + s;
+                edges.push((prev, node));
+                prev = node;
+            }
+        }
+        Self::from_edges(n, &edges)
+    }
+
+    /// Number of agents.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of undirected links.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Canonical edge list (i < j).
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    /// Sorted neighbors of `i`.
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    /// Degree of `i`.
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    /// Edge query.
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.adj[a].binary_search(&b).is_ok()
+    }
+
+    /// Connectivity check (BFS).
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Metropolis–Hastings doubly-stochastic mixing matrix `W` used by
+    /// the gossip baselines (DGD, EXTRA):
+    /// `W_ij = 1/(1+max(d_i,d_j))` for edges, diagonal fills the slack.
+    pub fn metropolis_weights(&self) -> Matrix {
+        let n = self.n;
+        let mut w = Matrix::zeros(n, n);
+        for &(i, j) in &self.edges {
+            let v = 1.0 / (1.0 + self.degree(i).max(self.degree(j)) as f64);
+            w[(i, j)] = v;
+            w[(j, i)] = v;
+        }
+        for i in 0..n {
+            let off: f64 = (0..n).filter(|&j| j != i).map(|j| w[(i, j)]).sum();
+            w[(i, i)] = 1.0 - off;
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::property;
+
+    #[test]
+    fn from_edges_dedups_and_sorts() {
+        let t = Topology::from_edges(4, &[(0, 1), (1, 0), (2, 3), (1, 2)]).unwrap();
+        assert_eq!(t.num_edges(), 3);
+        assert_eq!(t.neighbors(1), &[0, 2]);
+        assert!(t.has_edge(3, 2));
+        assert!(!t.has_edge(0, 3));
+    }
+
+    #[test]
+    fn rejects_bad_edges() {
+        assert!(Topology::from_edges(3, &[(0, 3)]).is_err());
+        assert!(Topology::from_edges(3, &[(1, 1)]).is_err());
+    }
+
+    #[test]
+    fn random_connected_properties() {
+        property("random graph connected with target edges", 32, |rng| {
+            let n = 5 + rng.below(20) as usize;
+            let eta = 0.2 + 0.7 * rng.next_f64();
+            let t = Topology::random_connected(n, eta, rng).unwrap();
+            assert!(t.is_connected());
+            let target = ((eta * (n * (n - 1) / 2) as f64).round() as usize)
+                .clamp(n, n * (n - 1) / 2);
+            assert_eq!(t.num_edges(), target);
+        });
+    }
+
+    #[test]
+    fn spider_is_connected_but_sparse() {
+        let t = Topology::spider(3, 2).unwrap();
+        assert_eq!(t.n(), 7);
+        assert!(t.is_connected());
+        assert_eq!(t.num_edges(), 6);
+        assert_eq!(t.degree(0), 3);
+    }
+
+    #[test]
+    fn metropolis_is_doubly_stochastic_symmetric() {
+        property("metropolis weights", 16, |rng| {
+            let n = 4 + rng.below(12) as usize;
+            let t = Topology::random_connected(n, 0.5, rng).unwrap();
+            let w = t.metropolis_weights();
+            for i in 0..n {
+                let row_sum: f64 = (0..n).map(|j| w[(i, j)]).sum();
+                assert!((row_sum - 1.0).abs() < 1e-12);
+                for j in 0..n {
+                    assert!((w[(i, j)] - w[(j, i)]).abs() < 1e-15);
+                    if i != j && !t.has_edge(i, j) {
+                        assert_eq!(w[(i, j)], 0.0);
+                    }
+                    assert!(w[(i, j)] >= 0.0, "nonneg for connected metropolis");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn disconnected_graph_detected() {
+        let t = Topology::from_edges(4, &[(0, 1), (2, 3)]).unwrap();
+        assert!(!t.is_connected());
+    }
+}

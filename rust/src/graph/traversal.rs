@@ -1,0 +1,233 @@
+//! The traversal abstraction the coordinator walks.
+//!
+//! Unifies the three activation patterns of the paper:
+//! * `Hamiltonian` — predetermined circulant order along a Hamiltonian
+//!   cycle (Alg. 1/2; the convergence analysis assumes this).
+//! * `ShortestPathCycle` — non-Hamiltonian networks (Fig. 1b / Fig. 3f):
+//!   same agent update order, but tokens relay through intermediate
+//!   agents; each relay hop costs one comm unit.
+//! * `RandomWalk` — W-ADMM's activation (next agent uniform among the
+//!   current agent's neighbors).
+
+use super::{find_hamiltonian_cycle, shortest_path_cycle, Topology};
+use crate::error::{Error, Result};
+use crate::rng::{Rng, Xoshiro256pp};
+
+/// Which traversal pattern to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraversalKind {
+    /// Hamiltonian cycle (requires the graph to have one).
+    Hamiltonian,
+    /// Concatenated-shortest-paths cycle (any connected graph).
+    ShortestPathCycle,
+    /// Uniform random walk over neighbors (W-ADMM).
+    RandomWalk,
+}
+
+/// A token route over the network.
+///
+/// `next()` yields `(agent, comm_hops)`: the next agent to *activate*
+/// and how many single-link transmissions the token needed to reach it
+/// from the previous active agent.
+#[derive(Clone, Debug)]
+pub struct Traversal {
+    kind: TraversalKind,
+    /// Activation order for cyclic kinds (one entry per agent).
+    order: Vec<usize>,
+    /// Hop cost from order[i] to order[i+1 mod n].
+    hop_cost: Vec<usize>,
+    pos: usize,
+    /// Random-walk state.
+    rw_current: usize,
+    rw_rng: Option<Xoshiro256pp>,
+    topo: Topology,
+}
+
+impl Traversal {
+    /// Build a traversal over `g`.
+    pub fn new(g: &Topology, kind: TraversalKind, rng: &mut Xoshiro256pp) -> Result<Self> {
+        match kind {
+            TraversalKind::Hamiltonian => {
+                let order = find_hamiltonian_cycle(g).ok_or_else(|| {
+                    Error::Graph("no Hamiltonian cycle; use ShortestPathCycle".into())
+                })?;
+                let hop_cost = vec![1; order.len()];
+                Ok(Self {
+                    kind,
+                    order,
+                    hop_cost,
+                    pos: 0,
+                    rw_current: 0,
+                    rw_rng: None,
+                    topo: g.clone(),
+                })
+            }
+            TraversalKind::ShortestPathCycle => {
+                let order: Vec<usize> = (0..g.n()).collect();
+                let route = shortest_path_cycle(g, &order)?;
+                // Cost from order[i] to order[i+1]: the shortest-path
+                // length between them.
+                let mut hop_cost = Vec::with_capacity(order.len());
+                for i in 0..order.len() {
+                    let src = order[i];
+                    let dst = order[(i + 1) % order.len()];
+                    let path = super::bfs_shortest_path(g, src, dst)
+                        .ok_or_else(|| Error::Graph("disconnected".into()))?;
+                    hop_cost.push(path.len() - 1);
+                }
+                let _ = route; // full hop sequence retained implicitly via costs
+                Ok(Self {
+                    kind,
+                    order,
+                    hop_cost,
+                    pos: 0,
+                    rw_current: 0,
+                    rw_rng: None,
+                    topo: g.clone(),
+                })
+            }
+            TraversalKind::RandomWalk => Ok(Self {
+                kind,
+                order: vec![],
+                hop_cost: vec![],
+                pos: 0,
+                rw_current: rng.below(g.n() as u64) as usize,
+                rw_rng: Some(rng.split()),
+                topo: g.clone(),
+            }),
+        }
+    }
+
+    /// The traversal kind.
+    pub fn kind(&self) -> TraversalKind {
+        self.kind
+    }
+
+    /// Activation order (empty for random walk).
+    pub fn order(&self) -> &[usize] {
+        &self.order
+    }
+
+    /// First agent to activate (without advancing).
+    pub fn first(&self) -> usize {
+        match self.kind {
+            TraversalKind::RandomWalk => self.rw_current,
+            _ => self.order[0],
+        }
+    }
+
+    /// Advance: returns `(active_agent, comm_hops_to_reach_it)`.
+    ///
+    /// The first call returns the first agent with 0 hops (the token
+    /// starts there); subsequent calls pay the link costs.
+    pub fn next(&mut self) -> (usize, usize) {
+        match self.kind {
+            TraversalKind::RandomWalk => {
+                let rng = self.rw_rng.as_mut().expect("rw rng");
+                if self.pos == 0 {
+                    self.pos = 1;
+                    return (self.rw_current, 0);
+                }
+                let nbrs = self.topo.neighbors(self.rw_current);
+                let next = *rng.choose(nbrs);
+                self.rw_current = next;
+                (next, 1)
+            }
+            _ => {
+                let idx = self.pos % self.order.len();
+                let agent = self.order[idx];
+                let hops = if self.pos == 0 {
+                    0
+                } else {
+                    // Cost paid to arrive here from the previous agent.
+                    self.hop_cost[(idx + self.order.len() - 1) % self.order.len()]
+                };
+                self.pos += 1;
+                (agent, hops)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn ring(n: usize) -> Topology {
+        Topology::from_edges(n, &(0..n).map(|i| (i, (i + 1) % n)).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn hamiltonian_traversal_visits_cyclically() {
+        let g = ring(5);
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let mut t = Traversal::new(&g, TraversalKind::Hamiltonian, &mut rng).unwrap();
+        let mut visits = vec![0usize; 5];
+        let (first, h0) = t.next();
+        assert_eq!(h0, 0);
+        visits[first] += 1;
+        for _ in 0..9 {
+            let (a, h) = t.next();
+            assert_eq!(h, 1, "hamiltonian hop cost is 1");
+            visits[a] += 1;
+        }
+        // 10 activations over 5 agents: each visited exactly twice.
+        assert!(visits.iter().all(|&v| v == 2), "balanced visits {visits:?}");
+    }
+
+    #[test]
+    fn spc_traversal_on_spider() {
+        let g = Topology::spider(3, 2).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(32);
+        let mut t = Traversal::new(&g, TraversalKind::ShortestPathCycle, &mut rng).unwrap();
+        let n = g.n();
+        let mut total_hops = 0;
+        let mut visited = vec![false; n];
+        let (a0, _) = t.next();
+        visited[a0] = true;
+        for _ in 0..(n - 1) {
+            let (a, h) = t.next();
+            visited[a] = true;
+            total_hops += h;
+        }
+        assert!(visited.iter().all(|&v| v));
+        // Spider legs force relays: strictly more hops than agents-1.
+        assert!(total_hops >= n - 1);
+    }
+
+    #[test]
+    fn hamiltonian_fails_on_spider() {
+        let g = Topology::spider(3, 1).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(33);
+        assert!(Traversal::new(&g, TraversalKind::Hamiltonian, &mut rng).is_err());
+    }
+
+    #[test]
+    fn random_walk_stays_on_edges() {
+        let g = ring(7);
+        let mut rng = Xoshiro256pp::seed_from_u64(34);
+        let mut t = Traversal::new(&g, TraversalKind::RandomWalk, &mut rng).unwrap();
+        let (mut prev, h0) = t.next();
+        assert_eq!(h0, 0);
+        for _ in 0..100 {
+            let (a, h) = t.next();
+            assert_eq!(h, 1);
+            assert!(g.has_edge(prev, a), "walk must follow edges");
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn random_walk_eventually_covers_graph() {
+        let g = ring(6);
+        let mut rng = Xoshiro256pp::seed_from_u64(35);
+        let mut t = Traversal::new(&g, TraversalKind::RandomWalk, &mut rng).unwrap();
+        let mut seen = vec![false; 6];
+        for _ in 0..500 {
+            let (a, _) = t.next();
+            seen[a] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

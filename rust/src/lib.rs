@@ -1,0 +1,45 @@
+//! # csadmm — Coded Stochastic ADMM for Decentralized Consensus Optimization
+//!
+//! A production-quality reproduction of *"Coded Stochastic ADMM for
+//! Decentralized Consensus Optimization with Edge Computing"* (Chen, Ye,
+//! Xiao, Skoglund, Poor; 2020) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organized bottom-up:
+//!
+//! * Substrates: [`rng`], [`linalg`], [`util`], [`graph`], [`data`],
+//!   [`problem`] — everything the paper's system depends on, built from
+//!   scratch (the build environment is fully offline).
+//! * Core contribution: [`coding`] (real-field MDS gradient codes),
+//!   [`ecn`] (edge-compute-node simulation with stragglers), [`admm`]
+//!   (I-ADMM / sI-ADMM / csI-ADMM), [`baselines`] (W-ADMM, D-ADMM, DGD,
+//!   EXTRA), [`coordinator`] (token-passing event loop).
+//! * Runtime: [`runtime`] loads AOT-compiled HLO artifacts (lowered from
+//!   JAX/Pallas by `python/compile/aot.py`) via the PJRT CPU client and
+//!   executes them from the Rust hot path; a native [`linalg`] fallback
+//!   keeps the library usable without artifacts.
+//! * Harness: [`config`], [`cli`], [`metrics`], [`experiments`] — the
+//!   experiment drivers regenerating every table and figure in the paper.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod admm;
+pub mod baselines;
+pub mod cli;
+pub mod coding;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod ecn;
+pub mod error;
+pub mod experiments;
+pub mod graph;
+pub mod linalg;
+pub mod metrics;
+pub mod problem;
+pub mod rng;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Error, Result};

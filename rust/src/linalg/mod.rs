@@ -1,0 +1,21 @@
+//! Dense linear algebra over `f64`.
+//!
+//! The offline environment ships no `ndarray`/`nalgebra`, so the library
+//! carries its own small, well-tested dense kernel set:
+//!
+//! * [`Matrix`] — row-major dense matrix with arithmetic, views, norms.
+//! * [`matmul`] / [`Matrix::matmul`] — blocked, transposed-B matmul tuned
+//!   for the hot path (see `benches/perf_hotpath.rs`).
+//! * [`solve`] — Cholesky (SPD) and partial-pivot LU solvers, used for
+//!   exact ADMM x-updates and for the global optimum `x*`.
+//!
+//! Shapes follow the paper: model `x ∈ R^{p×d}`, data `O ∈ R^{m×p}`,
+//! targets `T ∈ R^{m×d}`.
+
+mod matrix;
+mod ops;
+mod solve;
+
+pub use matrix::Matrix;
+pub use ops::{axpy, dot, matmul, matmul_at_b, matmul_into, nrm2};
+pub use solve::{cholesky_factor, cholesky_solve, lu_solve, CholeskyFactor};

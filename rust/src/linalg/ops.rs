@@ -1,0 +1,197 @@
+//! BLAS-like kernels: matmul (blocked), AᵀB, dot, axpy, norms.
+//!
+//! These are the native fallback for the request path when PJRT
+//! artifacts are not loaded, and the reference the PJRT results are
+//! cross-checked against in integration tests. `matmul_into` is the
+//! allocation-free form used inside the coordinator's hot loop.
+
+use super::Matrix;
+
+/// Loop-blocking tile edge for the k dimension. Chosen on the perf pass:
+/// the paper's shapes are small (p ≤ 64, d ≤ 10, m ≤ 512 per batch), so a
+/// single-level k-block with an unrolled inner loop beats fancier
+/// schemes; see EXPERIMENTS.md §Perf.
+const KB: usize = 64;
+
+/// `out = a · b`, allocation-free. `out` must have shape `(a.rows, b.cols)`.
+///
+/// Layout: row-major everywhere; the inner kernel iterates `k` in blocks
+/// and accumulates rows of `b` scaled by `a[i][k]` — an "axpy-matmul"
+/// that is sequential over both `a` and `b` rows (no transposition
+/// needed, good cache behaviour for our short-wide shapes).
+pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "matmul: inner dims {ka} vs {kb}");
+    assert_eq!(out.shape(), (m, n), "matmul: out shape");
+    out.fill_zero();
+    let bs = b.as_slice();
+    for i in 0..m {
+        let arow = a.row(i);
+        let orow = out.row_mut(i);
+        let mut k0 = 0;
+        while k0 < ka {
+            let k1 = (k0 + KB).min(ka);
+            for k in k0..k1 {
+                let aik = arow[k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bs[k * n..k * n + n];
+                // Unrolled-by-4 axpy over the output row.
+                let chunks = n / 4 * 4;
+                let (o4, orest) = orow.split_at_mut(chunks);
+                let (b4, brest) = brow.split_at(chunks);
+                for (oc, bc) in o4.chunks_exact_mut(4).zip(b4.chunks_exact(4)) {
+                    oc[0] += aik * bc[0];
+                    oc[1] += aik * bc[1];
+                    oc[2] += aik * bc[2];
+                    oc[3] += aik * bc[3];
+                }
+                for (o, bv) in orest.iter_mut().zip(brest) {
+                    *o += aik * bv;
+                }
+            }
+            k0 = k1;
+        }
+    }
+}
+
+/// Allocating matmul `a · b`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// `out = aᵀ · b` without materializing the transpose. Core of the
+/// least-squares gradient `Oᵀ(Ox − T)`.
+pub fn matmul_at_b(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, p) = a.shape();
+    let (mb, d) = b.shape();
+    assert_eq!(m, mb, "matmul_at_b: row dims {m} vs {mb}");
+    assert_eq!(out.shape(), (p, d), "matmul_at_b: out shape");
+    out.fill_zero();
+    for r in 0..m {
+        let arow = a.row(r);
+        let brow = b.row(r);
+        for (i, &ari) in arow.iter().enumerate() {
+            if ari == 0.0 {
+                continue;
+            }
+            let orow = out.row_mut(i);
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += ari * bv;
+            }
+        }
+    }
+}
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4 * 4;
+    for (ac, bc) in a[..chunks].chunks_exact(4).zip(b[..chunks].chunks_exact(4)) {
+        acc[0] += ac[0] * bc[0];
+        acc[1] += ac[1] * bc[1];
+        acc[2] += ac[2] * bc[2];
+        acc[3] += ac[3] * bc[3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x` over slices.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm of a slice.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                out[(i, j)] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = matmul(&a, &b);
+        assert_eq!(c, Matrix::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn matmul_matches_naive_random() {
+        use crate::rng::{Rng, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 64, 9), (33, 130, 7), (64, 64, 64)] {
+            let a = Matrix::from_vec(m, k, (0..m * k).map(|_| rng.normal()).collect()).unwrap();
+            let b = Matrix::from_vec(k, n, (0..k * n).map(|_| rng.normal()).collect()).unwrap();
+            let fast = matmul(&a, &b);
+            let slow = naive_matmul(&a, &b);
+            assert!(fast.max_abs_diff(&slow) < 1e-10, "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        use crate::rng::{Rng, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::seed_from_u64(12);
+        for &(m, p, d) in &[(8, 3, 1), (50, 22, 2), (40, 64, 10)] {
+            let a = Matrix::from_vec(m, p, (0..m * p).map(|_| rng.normal()).collect()).unwrap();
+            let b = Matrix::from_vec(m, d, (0..m * d).map(|_| rng.normal()).collect()).unwrap();
+            let mut out = Matrix::zeros(p, d);
+            matmul_at_b(&a, &b, &mut out);
+            let expect = a.transpose().matmul(&b);
+            assert!(out.max_abs_diff(&expect) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn dot_axpy_nrm2() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(dot(&a, &b), 35.0);
+        let mut y = b;
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [7.0, 8.0, 9.0, 10.0, 11.0]);
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        use crate::rng::{Rng, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::seed_from_u64(13);
+        let a = Matrix::from_vec(9, 9, (0..81).map(|_| rng.normal()).collect()).unwrap();
+        let i = Matrix::eye(9);
+        assert!(matmul(&a, &i).max_abs_diff(&a) < 1e-15);
+        assert!(matmul(&i, &a).max_abs_diff(&a) < 1e-15);
+    }
+}

@@ -1,0 +1,237 @@
+//! Direct solvers: Cholesky (SPD) and partial-pivot LU.
+//!
+//! Used for (a) the exact I-ADMM x-update `(OᵀO/b + ρI)x = rhs`, (b) the
+//! global optimum `x*` of the decentralized least-squares problem, and
+//! (c) MDS decoding (`aᵀ B_F = 1ᵀ` least-squares solves in
+//! [`crate::coding`]).
+
+use super::Matrix;
+use crate::error::{Error, Result};
+
+/// A cached Cholesky factorization `A = L·Lᵀ` of an SPD matrix.
+///
+/// Exact-ADMM agents factor their Gram matrix once and reuse it every
+/// visit, which is the main reason exact I-ADMM is even feasible per
+/// iteration.
+#[derive(Clone, Debug)]
+pub struct CholeskyFactor {
+    l: Matrix, // lower triangular, including diagonal
+}
+
+/// Factor an SPD matrix. Fails on non-positive pivots.
+pub fn cholesky_factor(a: &Matrix) -> Result<CholeskyFactor> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Linalg(format!("cholesky: non-square {}x{}", a.rows(), a.cols())));
+    }
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(Error::Linalg(format!(
+                        "cholesky: non-positive pivot {s:.3e} at {i}"
+                    )));
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(CholeskyFactor { l })
+}
+
+impl CholeskyFactor {
+    /// Solve `A X = B` for (possibly multi-column) `B`.
+    pub fn solve(&self, b: &Matrix) -> Matrix {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n, "cholesky solve: rhs rows");
+        let d = b.cols();
+        let mut x = b.clone();
+        // Forward: L y = b.
+        for i in 0..n {
+            for k in 0..i {
+                let lik = self.l[(i, k)];
+                for c in 0..d {
+                    let v = lik * x[(k, c)];
+                    x[(i, c)] -= v;
+                }
+            }
+            let di = self.l[(i, i)];
+            for c in 0..d {
+                x[(i, c)] /= di;
+            }
+        }
+        // Backward: Lᵀ x = y.
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                let lki = self.l[(k, i)];
+                for c in 0..d {
+                    let v = lki * x[(k, c)];
+                    x[(i, c)] -= v;
+                }
+            }
+            let di = self.l[(i, i)];
+            for c in 0..d {
+                x[(i, c)] /= di;
+            }
+        }
+        x
+    }
+}
+
+/// One-shot SPD solve `A X = B`.
+pub fn cholesky_solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    Ok(cholesky_factor(a)?.solve(b))
+}
+
+/// Partial-pivot LU solve `A X = B` for general square `A` (used by the
+/// cyclic-repetition MDS decoder, whose systems are square but not SPD).
+pub fn lu_solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Linalg(format!("lu: non-square {}x{}", a.rows(), a.cols())));
+    }
+    if b.rows() != n {
+        return Err(Error::Linalg("lu: rhs rows mismatch".into()));
+    }
+    let d = b.cols();
+    let mut lu = a.clone();
+    let mut x = b.clone();
+    let mut piv: Vec<usize> = (0..n).collect();
+    for col in 0..n {
+        // Pivot.
+        let mut pmax = col;
+        let mut vmax = lu[(col, col)].abs();
+        for r in (col + 1)..n {
+            let v = lu[(r, col)].abs();
+            if v > vmax {
+                vmax = v;
+                pmax = r;
+            }
+        }
+        if vmax < 1e-12 {
+            return Err(Error::Linalg(format!("lu: (near-)singular at col {col}")));
+        }
+        if pmax != col {
+            piv.swap(pmax, col);
+            for c in 0..n {
+                let t = lu[(col, c)];
+                lu[(col, c)] = lu[(pmax, c)];
+                lu[(pmax, c)] = t;
+            }
+            for c in 0..d {
+                let t = x[(col, c)];
+                x[(col, c)] = x[(pmax, c)];
+                x[(pmax, c)] = t;
+            }
+        }
+        // Eliminate.
+        let pivv = lu[(col, col)];
+        for r in (col + 1)..n {
+            let f = lu[(r, col)] / pivv;
+            lu[(r, col)] = f;
+            for c in (col + 1)..n {
+                let v = f * lu[(col, c)];
+                lu[(r, c)] -= v;
+            }
+            for c in 0..d {
+                let v = f * x[(col, c)];
+                x[(r, c)] -= v;
+            }
+        }
+    }
+    // Back substitution.
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            let lik = lu[(i, k)];
+            for c in 0..d {
+                let v = lik * x[(k, c)];
+                x[(i, c)] -= v;
+            }
+        }
+        let dii = lu[(i, i)];
+        for c in 0..d {
+            x[(i, c)] /= dii;
+        }
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    fn random_spd(n: usize, rng: &mut Xoshiro256pp) -> Matrix {
+        let a = Matrix::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect()).unwrap();
+        let mut spd = a.transpose().matmul(&a);
+        for i in 0..n {
+            spd[(i, i)] += n as f64; // ensure well-conditioned
+        }
+        spd
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let a = random_spd(12, &mut rng);
+        let f = cholesky_factor(&a).unwrap();
+        let rec = f.l.matmul(&f.l.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn cholesky_solve_accuracy() {
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        for &n in &[1, 3, 8, 25, 64] {
+            let a = random_spd(n, &mut rng);
+            let x_true =
+                Matrix::from_vec(n, 3, (0..n * 3).map(|_| rng.normal()).collect()).unwrap();
+            let b = a.matmul(&x_true);
+            let x = cholesky_solve(&a, &b).unwrap();
+            assert!(x.max_abs_diff(&x_true) < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky_factor(&a).is_err());
+    }
+
+    #[test]
+    fn lu_solve_accuracy() {
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        for &n in &[1, 2, 5, 16, 40] {
+            let a = Matrix::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect()).unwrap();
+            let x_true =
+                Matrix::from_vec(n, 2, (0..n * 2).map(|_| rng.normal()).collect()).unwrap();
+            let b = a.matmul(&x_true);
+            let x = lu_solve(&a, &b).unwrap();
+            assert!(x.max_abs_diff(&x_true) < 1e-7, "n={n}");
+        }
+    }
+
+    #[test]
+    fn lu_rejects_singular() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[1.0], &[2.0]]);
+        assert!(lu_solve(&a, &b).is_err());
+    }
+
+    #[test]
+    fn lu_needs_pivoting_case() {
+        // Zero leading pivot — fails without partial pivoting.
+        let a = Matrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let b = Matrix::from_rows(&[&[2.0], &[3.0]]);
+        let x = lu_solve(&a, &b).unwrap();
+        assert!((x[(0, 0)] - 3.0).abs() < 1e-12);
+        assert!((x[(1, 0)] - 2.0).abs() < 1e-12);
+    }
+}

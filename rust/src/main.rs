@@ -1,0 +1,120 @@
+//! `csadmm` — the leader binary: runs configured experiments or any of
+//! the paper's figure/table reproductions from the command line.
+//!
+//! ```text
+//! csadmm run --config examples/configs/usps_csiadmm.toml [--pjrt]
+//! csadmm table1 [--quick]
+//! csadmm fig3-minibatch | fig3-baselines | fig3-stragglers | fig3-spc
+//! csadmm fig4 | fig5 | rate-check          [--quick] [--pjrt]
+//! csadmm all [--quick]
+//! ```
+//!
+//! `--pjrt` executes the gradient/step hot path through the AOT HLO
+//! artifacts (build them first with `make artifacts`); the default is
+//! the native engine.
+
+use csadmm::cli::Args;
+use csadmm::config::{run_config_from_doc, ConfigDoc};
+use csadmm::coordinator::Driver;
+use csadmm::experiments::{self, load_dataset};
+use csadmm::runtime::{Engine, NativeEngine, PjrtEngine};
+use csadmm::util::table::{fnum, Table};
+
+fn make_engine(args: &Args) -> anyhow::Result<Box<dyn Engine>> {
+    if args.has("pjrt") {
+        let dir = args.get("artifacts").unwrap_or("artifacts");
+        Ok(Box::new(PjrtEngine::new(dir)?))
+    } else {
+        Ok(Box::new(NativeEngine::new()))
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let mut engine = make_engine(&args)?;
+    match args.command.as_deref() {
+        Some("run") => {
+            let path = args.get("config").unwrap_or("examples/configs/quickstart.toml");
+            let doc = ConfigDoc::load(std::path::Path::new(path))?;
+            let (mut cfg, dataset) = run_config_from_doc(&doc)?;
+            if let Some(seed) = args.get("seed").and_then(|s| s.parse().ok()) {
+                cfg.seed = seed;
+            }
+            let ds = load_dataset(dataset, quick);
+            println!(
+                "running {} on {} (N={}, K={}, M={}, engine={})",
+                cfg.algo.label(),
+                dataset.as_str(),
+                cfg.n_agents,
+                cfg.k_ecn,
+                cfg.minibatch,
+                engine.name()
+            );
+            let trace = Driver::new(cfg, &ds)?.run(engine.as_mut())?;
+            let mut t = Table::new(
+                "run result",
+                &["iter", "comm units", "sim time (s)", "accuracy", "test MSE"],
+            );
+            for p in trace.points.iter().rev().take(5).rev() {
+                t.row(&[
+                    p.iter.to_string(),
+                    fnum(p.comm_units),
+                    fnum(p.sim_time),
+                    fnum(p.accuracy),
+                    fnum(p.test_mse),
+                ]);
+            }
+            t.print();
+            experiments::write_traces("cli_run", std::slice::from_ref(&trace))?;
+            println!("trace written to results/cli_run.json");
+        }
+        Some("table1") => {
+            experiments::table1::run(quick);
+        }
+        Some("fig3-minibatch") => {
+            experiments::fig3::minibatch(quick, engine.as_mut())?;
+        }
+        Some("fig3-baselines") => {
+            experiments::fig3::baselines(quick, engine.as_mut())?;
+        }
+        Some("fig3-stragglers") => {
+            experiments::fig3::stragglers(quick, engine.as_mut())?;
+        }
+        Some("fig3-spc") => {
+            experiments::fig3::shortest_path_cycle(quick, engine.as_mut())?;
+        }
+        Some("fig4") => {
+            experiments::fig4::run(quick, engine.as_mut())?;
+        }
+        Some("fig5") => {
+            experiments::fig5::run(quick, engine.as_mut())?;
+        }
+        Some("rate-check") => {
+            experiments::rate_check::run(quick, engine.as_mut())?;
+        }
+        Some("all") => {
+            experiments::table1::run(quick);
+            experiments::fig3::minibatch(quick, engine.as_mut())?;
+            experiments::fig3::baselines(quick, engine.as_mut())?;
+            experiments::fig3::stragglers(quick, engine.as_mut())?;
+            experiments::fig3::shortest_path_cycle(quick, engine.as_mut())?;
+            experiments::fig4::run(quick, engine.as_mut())?;
+            experiments::fig5::run(quick, engine.as_mut())?;
+            experiments::rate_check::run(quick, engine.as_mut())?;
+        }
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown command '{cmd}'\n");
+            }
+            eprintln!(
+                "usage: csadmm <command> [--quick] [--pjrt]\n\
+                 commands: run --config <file> | table1 | fig3-minibatch |\n\
+                 fig3-baselines | fig3-stragglers | fig3-spc | fig4 | fig5 |\n\
+                 rate-check | all"
+            );
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Experiment metrics (§IV preamble, §V-A):
+//!
+//! * [`accuracy`] — the paper's relative error (Eq. 23):
+//!   `(1/N) Σ_i ‖x_i^k − x*‖ / ‖x_i^1 − x*‖` (with `x_i^1 = 0`).
+//! * [`test_mse`] — "test error … defined as the mean square error
+//!   loss" on the held-out split, evaluated at the consensus variable.
+//! * [`CommCost`] — unit counting: one unit per variable exchange over
+//!   one agent-pair link (unicast; relay hops each cost one unit).
+//! * [`Trace`] / [`TracePoint`] — per-iteration experiment records with
+//!   JSON export for the plots.
+
+mod recorder;
+
+pub use recorder::{Trace, TracePoint};
+
+use crate::data::Split;
+use crate::linalg::Matrix;
+
+/// Relative-error accuracy (Eq. 23). `xs` are the per-agent primal
+/// variables, `xstar` the global optimum; the initial iterates are the
+/// zero matrix, so each denominator is ‖x*‖.
+pub fn accuracy(xs: &[Matrix], xstar: &Matrix) -> f64 {
+    let denom = xstar.norm();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    xs.iter().map(|x| (x - xstar).norm() / denom).sum::<f64>() / n
+}
+
+/// Mean-squared-error test loss of model `x` on a split:
+/// `‖O x − T‖_F² / n_test`.
+pub fn test_mse(x: &Matrix, test: &Split) -> f64 {
+    let resid = &test.inputs.matmul(x) - &test.targets;
+    resid.norm_sq() / test.len() as f64
+}
+
+/// Communication-cost counter (units; 1 unit = one variable over one
+/// link).
+#[derive(Clone, Debug, Default)]
+pub struct CommCost {
+    units: f64,
+}
+
+impl CommCost {
+    /// New zeroed counter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `units` link-transmissions.
+    pub fn charge(&mut self, units: usize) {
+        self.units += units as f64;
+    }
+
+    /// Total units so far.
+    pub fn total(&self) -> f64 {
+        self.units
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_is_one_at_init_zero_at_optimum() {
+        let xstar = Matrix::from_rows(&[&[3.0], &[4.0]]);
+        let zeros = vec![Matrix::zeros(2, 1); 4];
+        assert!((accuracy(&zeros, &xstar) - 1.0).abs() < 1e-12);
+        let solved = vec![xstar.clone(); 4];
+        assert_eq!(accuracy(&solved, &xstar), 0.0);
+    }
+
+    #[test]
+    fn accuracy_averages_over_agents() {
+        let xstar = Matrix::from_rows(&[&[1.0]]);
+        let xs = vec![Matrix::zeros(1, 1), Matrix::from_rows(&[&[1.0]])];
+        assert!((accuracy(&xs, &xstar) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn test_mse_zero_on_perfect_fit() {
+        let x = Matrix::from_rows(&[&[2.0]]);
+        let split = Split {
+            inputs: Matrix::from_rows(&[&[1.0], &[2.0]]),
+            targets: Matrix::from_rows(&[&[2.0], &[4.0]]),
+        };
+        assert_eq!(test_mse(&x, &split), 0.0);
+        let x_bad = Matrix::from_rows(&[&[0.0]]);
+        // residuals [2,4]: mse = (4+16)/2 = 10
+        assert!((test_mse(&x_bad, &split) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_cost_accumulates() {
+        let mut c = CommCost::new();
+        c.charge(1);
+        c.charge(3);
+        c.charge(0);
+        assert_eq!(c.total(), 4.0);
+    }
+}

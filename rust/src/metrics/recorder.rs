@@ -1,0 +1,106 @@
+//! Per-run trace recording and JSON export.
+
+use crate::util::json::Json;
+
+/// One evaluation point along a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TracePoint {
+    /// Iteration k.
+    pub iter: usize,
+    /// Cumulative communication units.
+    pub comm_units: f64,
+    /// Cumulative simulated running time (s).
+    pub sim_time: f64,
+    /// Relative-error accuracy (Eq. 23).
+    pub accuracy: f64,
+    /// Test MSE at the consensus variable.
+    pub test_mse: f64,
+}
+
+/// A labelled series of trace points (one run of one algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// Algorithm / configuration label ("sI-ADMM M=32", …).
+    pub label: String,
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    /// New empty trace.
+    pub fn new(label: &str) -> Self {
+        Self { label: label.to_string(), points: vec![] }
+    }
+
+    /// Append a point.
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    /// Final accuracy (NaN if empty).
+    pub fn final_accuracy(&self) -> f64 {
+        self.points.last().map(|p| p.accuracy).unwrap_or(f64::NAN)
+    }
+
+    /// Final test MSE (NaN if empty).
+    pub fn final_test_mse(&self) -> f64 {
+        self.points.last().map(|p| p.test_mse).unwrap_or(f64::NAN)
+    }
+
+    /// First iteration at which accuracy drops below `threshold`
+    /// (convergence-speed comparisons, Fig. 5).
+    pub fn iters_to_accuracy(&self, threshold: f64) -> Option<usize> {
+        self.points.iter().find(|p| p.accuracy <= threshold).map(|p| p.iter)
+    }
+
+    /// Communication units spent to reach `threshold` accuracy.
+    pub fn comm_to_accuracy(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.accuracy <= threshold).map(|p| p.comm_units)
+    }
+
+    /// Simulated time to reach `threshold` accuracy.
+    pub fn time_to_accuracy(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.accuracy <= threshold).map(|p| p.sim_time)
+    }
+
+    /// Export as a JSON object with parallel arrays (plot-friendly).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .str("label", &self.label)
+            .field("iter", Json::arr_f64(self.points.iter().map(|p| p.iter as f64)))
+            .field("comm_units", Json::arr_f64(self.points.iter().map(|p| p.comm_units)))
+            .field("sim_time", Json::arr_f64(self.points.iter().map(|p| p.sim_time)))
+            .field("accuracy", Json::arr_f64(self.points.iter().map(|p| p.accuracy)))
+            .field("test_mse", Json::arr_f64(self.points.iter().map(|p| p.test_mse)))
+            .build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(iter: usize, acc: f64) -> TracePoint {
+        TracePoint { iter, comm_units: iter as f64, sim_time: iter as f64 * 0.1, accuracy: acc, test_mse: acc * 2.0 }
+    }
+
+    #[test]
+    fn thresholds() {
+        let mut t = Trace::new("x");
+        t.push(pt(1, 1.0));
+        t.push(pt(10, 0.1));
+        t.push(pt(100, 0.01));
+        assert_eq!(t.iters_to_accuracy(0.5), Some(10));
+        assert_eq!(t.comm_to_accuracy(0.05), Some(100.0));
+        assert_eq!(t.iters_to_accuracy(0.001), None);
+        assert!((t.final_accuracy() - 0.01).abs() < 1e-15);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut t = Trace::new("sI-ADMM");
+        t.push(pt(1, 0.9));
+        let s = t.to_json().to_string();
+        assert!(s.contains("\"label\":\"sI-ADMM\""));
+        assert!(s.contains("\"accuracy\":[0.9]"));
+    }
+}

@@ -1,0 +1,272 @@
+//! Decentralized least squares (Eq. 24) and the global optimum (for the
+//! relative-error accuracy metric, Eq. 23).
+
+use super::Objective;
+use crate::data::Split;
+use crate::error::Result;
+use crate::linalg::{cholesky_factor, cholesky_solve, matmul_at_b, CholeskyFactor, Matrix};
+use std::cell::RefCell;
+
+/// One agent's least-squares objective over its shard `(O_i, T_i)`:
+/// `f_i(x) = 1/(2 b_i) ‖O_i x − T_i‖_F²`, `x ∈ R^{p×d}`.
+pub struct LeastSquares {
+    data: Split,
+    /// Cached Gram matrix OᵀO / b (lazy, for prox/exact updates).
+    gram_over_b: RefCell<Option<Matrix>>,
+    /// Cached OᵀT / b.
+    cross_over_b: RefCell<Option<Matrix>>,
+    /// Cached Cholesky of (Gram/b + ρI) keyed by ρ.
+    prox_factor: RefCell<Option<(f64, CholeskyFactor)>>,
+}
+
+impl LeastSquares {
+    /// Wrap an agent shard.
+    pub fn new(data: Split) -> Self {
+        Self {
+            data,
+            gram_over_b: RefCell::new(None),
+            cross_over_b: RefCell::new(None),
+            prox_factor: RefCell::new(None),
+        }
+    }
+
+    /// Access the underlying shard.
+    pub fn data(&self) -> &Split {
+        &self.data
+    }
+
+    /// Smoothness constant L = λ_max(OᵀO / b) (Assumption 2's Lipschitz
+    /// gradient constant), estimated by power iteration. Used by the
+    /// driver to auto-scale the τ-schedule so that the inexact proximal
+    /// step `1/(ρ + τ^k)` is stable from the first iteration.
+    pub fn lipschitz(&self) -> f64 {
+        self.ensure_gram();
+        let gram = self.gram_over_b.borrow();
+        let gram = gram.as_ref().unwrap();
+        let p = gram.rows();
+        let mut v = Matrix::full(p, 1, 1.0 / (p as f64).sqrt());
+        let mut lambda = 0.0;
+        for _ in 0..60 {
+            let w = gram.matmul(&v);
+            let norm = w.norm();
+            if norm < 1e-300 {
+                return 0.0;
+            }
+            lambda = norm;
+            v = w.scaled(1.0 / norm);
+        }
+        lambda
+    }
+
+    fn ensure_gram(&self) {
+        if self.gram_over_b.borrow().is_some() {
+            return;
+        }
+        let o = &self.data.inputs;
+        let t = &self.data.targets;
+        let b = self.data.len() as f64;
+        let p = o.cols();
+        let d = t.cols();
+        let mut gram = Matrix::zeros(p, p);
+        matmul_at_b(o, o, &mut gram);
+        gram.scale(1.0 / b);
+        let mut cross = Matrix::zeros(p, d);
+        matmul_at_b(o, t, &mut cross);
+        cross.scale(1.0 / b);
+        *self.gram_over_b.borrow_mut() = Some(gram);
+        *self.cross_over_b.borrow_mut() = Some(cross);
+    }
+}
+
+impl Objective for LeastSquares {
+    fn dims(&self) -> (usize, usize) {
+        (self.data.inputs.cols(), self.data.targets.cols())
+    }
+
+    fn num_examples(&self) -> usize {
+        self.data.len()
+    }
+
+    fn loss(&self, x: &Matrix) -> f64 {
+        let pred = self.data.inputs.matmul(x);
+        let resid = &pred - &self.data.targets;
+        resid.norm_sq() / (2.0 * self.data.len() as f64)
+    }
+
+    fn grad(&self, x: &Matrix, out: &mut Matrix) {
+        self.grad_rows(x, 0, self.data.len(), out);
+    }
+
+    /// `out = Oᵀ(Ox − T)/rows` over the row block — this is exactly the
+    /// computation each ECN performs (Alg. 1 step 17) and the shape the
+    /// L1 Pallas kernel implements.
+    fn grad_rows(&self, x: &Matrix, lo: usize, hi: usize, out: &mut Matrix) {
+        debug_assert!(lo < hi && hi <= self.data.len());
+        let o = self.data.inputs.slice_rows(lo, hi);
+        let t = self.data.targets.slice_rows(lo, hi);
+        let mut resid = o.matmul(x);
+        resid -= &t;
+        matmul_at_b(&o, &resid, out);
+        out.scale(1.0 / (hi - lo) as f64);
+    }
+
+    /// Closed-form prox: `(OᵀO/b + ρI) v = OᵀT/b + ρz + y`.
+    fn prox_exact(&self, z: &Matrix, y: &Matrix, rho: f64) -> Matrix {
+        self.ensure_gram();
+        let gram = self.gram_over_b.borrow();
+        let gram = gram.as_ref().unwrap();
+        let cross = self.cross_over_b.borrow();
+        let cross = cross.as_ref().unwrap();
+        // Reuse cached factor when ρ unchanged.
+        {
+            let cached = self.prox_factor.borrow();
+            if let Some((r, f)) = cached.as_ref() {
+                if (*r - rho).abs() < 1e-15 {
+                    let mut rhs = cross.clone();
+                    rhs.add_scaled(rho, z);
+                    rhs += y;
+                    return f.solve(&rhs);
+                }
+            }
+        }
+        let p = gram.rows();
+        let mut a = gram.clone();
+        for i in 0..p {
+            a[(i, i)] += rho;
+        }
+        let f = cholesky_factor(&a).expect("Gram + rho I is SPD");
+        let mut rhs = cross.clone();
+        rhs.add_scaled(rho, z);
+        rhs += y;
+        let sol = f.solve(&rhs);
+        *self.prox_factor.borrow_mut() = Some((rho, f));
+        sol
+    }
+}
+
+/// Global optimum `x*` of (P-1): solves the normal equations of the
+/// *sum* objective `Σ_i f_i`, i.e. `(Σ OᵢᵀOᵢ/bᵢ) x = Σ OᵢᵀTᵢ/bᵢ`.
+/// A tiny ridge `lambda` keeps rank-deficient toy shards solvable.
+pub fn global_optimum(objectives: &[LeastSquares], lambda: f64) -> Result<Matrix> {
+    assert!(!objectives.is_empty());
+    let (p, d) = objectives[0].dims();
+    let mut gram = Matrix::zeros(p, p);
+    let mut cross = Matrix::zeros(p, d);
+    let mut tmp_g = Matrix::zeros(p, p);
+    let mut tmp_c = Matrix::zeros(p, d);
+    for obj in objectives {
+        let b = obj.data().len() as f64;
+        matmul_at_b(&obj.data().inputs, &obj.data().inputs, &mut tmp_g);
+        tmp_g.scale(1.0 / b);
+        gram += &tmp_g;
+        matmul_at_b(&obj.data().inputs, &obj.data().targets, &mut tmp_c);
+        tmp_c.scale(1.0 / b);
+        cross += &tmp_c;
+    }
+    for i in 0..p {
+        gram[(i, i)] += lambda;
+    }
+    cholesky_solve(&gram, &cross)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shard_to_agents, synthetic_small};
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    fn toy_objective(n: usize, seed: u64) -> LeastSquares {
+        let ds = synthetic_small(n, 10, 0.1, seed);
+        LeastSquares::new(ds.train)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let obj = toy_objective(64, 51);
+        let mut rng = Xoshiro256pp::seed_from_u64(52);
+        let (p, d) = obj.dims();
+        let x = Matrix::from_vec(p, d, (0..p * d).map(|_| rng.normal()).collect()).unwrap();
+        let mut g = Matrix::zeros(p, d);
+        obj.grad(&x, &mut g);
+        let eps = 1e-6;
+        for i in 0..p {
+            for j in 0..d {
+                let mut xp = x.clone();
+                xp[(i, j)] += eps;
+                let mut xm = x.clone();
+                xm[(i, j)] -= eps;
+                let fd = (obj.loss(&xp) - obj.loss(&xm)) / (2.0 * eps);
+                assert!(
+                    (fd - g[(i, j)]).abs() < 1e-5,
+                    "fd {fd} vs analytic {} at ({i},{j})",
+                    g[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grad_rows_averages_to_full_grad() {
+        let obj = toy_objective(60, 53);
+        let (p, d) = obj.dims();
+        let x = Matrix::full(p, d, 0.3);
+        let mut full = Matrix::zeros(p, d);
+        obj.grad(&x, &mut full);
+        // Average of 3 disjoint 20-row block gradients = full gradient.
+        let mut acc = Matrix::zeros(p, d);
+        let mut part = Matrix::zeros(p, d);
+        for b in 0..3 {
+            obj.grad_rows(&x, b * 20, (b + 1) * 20, &mut part);
+            acc.add_scaled(1.0 / 3.0, &part);
+        }
+        assert!(acc.max_abs_diff(&full) < 1e-12);
+    }
+
+    #[test]
+    fn prox_satisfies_optimality() {
+        let obj = toy_objective(80, 54);
+        let (p, d) = obj.dims();
+        let z = Matrix::full(p, d, 0.5);
+        let y = Matrix::full(p, d, -0.2);
+        let rho = 1.7;
+        let v = obj.prox_exact(&z, &y, rho);
+        // Optimality: ∇f(v) + ρ(v − z) − y = 0.
+        let mut g = Matrix::zeros(p, d);
+        obj.grad(&v, &mut g);
+        let mut kkt = g;
+        kkt.add_scaled(rho, &v);
+        kkt.add_scaled(-rho, &z);
+        kkt -= &y;
+        assert!(kkt.max_abs() < 1e-10, "KKT residual {}", kkt.max_abs());
+    }
+
+    #[test]
+    fn prox_factor_cache_consistent() {
+        let obj = toy_objective(40, 55);
+        let (p, d) = obj.dims();
+        let z = Matrix::full(p, d, 1.0);
+        let y = Matrix::zeros(p, d);
+        let a = obj.prox_exact(&z, &y, 2.0);
+        let b = obj.prox_exact(&z, &y, 2.0); // cached path
+        assert!(a.max_abs_diff(&b) < 1e-15);
+        let c = obj.prox_exact(&z, &y, 3.0); // refactor
+        assert!(a.max_abs_diff(&c) > 1e-6);
+    }
+
+    #[test]
+    fn global_optimum_zeroes_total_gradient() {
+        let ds = synthetic_small(300, 10, 0.05, 56);
+        let shards = shard_to_agents(&ds.train, 5).unwrap();
+        let objs: Vec<LeastSquares> =
+            shards.into_iter().map(|s| LeastSquares::new(s.data)).collect();
+        let xstar = global_optimum(&objs, 0.0).unwrap();
+        let (p, d) = objs[0].dims();
+        let mut total = Matrix::zeros(p, d);
+        let mut g = Matrix::zeros(p, d);
+        for obj in &objs {
+            obj.grad(&xstar, &mut g);
+            total += &g;
+        }
+        assert!(total.max_abs() < 1e-8, "sum grad at x*: {}", total.max_abs());
+    }
+}

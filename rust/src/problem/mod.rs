@@ -1,0 +1,43 @@
+//! The decentralized consensus optimization problem (P-1).
+//!
+//! The paper's evaluation instantiates (1) with the decentralized least
+//! squares loss (24):
+//!
+//! ```text
+//! f_i(x_i; D_i) = 1/(2 b_i) Σ_j ‖x_iᵀ o_{i,j} − t_{i,j}‖²
+//! ```
+//!
+//! [`LeastSquares`] provides loss / full gradient / mini-batch gradient
+//! with preallocated workspaces (the native hot path), exact proximal
+//! x-updates via a cached Cholesky factor, and the global optimum `x*`
+//! used by the accuracy metric (23).
+
+mod least_squares;
+
+pub use least_squares::{global_optimum, LeastSquares};
+
+use crate::linalg::Matrix;
+
+/// Local objective interface — what the ADMM algorithms need from each
+/// agent's loss. Implemented by [`LeastSquares`]; any L-smooth loss with
+/// a stochastic first-order oracle (Assumption 3) fits here.
+pub trait Objective {
+    /// Model dimensions `(p, d)`.
+    fn dims(&self) -> (usize, usize);
+
+    /// Number of local examples b_i.
+    fn num_examples(&self) -> usize;
+
+    /// Loss f_i(x).
+    fn loss(&self, x: &Matrix) -> f64;
+
+    /// Full gradient ∇f_i(x) into `out`.
+    fn grad(&self, x: &Matrix, out: &mut Matrix);
+
+    /// Mini-batch gradient over rows `[lo, hi)` of the local data.
+    fn grad_rows(&self, x: &Matrix, lo: usize, hi: usize, out: &mut Matrix);
+
+    /// Exact proximal step: `argmin_v f_i(v) + ρ/2 ‖z − v + y/ρ‖²`
+    /// (the I-ADMM x-update (4a)).
+    fn prox_exact(&self, z: &Matrix, y: &Matrix, rho: f64) -> Matrix;
+}

@@ -1,0 +1,173 @@
+//! PJRT-backed engine: loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Interchange format is HLO **text** (not serialized proto): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example and
+//! DESIGN.md). One executable is compiled per shape and cached, so the
+//! steady-state request path is: build literals → execute → read back.
+
+use super::{Engine, NativeEngine};
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Canonical artifact file name for a gradient kernel of shape
+/// `(m, p, d)` or the fused step of shape `(p, d)`.
+pub fn artifact_name(kind: &str, dims: &[usize]) -> String {
+    let dims: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+    format!("{kind}_{}.hlo.txt", dims.join("x"))
+}
+
+/// Engine that executes the L1/L2 AOT artifacts via PJRT.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    grad_exes: HashMap<(usize, usize, usize), xla::PjRtLoadedExecutable>,
+    step_exes: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    fallback: NativeEngine,
+    /// When false (default) missing artifacts fall back to the native
+    /// engine; when true they are hard errors (used by integration
+    /// tests to prove the PJRT path really ran).
+    strict: bool,
+    /// Calls served by PJRT vs native fallback (observability).
+    pub pjrt_calls: u64,
+    pub native_calls: u64,
+}
+
+impl PjrtEngine {
+    /// Create over an artifacts directory (usually `artifacts/`).
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(Error::runtime)?;
+        Ok(Self {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            grad_exes: HashMap::new(),
+            step_exes: HashMap::new(),
+            fallback: NativeEngine::new(),
+            strict: false,
+            pjrt_calls: 0,
+            native_calls: 0,
+        })
+    }
+
+    /// Error (instead of native fallback) when an artifact is missing.
+    pub fn strict(mut self) -> Self {
+        self.strict = true;
+        self
+    }
+
+    fn load(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(name);
+        if !path.exists() {
+            return Err(Error::Runtime(format!("artifact not found: {}", path.display())));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(Error::runtime)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(Error::runtime)
+    }
+
+    fn literal_of(m: &Matrix) -> Result<xla::Literal> {
+        xla::Literal::vec1(m.as_slice())
+            .reshape(&[m.rows() as i64, m.cols() as i64])
+            .map_err(Error::runtime)
+    }
+
+    fn matrix_of(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+        let v = lit.to_vec::<f64>().map_err(Error::runtime)?;
+        Matrix::from_vec(rows, cols, v)
+    }
+
+    /// Whether a gradient artifact for this shape is available (loaded
+    /// or on disk).
+    pub fn has_grad_artifact(&self, m: usize, p: usize, d: usize) -> bool {
+        self.grad_exes.contains_key(&(m, p, d))
+            || self.dir.join(artifact_name("grad", &[m, p, d])).exists()
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn grad_batch(&mut self, o: &Matrix, t: &Matrix, x: &Matrix) -> Result<Matrix> {
+        let key = (o.rows(), x.rows(), x.cols());
+        if !self.grad_exes.contains_key(&key) {
+            match self.load(&artifact_name("grad", &[key.0, key.1, key.2])) {
+                Ok(exe) => {
+                    self.grad_exes.insert(key, exe);
+                }
+                Err(e) if self.strict => return Err(e),
+                Err(_) => {
+                    self.native_calls += 1;
+                    return self.fallback.grad_batch(o, t, x);
+                }
+            }
+        }
+        let exe = &self.grad_exes[&key];
+        let args = [Self::literal_of(o)?, Self::literal_of(t)?, Self::literal_of(x)?];
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(Error::runtime)?[0][0]
+            .to_literal_sync()
+            .map_err(Error::runtime)?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1().map_err(Error::runtime)?;
+        self.pjrt_calls += 1;
+        Self::matrix_of(&out, key.1, key.2)
+    }
+
+    fn admm_step(
+        &mut self,
+        x: &Matrix,
+        y: &Matrix,
+        z: &Matrix,
+        g: &Matrix,
+        rho: f64,
+        tau: f64,
+        gamma: f64,
+        n: usize,
+    ) -> Result<(Matrix, Matrix, Matrix)> {
+        let key = (x.rows(), x.cols());
+        if !self.step_exes.contains_key(&key) {
+            match self.load(&artifact_name("step", &[key.0, key.1])) {
+                Ok(exe) => {
+                    self.step_exes.insert(key, exe);
+                }
+                Err(e) if self.strict => return Err(e),
+                Err(_) => {
+                    self.native_calls += 1;
+                    return Ok(super::native_admm_step(x, y, z, g, rho, tau, gamma, n));
+                }
+            }
+        }
+        let exe = &self.step_exes[&key];
+        let args = [
+            Self::literal_of(x)?,
+            Self::literal_of(y)?,
+            Self::literal_of(z)?,
+            Self::literal_of(g)?,
+            xla::Literal::scalar(rho),
+            xla::Literal::scalar(tau),
+            xla::Literal::scalar(gamma),
+            xla::Literal::scalar(1.0 / n as f64),
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(Error::runtime)?[0][0]
+            .to_literal_sync()
+            .map_err(Error::runtime)?;
+        let (lx, ly, lz) = result.to_tuple3().map_err(Error::runtime)?;
+        self.pjrt_calls += 1;
+        Ok((
+            Self::matrix_of(&lx, key.0, key.1)?,
+            Self::matrix_of(&ly, key.0, key.1)?,
+            Self::matrix_of(&lz, key.0, key.1)?,
+        ))
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,134 @@
+//! ASCII line charts — terminal rendering of the paper's figures.
+//!
+//! The benches print each figure's series as a log-y scatter chart so
+//! the convergence *shapes* (not just endpoint tables) are visible
+//! without a plotting toolchain; the JSON under `results/` remains the
+//! machine-readable artifact.
+
+/// Render multiple `(label, xs, ys)` series on one log₁₀-y chart.
+///
+/// `width`/`height` are the plot-area dimensions in characters; each
+/// series is drawn with its own glyph and listed in the legend.
+pub fn log_chart(
+    title: &str,
+    xlabel: &str,
+    series: &[(&str, &[f64], &[f64])],
+    width: usize,
+    height: usize,
+) -> String {
+    const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let mut xmin = f64::INFINITY;
+    let mut xmax = f64::NEG_INFINITY;
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    for (_, xs, ys) in series {
+        for (&x, &y) in xs.iter().zip(ys.iter()) {
+            if y > 0.0 && y.is_finite() && x.is_finite() {
+                xmin = xmin.min(x);
+                xmax = xmax.max(x);
+                ymin = ymin.min(y.log10());
+                ymax = ymax.max(y.log10());
+            }
+        }
+    }
+    if !xmin.is_finite() || xmax <= xmin {
+        return format!("{title}: (no positive data to chart)\n");
+    }
+    if ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, xs, ys)) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for (&x, &y) in xs.iter().zip(ys.iter()) {
+            if y <= 0.0 || !y.is_finite() || !x.is_finite() {
+                continue;
+            }
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y.log10() - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = glyph;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{title}  (log10 y)\n"));
+    for (r, row) in grid.iter().enumerate() {
+        let yval = ymax - (r as f64 / (height - 1) as f64) * (ymax - ymin);
+        out.push_str(&format!("{yval:>7.2} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>8}+{}\n{:>9}{:<.3e}{}{:.3e}\n",
+        "",
+        "-".repeat(width),
+        "",
+        xmin,
+        " ".repeat(width.saturating_sub(22)),
+        xmax
+    ));
+    out.push_str(&format!("x: {xlabel}   legend: "));
+    for (si, (label, _, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", GLYPHS[si % GLYPHS.len()], label));
+    }
+    out.push('\n');
+    out
+}
+
+/// Convenience: chart traces' accuracy against a chosen x-axis.
+pub fn chart_traces(
+    title: &str,
+    xlabel: &str,
+    traces: &[crate::metrics::Trace],
+    x_of: fn(&crate::metrics::TracePoint) -> f64,
+) -> String {
+    let data: Vec<(String, Vec<f64>, Vec<f64>)> = traces
+        .iter()
+        .map(|t| {
+            (
+                t.label.clone(),
+                t.points.iter().map(x_of).collect(),
+                t.points.iter().map(|p| p.accuracy).collect(),
+            )
+        })
+        .collect();
+    let series: Vec<(&str, &[f64], &[f64])> = data
+        .iter()
+        .map(|(l, xs, ys)| (l.as_str(), xs.as_slice(), ys.as_slice()))
+        .collect();
+    log_chart(title, xlabel, &series, 64, 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_decaying_series() {
+        let xs: Vec<f64> = (1..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 1.0 / x).collect();
+        let s = log_chart("decay", "iter", &[("1/x", &xs, &ys)], 40, 10);
+        assert!(s.contains("decay"));
+        assert!(s.contains('*'));
+        assert!(s.contains("legend: *=1/x"));
+        // 10 plot rows + header + axis lines.
+        assert!(s.lines().count() >= 12);
+    }
+
+    #[test]
+    fn distinct_glyphs_per_series() {
+        let xs = [1.0, 2.0, 3.0];
+        let a = [1.0, 0.5, 0.25];
+        let b = [2.0, 1.0, 0.5];
+        let s = log_chart("two", "x", &[("a", &xs, &a), ("b", &xs, &b)], 30, 8);
+        assert!(s.contains('*') && s.contains('o'));
+    }
+
+    #[test]
+    fn degenerate_data_handled() {
+        let s = log_chart("empty", "x", &[("none", &[], &[])], 20, 5);
+        assert!(s.contains("no positive data"));
+        let s2 = log_chart("zeros", "x", &[("z", &[1.0], &[0.0])], 20, 5);
+        assert!(s2.contains("no positive data"));
+    }
+}

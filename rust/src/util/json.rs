@@ -1,0 +1,233 @@
+//! Minimal JSON value model and writer.
+//!
+//! `serde_json` is unavailable offline; the experiments only need to
+//! *emit* JSON (series for plotting, run manifests), so this module
+//! implements a small but correct writer: proper string escaping, `null`
+//! for non-finite floats, stable key order (insertion order).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Object with sorted keys (deterministic output).
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Object builder entry point.
+    pub fn obj() -> ObjBuilder {
+        ObjBuilder(BTreeMap::new())
+    }
+
+    /// Array from an iterator of f64 (the common series case).
+    pub fn arr_f64<I: IntoIterator<Item = f64>>(xs: I) -> Json {
+        Json::Arr(xs.into_iter().map(Json::Num).collect())
+    }
+
+    /// Array from an iterator of strings.
+    pub fn arr_str<I: IntoIterator<Item = String>>(xs: I) -> Json {
+        Json::Arr(xs.into_iter().map(Json::Str).collect())
+    }
+
+    /// Serialize to a compact string.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    /// Serialize with 2-space indentation.
+    pub fn to_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => write_num(*x, out),
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    fn write_pretty(&self, out: &mut String, depth: usize) {
+        match self {
+            Json::Arr(xs) if !xs.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    indent(out, depth + 1);
+                    x.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                indent(out, depth);
+                out.push(']');
+            }
+            Json::Obj(map) if !map.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    indent(out, depth + 1);
+                    write_str(k, out);
+                    out.push_str(": ");
+                    v.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                indent(out, depth);
+                out.push('}');
+            }
+            other => other.write(out),
+        }
+    }
+}
+
+fn indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+fn write_num(x: f64, out: &mut String) {
+    if x.is_finite() {
+        if x == x.trunc() && x.abs() < 1e15 {
+            let _ = write!(out, "{}", x as i64);
+        } else {
+            let _ = write!(out, "{x}");
+        }
+    } else {
+        // JSON has no NaN/Inf — emit null, the convention plotting
+        // toolchains accept.
+        out.push_str("null");
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Fluent object builder preserving a deterministic (sorted) key order.
+pub struct ObjBuilder(BTreeMap<String, Json>);
+
+impl ObjBuilder {
+    pub fn field(mut self, key: &str, value: Json) -> Self {
+        self.0.insert(key.to_string(), value);
+        self
+    }
+    pub fn num(self, key: &str, value: f64) -> Self {
+        self.field(key, Json::Num(value))
+    }
+    pub fn str(self, key: &str, value: &str) -> Self {
+        self.field(key, Json::Str(value.to_string()))
+    }
+    pub fn build(self) -> Json {
+        Json::Obj(self.0)
+    }
+}
+
+/// Write a JSON value to a file, creating parent directories.
+pub fn write_json_file(path: &std::path::Path, value: &Json) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, value.to_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Json::Null.to_string(), "null");
+        assert_eq!(Json::Bool(true).to_string(), "true");
+        assert_eq!(Json::Num(3.0).to_string(), "3");
+        assert_eq!(Json::Num(3.25).to_string(), "3.25");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn string_escaping() {
+        assert_eq!(
+            Json::Str("a\"b\\c\nd\u{1}".into()).to_string(),
+            "\"a\\\"b\\\\c\\nd\\u0001\""
+        );
+    }
+
+    #[test]
+    fn nested_structure() {
+        let v = Json::obj()
+            .str("name", "fig3")
+            .num("n", 10.0)
+            .field("series", Json::arr_f64([1.0, 0.5, 0.25]))
+            .build();
+        assert_eq!(v.to_string(), r#"{"n":10,"name":"fig3","series":[1,0.5,0.25]}"#);
+    }
+
+    #[test]
+    fn pretty_round_trips_structure() {
+        let v = Json::obj()
+            .field("a", Json::Arr(vec![Json::Num(1.0), Json::Null]))
+            .field("b", Json::obj().str("k", "v").build())
+            .build();
+        let p = v.to_pretty();
+        assert!(p.contains("\"a\": ["));
+        assert!(p.contains("\"k\": \"v\""));
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::Arr(vec![]).to_string(), "[]");
+        assert_eq!(Json::obj().build().to_string(), "{}");
+        assert_eq!(Json::Arr(vec![]).to_pretty(), "[]");
+    }
+}

@@ -1,0 +1,15 @@
+//! Small utilities the offline environment forces us to own:
+//!
+//! * [`json`] — a minimal JSON value model + writer (no `serde_json`
+//!   offline); every experiment exports its series under `results/`.
+//! * [`prop`] — a lightweight property-testing harness (no `proptest`
+//!   offline) with seeded case generation and failure reporting.
+//! * [`stats`] — summary statistics over experiment series.
+//! * [`table`] — ASCII table rendering for bench / CLI output, matching
+//!   the rows the paper's tables report.
+
+pub mod chart;
+pub mod json;
+pub mod prop;
+pub mod stats;
+pub mod table;

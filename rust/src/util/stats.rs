@@ -1,0 +1,122 @@
+//! Summary statistics over experiment series (means across repeated
+//! runs, percentiles for timing distributions, linear log-log slope fits
+//! used by the rate-check bench).
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// p-th percentile (0–100) via linear interpolation on sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Element-wise mean across equal-length series (averaging the paper's
+/// "10 independent experiment runs" for Fig. 5).
+pub fn mean_series(series: &[Vec<f64>]) -> Vec<f64> {
+    if series.is_empty() {
+        return vec![];
+    }
+    let n = series[0].len();
+    assert!(series.iter().all(|s| s.len() == n), "ragged series");
+    (0..n)
+        .map(|i| series.iter().map(|s| s[i]).sum::<f64>() / series.len() as f64)
+        .collect()
+}
+
+/// Least-squares slope of `y` against `x` (both raw; caller applies logs
+/// when fitting power laws like the O(1/√k) rate).
+pub fn ls_slope(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let mx = mean(x);
+    let my = mean(y);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (&xi, &yi) in x.iter().zip(y) {
+        num += (xi - mx) * (yi - my);
+        den += (xi - mx) * (xi - mx);
+    }
+    num / den
+}
+
+/// Fit `y ≈ c · k^s` over the tail of a positive series; returns the
+/// exponent `s`. Used to verify Theorem 2's O(1/√k): `s ≈ −0.5`.
+pub fn power_law_exponent(k: &[f64], y: &[f64]) -> f64 {
+    let pairs: Vec<(f64, f64)> = k
+        .iter()
+        .zip(y)
+        .filter(|(&ki, &yi)| ki > 0.0 && yi > 0.0)
+        .map(|(&ki, &yi)| (ki.ln(), yi.ln()))
+        .collect();
+    let xs: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = pairs.iter().map(|p| p.1).collect();
+    ls_slope(&xs, &ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((std_dev(&xs) - 1.2909944487358056).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn series_mean() {
+        let s = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        assert_eq!(mean_series(&s), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn slope_exact_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        assert!((ls_slope(&x, &y) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_law_recovery() {
+        // y = 10 / sqrt(k)
+        let k: Vec<f64> = (1..200).map(|i| i as f64).collect();
+        let y: Vec<f64> = k.iter().map(|&ki| 10.0 / ki.sqrt()).collect();
+        let s = power_law_exponent(&k, &y);
+        assert!((s + 0.5).abs() < 1e-6, "exponent {s}");
+    }
+}

@@ -1,0 +1,182 @@
+//! Failure-injection and robustness tests: what happens when the
+//! system is pushed *outside* its design envelope.
+
+use csadmm::coding::{CyclicRepetition, FractionalRepetition, GradientCode, SchemeKind, Uncoded};
+use csadmm::coordinator::{Algorithm, Driver, RunConfig};
+use csadmm::data::synthetic_small;
+use csadmm::ecn::{EcnPool, ResponseModel};
+use csadmm::graph::{Topology, Traversal, TraversalKind};
+use csadmm::linalg::Matrix;
+use csadmm::rng::{Rng, Xoshiro256pp};
+use csadmm::runtime::NativeEngine;
+use csadmm::util::prop::property;
+
+/// More actual stragglers than the code tolerates: the round must still
+/// decode (it just waits longer) — the system degrades, never corrupts.
+#[test]
+fn more_stragglers_than_tolerated_still_decodes_correctly() {
+    let ds = synthetic_small(600, 10, 0.1, 400);
+    let resp = ResponseModel {
+        straggler_count: 3, // S_actual = 3 > S_design = 1
+        straggler_delay: 0.1,
+        ..Default::default()
+    };
+    let code = Box::new(CyclicRepetition::new(4, 1, 3).unwrap());
+    let mut pool =
+        EcnPool::new(0, ds.train.clone(), code, 8, resp, Xoshiro256pp::seed_from_u64(41)).unwrap();
+    let mut eng = NativeEngine::new();
+    let x = Matrix::full(3, 1, 0.1);
+
+    // Reference gradient from an all-fast uncoded pool over the same data.
+    let mut ref_pool = EcnPool::new(
+        0,
+        ds.train.clone(),
+        Box::new(Uncoded::new(4).unwrap()),
+        8,
+        ResponseModel::default(),
+        Xoshiro256pp::seed_from_u64(42),
+    )
+    .unwrap();
+
+    for cycle in 0..10 {
+        let got = pool.gradient_round(&x, cycle, &mut eng).unwrap();
+        let want = ref_pool.gradient_round(&x, cycle, &mut eng).unwrap();
+        assert!(
+            got.grad.max_abs_diff(&want.grad) < 1e-9,
+            "cycle {cycle}: decode must stay exact under overload"
+        );
+        // With 3 stragglers and R=3, at least one used response
+        // straggled — the round pays the delay.
+        assert!(got.waited_for_straggler);
+        assert!(got.response_time > 0.1);
+    }
+}
+
+/// Straggler tolerance boundary: with exactly S stragglers the cyclic
+/// scheme NEVER waits for one (first R = K−S arrivals are the fast
+/// ones).
+#[test]
+fn exactly_s_stragglers_never_block_cyclic() {
+    let ds = synthetic_small(600, 10, 0.1, 401);
+    let resp = ResponseModel {
+        straggler_count: 2,
+        straggler_delay: 1.0, // enormous: any wait is visible
+        ..Default::default()
+    };
+    let code = Box::new(CyclicRepetition::new(6, 2, 9).unwrap());
+    let mut pool =
+        EcnPool::new(0, ds.train, code, 4, resp, Xoshiro256pp::seed_from_u64(43)).unwrap();
+    let mut eng = NativeEngine::new();
+    let x = Matrix::zeros(3, 1);
+    for cycle in 0..25 {
+        let res = pool.gradient_round(&x, cycle, &mut eng).unwrap();
+        assert!(!res.waited_for_straggler, "cycle {cycle} waited");
+        assert!(res.response_time < 0.5, "cycle {cycle}: {}", res.response_time);
+    }
+}
+
+/// Hamiltonian traversal visits every agent exactly once per cycle over
+/// many cycles (the paper's balanced-visits claim vs W-ADMM).
+#[test]
+fn traversal_visit_balance() {
+    property("hamiltonian visits balanced", 16, |rng| {
+        let n = 5 + rng.below(10) as usize;
+        let topo = Topology::random_connected(n, 0.5, rng).unwrap();
+        let mut t = Traversal::new(&topo, TraversalKind::Hamiltonian, rng).unwrap();
+        let cycles = 7;
+        let mut visits = vec![0usize; n];
+        for _ in 0..(cycles * n) {
+            let (a, _) = t.next();
+            visits[a] += 1;
+        }
+        assert!(visits.iter().all(|&v| v == cycles), "{visits:?}");
+    });
+}
+
+/// Random-walk traversal is unbalanced on asymmetric graphs — the
+/// contrast the paper draws with the fixed circulant pattern.
+#[test]
+fn random_walk_is_less_balanced_than_hamiltonian() {
+    let mut rng = Xoshiro256pp::seed_from_u64(404);
+    let topo = Topology::random_connected(8, 0.4, &mut rng).unwrap();
+    let mut t = Traversal::new(&topo, TraversalKind::RandomWalk, &mut rng).unwrap();
+    let mut visits = vec![0usize; 8];
+    for _ in 0..800 {
+        let (a, _) = t.next();
+        visits[a] += 1;
+    }
+    let max = *visits.iter().max().unwrap() as f64;
+    let min = *visits.iter().min().unwrap() as f64;
+    assert!(max / min > 1.05, "random walk should show imbalance: {visits:?}");
+}
+
+/// Degenerate configurations must fail loudly, not mis-run.
+#[test]
+fn invalid_configurations_are_rejected() {
+    let ds = synthetic_small(100, 10, 0.1, 405);
+    // K that doesn't divide the effective batch.
+    let bad_batch = RunConfig { k_ecn: 3, minibatch: 8, ..Default::default() };
+    assert!(Driver::new(bad_batch, &ds).is_err());
+    // Coded run whose M̄ = M/(S+1) is not a multiple of K.
+    let bad_coded = RunConfig {
+        algo: Algorithm::CsIAdmm(SchemeKind::Cyclic),
+        k_ecn: 4,
+        s_tolerated: 1,
+        minibatch: 20, // M̄ = 10, not divisible by 4
+        ..Default::default()
+    };
+    assert!(Driver::new(bad_coded, &ds).is_err());
+    // Fractional scheme with (S+1) ∤ K.
+    assert!(FractionalRepetition::new(5, 1).is_err());
+    // More examples needed than agents.
+    let tiny = synthetic_small(5, 2, 0.1, 406);
+    let too_many_agents = RunConfig { n_agents: 10, ..Default::default() };
+    assert!(Driver::new(too_many_agents, &tiny).is_err());
+}
+
+/// Decoding must be order-invariant: any permutation of the same R
+/// arrivals yields the identical gradient.
+#[test]
+fn decode_is_arrival_order_invariant() {
+    property("decode order invariance", 16, |rng| {
+        let k = 4 + rng.below(3) as usize;
+        let s = 1 + rng.below(2) as usize;
+        let code = CyclicRepetition::new(k, s, rng.next_u64()).unwrap();
+        let (p, d) = (3, 2);
+        let parts: Vec<Matrix> = (0..k)
+            .map(|_| Matrix::from_vec(p, d, (0..p * d).map(|_| rng.normal()).collect()).unwrap())
+            .collect();
+        let coded: Vec<Matrix> = (0..k)
+            .map(|j| {
+                let partial: Vec<&Matrix> =
+                    code.assignment(j).iter().map(|&pi| &parts[pi]).collect();
+                code.encode(j, &partial)
+            })
+            .collect();
+        let mut subset = rng.sample_indices(k, code.r());
+        let first: Vec<(usize, Matrix)> =
+            subset.iter().map(|&j| (j, coded[j].clone())).collect();
+        let a = code.decode(&first).unwrap();
+        rng.shuffle(&mut subset);
+        let second: Vec<(usize, Matrix)> =
+            subset.iter().map(|&j| (j, coded[j].clone())).collect();
+        let b = code.decode(&second).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-9);
+    });
+}
+
+/// Duplicate arrivals from the same ECN (e.g. retransmission) must not
+/// corrupt the uncoded sum.
+#[test]
+fn uncoded_decode_ignores_duplicates() {
+    let code = Uncoded::new(3).unwrap();
+    let g = |v: f64| Matrix::full(2, 1, v);
+    let arrived = vec![
+        (0usize, g(1.0)),
+        (0usize, g(1.0)), // duplicate
+        (1usize, g(2.0)),
+        (2usize, g(4.0)),
+    ];
+    let sum = code.decode(&arrived).unwrap();
+    assert!((sum[(0, 0)] - 7.0).abs() < 1e-12);
+}

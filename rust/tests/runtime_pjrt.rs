@@ -1,0 +1,104 @@
+//! Integration: the PJRT engine executes the AOT artifacts produced by
+//! `make artifacts` and matches the native engine to f64 round-off.
+//!
+//! These tests are skipped (with a loud message) if `artifacts/` has
+//! not been built — run `make artifacts` first; `make test` does.
+
+use csadmm::linalg::Matrix;
+use csadmm::rng::{Rng, Xoshiro256pp};
+use csadmm::runtime::{artifact_name, Engine, NativeEngine, PjrtEngine};
+use std::path::Path;
+
+fn artifacts_ready() -> bool {
+    let ok = Path::new("artifacts/.stamp").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn rand_matrix(r: usize, c: usize, rng: &mut Xoshiro256pp) -> Matrix {
+    Matrix::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect()).unwrap()
+}
+
+#[test]
+fn artifact_names_match_python_side() {
+    assert_eq!(artifact_name("grad", &[8, 3, 1]), "grad_8x3x1.hlo.txt");
+    assert_eq!(artifact_name("step", &[64, 10]), "step_64x10.hlo.txt");
+}
+
+#[test]
+fn pjrt_grad_matches_native_all_shapes() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut rng = Xoshiro256pp::seed_from_u64(301);
+    let mut pjrt = PjrtEngine::new("artifacts").unwrap().strict();
+    let mut native = NativeEngine::new();
+    for &(p, d) in &[(3usize, 1usize), (64, 10), (22, 2)] {
+        for &m in &[4usize, 8, 32] {
+            let o = rand_matrix(m, p, &mut rng);
+            let t = rand_matrix(m, d, &mut rng);
+            let x = rand_matrix(p, d, &mut rng);
+            let a = pjrt.grad_batch(&o, &t, &x).unwrap();
+            let b = native.grad_batch(&o, &t, &x).unwrap();
+            assert!(
+                a.max_abs_diff(&b) < 1e-10,
+                "grad {m}x{p}x{d}: pjrt vs native diff {}",
+                a.max_abs_diff(&b)
+            );
+        }
+    }
+    assert!(pjrt.pjrt_calls >= 9, "strict engine must have used PJRT");
+}
+
+#[test]
+fn pjrt_step_matches_native() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut rng = Xoshiro256pp::seed_from_u64(302);
+    let mut pjrt = PjrtEngine::new("artifacts").unwrap().strict();
+    for &(p, d) in &[(3usize, 1usize), (64, 10), (22, 2)] {
+        let x = rand_matrix(p, d, &mut rng);
+        let y = rand_matrix(p, d, &mut rng);
+        let z = rand_matrix(p, d, &mut rng);
+        let g = rand_matrix(p, d, &mut rng);
+        let (rho, tau, gamma, n) = (0.17, 1.9, 4.2, 10);
+        let (ax, ay, az) = pjrt.admm_step(&x, &y, &z, &g, rho, tau, gamma, n).unwrap();
+        let (bx, by, bz) = csadmm::runtime::native_admm_step(&x, &y, &z, &g, rho, tau, gamma, n);
+        assert!(ax.max_abs_diff(&bx) < 1e-12, "x {p}x{d}");
+        assert!(ay.max_abs_diff(&by) < 1e-12, "y {p}x{d}");
+        assert!(az.max_abs_diff(&bz) < 1e-12, "z {p}x{d}");
+    }
+}
+
+#[test]
+fn pjrt_missing_shape_falls_back_to_native() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut rng = Xoshiro256pp::seed_from_u64(303);
+    let mut pjrt = PjrtEngine::new("artifacts").unwrap(); // non-strict
+    // (m=5, p=7, d=9) has no artifact.
+    let o = rand_matrix(5, 7, &mut rng);
+    let t = rand_matrix(5, 9, &mut rng);
+    let x = rand_matrix(7, 9, &mut rng);
+    let g = pjrt.grad_batch(&o, &t, &x).unwrap();
+    assert_eq!(g.shape(), (7, 9));
+    assert_eq!(pjrt.native_calls, 1);
+    assert_eq!(pjrt.pjrt_calls, 0);
+}
+
+#[test]
+fn strict_engine_errors_on_missing_artifact() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut rng = Xoshiro256pp::seed_from_u64(304);
+    let mut pjrt = PjrtEngine::new("artifacts").unwrap().strict();
+    let o = rand_matrix(5, 7, &mut rng);
+    let t = rand_matrix(5, 9, &mut rng);
+    let x = rand_matrix(7, 9, &mut rng);
+    assert!(pjrt.grad_batch(&o, &t, &x).is_err());
+}
