@@ -1,11 +1,11 @@
 //! Bench: Fig. 3(c)(d) — sI-ADMM vs W-ADMM / D-ADMM / DGD / EXTRA.
-use csadmm::runtime::NativeEngine;
+use csadmm::runtime::NativeEngineFactory;
 use std::time::Instant;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let t0 = Instant::now();
-    let traces = csadmm::experiments::fig3::baselines(quick, &mut NativeEngine::new())
+    let traces = csadmm::experiments::fig3::baselines(quick, &NativeEngineFactory)
         .expect("fig3 baselines");
     println!(
         "fig3(c)(d): {} series, wall {:.2?} (series in results/fig3_baselines.json)",

@@ -1,11 +1,11 @@
 //! Bench: Fig. 3(a)(b) — mini-batch sweep on USPS-like.
-use csadmm::runtime::NativeEngine;
+use csadmm::runtime::NativeEngineFactory;
 use std::time::Instant;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let t0 = Instant::now();
-    let traces = csadmm::experiments::fig3::minibatch(quick, &mut NativeEngine::new())
+    let traces = csadmm::experiments::fig3::minibatch(quick, &NativeEngineFactory)
         .expect("fig3 minibatch");
     println!(
         "fig3(a)(b): {} series, wall {:.2?} (series in results/fig3_minibatch.json)",

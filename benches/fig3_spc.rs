@@ -1,12 +1,12 @@
 //! Bench: Fig. 3(f) — shortest-path-cycle (non-Hamiltonian) network.
-use csadmm::runtime::NativeEngine;
+use csadmm::runtime::NativeEngineFactory;
 use std::time::Instant;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let t0 = Instant::now();
     let traces =
-        csadmm::experiments::fig3::shortest_path_cycle(quick, &mut NativeEngine::new())
+        csadmm::experiments::fig3::shortest_path_cycle(quick, &NativeEngineFactory)
             .expect("fig3 spc");
     println!(
         "fig3(f): {} series, wall {:.2?} (series in results/fig3_spc.json)",

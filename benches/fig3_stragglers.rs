@@ -1,12 +1,12 @@
 //! Bench: Fig. 3(e) — straggler robustness, uncoded vs Cyclic vs
 //! Fractional over a straggler-delay sweep.
-use csadmm::runtime::NativeEngine;
+use csadmm::runtime::NativeEngineFactory;
 use std::time::Instant;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let t0 = Instant::now();
-    let traces = csadmm::experiments::fig3::stragglers(quick, &mut NativeEngine::new())
+    let traces = csadmm::experiments::fig3::stragglers(quick, &NativeEngineFactory)
         .expect("fig3 stragglers");
     println!(
         "fig3(e): {} series, wall {:.2?} (series in results/fig3_stragglers.json)",

@@ -1,11 +1,11 @@
 //! Bench: Fig. 4 — full suite on ijcnn1-like with N = 20 agents.
-use csadmm::runtime::NativeEngine;
+use csadmm::runtime::NativeEngineFactory;
 use std::time::Instant;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let t0 = Instant::now();
-    let traces = csadmm::experiments::fig4::run(quick, &mut NativeEngine::new()).expect("fig4");
+    let traces = csadmm::experiments::fig4::run(quick, &NativeEngineFactory).expect("fig4");
     println!(
         "fig4: {} series, wall {:.2?} (series in results/fig4_ijcnn1.json)",
         traces.len(),

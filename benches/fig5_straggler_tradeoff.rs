@@ -1,11 +1,11 @@
 //! Bench: Fig. 5 — straggler count vs convergence speed (averaged runs).
-use csadmm::runtime::NativeEngine;
+use csadmm::runtime::NativeEngineFactory;
 use std::time::Instant;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let t0 = Instant::now();
-    let traces = csadmm::experiments::fig5::run(quick, &mut NativeEngine::new()).expect("fig5");
+    let traces = csadmm::experiments::fig5::run(quick, &NativeEngineFactory).expect("fig5");
     println!(
         "fig5: {} series, wall {:.2?} (series in results/fig5_straggler_tradeoff.json)",
         traces.len(),

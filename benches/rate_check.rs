@@ -1,13 +1,13 @@
 //! Bench: empirical Theorem 2 (O(1/√k) rate) and Corollary 1 (O(1/υ²)
 //! communication) verification.
-use csadmm::runtime::NativeEngine;
+use csadmm::runtime::NativeEngineFactory;
 use std::time::Instant;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let t0 = Instant::now();
     let report =
-        csadmm::experiments::rate_check::run(quick, &mut NativeEngine::new()).expect("rate");
+        csadmm::experiments::rate_check::run(quick, &NativeEngineFactory).expect("rate");
     println!(
         "rate-check: accuracy exponent {:.3} (theory -0.5), comm exponent {:.3} (theory -2), wall {:.2?}",
         report.rate_exponent,

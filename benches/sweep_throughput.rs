@@ -1,0 +1,92 @@
+//! Bench: sweep-pool throughput — serial baseline vs the scoped worker
+//! pool at 1/2/4 workers on a 24-job grid, plus a byte-identity check
+//! of the summary JSON across worker counts.
+//!
+//! Expected shape: near-linear speedup up to the core count (jobs are
+//! independent, compute-bound, allocation-light), with `--workers 1`
+//! matching the serial loop.
+
+use csadmm::coding::SchemeKind;
+use csadmm::coordinator::{Algorithm, Driver, RunConfig};
+use csadmm::data::synthetic_small;
+use csadmm::ecn::ResponseModel;
+use csadmm::runtime::{Engine, NativeEngine, NativeEngineFactory};
+use csadmm::sweep::{run_sweep, SweepSpec, SweepSummary};
+use csadmm::util::table::Table;
+use std::time::Instant;
+
+fn grid(iters: usize) -> SweepSpec {
+    SweepSpec::new(RunConfig {
+        n_agents: 10,
+        k_ecn: 2,
+        s_tolerated: 1,
+        minibatch: 16,
+        rho: 0.2,
+        max_iters: iters,
+        eval_every: 100,
+        response: ResponseModel { straggler_count: 1, ..Default::default() },
+        ..Default::default()
+    })
+    .algos(vec![Algorithm::SIAdmm, Algorithm::CsIAdmm(SchemeKind::Cyclic)])
+    .epsilons(vec![1e-3, 5e-3])
+    .minibatches(vec![16, 32])
+    .seeds(vec![1, 2, 3])
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 400 } else { 2_000 };
+    let ds = synthetic_small(2_000, 200, 0.1, 42);
+    let spec = grid(iters);
+    let jobs = spec.num_jobs();
+
+    // Serial baseline: the old hand-rolled loop — one engine, one job
+    // at a time, same job order.
+    let t0 = Instant::now();
+    let mut engine = NativeEngine::new();
+    let mut serial_traces = vec![];
+    for job in spec.expand().expect("grid") {
+        let trace = Driver::new(job.cfg.clone(), &ds)
+            .expect("driver")
+            .run(&mut engine as &mut dyn Engine)
+            .expect("run");
+        serial_traces.push(trace);
+    }
+    let t_serial = t0.elapsed();
+
+    let mut table = Table::new(
+        &format!("sweep_throughput — {jobs}-job grid, {iters} iters/job"),
+        &["mode", "wall", "speedup vs serial"],
+    );
+    table.row(&["serial loop".into(), format!("{t_serial:.2?}"), "1.00x".into()]);
+
+    let mut json_w1: Option<String> = None;
+    let mut json_w4: Option<String> = None;
+    for workers in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        let result =
+            run_sweep(&spec, &ds, workers, &NativeEngineFactory).expect("sweep");
+        let wall = t0.elapsed();
+        // Pool results must match the serial loop trace-for-trace.
+        for (a, b) in serial_traces.iter().zip(&result.jobs) {
+            assert_eq!(a.points, b.trace.points, "pool diverged from serial");
+        }
+        let json = SweepSummary::from_result(&result).to_json().to_pretty();
+        match workers {
+            1 => json_w1 = Some(json),
+            4 => json_w4 = Some(json),
+            _ => {}
+        }
+        table.row(&[
+            format!("pool --workers {workers}"),
+            format!("{wall:.2?}"),
+            format!("{:.2}x", t_serial.as_secs_f64() / wall.as_secs_f64()),
+        ]);
+    }
+    assert_eq!(
+        json_w1, json_w4,
+        "summary JSON must be byte-identical across worker counts"
+    );
+    table.print();
+    println!("JSON byte-identity across --workers 1/4: OK");
+}

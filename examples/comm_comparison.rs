@@ -12,7 +12,7 @@ use csadmm::data::usps_like_small;
 use csadmm::runtime::NativeEngine;
 use csadmm::util::table::{fnum, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> csadmm::Result<()> {
     let ds = usps_like_small(600, 60, 11);
     let n = 10;
     let eta = 0.5;

@@ -24,7 +24,7 @@ use csadmm::runtime::{Engine, PjrtEngine};
 use csadmm::util::table::{fnum, Table};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> csadmm::Result<()> {
     if !std::path::Path::new("artifacts/.stamp").exists() {
         eprintln!("artifacts/ missing — run `make artifacts` first");
         std::process::exit(1);

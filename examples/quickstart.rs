@@ -10,7 +10,7 @@ use csadmm::data::synthetic_small;
 use csadmm::runtime::NativeEngine;
 use csadmm::util::table::{fnum, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> csadmm::Result<()> {
     // 1. A dataset: 2 000 synthetic regression examples (Table I shape).
     let ds = synthetic_small(2_000, 200, 0.1, 42);
 

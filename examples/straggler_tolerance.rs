@@ -20,7 +20,7 @@ use csadmm::util::table::{fnum, Table};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> csadmm::Result<()> {
     let ds = synthetic_small(2_400, 200, 0.1, 7);
 
     // --- Part 1: simulated clock ------------------------------------

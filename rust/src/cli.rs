@@ -4,8 +4,31 @@
 //! Flags beginning with `--` take a value unless registered as boolean
 //! switches by the caller via [`Args::has`]-style access: a flag
 //! followed by another flag (or nothing) parses as a switch.
+//!
+//! The command set (see [`USAGE`]) covers the paper's figure/table
+//! reproductions plus the parallel `sweep` subcommand backed by
+//! [`crate::sweep`].
 
 use std::collections::BTreeMap;
+
+/// Top-level usage text printed by the binary on unknown commands.
+pub const USAGE: &str = "\
+usage: csadmm <command> [--quick] [--pjrt] [--artifacts <dir>]
+
+commands:
+  run --config <file> [--seed N]   one experiment from a config file
+  table1                           Table I dataset inventory
+  fig3-minibatch | fig3-baselines | fig3-stragglers | fig3-spc
+  fig4 | fig5 | rate-check         figure/rate reproductions
+  sweep [--config <file>] [--workers N] [--out <file>]
+                                   parallel parameter grid: expands the
+                                   [sweep] section of the config (or a
+                                   built-in 24-job demo grid) and runs it
+                                   on N worker threads (default: all
+                                   cores); per-cell summary JSON goes to
+                                   --out (default results/sweep.json) and
+                                   is byte-identical for any worker count
+  all                              every experiment above";
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]

@@ -111,6 +111,18 @@ impl ConfigDoc {
         }
     }
 
+    /// Comma-separated list lookup: `key = a, b, c` (a single scalar
+    /// reads as a one-element list). Used by sweep-grid axes.
+    pub fn get_list(&self, section: &str, key: &str) -> Option<Vec<String>> {
+        let raw = self.get_str(section, key)?;
+        Some(
+            raw.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+        )
+    }
+
     /// Sections present (tests/validation).
     pub fn section_names(&self) -> Vec<&str> {
         self.sections.keys().map(|s| s.as_str()).collect()
@@ -147,5 +159,13 @@ mod tests {
     fn quoted_values_keep_hashes() {
         let doc = ConfigDoc::parse("[s]\nv = \"a#b\"\n").unwrap();
         assert_eq!(doc.get_str("s", "v").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn lists_split_on_commas() {
+        let doc = ConfigDoc::parse("[s]\nxs = 4, 16,48\none = 7\n").unwrap();
+        assert_eq!(doc.get_list("s", "xs").unwrap(), vec!["4", "16", "48"]);
+        assert_eq!(doc.get_list("s", "one").unwrap(), vec!["7"]);
+        assert!(doc.get_list("s", "missing").is_none());
     }
 }

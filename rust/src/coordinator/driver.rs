@@ -111,6 +111,10 @@ impl Default for RunConfig {
 
 impl RunConfig {
     /// Effective batch M̄ = M/(S+1) (Eq. 22) for coded runs, M otherwise.
+    ///
+    /// Only meaningful when M divides evenly: [`Self::per_partition_rows`]
+    /// (and therefore [`Driver::new`]) rejects coded configs where
+    /// `M % (S+1) != 0` instead of silently truncating the batch.
     pub fn effective_minibatch(&self) -> usize {
         match self.algo {
             Algorithm::CsIAdmm(_) => self.minibatch / (self.s_tolerated + 1),
@@ -119,7 +123,22 @@ impl RunConfig {
     }
 
     /// Per-partition batch rows (`effective batch / K`).
+    ///
+    /// Validates the batch geometry: for coded runs M must be divisible
+    /// by S+1 (Eq. 22 defines M̄ = M/(S+1); a remainder would silently
+    /// shrink the processed batch), and the effective batch must be a
+    /// positive multiple of K.
     pub fn per_partition_rows(&self) -> Result<usize> {
+        if let Algorithm::CsIAdmm(_) = self.algo {
+            let div = self.s_tolerated + 1;
+            if self.minibatch % div != 0 {
+                return Err(Error::Config(format!(
+                    "minibatch M={} is not divisible by S+1={div} (Eq. 22: M̄ = M/(S+1)); \
+                     choose M a multiple of {div}",
+                    self.minibatch
+                )));
+            }
+        }
         let eff = self.effective_minibatch();
         if eff == 0 || eff % self.k_ecn != 0 {
             return Err(Error::Config(format!(
@@ -402,6 +421,35 @@ mod tests {
     fn bad_minibatch_rejected() {
         let cfg = RunConfig { minibatch: 7, k_ecn: 2, ..base_cfg() };
         assert!(Driver::new(cfg, &ds()).is_err());
+    }
+
+    #[test]
+    fn coded_minibatch_must_divide_s_plus_1() {
+        // M=16, S=2: 16/3 would silently truncate to 5 — must be a
+        // config error, not a smaller batch.
+        let cfg = RunConfig {
+            algo: Algorithm::CsIAdmm(SchemeKind::Cyclic),
+            s_tolerated: 2,
+            minibatch: 16,
+            k_ecn: 2,
+            ..base_cfg()
+        };
+        match cfg.per_partition_rows() {
+            Err(crate::error::Error::Config(msg)) => {
+                assert!(msg.contains("divisible"), "{msg}");
+            }
+            other => panic!("expected Error::Config, got {other:?}"),
+        }
+        assert!(Driver::new(cfg, &ds()).is_err());
+        // Divisible coded config still accepted: M=18, S=2 → M̄=6, K=2.
+        let ok = RunConfig {
+            algo: Algorithm::CsIAdmm(SchemeKind::Cyclic),
+            s_tolerated: 2,
+            minibatch: 18,
+            k_ecn: 2,
+            ..base_cfg()
+        };
+        assert_eq!(ok.per_partition_rows().unwrap(), 3);
     }
 
     #[test]

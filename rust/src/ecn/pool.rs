@@ -172,14 +172,24 @@ impl EcnPool {
                 let partial: Vec<&Matrix> =
                     self.code.assignment(j).iter().map(|&p| &self.part_grads[p]).collect();
                 let coded = self.code.encode(j, &partial);
-                let rows = self.code.assignment(j).len() * self.cursors[0].batch_rows();
+                // Charge each ECN for the rows of *its own* assigned
+                // partitions (cursors can differ per partition; do not
+                // assume cursor 0's geometry).
+                let rows: usize = self
+                    .code
+                    .assignment(j)
+                    .iter()
+                    .map(|&p| self.cursors[p].batch_rows())
+                    .sum();
                 let is_straggler = stragglers.contains(&j);
                 let t = self.response.sample(rows, is_straggler, &mut self.rng);
                 (t, j, coded, is_straggler)
             })
             .collect();
-        // 3. Arrival order.
-        responses.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // 3. Arrival order. `total_cmp` is NaN-safe (a degenerate
+        // response model must not panic the round); ties break on the
+        // ECN index so arrival order stays deterministic.
+        responses.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         // 4. Decode from the earliest decodable prefix (paper: wait for
         //    the R-th fastest; uncoded degenerates to all K).
         let r = self.code.r();

@@ -1,37 +1,60 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! offline build environment ships no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for the csadmm library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Linear-algebra failure (singular matrix, shape mismatch, ...).
-    #[error("linear algebra error: {0}")]
     Linalg(String),
 
     /// Graph construction / traversal failure.
-    #[error("graph error: {0}")]
     Graph(String),
 
     /// Gradient-coding failure (undecodable arrival pattern, bad scheme).
-    #[error("coding error: {0}")]
     Coding(String),
 
     /// Dataset generation / partitioning failure.
-    #[error("data error: {0}")]
     Data(String),
 
     /// Experiment / algorithm configuration error.
-    #[error("config error: {0}")]
     Config(String),
 
     /// PJRT runtime failure (artifact missing, compile/execute error).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Linalg(m) => write!(f, "linear algebra error: {m}"),
+            Error::Graph(m) => write!(f, "graph error: {m}"),
+            Error::Coding(m) => write!(f, "coding error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -42,5 +65,18 @@ impl Error {
     /// not `Send + Sync`, so we stringify at the boundary).
     pub fn runtime<E: std::fmt::Display>(e: E) -> Self {
         Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::Config("bad".into()).to_string(), "config error: bad");
+        assert_eq!(Error::Coding("x".into()).to_string(), "coding error: x");
+        let io = Error::from(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(io.to_string().starts_with("io error:"));
     }
 }

@@ -2,17 +2,23 @@
 //! squares, dataset USPS (stand-in): (a)(b) mini-batch sweep, (c)(d)
 //! baseline comparison, (e) straggler robustness, (f) shortest-path
 //! cycle network.
+//!
+//! Every grid is declared as a [`SweepSpec`] and executed on the
+//! [`crate::sweep`] worker pool — results are identical to the old
+//! serial loops (each job is an independent, seed-determined
+//! `Driver::run`) but land in a fraction of the wall-clock.
 
 use super::{budget, load_dataset, write_traces, ROOT_SEED};
 use crate::baselines::{comparable_setup, DAdmm, Dgd, Extra, GossipHarness};
 use crate::coding::SchemeKind;
-use crate::coordinator::{Algorithm, Driver, RunConfig, TopologyKind};
+use crate::coordinator::{Algorithm, RunConfig, TopologyKind};
 use crate::data::DatasetName;
 use crate::ecn::ResponseModel;
 use crate::error::Result;
 use crate::graph::TraversalKind;
 use crate::metrics::Trace;
-use crate::runtime::Engine;
+use crate::runtime::EngineFactory;
+use crate::sweep::{default_workers, run_sweep, SweepSpec};
 use crate::util::table::{fnum, Table};
 
 /// Common USPS-experiment configuration (N=10 agents, η=0.5, K=2).
@@ -32,15 +38,11 @@ fn usps_cfg(quick: bool) -> RunConfig {
 
 /// Fig. 3(a)(b): accuracy and test error vs communication cost for
 /// mini-batch sizes M ∈ {4, 16, 48}.
-pub fn minibatch(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
+pub fn minibatch(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>> {
     let ds = load_dataset(DatasetName::UspsLike, quick);
-    let mut traces = vec![];
-    for &m in &[4usize, 16, 48] {
-        let cfg = RunConfig { minibatch: m, ..usps_cfg(quick) };
-        let mut trace = Driver::new(cfg, &ds)?.run(engine)?;
-        trace.label = format!("sI-ADMM M={m}");
-        traces.push(trace);
-    }
+    let spec = SweepSpec::new(usps_cfg(quick)).minibatches(vec![4, 16, 48]);
+    let result = run_sweep(&spec, &ds, default_workers(), engines)?;
+    let traces = result.labelled_traces();
     let mut t = Table::new(
         "Fig. 3(a)(b) — mini-batch size sweep (USPS-like)",
         &["series", "comm units", "accuracy", "test MSE"],
@@ -70,15 +72,14 @@ pub fn minibatch(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
 
 /// Fig. 3(c)(d): sI-ADMM vs W-ADMM, D-ADMM, DGD, EXTRA — accuracy and
 /// test error vs communication cost.
-pub fn baselines(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
+pub fn baselines(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>> {
     let ds = load_dataset(DatasetName::UspsLike, quick);
     let base = usps_cfg(quick);
-    let mut traces = vec![];
-    // Incremental methods via the coordinator.
-    for algo in [Algorithm::SIAdmm, Algorithm::WAdmm] {
-        let cfg = RunConfig { algo, ..base.clone() };
-        traces.push(Driver::new(cfg, &ds)?.run(engine)?);
-    }
+    // Incremental methods via the coordinator, as a 2-cell sweep.
+    let spec =
+        SweepSpec::new(base.clone()).algos(vec![Algorithm::SIAdmm, Algorithm::WAdmm]);
+    let result = run_sweep(&spec, &ds, default_workers(), engines)?;
+    let mut traces = result.labelled_traces();
     // Gossip baselines over the *same* shards/topology seed.
     let (topo, objs, xstar) = comparable_setup(&ds, base.n_agents, base.eta, base.seed)?;
     // Gossip methods use far more comm per iteration; give them the same
@@ -119,35 +120,38 @@ pub fn baselines(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
 
 /// Fig. 3(e): robustness to stragglers — uncoded sI-ADMM vs csI-ADMM
 /// (Cyclic / Fractional), accuracy vs running time for a sweep of the
-/// straggler delay ε.
-pub fn stragglers(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
+/// straggler delay ε. Grid: 3 algorithms × |ε| × 1 seed.
+pub fn stragglers(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>> {
     let ds = load_dataset(DatasetName::UspsLike, quick);
-    let mut traces = vec![];
     let epsilons = if quick { vec![5e-3] } else { vec![1e-3, 5e-3, 2e-2] };
-    for &eps in &epsilons {
-        for (algo, label) in [
-            (Algorithm::SIAdmm, "uncoded"),
-            (Algorithm::CsIAdmm(SchemeKind::Cyclic), "cyclic"),
-            (Algorithm::CsIAdmm(SchemeKind::Fractional), "fractional"),
-        ] {
-            let cfg = RunConfig {
-                algo,
-                k_ecn: 4,
-                s_tolerated: 1,
-                // Coded runs use M̄ = M/(S+1) internally (Eq. 22).
-                minibatch: 32,
-                response: ResponseModel {
-                    straggler_count: 1,
-                    straggler_delay: eps,
-                    ..Default::default()
-                },
-                ..usps_cfg(quick)
+    let spec = SweepSpec::new(RunConfig {
+        k_ecn: 4,
+        s_tolerated: 1,
+        // Coded runs use M̄ = M/(S+1) internally (Eq. 22).
+        minibatch: 32,
+        response: ResponseModel { straggler_count: 1, ..Default::default() },
+        ..usps_cfg(quick)
+    })
+    .algos(vec![
+        Algorithm::SIAdmm,
+        Algorithm::CsIAdmm(SchemeKind::Cyclic),
+        Algorithm::CsIAdmm(SchemeKind::Fractional),
+    ])
+    .epsilons(epsilons);
+    let result = run_sweep(&spec, &ds, default_workers(), engines)?;
+    let traces: Vec<Trace> = result
+        .jobs
+        .iter()
+        .map(|j| {
+            let mut tr = j.trace.clone();
+            let short = match j.job.cfg.algo {
+                Algorithm::CsIAdmm(s) => s.as_str(),
+                _ => "uncoded",
             };
-            let mut trace = Driver::new(cfg, &ds)?.run(engine)?;
-            trace.label = format!("{label} eps={eps}");
-            traces.push(trace);
-        }
-    }
+            tr.label = format!("{short} eps={}", j.job.cfg.response.straggler_delay);
+            tr
+        })
+        .collect();
     let mut t = Table::new(
         "Fig. 3(e) — straggler robustness (USPS-like, K=4, S=1)",
         &["series", "sim time (s)", "accuracy", "time/iter (ms)"],
@@ -168,7 +172,7 @@ pub fn stragglers(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
 
 /// Fig. 3(f): the shortest-path-cycle (non-Hamiltonian spider) network —
 /// sI-ADMM vs W-ADMM, accuracy vs comm cost.
-pub fn shortest_path_cycle(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
+pub fn shortest_path_cycle(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>> {
     let ds = load_dataset(DatasetName::UspsLike, quick);
     let base = RunConfig {
         topology: TopologyKind::Spider,
@@ -176,13 +180,17 @@ pub fn shortest_path_cycle(quick: bool, engine: &mut dyn Engine) -> Result<Vec<T
         n_agents: 10, // 3 legs × 3 + 1
         ..usps_cfg(quick)
     };
-    let mut traces = vec![];
-    for algo in [Algorithm::SIAdmm, Algorithm::WAdmm] {
-        let cfg = RunConfig { algo, ..base.clone() };
-        let mut trace = Driver::new(cfg, &ds)?.run(engine)?;
-        trace.label = format!("{} (SPC net)", trace.label);
-        traces.push(trace);
-    }
+    let spec = SweepSpec::new(base).algos(vec![Algorithm::SIAdmm, Algorithm::WAdmm]);
+    let result = run_sweep(&spec, &ds, default_workers(), engines)?;
+    let traces: Vec<Trace> = result
+        .jobs
+        .iter()
+        .map(|j| {
+            let mut tr = j.trace.clone();
+            tr.label = format!("{} (SPC net)", j.job.label);
+            tr
+        })
+        .collect();
     let mut t = Table::new(
         "Fig. 3(f) — shortest-path-cycle network (USPS-like)",
         &["series", "comm units", "accuracy", "test MSE"],
@@ -204,19 +212,19 @@ pub fn shortest_path_cycle(quick: bool, engine: &mut dyn Engine) -> Result<Vec<T
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::NativeEngine;
+    use crate::runtime::NativeEngineFactory;
 
     #[test]
     fn minibatch_monotone_in_m() {
         // Larger M ⇒ better accuracy at equal comm (Theorem 2 / Fig 3a).
-        let traces = minibatch(true, &mut NativeEngine::new()).unwrap();
+        let traces = minibatch(true, &NativeEngineFactory).unwrap();
         let acc: Vec<f64> = traces.iter().map(|t| t.final_accuracy()).collect();
         assert!(acc[2] < acc[0], "M=48 ({}) should beat M=4 ({})", acc[2], acc[0]);
     }
 
     #[test]
     fn incremental_beats_gossip_on_comm() {
-        let traces = baselines(true, &mut NativeEngine::new()).unwrap();
+        let traces = baselines(true, &NativeEngineFactory).unwrap();
         let get = |label: &str| {
             traces
                 .iter()
@@ -232,7 +240,7 @@ mod tests {
 
     #[test]
     fn coded_faster_than_uncoded_under_stragglers() {
-        let traces = stragglers(true, &mut NativeEngine::new()).unwrap();
+        let traces = stragglers(true, &NativeEngineFactory).unwrap();
         let time_of = |label: &str| {
             traces
                 .iter()

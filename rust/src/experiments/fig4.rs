@@ -1,15 +1,21 @@
 //! Fig. 4 — the same consensus-optimization suite on the larger ijcnn1
 //! (stand-in) dataset with a bigger test network (N = 20).
+//!
+//! The three incremental grids (mini-batch sweep, W-ADMM baseline,
+//! straggler trio) are [`SweepSpec`]s executed on the [`crate::sweep`]
+//! pool; only the gossip baselines remain serial (they do not run
+//! through the coordinator).
 
 use super::{budget, load_dataset, write_traces, ROOT_SEED};
 use crate::baselines::{comparable_setup, DAdmm, Dgd, Extra, GossipHarness};
 use crate::coding::SchemeKind;
-use crate::coordinator::{Algorithm, Driver, RunConfig};
+use crate::coordinator::{Algorithm, RunConfig};
 use crate::data::DatasetName;
 use crate::ecn::ResponseModel;
 use crate::error::Result;
 use crate::metrics::Trace;
-use crate::runtime::Engine;
+use crate::runtime::EngineFactory;
+use crate::sweep::{default_workers, run_sweep, SweepSpec};
 use crate::util::table::{fnum, Table};
 
 fn ijcnn_cfg(quick: bool) -> RunConfig {
@@ -28,24 +34,19 @@ fn ijcnn_cfg(quick: bool) -> RunConfig {
 
 /// Run the Fig. 4 suite: (a)(b) mini-batch sweep, (c)(d) baselines,
 /// (e) straggler robustness — all on ijcnn1-like, N=20.
-pub fn run(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
+pub fn run(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>> {
     let ds = load_dataset(DatasetName::Ijcnn1Like, quick);
     let base = ijcnn_cfg(quick);
+    let workers = default_workers();
     let mut traces = vec![];
 
     // (a)(b) mini-batch sweep.
-    for &m in &[8usize, 32, 128] {
-        let cfg = RunConfig { minibatch: m, ..base.clone() };
-        let mut tr = Driver::new(cfg, &ds)?.run(engine)?;
-        tr.label = format!("sI-ADMM M={m}");
-        traces.push(tr);
-    }
+    let m_spec = SweepSpec::new(base.clone()).minibatches(vec![8, 32, 128]);
+    traces.extend(run_sweep(&m_spec, &ds, workers, engines)?.labelled_traces());
 
     // (c)(d) baselines at equal comm budget.
-    for algo in [Algorithm::WAdmm] {
-        let cfg = RunConfig { algo, ..base.clone() };
-        traces.push(Driver::new(cfg, &ds)?.run(engine)?);
-    }
+    let w_spec = SweepSpec::new(RunConfig { algo: Algorithm::WAdmm, ..base.clone() });
+    traces.extend(run_sweep(&w_spec, &ds, workers, engines)?.labelled_traces());
     let (topo, objs, xstar) = comparable_setup(&ds, base.n_agents, base.eta, base.seed)?;
     let gossip_iters = (base.max_iters / (2 * topo.num_edges())).max(10);
     let h = GossipHarness {
@@ -61,23 +62,27 @@ pub fn run(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
     traces.push(h.run(Extra::new(0.02), &objs, &xstar, &ds.test)?);
 
     // (e) straggler robustness.
-    for (algo, label) in [
-        (Algorithm::SIAdmm, "uncoded"),
-        (Algorithm::CsIAdmm(SchemeKind::Cyclic), "cyclic"),
-        (Algorithm::CsIAdmm(SchemeKind::Fractional), "fractional"),
-    ] {
-        let cfg = RunConfig {
-            algo,
-            s_tolerated: 1,
-            response: ResponseModel {
-                straggler_count: 1,
-                straggler_delay: 5e-3,
-                ..Default::default()
-            },
-            ..base.clone()
+    let s_spec = SweepSpec::new(RunConfig {
+        s_tolerated: 1,
+        response: ResponseModel {
+            straggler_count: 1,
+            straggler_delay: 5e-3,
+            ..Default::default()
+        },
+        ..base.clone()
+    })
+    .algos(vec![
+        Algorithm::SIAdmm,
+        Algorithm::CsIAdmm(SchemeKind::Cyclic),
+        Algorithm::CsIAdmm(SchemeKind::Fractional),
+    ]);
+    for j in &run_sweep(&s_spec, &ds, workers, engines)?.jobs {
+        let mut tr = j.trace.clone();
+        let short = match j.job.cfg.algo {
+            Algorithm::CsIAdmm(s) => s.as_str(),
+            _ => "uncoded",
         };
-        let mut tr = Driver::new(cfg, &ds)?.run(engine)?;
-        tr.label = format!("{label} eps=5e-3");
+        tr.label = format!("{short} eps=5e-3");
         traces.push(tr);
     }
 
@@ -103,11 +108,11 @@ pub fn run(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::NativeEngine;
+    use crate::runtime::NativeEngineFactory;
 
     #[test]
     fn fig4_shapes_hold_on_quick_run() {
-        let traces = run(true, &mut NativeEngine::new()).unwrap();
+        let traces = run(true, &NativeEngineFactory).unwrap();
         // Same qualitative findings as Fig. 3 on the larger network.
         let acc = |label: &str| {
             traces.iter().find(|t| t.label.starts_with(label)).unwrap().final_accuracy()

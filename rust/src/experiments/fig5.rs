@@ -4,15 +4,20 @@
 //! The mechanism (§IV-C): tolerating S stragglers caps the usable
 //! mini-batch at M̄ = M/(S+1) (Eq. 22), and the smaller batch slows
 //! convergence — Corollary 2's O((S+M+1)/(M√k)) rate.
+//!
+//! The experiment is one [`SweepSpec`]: the S axis × the seed axis
+//! (the paper's "10 independent runs"), executed in parallel on the
+//! [`crate::sweep`] pool and averaged point-wise per cell with
+//! [`mean_trace`].
 
 use super::{budget, load_dataset, write_traces, ROOT_SEED};
 use crate::coding::SchemeKind;
-use crate::coordinator::{Algorithm, Driver, RunConfig};
+use crate::coordinator::{Algorithm, RunConfig};
 use crate::data::DatasetName;
 use crate::error::Result;
 use crate::metrics::Trace;
-use crate::runtime::Engine;
-use crate::util::stats::mean_series;
+use crate::runtime::EngineFactory;
+use crate::sweep::{default_workers, mean_trace, run_sweep, SweepSpec};
 use crate::util::table::{fnum, Table};
 
 /// Straggler counts swept (S=0 is the uncoded-equivalent ceiling).
@@ -20,38 +25,31 @@ pub const S_VALUES: [usize; 4] = [0, 1, 2, 5];
 
 /// Run Fig. 5: for each S, average `runs` independent csI-ADMM runs and
 /// report the accuracy-vs-iteration series.
-pub fn run(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
+pub fn run(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>> {
     let ds = load_dataset(DatasetName::Synthetic, quick);
     let runs = if quick { 3 } else { 10 };
     let k_ecn = 6;
     let m_base = 36; // M: M̄ = 36/(S+1) stays a positive multiple of K=6
+    let seeds: Vec<u64> = (0..runs).map(|r| ROOT_SEED ^ 5 ^ ((r as u64) << 8)).collect();
+    let spec = SweepSpec::new(RunConfig {
+        algo: Algorithm::CsIAdmm(SchemeKind::Cyclic),
+        n_agents: 10,
+        k_ecn,
+        minibatch: m_base,
+        rho: 0.15,
+        max_iters: budget(3_000, quick),
+        eval_every: 30,
+        ..Default::default()
+    })
+    .s_values(S_VALUES.to_vec())
+    .seeds(seeds);
+    let result = run_sweep(&spec, &ds, default_workers(), engines)?;
     let mut traces = vec![];
-    for &s in &S_VALUES {
-        let mut series: Vec<Vec<f64>> = vec![];
-        let mut last_template: Option<Trace> = None;
-        for run_idx in 0..runs {
-            let cfg = RunConfig {
-                algo: Algorithm::CsIAdmm(SchemeKind::Cyclic),
-                n_agents: 10,
-                k_ecn,
-                s_tolerated: s,
-                minibatch: m_base,
-                rho: 0.15,
-                max_iters: budget(3_000, quick),
-                eval_every: 30,
-                seed: ROOT_SEED ^ 5 ^ (run_idx as u64) << 8,
-                ..Default::default()
-            };
-            let tr = Driver::new(cfg, &ds)?.run(engine)?;
-            series.push(tr.points.iter().map(|p| p.accuracy).collect());
-            last_template = Some(tr);
-        }
-        // Average the runs point-wise (the paper averages 10 runs).
-        let mut avg = last_template.unwrap();
-        let means = mean_series(&series);
-        for (pt, m) in avg.points.iter_mut().zip(means) {
-            pt.accuracy = m;
-        }
+    for cell in result.cells() {
+        // Average the cell's runs point-wise (the paper averages 10).
+        let s = cell[0].job.cfg.s_tolerated;
+        let refs: Vec<&Trace> = cell.iter().map(|j| &j.trace).collect();
+        let mut avg = mean_trace(&refs);
         avg.label = format!("csI-ADMM S={s} (M̄={})", m_base / (s + 1));
         traces.push(avg);
     }
@@ -74,11 +72,11 @@ pub fn run(quick: bool, engine: &mut dyn Engine) -> Result<Vec<Trace>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::NativeEngine;
+    use crate::runtime::NativeEngineFactory;
 
     #[test]
     fn more_stragglers_slower_convergence() {
-        let traces = run(true, &mut NativeEngine::new()).unwrap();
+        let traces = run(true, &NativeEngineFactory).unwrap();
         let accs: Vec<f64> = traces.iter().map(|t| t.final_accuracy()).collect();
         // S=0 (full batch) should converge at least as fast as S=5
         // (batch 6× smaller): the trade-off of Eq. 22 / Corollary 2.

@@ -12,7 +12,7 @@ use crate::coordinator::{Driver, RunConfig};
 use crate::data::DatasetName;
 use crate::error::Result;
 use crate::metrics::Trace;
-use crate::runtime::Engine;
+use crate::runtime::EngineFactory;
 use crate::util::stats::{ls_slope, power_law_exponent};
 use crate::util::table::{fnum, Table};
 
@@ -26,8 +26,11 @@ pub struct RateReport {
     pub trace: Trace,
 }
 
-/// Run the check on the synthetic dataset.
-pub fn run(quick: bool, engine: &mut dyn Engine) -> Result<RateReport> {
+/// Run the check on the synthetic dataset (a single run — no grid, so
+/// it takes an [`EngineFactory`] only for interface uniformity with the
+/// sweep-based experiments).
+pub fn run(quick: bool, engines: &dyn EngineFactory) -> Result<RateReport> {
+    let mut engine = engines.create()?;
     let ds = load_dataset(DatasetName::Synthetic, quick);
     let cfg = RunConfig {
         n_agents: 10,
@@ -39,7 +42,7 @@ pub fn run(quick: bool, engine: &mut dyn Engine) -> Result<RateReport> {
         seed: ROOT_SEED ^ 6,
         ..Default::default()
     };
-    let trace = Driver::new(cfg, &ds)?.run(engine)?;
+    let trace = Driver::new(cfg, &ds)?.run(engine.as_mut())?;
 
     // Fit the decay regime: skip the initial transient (first 10%) AND
     // the stochastic noise floor (points within 2× of the final
@@ -90,11 +93,11 @@ pub fn run(quick: bool, engine: &mut dyn Engine) -> Result<RateReport> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::NativeEngine;
+    use crate::runtime::NativeEngineFactory;
 
     #[test]
     fn sublinear_rate_in_band() {
-        let report = run(true, &mut NativeEngine::new()).unwrap();
+        let report = run(true, &NativeEngineFactory).unwrap();
         // Theorem 2's O(1/√k) is an upper bound: strongly-convex least
         // squares may decay *faster* than k^{-1/2}. Require clearly
         // sublinear decay, at least as fast as the bound allows for.

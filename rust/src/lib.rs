@@ -17,7 +17,9 @@
 //!   JAX/Pallas by `python/compile/aot.py`) via the PJRT CPU client and
 //!   executes them from the Rust hot path; a native [`linalg`] fallback
 //!   keeps the library usable without artifacts.
-//! * Harness: [`config`], [`cli`], [`metrics`], [`experiments`] — the
+//! * Harness: [`config`], [`cli`], [`metrics`], [`sweep`],
+//!   [`experiments`] — parameter grids run on [`sweep`]'s worker pool
+//!   with deterministic, worker-count-independent output; the
 //!   experiment drivers regenerating every table and figure in the paper.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
@@ -40,6 +42,7 @@ pub mod metrics;
 pub mod problem;
 pub mod rng;
 pub mod runtime;
+pub mod sweep;
 pub mod util;
 
 pub use error::{Error, Result};

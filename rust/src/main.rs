@@ -1,38 +1,69 @@
-//! `csadmm` — the leader binary: runs configured experiments or any of
-//! the paper's figure/table reproductions from the command line.
+//! `csadmm` — the leader binary: runs configured experiments, any of
+//! the paper's figure/table reproductions, or a parallel parameter
+//! sweep from the command line.
 //!
 //! ```text
 //! csadmm run --config examples/configs/usps_csiadmm.toml [--pjrt]
 //! csadmm table1 [--quick]
 //! csadmm fig3-minibatch | fig3-baselines | fig3-stragglers | fig3-spc
 //! csadmm fig4 | fig5 | rate-check          [--quick] [--pjrt]
+//! csadmm sweep [--config <file>] [--workers N] [--out <file>]
 //! csadmm all [--quick]
 //! ```
 //!
 //! `--pjrt` executes the gradient/step hot path through the AOT HLO
 //! artifacts (build them first with `make artifacts`); the default is
-//! the native engine.
+//! the native engine. Sweeps build one engine per worker thread via
+//! [`EngineFactory`].
 
-use csadmm::cli::Args;
+use csadmm::cli::{Args, USAGE};
+use csadmm::coding::SchemeKind;
 use csadmm::config::{run_config_from_doc, ConfigDoc};
-use csadmm::coordinator::Driver;
-use csadmm::experiments::{self, load_dataset};
-use csadmm::runtime::{Engine, NativeEngine, PjrtEngine};
+use csadmm::coordinator::{Algorithm, Driver, RunConfig};
+use csadmm::data::DatasetName;
+use csadmm::ecn::ResponseModel;
+use csadmm::experiments::{self, load_dataset, ROOT_SEED};
+use csadmm::runtime::{EngineFactory, NativeEngineFactory, PjrtEngineFactory};
+use csadmm::sweep::{default_workers, run_sweep, SweepSpec, SweepSummary};
+use csadmm::util::json::write_json_file;
 use csadmm::util::table::{fnum, Table};
+use csadmm::Result;
 
-fn make_engine(args: &Args) -> anyhow::Result<Box<dyn Engine>> {
+fn make_factory(args: &Args) -> Box<dyn EngineFactory> {
     if args.has("pjrt") {
         let dir = args.get("artifacts").unwrap_or("artifacts");
-        Ok(Box::new(PjrtEngine::new(dir)?))
+        Box::new(PjrtEngineFactory::new(dir))
     } else {
-        Ok(Box::new(NativeEngine::new()))
+        Box::new(NativeEngineFactory)
     }
 }
 
-fn main() -> anyhow::Result<()> {
+/// Built-in demo grid for bare `csadmm sweep`: 2 algorithms × 2
+/// straggler delays × 2 mini-batches × 3 seeds = 24 jobs on the quick
+/// synthetic dataset.
+fn demo_sweep() -> SweepSpec {
+    SweepSpec::new(RunConfig {
+        n_agents: 10,
+        k_ecn: 2,
+        s_tolerated: 1,
+        minibatch: 16,
+        rho: 0.2,
+        max_iters: 600,
+        eval_every: 50,
+        seed: ROOT_SEED,
+        response: ResponseModel { straggler_count: 1, ..Default::default() },
+        ..Default::default()
+    })
+    .algos(vec![Algorithm::SIAdmm, Algorithm::CsIAdmm(SchemeKind::Cyclic)])
+    .epsilons(vec![1e-3, 5e-3])
+    .minibatches(vec![16, 32])
+    .seeds(vec![1, 2, 3])
+}
+
+fn main() -> Result<()> {
     let args = Args::from_env();
     let quick = args.has("quick");
-    let mut engine = make_engine(&args)?;
+    let factory = make_factory(&args);
     match args.command.as_deref() {
         Some("run") => {
             let path = args.get("config").unwrap_or("examples/configs/quickstart.toml");
@@ -42,6 +73,7 @@ fn main() -> anyhow::Result<()> {
                 cfg.seed = seed;
             }
             let ds = load_dataset(dataset, quick);
+            let mut engine = factory.create()?;
             println!(
                 "running {} on {} (N={}, K={}, M={}, engine={})",
                 cfg.algo.label(),
@@ -69,50 +101,75 @@ fn main() -> anyhow::Result<()> {
             experiments::write_traces("cli_run", std::slice::from_ref(&trace))?;
             println!("trace written to results/cli_run.json");
         }
+        Some("sweep") => {
+            let workers = args.get_usize("workers").unwrap_or_else(default_workers);
+            let (spec, ds) = match args.get("config") {
+                Some(path) => {
+                    let doc = ConfigDoc::load(std::path::Path::new(path))?;
+                    let (spec, dataset) = SweepSpec::from_doc(&doc)?;
+                    (spec, load_dataset(dataset, quick))
+                }
+                // Bare `csadmm sweep`: the quick-scale demo grid.
+                None => (demo_sweep(), load_dataset(DatasetName::Synthetic, true)),
+            };
+            println!(
+                "sweep: {} jobs ({} cells × {} seeds) on {workers} workers, engine={}",
+                spec.num_jobs(),
+                spec.num_cells(),
+                spec.seeds.len(),
+                factory.name()
+            );
+            let t0 = std::time::Instant::now();
+            let result = run_sweep(&spec, &ds, workers, factory.as_ref())?;
+            let summary = SweepSummary::from_result(&result);
+            summary.print();
+            let out = args.get("out").unwrap_or("results/sweep.json");
+            write_json_file(std::path::Path::new(out), &summary.to_json())?;
+            println!(
+                "{} jobs in {:.2?}; summary written to {out}",
+                result.jobs.len(),
+                t0.elapsed()
+            );
+        }
         Some("table1") => {
             experiments::table1::run(quick);
         }
         Some("fig3-minibatch") => {
-            experiments::fig3::minibatch(quick, engine.as_mut())?;
+            experiments::fig3::minibatch(quick, factory.as_ref())?;
         }
         Some("fig3-baselines") => {
-            experiments::fig3::baselines(quick, engine.as_mut())?;
+            experiments::fig3::baselines(quick, factory.as_ref())?;
         }
         Some("fig3-stragglers") => {
-            experiments::fig3::stragglers(quick, engine.as_mut())?;
+            experiments::fig3::stragglers(quick, factory.as_ref())?;
         }
         Some("fig3-spc") => {
-            experiments::fig3::shortest_path_cycle(quick, engine.as_mut())?;
+            experiments::fig3::shortest_path_cycle(quick, factory.as_ref())?;
         }
         Some("fig4") => {
-            experiments::fig4::run(quick, engine.as_mut())?;
+            experiments::fig4::run(quick, factory.as_ref())?;
         }
         Some("fig5") => {
-            experiments::fig5::run(quick, engine.as_mut())?;
+            experiments::fig5::run(quick, factory.as_ref())?;
         }
         Some("rate-check") => {
-            experiments::rate_check::run(quick, engine.as_mut())?;
+            experiments::rate_check::run(quick, factory.as_ref())?;
         }
         Some("all") => {
             experiments::table1::run(quick);
-            experiments::fig3::minibatch(quick, engine.as_mut())?;
-            experiments::fig3::baselines(quick, engine.as_mut())?;
-            experiments::fig3::stragglers(quick, engine.as_mut())?;
-            experiments::fig3::shortest_path_cycle(quick, engine.as_mut())?;
-            experiments::fig4::run(quick, engine.as_mut())?;
-            experiments::fig5::run(quick, engine.as_mut())?;
-            experiments::rate_check::run(quick, engine.as_mut())?;
+            experiments::fig3::minibatch(quick, factory.as_ref())?;
+            experiments::fig3::baselines(quick, factory.as_ref())?;
+            experiments::fig3::stragglers(quick, factory.as_ref())?;
+            experiments::fig3::shortest_path_cycle(quick, factory.as_ref())?;
+            experiments::fig4::run(quick, factory.as_ref())?;
+            experiments::fig5::run(quick, factory.as_ref())?;
+            experiments::rate_check::run(quick, factory.as_ref())?;
         }
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command '{cmd}'\n");
             }
-            eprintln!(
-                "usage: csadmm <command> [--quick] [--pjrt]\n\
-                 commands: run --config <file> | table1 | fig3-minibatch |\n\
-                 fig3-baselines | fig3-stragglers | fig3-spc | fig4 | fig5 |\n\
-                 rate-check | all"
-            );
+            eprintln!("{USAGE}");
             std::process::exit(2);
         }
     }

@@ -46,6 +46,17 @@ impl Trace {
         self.points.last().map(|p| p.test_mse).unwrap_or(f64::NAN)
     }
 
+    /// Final simulated running time (NaN if empty) — sweep summaries.
+    pub fn final_sim_time(&self) -> f64 {
+        self.points.last().map(|p| p.sim_time).unwrap_or(f64::NAN)
+    }
+
+    /// Final cumulative communication units (NaN if empty) — sweep
+    /// summaries.
+    pub fn final_comm_units(&self) -> f64 {
+        self.points.last().map(|p| p.comm_units).unwrap_or(f64::NAN)
+    }
+
     /// First iteration at which accuracy drops below `threshold`
     /// (convergence-speed comparisons, Fig. 5).
     pub fn iters_to_accuracy(&self, threshold: f64) -> Option<usize> {

@@ -13,6 +13,11 @@
 //!   `python/compile/aot.py` from the Pallas kernel + JAX model),
 //!   compiles them on the PJRT CPU client once, and executes them per
 //!   call. Shape-specialized executables are cached by (m, p, d).
+//!   Requires the `pjrt-xla` feature; otherwise an API-compatible stub
+//!   that always falls back to native.
+//! * [`EngineFactory`] — per-thread engine construction for parallel
+//!   harnesses ([`crate::sweep`]): engines are not `Send`, factories
+//!   are `Sync` and build one engine inside each worker thread.
 //!
 //! Integration tests cross-check PJRT against native to ≤ 1e-5.
 
@@ -84,6 +89,61 @@ pub trait Engine {
 
     /// Engine name for logs.
     fn name(&self) -> &'static str;
+}
+
+/// Builds one [`Engine`] per worker thread.
+///
+/// Engines are deliberately not `Send` (the PJRT client wraps a
+/// thread-bound `Rc`), so parallel harnesses like
+/// [`crate::sweep`] cannot share one engine across workers. A factory
+/// is `Sync` and is invoked *inside* each worker thread, giving every
+/// worker a private engine without ever moving one across threads.
+pub trait EngineFactory: Sync {
+    /// Create a fresh engine on the calling thread.
+    fn create(&self) -> Result<Box<dyn Engine>>;
+
+    /// Factory name for logs.
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+}
+
+/// Factory for the pure-Rust [`NativeEngine`] (never fails).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeEngineFactory;
+
+impl EngineFactory for NativeEngineFactory {
+    fn create(&self) -> Result<Box<dyn Engine>> {
+        Ok(Box::new(NativeEngine::new()))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Factory for [`PjrtEngine`]s over a shared artifacts directory.
+#[derive(Clone, Debug)]
+pub struct PjrtEngineFactory {
+    /// Directory holding the `*.hlo.txt` AOT artifacts.
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl PjrtEngineFactory {
+    /// Factory over an artifacts directory (usually `artifacts/`).
+    pub fn new<P: AsRef<std::path::Path>>(dir: P) -> Self {
+        Self { artifacts_dir: dir.as_ref().to_path_buf() }
+    }
+}
+
+impl EngineFactory for PjrtEngineFactory {
+    fn create(&self) -> Result<Box<dyn Engine>> {
+        Ok(Box::new(PjrtEngine::new(&self.artifacts_dir)?))
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
 }
 
 /// The closed-form inexact-proximal update used by both engines (and by

@@ -6,11 +6,17 @@
 //! rejects; the text parser reassigns ids (see /opt/xla-example and
 //! DESIGN.md). One executable is compiled per shape and cached, so the
 //! steady-state request path is: build literals → execute → read back.
+//!
+//! The real engine needs the external `xla` crate and is therefore
+//! compiled only under the `pjrt-xla` feature (the offline build
+//! environment cannot resolve the dependency). Without the feature,
+//! [`PjrtEngine`] is a stub with the same API whose every call takes the
+//! native-fallback path (or errors in strict mode), so callers and tests
+//! compile and behave identically when no artifacts are present.
 
 use super::{Engine, NativeEngine};
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 /// Canonical artifact file name for a gradient kernel of shape
@@ -20,154 +26,291 @@ pub fn artifact_name(kind: &str, dims: &[usize]) -> String {
     format!("{kind}_{}.hlo.txt", dims.join("x"))
 }
 
-/// Engine that executes the L1/L2 AOT artifacts via PJRT.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    grad_exes: HashMap<(usize, usize, usize), xla::PjRtLoadedExecutable>,
-    step_exes: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
-    fallback: NativeEngine,
-    /// When false (default) missing artifacts fall back to the native
-    /// engine; when true they are hard errors (used by integration
-    /// tests to prove the PJRT path really ran).
-    strict: bool,
-    /// Calls served by PJRT vs native fallback (observability).
-    pub pjrt_calls: u64,
-    pub native_calls: u64,
-}
+#[cfg(feature = "pjrt-xla")]
+mod real {
+    use super::*;
+    use std::collections::HashMap;
 
-impl PjrtEngine {
-    /// Create over an artifacts directory (usually `artifacts/`).
-    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(Error::runtime)?;
-        Ok(Self {
-            client,
-            dir: artifacts_dir.as_ref().to_path_buf(),
-            grad_exes: HashMap::new(),
-            step_exes: HashMap::new(),
-            fallback: NativeEngine::new(),
-            strict: false,
-            pjrt_calls: 0,
-            native_calls: 0,
-        })
+    /// Engine that executes the L1/L2 AOT artifacts via PJRT.
+    pub struct PjrtEngine {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        grad_exes: HashMap<(usize, usize, usize), xla::PjRtLoadedExecutable>,
+        step_exes: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+        fallback: NativeEngine,
+        /// When false (default) missing artifacts fall back to the native
+        /// engine; when true they are hard errors (used by integration
+        /// tests to prove the PJRT path really ran).
+        strict: bool,
+        /// Calls served by PJRT vs native fallback (observability).
+        pub pjrt_calls: u64,
+        pub native_calls: u64,
     }
 
-    /// Error (instead of native fallback) when an artifact is missing.
-    pub fn strict(mut self) -> Self {
-        self.strict = true;
-        self
-    }
-
-    fn load(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
-        let path = self.dir.join(name);
-        if !path.exists() {
-            return Err(Error::Runtime(format!("artifact not found: {}", path.display())));
+    impl PjrtEngine {
+        /// Create over an artifacts directory (usually `artifacts/`).
+        pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(Error::runtime)?;
+            Ok(Self {
+                client,
+                dir: artifacts_dir.as_ref().to_path_buf(),
+                grad_exes: HashMap::new(),
+                step_exes: HashMap::new(),
+                fallback: NativeEngine::new(),
+                strict: false,
+                pjrt_calls: 0,
+                native_calls: 0,
+            })
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
-        )
-        .map_err(Error::runtime)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client.compile(&comp).map_err(Error::runtime)
+
+        /// Error (instead of native fallback) when an artifact is missing.
+        pub fn strict(mut self) -> Self {
+            self.strict = true;
+            self
+        }
+
+        fn load(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+            let path = self.dir.join(name);
+            if !path.exists() {
+                return Err(Error::Runtime(format!("artifact not found: {}", path.display())));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+            )
+            .map_err(Error::runtime)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client.compile(&comp).map_err(Error::runtime)
+        }
+
+        fn literal_of(m: &Matrix) -> Result<xla::Literal> {
+            xla::Literal::vec1(m.as_slice())
+                .reshape(&[m.rows() as i64, m.cols() as i64])
+                .map_err(Error::runtime)
+        }
+
+        fn matrix_of(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+            let v = lit.to_vec::<f64>().map_err(Error::runtime)?;
+            Matrix::from_vec(rows, cols, v)
+        }
+
+        /// Whether a gradient artifact for this shape is available (loaded
+        /// or on disk).
+        pub fn has_grad_artifact(&self, m: usize, p: usize, d: usize) -> bool {
+            self.grad_exes.contains_key(&(m, p, d))
+                || self.dir.join(artifact_name("grad", &[m, p, d])).exists()
+        }
     }
 
-    fn literal_of(m: &Matrix) -> Result<xla::Literal> {
-        xla::Literal::vec1(m.as_slice())
-            .reshape(&[m.rows() as i64, m.cols() as i64])
-            .map_err(Error::runtime)
-    }
-
-    fn matrix_of(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
-        let v = lit.to_vec::<f64>().map_err(Error::runtime)?;
-        Matrix::from_vec(rows, cols, v)
-    }
-
-    /// Whether a gradient artifact for this shape is available (loaded
-    /// or on disk).
-    pub fn has_grad_artifact(&self, m: usize, p: usize, d: usize) -> bool {
-        self.grad_exes.contains_key(&(m, p, d))
-            || self.dir.join(artifact_name("grad", &[m, p, d])).exists()
-    }
-}
-
-impl Engine for PjrtEngine {
-    fn grad_batch(&mut self, o: &Matrix, t: &Matrix, x: &Matrix) -> Result<Matrix> {
-        let key = (o.rows(), x.rows(), x.cols());
-        if !self.grad_exes.contains_key(&key) {
-            match self.load(&artifact_name("grad", &[key.0, key.1, key.2])) {
-                Ok(exe) => {
-                    self.grad_exes.insert(key, exe);
-                }
-                Err(e) if self.strict => return Err(e),
-                Err(_) => {
-                    self.native_calls += 1;
-                    return self.fallback.grad_batch(o, t, x);
+    impl Engine for PjrtEngine {
+        fn grad_batch(&mut self, o: &Matrix, t: &Matrix, x: &Matrix) -> Result<Matrix> {
+            let key = (o.rows(), x.rows(), x.cols());
+            if !self.grad_exes.contains_key(&key) {
+                match self.load(&artifact_name("grad", &[key.0, key.1, key.2])) {
+                    Ok(exe) => {
+                        self.grad_exes.insert(key, exe);
+                    }
+                    Err(e) if self.strict => return Err(e),
+                    Err(_) => {
+                        self.native_calls += 1;
+                        return self.fallback.grad_batch(o, t, x);
+                    }
                 }
             }
+            let exe = &self.grad_exes[&key];
+            let args = [Self::literal_of(o)?, Self::literal_of(t)?, Self::literal_of(x)?];
+            let result = exe
+                .execute::<xla::Literal>(&args)
+                .map_err(Error::runtime)?[0][0]
+                .to_literal_sync()
+                .map_err(Error::runtime)?;
+            // aot.py lowers with return_tuple=True → 1-tuple.
+            let out = result.to_tuple1().map_err(Error::runtime)?;
+            self.pjrt_calls += 1;
+            Self::matrix_of(&out, key.1, key.2)
         }
-        let exe = &self.grad_exes[&key];
-        let args = [Self::literal_of(o)?, Self::literal_of(t)?, Self::literal_of(x)?];
-        let result = exe
-            .execute::<xla::Literal>(&args)
-            .map_err(Error::runtime)?[0][0]
-            .to_literal_sync()
-            .map_err(Error::runtime)?;
-        // aot.py lowers with return_tuple=True → 1-tuple.
-        let out = result.to_tuple1().map_err(Error::runtime)?;
-        self.pjrt_calls += 1;
-        Self::matrix_of(&out, key.1, key.2)
-    }
 
-    fn admm_step(
-        &mut self,
-        x: &Matrix,
-        y: &Matrix,
-        z: &Matrix,
-        g: &Matrix,
-        rho: f64,
-        tau: f64,
-        gamma: f64,
-        n: usize,
-    ) -> Result<(Matrix, Matrix, Matrix)> {
-        let key = (x.rows(), x.cols());
-        if !self.step_exes.contains_key(&key) {
-            match self.load(&artifact_name("step", &[key.0, key.1])) {
-                Ok(exe) => {
-                    self.step_exes.insert(key, exe);
-                }
-                Err(e) if self.strict => return Err(e),
-                Err(_) => {
-                    self.native_calls += 1;
-                    return Ok(super::native_admm_step(x, y, z, g, rho, tau, gamma, n));
+        fn admm_step(
+            &mut self,
+            x: &Matrix,
+            y: &Matrix,
+            z: &Matrix,
+            g: &Matrix,
+            rho: f64,
+            tau: f64,
+            gamma: f64,
+            n: usize,
+        ) -> Result<(Matrix, Matrix, Matrix)> {
+            let key = (x.rows(), x.cols());
+            if !self.step_exes.contains_key(&key) {
+                match self.load(&artifact_name("step", &[key.0, key.1])) {
+                    Ok(exe) => {
+                        self.step_exes.insert(key, exe);
+                    }
+                    Err(e) if self.strict => return Err(e),
+                    Err(_) => {
+                        self.native_calls += 1;
+                        return Ok(super::super::native_admm_step(x, y, z, g, rho, tau, gamma, n));
+                    }
                 }
             }
+            let exe = &self.step_exes[&key];
+            let args = [
+                Self::literal_of(x)?,
+                Self::literal_of(y)?,
+                Self::literal_of(z)?,
+                Self::literal_of(g)?,
+                xla::Literal::scalar(rho),
+                xla::Literal::scalar(tau),
+                xla::Literal::scalar(gamma),
+                xla::Literal::scalar(1.0 / n as f64),
+            ];
+            let result = exe
+                .execute::<xla::Literal>(&args)
+                .map_err(Error::runtime)?[0][0]
+                .to_literal_sync()
+                .map_err(Error::runtime)?;
+            let (lx, ly, lz) = result.to_tuple3().map_err(Error::runtime)?;
+            self.pjrt_calls += 1;
+            Ok((
+                Self::matrix_of(&lx, key.0, key.1)?,
+                Self::matrix_of(&ly, key.0, key.1)?,
+                Self::matrix_of(&lz, key.0, key.1)?,
+            ))
         }
-        let exe = &self.step_exes[&key];
-        let args = [
-            Self::literal_of(x)?,
-            Self::literal_of(y)?,
-            Self::literal_of(z)?,
-            Self::literal_of(g)?,
-            xla::Literal::scalar(rho),
-            xla::Literal::scalar(tau),
-            xla::Literal::scalar(gamma),
-            xla::Literal::scalar(1.0 / n as f64),
-        ];
-        let result = exe
-            .execute::<xla::Literal>(&args)
-            .map_err(Error::runtime)?[0][0]
-            .to_literal_sync()
-            .map_err(Error::runtime)?;
-        let (lx, ly, lz) = result.to_tuple3().map_err(Error::runtime)?;
-        self.pjrt_calls += 1;
-        Ok((
-            Self::matrix_of(&lx, key.0, key.1)?,
-            Self::matrix_of(&ly, key.0, key.1)?,
-            Self::matrix_of(&lz, key.0, key.1)?,
-        ))
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt-xla"))]
+mod stub {
+    use super::*;
+
+    /// Offline stand-in for the PJRT engine: artifacts can never be
+    /// loaded (there is no PJRT client), so every call is a native
+    /// fallback — or an error in strict mode. API-compatible with the
+    /// real engine so the rest of the crate compiles unchanged.
+    pub struct PjrtEngine {
+        dir: PathBuf,
+        fallback: NativeEngine,
+        strict: bool,
+        /// Calls served by PJRT vs native fallback (observability).
+        pub pjrt_calls: u64,
+        pub native_calls: u64,
     }
 
-    fn name(&self) -> &'static str {
-        "pjrt"
+    impl PjrtEngine {
+        /// Create over an artifacts directory (usually `artifacts/`).
+        pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+            Ok(Self {
+                dir: artifacts_dir.as_ref().to_path_buf(),
+                fallback: NativeEngine::new(),
+                strict: false,
+                pjrt_calls: 0,
+                native_calls: 0,
+            })
+        }
+
+        /// Error (instead of native fallback) when an artifact is missing.
+        pub fn strict(mut self) -> Self {
+            self.strict = true;
+            self
+        }
+
+        fn unavailable(&self) -> Error {
+            Error::Runtime(
+                "PJRT support not compiled in (build with --features pjrt-xla)".into(),
+            )
+        }
+
+        /// Whether a gradient artifact for this shape is on disk (the
+        /// stub can see files; it just cannot execute them).
+        pub fn has_grad_artifact(&self, m: usize, p: usize, d: usize) -> bool {
+            self.dir.join(artifact_name("grad", &[m, p, d])).exists()
+        }
+    }
+
+    impl Engine for PjrtEngine {
+        fn grad_batch(&mut self, o: &Matrix, t: &Matrix, x: &Matrix) -> Result<Matrix> {
+            if self.strict {
+                return Err(self.unavailable());
+            }
+            self.native_calls += 1;
+            self.fallback.grad_batch(o, t, x)
+        }
+
+        fn grad_batch_range(
+            &mut self,
+            o_full: &Matrix,
+            t_full: &Matrix,
+            lo: usize,
+            hi: usize,
+            x: &Matrix,
+            out: &mut Matrix,
+        ) -> Result<()> {
+            if self.strict {
+                return Err(self.unavailable());
+            }
+            // Delegate to the native engine's own override so the stub
+            // keeps the zero-copy hot path (the trait default would
+            // slice + allocate per call).
+            self.native_calls += 1;
+            self.fallback.grad_batch_range(o_full, t_full, lo, hi, x, out)
+        }
+
+        fn admm_step(
+            &mut self,
+            x: &Matrix,
+            y: &Matrix,
+            z: &Matrix,
+            g: &Matrix,
+            rho: f64,
+            tau: f64,
+            gamma: f64,
+            n: usize,
+        ) -> Result<(Matrix, Matrix, Matrix)> {
+            if self.strict {
+                return Err(self.unavailable());
+            }
+            self.native_calls += 1;
+            Ok(super::super::native_admm_step(x, y, z, g, rho, tau, gamma, n))
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt-stub(native)"
+        }
+    }
+}
+
+#[cfg(feature = "pjrt-xla")]
+pub use real::PjrtEngine;
+#[cfg(not(feature = "pjrt-xla"))]
+pub use stub::PjrtEngine;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(artifact_name("grad", &[8, 3, 1]), "grad_8x3x1.hlo.txt");
+        assert_eq!(artifact_name("step", &[64, 10]), "step_64x10.hlo.txt");
+    }
+
+    #[cfg(not(feature = "pjrt-xla"))]
+    #[test]
+    fn stub_falls_back_to_native() {
+        let mut eng = PjrtEngine::new("artifacts-nonexistent").unwrap();
+        let o = Matrix::full(4, 3, 1.0);
+        let t = Matrix::full(4, 2, 2.0);
+        let x = Matrix::zeros(3, 2);
+        let g = eng.grad_batch(&o, &t, &x).unwrap();
+        assert_eq!(g.shape(), (3, 2));
+        assert_eq!(eng.native_calls, 1);
+        assert_eq!(eng.pjrt_calls, 0);
+        let mut strict = PjrtEngine::new("artifacts-nonexistent").unwrap().strict();
+        assert!(strict.grad_batch(&o, &t, &x).is_err());
     }
 }

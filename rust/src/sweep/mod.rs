@@ -1,0 +1,57 @@
+//! Parallel experiment sweeps: cartesian grids over [`RunConfig`] axes
+//! executed on a scoped worker pool with deterministic output.
+//!
+//! The paper's results (Figs. 3–5, Table I) are grids of runs —
+//! algorithm × coding scheme × straggler delay ε × mini-batch M ×
+//! seed. This module turns such a grid into a first-class object:
+//!
+//! * [`SweepSpec`] — the grid: a template [`RunConfig`] plus one value
+//!   list per axis (algorithm, S, ε, M, ρ, quantize-bits, seeds).
+//!   [`SweepSpec::expand`] produces the ordered job list;
+//!   [`SweepSpec::from_doc`] parses a grid from a config file's
+//!   `[sweep]` section.
+//! * [`run_sweep`] — executes the jobs on `workers` std threads. Each
+//!   worker builds its own engine via
+//!   [`EngineFactory`](crate::runtime::EngineFactory) (engines are not
+//!   `Send`); jobs are claimed from an atomic counter and results are
+//!   written into `job_id`-indexed slots, so the output order — and
+//!   every byte of derived JSON — is identical for any worker count.
+//! * [`SweepSummary`] — per-cell aggregation (mean/min/max of the final
+//!   accuracy, test MSE, simulated time and comm units across the seed
+//!   axis) with JSON export; [`mean_trace`] gives the point-wise
+//!   averaged trace the paper's Fig. 5 plots.
+//!
+//! The experiment drivers ([`crate::experiments`]) declare their grids
+//! as `SweepSpec`s and run through this pool; the `sweep` CLI
+//! subcommand exposes the same machinery over config files:
+//!
+//! ```text
+//! csadmm sweep                           # built-in 24-job demo grid
+//! csadmm sweep --config grid.toml --workers 8 --out results/grid.json
+//! ```
+//!
+//! Library use:
+//!
+//! ```no_run
+//! use csadmm::coordinator::{Algorithm, RunConfig};
+//! use csadmm::data::synthetic_small;
+//! use csadmm::runtime::NativeEngineFactory;
+//! use csadmm::sweep::{run_sweep, SweepSpec, SweepSummary};
+//!
+//! let ds = synthetic_small(2_000, 200, 0.1, 42);
+//! let spec = SweepSpec::new(RunConfig::default())
+//!     .minibatches(vec![8, 16, 32])
+//!     .seeds(vec![1, 2, 3]);
+//! let result = run_sweep(&spec, &ds, 4, &NativeEngineFactory).unwrap();
+//! SweepSummary::from_result(&result).print();
+//! ```
+//!
+//! [`RunConfig`]: crate::coordinator::RunConfig
+
+mod pool;
+mod spec;
+mod summary;
+
+pub use pool::{default_workers, run_sweep, JobOutcome, SweepResult};
+pub use spec::{parse_algo, SweepJob, SweepSpec};
+pub use summary::{mean_trace, AxisStat, CellSummary, SweepSummary};

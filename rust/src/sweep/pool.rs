@@ -1,0 +1,190 @@
+//! Scoped worker pool executing sweep jobs in parallel.
+//!
+//! Engines are deliberately not `Send`, so the pool never moves one
+//! across threads: each worker calls
+//! [`EngineFactory::create`](crate::runtime::EngineFactory) *inside*
+//! its own thread and keeps that engine for its whole lifetime. Jobs
+//! are claimed from a shared atomic counter (work stealing without a
+//! queue), and each result is written into the slot indexed by its
+//! `job_id` — so the returned job order, and everything derived from
+//! it (summaries, JSON), is byte-identical no matter how many workers
+//! ran or how the OS scheduled them.
+
+use super::spec::{SweepJob, SweepSpec};
+use crate::coordinator::Driver;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::metrics::Trace;
+use crate::runtime::{Engine, EngineFactory};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One executed job: the grid position plus its full trace.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub job: SweepJob,
+    pub trace: Trace,
+}
+
+/// All outcomes of a sweep, ordered by `job_id` (deterministic,
+/// independent of worker count and scheduling).
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub jobs: Vec<JobOutcome>,
+    /// Workers that executed the grid (log/observability only — never
+    /// serialized, so JSON output cannot depend on it).
+    pub workers: usize,
+}
+
+impl SweepResult {
+    /// Outcomes grouped by cell, in cell order; within a cell, in seed
+    /// order. (Jobs are expanded seeds-innermost, so this is a simple
+    /// contiguous chunking.)
+    pub fn cells(&self) -> Vec<&[JobOutcome]> {
+        let mut out: Vec<&[JobOutcome]> = Vec::new();
+        let mut start = 0;
+        for (i, j) in self.jobs.iter().enumerate() {
+            if j.job.cell_id != self.jobs[start].job.cell_id {
+                out.push(&self.jobs[start..i]);
+                start = i;
+            }
+        }
+        if start < self.jobs.len() {
+            out.push(&self.jobs[start..]);
+        }
+        out
+    }
+
+    /// Clone out the traces in job order, labelled with their cell
+    /// labels (ready for [`crate::experiments::write_traces`]).
+    pub fn labelled_traces(&self) -> Vec<Trace> {
+        self.jobs
+            .iter()
+            .map(|j| {
+                let mut t = j.trace.clone();
+                t.label = j.job.label.clone();
+                t
+            })
+            .collect()
+    }
+}
+
+/// Default worker count: available hardware parallelism.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Execute a sweep grid on `workers` threads.
+///
+/// Every job builds a fresh [`Driver`] from its own config, so a job's
+/// trace depends only on `(cfg, ds)` — results are bitwise identical
+/// for any worker count. Job failures are deterministic too: the error
+/// reported is always the one from the lowest-numbered failing job.
+pub fn run_sweep(
+    spec: &SweepSpec,
+    ds: &Dataset,
+    workers: usize,
+    engines: &dyn EngineFactory,
+) -> Result<SweepResult> {
+    let jobs = spec.expand()?;
+    let n_jobs = jobs.len();
+    let workers = workers.max(1).min(n_jobs);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<Trace>>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                // Per-worker engine, created on this thread (engines are
+                // not Send). A factory failure poisons only the jobs
+                // this worker claims.
+                let mut engine: Option<Box<dyn Engine>> = None;
+                let mut engine_err: Option<String> = None;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_jobs {
+                        break;
+                    }
+                    if engine.is_none() && engine_err.is_none() {
+                        match engines.create() {
+                            Ok(e) => engine = Some(e),
+                            Err(e) => engine_err = Some(e.to_string()),
+                        }
+                    }
+                    let res = match (engine.as_mut(), engine_err.as_ref()) {
+                        (Some(eng), _) => Driver::new(jobs[i].cfg.clone(), ds)
+                            .and_then(|mut d| d.run(eng.as_mut())),
+                        (None, Some(msg)) => {
+                            Err(Error::Runtime(format!("engine creation failed: {msg}")))
+                        }
+                        (None, None) => unreachable!("engine state initialized above"),
+                    };
+                    *slots[i].lock().expect("sweep slot poisoned") = Some(res);
+                }
+            });
+        }
+    });
+
+    let mut outcomes = Vec::with_capacity(n_jobs);
+    for (job, slot) in jobs.into_iter().zip(slots) {
+        let res = slot
+            .into_inner()
+            .expect("sweep slot poisoned")
+            .unwrap_or_else(|| unreachable!("job {} never executed", job.job_id));
+        outcomes.push(JobOutcome { job, trace: res? });
+    }
+    Ok(SweepResult { jobs: outcomes, workers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RunConfig;
+    use crate::data::synthetic_small;
+    use crate::runtime::NativeEngineFactory;
+
+    fn small_spec() -> SweepSpec {
+        SweepSpec::new(RunConfig {
+            n_agents: 4,
+            k_ecn: 2,
+            minibatch: 8,
+            max_iters: 120,
+            eval_every: 40,
+            ..Default::default()
+        })
+        .minibatches(vec![4, 8])
+        .seeds(vec![1, 2])
+    }
+
+    #[test]
+    fn pool_matches_job_order_and_cells() {
+        let ds = synthetic_small(400, 40, 0.1, 5);
+        let result = run_sweep(&small_spec(), &ds, 3, &NativeEngineFactory).unwrap();
+        assert_eq!(result.jobs.len(), 4);
+        for (i, j) in result.jobs.iter().enumerate() {
+            assert_eq!(j.job.job_id, i);
+            assert!(!j.trace.points.is_empty());
+        }
+        let cells = result.cells();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].len(), 2);
+        assert_eq!(cells[1][0].job.cfg.minibatch, 8);
+    }
+
+    #[test]
+    fn failing_job_reports_lowest_id_error() {
+        // minibatch 6 with K=2 is fine; 7 is not — put the bad cell
+        // first so its error must win regardless of scheduling.
+        let spec = SweepSpec::new(RunConfig {
+            n_agents: 4,
+            k_ecn: 2,
+            max_iters: 60,
+            eval_every: 30,
+            ..Default::default()
+        })
+        .minibatches(vec![7, 6]);
+        let ds = synthetic_small(400, 40, 0.1, 6);
+        let err = run_sweep(&spec, &ds, 4, &NativeEngineFactory).unwrap_err();
+        assert!(err.to_string().contains("multiple of K"), "{err}");
+    }
+}

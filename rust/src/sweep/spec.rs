@@ -1,0 +1,372 @@
+//! Sweep grids: a [`SweepSpec`] is a cartesian product over
+//! [`RunConfig`] axes that expands into a deterministic, fully-ordered
+//! job list.
+
+use crate::coding::SchemeKind;
+use crate::config::ConfigDoc;
+use crate::coordinator::{Algorithm, RunConfig};
+use crate::data::DatasetName;
+use crate::error::{Error, Result};
+
+/// A cartesian grid over experiment axes.
+///
+/// Every axis defaults to the single value carried by the `base`
+/// template config; setting an axis overrides that field per job. The
+/// `seeds` axis is special: jobs that differ only in seed belong to the
+/// same *cell* and are aggregated by [`crate::sweep::SweepSummary`].
+///
+/// Expansion order is fixed (algo → S → ε → M → ρ → quantize-bits →
+/// seed, seeds innermost), so job and cell ids are stable across
+/// processes and independent of how many workers execute the grid.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Template config; axis values override its fields per job.
+    pub base: RunConfig,
+    /// Algorithm axis (includes the coding scheme for csI-ADMM).
+    pub algos: Vec<Algorithm>,
+    /// Tolerated-straggler axis S.
+    pub s_values: Vec<usize>,
+    /// Straggler-delay axis ε (`response.straggler_delay`).
+    pub epsilons: Vec<f64>,
+    /// Mini-batch axis M.
+    pub minibatches: Vec<usize>,
+    /// Penalty axis ρ.
+    pub rhos: Vec<f64>,
+    /// Token-quantization axis (None = exact f64 tokens).
+    pub quantize_bits: Vec<Option<u32>>,
+    /// Seed axis — runs per cell, aggregated in summaries.
+    pub seeds: Vec<u64>,
+}
+
+impl SweepSpec {
+    /// Grid with every axis pinned to the base config's value.
+    pub fn new(base: RunConfig) -> Self {
+        Self {
+            algos: vec![base.algo],
+            s_values: vec![base.s_tolerated],
+            epsilons: vec![base.response.straggler_delay],
+            minibatches: vec![base.minibatch],
+            rhos: vec![base.rho],
+            quantize_bits: vec![base.quantize_bits],
+            seeds: vec![base.seed],
+            base,
+        }
+    }
+
+    /// Set the algorithm axis.
+    pub fn algos(mut self, v: Vec<Algorithm>) -> Self {
+        self.algos = v;
+        self
+    }
+
+    /// Set the tolerated-straggler axis.
+    pub fn s_values(mut self, v: Vec<usize>) -> Self {
+        self.s_values = v;
+        self
+    }
+
+    /// Set the straggler-delay axis ε.
+    pub fn epsilons(mut self, v: Vec<f64>) -> Self {
+        self.epsilons = v;
+        self
+    }
+
+    /// Set the mini-batch axis M.
+    pub fn minibatches(mut self, v: Vec<usize>) -> Self {
+        self.minibatches = v;
+        self
+    }
+
+    /// Set the penalty axis ρ.
+    pub fn rhos(mut self, v: Vec<f64>) -> Self {
+        self.rhos = v;
+        self
+    }
+
+    /// Set the quantization axis.
+    pub fn quantize_bits(mut self, v: Vec<Option<u32>>) -> Self {
+        self.quantize_bits = v;
+        self
+    }
+
+    /// Set the seed axis.
+    pub fn seeds(mut self, v: Vec<u64>) -> Self {
+        self.seeds = v;
+        self
+    }
+
+    /// Number of cells (all axes except seeds).
+    pub fn num_cells(&self) -> usize {
+        self.algos.len()
+            * self.s_values.len()
+            * self.epsilons.len()
+            * self.minibatches.len()
+            * self.rhos.len()
+            * self.quantize_bits.len()
+    }
+
+    /// Total jobs (cells × seeds).
+    pub fn num_jobs(&self) -> usize {
+        self.num_cells() * self.seeds.len()
+    }
+
+    /// Expand into the ordered job list. Errors if any axis is empty.
+    pub fn expand(&self) -> Result<Vec<SweepJob>> {
+        if self.num_jobs() == 0 {
+            return Err(Error::Config("sweep grid has an empty axis (zero jobs)".into()));
+        }
+        let mut jobs = Vec::with_capacity(self.num_jobs());
+        let mut cell_id = 0usize;
+        for &algo in &self.algos {
+            for &s in &self.s_values {
+                for &eps in &self.epsilons {
+                    for &m in &self.minibatches {
+                        for &rho in &self.rhos {
+                            for &bits in &self.quantize_bits {
+                                let label = self.cell_label(algo, s, eps, m, rho, bits);
+                                for (seed_index, &seed) in self.seeds.iter().enumerate() {
+                                    let mut cfg = self.base.clone();
+                                    cfg.algo = algo;
+                                    cfg.s_tolerated = s;
+                                    cfg.response.straggler_delay = eps;
+                                    cfg.minibatch = m;
+                                    cfg.rho = rho;
+                                    cfg.quantize_bits = bits;
+                                    cfg.seed = seed;
+                                    jobs.push(SweepJob {
+                                        job_id: jobs.len(),
+                                        cell_id,
+                                        seed_index,
+                                        label: label.clone(),
+                                        cfg,
+                                    });
+                                }
+                                cell_id += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(jobs)
+    }
+
+    /// Cell label: the algorithm name plus a `key=value` suffix for each
+    /// axis that actually varies (single-value axes stay out of the
+    /// label, so `M ∈ {4,16,48}` sweeps read "sI-ADMM M=4" …).
+    fn cell_label(
+        &self,
+        algo: Algorithm,
+        s: usize,
+        eps: f64,
+        m: usize,
+        rho: f64,
+        bits: Option<u32>,
+    ) -> String {
+        let mut label = algo.label();
+        if self.s_values.len() > 1 {
+            label.push_str(&format!(" S={s}"));
+        }
+        if self.epsilons.len() > 1 {
+            label.push_str(&format!(" eps={eps}"));
+        }
+        if self.minibatches.len() > 1 {
+            label.push_str(&format!(" M={m}"));
+        }
+        if self.rhos.len() > 1 {
+            label.push_str(&format!(" rho={rho}"));
+        }
+        if self.quantize_bits.len() > 1 {
+            match bits {
+                Some(b) => label.push_str(&format!(" q={b}bit")),
+                None => label.push_str(" q=exact"),
+            }
+        }
+        label
+    }
+
+    /// Parse a sweep from a config document: `[run]` supplies the base
+    /// config (and dataset) via [`crate::config::run_config_from_doc`],
+    /// and an optional `[sweep]` section holds comma-separated axis
+    /// lists:
+    ///
+    /// ```text
+    /// [run]
+    /// dataset = usps
+    /// k_ecn = 4
+    /// max_iters = 1000
+    ///
+    /// [sweep]
+    /// algos = siadmm, csiadmm-cyclic   # iadmm|siadmm|wadmm|csiadmm[-<scheme>]
+    /// s = 1                            # tolerated stragglers
+    /// eps = 1e-3, 5e-3                 # straggler delay ε
+    /// minibatch = 16, 32
+    /// rho = 0.08
+    /// quantize_bits = none, 16         # token quantization ('none' = exact)
+    /// seeds = 1, 2, 3                  # or: num_seeds = 3 (derived from base seed)
+    /// ```
+    pub fn from_doc(doc: &ConfigDoc) -> Result<(SweepSpec, DatasetName)> {
+        let (base, dataset) = crate::config::run_config_from_doc(doc)?;
+        let mut spec = SweepSpec::new(base);
+        let sec = "sweep";
+        if let Some(tokens) = doc.get_list(sec, "algos") {
+            spec.algos =
+                tokens.iter().map(|t| parse_algo(t)).collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = doc.get_list(sec, "s") {
+            spec.s_values = parse_nums(&v, "sweep.s")?;
+        }
+        if let Some(v) = doc.get_list(sec, "eps") {
+            spec.epsilons = parse_f64s(&v, "sweep.eps")?;
+        }
+        if let Some(v) = doc.get_list(sec, "minibatch") {
+            spec.minibatches = parse_nums(&v, "sweep.minibatch")?;
+        }
+        if let Some(v) = doc.get_list(sec, "rho") {
+            spec.rhos = parse_f64s(&v, "sweep.rho")?;
+        }
+        if let Some(v) = doc.get_list(sec, "quantize_bits") {
+            spec.quantize_bits = v
+                .iter()
+                .map(|t| match t.as_str() {
+                    "none" | "exact" => Ok(None),
+                    other => other.parse::<u32>().map(Some).map_err(|_| {
+                        Error::Config(format!("sweep.quantize_bits: bad entry '{other}'"))
+                    }),
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = doc.get_list(sec, "seeds") {
+            spec.seeds = v
+                .iter()
+                .map(|t| {
+                    t.parse::<u64>()
+                        .map_err(|_| Error::Config(format!("sweep.seeds: bad entry '{t}'")))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        } else if let Some(n) = doc.get_num(sec, "num_seeds") {
+            let n = n as u64;
+            if n == 0 {
+                return Err(Error::Config("sweep.num_seeds must be positive".into()));
+            }
+            spec.seeds = (0..n).map(|i| spec.base.seed.wrapping_add(i)).collect();
+        }
+        Ok((spec, dataset))
+    }
+}
+
+/// Parse one algorithm token: `iadmm`, `siadmm`, `wadmm`, `csiadmm`
+/// (defaults to the cyclic scheme) or `csiadmm-<scheme>`.
+pub fn parse_algo(token: &str) -> Result<Algorithm> {
+    match token {
+        "iadmm" => Ok(Algorithm::IAdmmExact),
+        "siadmm" => Ok(Algorithm::SIAdmm),
+        "wadmm" => Ok(Algorithm::WAdmm),
+        "csiadmm" => Ok(Algorithm::CsIAdmm(SchemeKind::Cyclic)),
+        other => {
+            if let Some(scheme) = other.strip_prefix("csiadmm-") {
+                let kind = SchemeKind::parse(scheme).ok_or_else(|| {
+                    Error::Config(format!("unknown coding scheme '{scheme}' in '{other}'"))
+                })?;
+                Ok(Algorithm::CsIAdmm(kind))
+            } else {
+                Err(Error::Config(format!("unknown algorithm '{other}'")))
+            }
+        }
+    }
+}
+
+fn parse_nums(tokens: &[String], key: &str) -> Result<Vec<usize>> {
+    tokens
+        .iter()
+        .map(|t| t.parse::<usize>().map_err(|_| Error::Config(format!("{key}: bad entry '{t}'"))))
+        .collect()
+}
+
+fn parse_f64s(tokens: &[String], key: &str) -> Result<Vec<f64>> {
+    tokens
+        .iter()
+        .map(|t| t.parse::<f64>().map_err(|_| Error::Config(format!("{key}: bad entry '{t}'"))))
+        .collect()
+}
+
+/// One unit of sweep work: a concrete [`RunConfig`] plus its position
+/// in the grid.
+#[derive(Clone, Debug)]
+pub struct SweepJob {
+    /// Position in the expanded job list (execution/output order).
+    pub job_id: usize,
+    /// Which cell (non-seed axis combination) this job belongs to.
+    pub cell_id: usize,
+    /// Index into the spec's seed axis.
+    pub seed_index: usize,
+    /// Cell label (shared by all seeds of the cell).
+    pub label: String,
+    /// The fully-resolved run configuration.
+    pub cfg: RunConfig,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_is_cartesian_and_ordered() {
+        let spec = SweepSpec::new(RunConfig::default())
+            .algos(vec![Algorithm::SIAdmm, Algorithm::CsIAdmm(SchemeKind::Cyclic)])
+            .minibatches(vec![8, 16])
+            .seeds(vec![1, 2, 3]);
+        assert_eq!(spec.num_cells(), 4);
+        assert_eq!(spec.num_jobs(), 12);
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 12);
+        // Seeds are innermost and contiguous per cell.
+        for (i, job) in jobs.iter().enumerate() {
+            assert_eq!(job.job_id, i);
+            assert_eq!(job.cell_id, i / 3);
+            assert_eq!(job.seed_index, i % 3);
+            assert_eq!(job.cfg.seed, [1, 2, 3][i % 3]);
+        }
+        // First cell: sI-ADMM, M=8; last cell: csI-ADMM cyclic, M=16.
+        assert_eq!(jobs[0].cfg.algo, Algorithm::SIAdmm);
+        assert_eq!(jobs[0].cfg.minibatch, 8);
+        assert_eq!(jobs[11].cfg.algo, Algorithm::CsIAdmm(SchemeKind::Cyclic));
+        assert_eq!(jobs[11].cfg.minibatch, 16);
+        // Labels mention only varying non-seed axes.
+        assert_eq!(jobs[0].label, "sI-ADMM M=8");
+        assert_eq!(jobs[11].label, "csI-ADMM/cyclic M=16");
+    }
+
+    #[test]
+    fn empty_axis_rejected() {
+        let spec = SweepSpec::new(RunConfig::default()).seeds(vec![]);
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn algo_tokens() {
+        assert_eq!(parse_algo("siadmm").unwrap(), Algorithm::SIAdmm);
+        assert_eq!(parse_algo("csiadmm").unwrap(), Algorithm::CsIAdmm(SchemeKind::Cyclic));
+        assert_eq!(
+            parse_algo("csiadmm-fractional").unwrap(),
+            Algorithm::CsIAdmm(SchemeKind::Fractional)
+        );
+        assert!(parse_algo("nope").is_err());
+        assert!(parse_algo("csiadmm-nope").is_err());
+    }
+
+    #[test]
+    fn from_doc_reads_axes() {
+        let doc = ConfigDoc::parse(
+            "[run]\nk_ecn = 2\nminibatch = 16\nseed = 9\n\n[sweep]\nalgos = siadmm, csiadmm-cyclic\neps = 1e-3, 5e-3\nminibatch = 16, 32\nnum_seeds = 3\n",
+        )
+        .unwrap();
+        let (spec, ds) = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(ds, DatasetName::Synthetic);
+        assert_eq!(spec.algos.len(), 2);
+        assert_eq!(spec.epsilons, vec![1e-3, 5e-3]);
+        assert_eq!(spec.minibatches, vec![16, 32]);
+        assert_eq!(spec.seeds, vec![9, 10, 11]);
+        assert_eq!(spec.num_jobs(), 2 * 2 * 2 * 3);
+    }
+}

@@ -1,0 +1,178 @@
+//! Per-cell aggregation of sweep results (across the seed axis) and
+//! deterministic JSON export.
+
+use super::pool::SweepResult;
+use crate::metrics::Trace;
+use crate::util::json::Json;
+use crate::util::stats::mean;
+use crate::util::table::{fnum, Table};
+
+/// Mean/min/max of one metric across a cell's seeds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AxisStat {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl AxisStat {
+    /// Aggregate a non-empty value list.
+    pub fn of(values: &[f64]) -> AxisStat {
+        AxisStat {
+            mean: mean(values),
+            min: values.iter().copied().fold(f64::INFINITY, f64::min),
+            max: values.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj().num("mean", self.mean).num("min", self.min).num("max", self.max).build()
+    }
+}
+
+/// Aggregated results of one grid cell (all seeds).
+#[derive(Clone, Debug)]
+pub struct CellSummary {
+    pub cell_id: usize,
+    pub label: String,
+    /// Seeds executed (runs aggregated).
+    pub runs: usize,
+    pub final_accuracy: AxisStat,
+    pub final_test_mse: AxisStat,
+    pub final_sim_time: AxisStat,
+    pub final_comm_units: AxisStat,
+}
+
+/// Whole-sweep summary: one entry per cell, in cell order.
+#[derive(Clone, Debug)]
+pub struct SweepSummary {
+    pub cells: Vec<CellSummary>,
+    pub total_jobs: usize,
+}
+
+impl SweepSummary {
+    /// Aggregate a sweep result (jobs are already cell-grouped and
+    /// seed-ordered, so this is deterministic).
+    pub fn from_result(result: &SweepResult) -> SweepSummary {
+        let mut cells = Vec::new();
+        for chunk in result.cells() {
+            let collect = |f: fn(&Trace) -> f64| -> Vec<f64> {
+                chunk.iter().map(|j| f(&j.trace)).collect()
+            };
+            cells.push(CellSummary {
+                cell_id: chunk[0].job.cell_id,
+                label: chunk[0].job.label.clone(),
+                runs: chunk.len(),
+                final_accuracy: AxisStat::of(&collect(Trace::final_accuracy)),
+                final_test_mse: AxisStat::of(&collect(Trace::final_test_mse)),
+                final_sim_time: AxisStat::of(&collect(Trace::final_sim_time)),
+                final_comm_units: AxisStat::of(&collect(Trace::final_comm_units)),
+            });
+        }
+        SweepSummary { cells, total_jobs: result.jobs.len() }
+    }
+
+    /// Deterministic JSON: cells in cell order, stats as
+    /// `{mean, min, max}` objects. Does **not** include the worker
+    /// count, so output is byte-identical across `--workers` settings.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .num("jobs", self.total_jobs as f64)
+            .field(
+                "cells",
+                Json::Arr(
+                    self.cells
+                        .iter()
+                        .map(|c| {
+                            Json::obj()
+                                .num("cell", c.cell_id as f64)
+                                .str("label", &c.label)
+                                .num("runs", c.runs as f64)
+                                .field("accuracy", c.final_accuracy.to_json())
+                                .field("test_mse", c.final_test_mse.to_json())
+                                .field("sim_time", c.final_sim_time.to_json())
+                                .field("comm_units", c.final_comm_units.to_json())
+                                .build()
+                        })
+                        .collect(),
+                ),
+            )
+            .build()
+    }
+
+    /// Render the per-cell table to stdout.
+    pub fn print(&self) {
+        let mut t = Table::new(
+            "sweep summary (mean over seeds; final-point metrics)",
+            &["cell", "runs", "accuracy", "test MSE", "sim time (s)", "comm units"],
+        );
+        for c in &self.cells {
+            t.row(&[
+                c.label.clone(),
+                c.runs.to_string(),
+                fnum(c.final_accuracy.mean),
+                fnum(c.final_test_mse.mean),
+                fnum(c.final_sim_time.mean),
+                fnum(c.final_comm_units.mean),
+            ]);
+        }
+        t.print();
+    }
+}
+
+/// Point-wise mean of equal-length traces (the paper's "average of 10
+/// independent runs", Fig. 5). Label and iteration grid come from the
+/// first trace.
+pub fn mean_trace(traces: &[&Trace]) -> Trace {
+    assert!(!traces.is_empty(), "mean_trace of zero traces");
+    let n = traces[0].points.len();
+    assert!(traces.iter().all(|t| t.points.len() == n), "ragged traces");
+    let mut out = traces[0].clone();
+    let inv = 1.0 / traces.len() as f64;
+    for (i, pt) in out.points.iter_mut().enumerate() {
+        pt.comm_units = traces.iter().map(|t| t.points[i].comm_units).sum::<f64>() * inv;
+        pt.sim_time = traces.iter().map(|t| t.points[i].sim_time).sum::<f64>() * inv;
+        pt.accuracy = traces.iter().map(|t| t.points[i].accuracy).sum::<f64>() * inv;
+        pt.test_mse = traces.iter().map(|t| t.points[i].test_mse).sum::<f64>() * inv;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::TracePoint;
+
+    fn trace(label: &str, acc: &[f64]) -> Trace {
+        let mut t = Trace::new(label);
+        for (i, &a) in acc.iter().enumerate() {
+            t.push(TracePoint {
+                iter: i + 1,
+                comm_units: i as f64,
+                sim_time: 0.1 * i as f64,
+                accuracy: a,
+                test_mse: 2.0 * a,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn axis_stat() {
+        let s = AxisStat::of(&[1.0, 3.0, 2.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn mean_trace_pointwise() {
+        let a = trace("a", &[1.0, 0.5]);
+        let b = trace("a", &[3.0, 1.5]);
+        let m = mean_trace(&[&a, &b]);
+        assert_eq!(m.label, "a");
+        assert!((m.points[0].accuracy - 2.0).abs() < 1e-12);
+        assert!((m.points[1].accuracy - 1.0).abs() < 1e-12);
+        assert!((m.points[1].test_mse - 2.0).abs() < 1e-12);
+    }
+}

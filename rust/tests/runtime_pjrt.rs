@@ -10,6 +10,10 @@ use csadmm::runtime::{artifact_name, Engine, NativeEngine, PjrtEngine};
 use std::path::Path;
 
 fn artifacts_ready() -> bool {
+    if !cfg!(feature = "pjrt-xla") {
+        eprintln!("SKIP: built without the pjrt-xla feature (PjrtEngine is the native stub)");
+        return false;
+    }
     let ok = Path::new("artifacts/.stamp").exists();
     if !ok {
         eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");

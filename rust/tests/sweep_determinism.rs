@@ -1,0 +1,111 @@
+//! Sweep-subsystem integration: worker-count independence and
+//! equivalence with direct serial `Driver::run` execution.
+
+use csadmm::coding::SchemeKind;
+use csadmm::coordinator::{Algorithm, Driver, RunConfig};
+use csadmm::data::synthetic_small;
+use csadmm::ecn::ResponseModel;
+use csadmm::runtime::{NativeEngine, NativeEngineFactory};
+use csadmm::sweep::{run_sweep, SweepSpec, SweepSummary};
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        n_agents: 5,
+        k_ecn: 2,
+        s_tolerated: 1,
+        minibatch: 8,
+        rho: 0.3,
+        max_iters: 300,
+        eval_every: 50,
+        seed: 11,
+        response: ResponseModel { straggler_count: 1, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn grid() -> SweepSpec {
+    SweepSpec::new(base_cfg())
+        .algos(vec![Algorithm::SIAdmm, Algorithm::CsIAdmm(SchemeKind::Cyclic)])
+        .epsilons(vec![1e-3, 5e-3])
+        .minibatches(vec![8, 16])
+        .seeds(vec![1, 2])
+}
+
+/// The same grid must yield bit-identical traces and byte-identical
+/// summary JSON no matter how many workers execute it.
+#[test]
+fn one_worker_equals_many_workers() {
+    let ds = synthetic_small(600, 60, 0.1, 77);
+    let spec = grid();
+    assert_eq!(spec.num_jobs(), 16);
+    let r1 = run_sweep(&spec, &ds, 1, &NativeEngineFactory).unwrap();
+    let r4 = run_sweep(&spec, &ds, 4, &NativeEngineFactory).unwrap();
+    let r9 = run_sweep(&spec, &ds, 9, &NativeEngineFactory).unwrap();
+    assert_eq!(r1.jobs.len(), 16);
+    for ((a, b), c) in r1.jobs.iter().zip(&r4.jobs).zip(&r9.jobs) {
+        assert_eq!(a.job.job_id, b.job.job_id);
+        assert_eq!(a.job.label, b.job.label);
+        assert_eq!(a.trace.points, b.trace.points, "job {}: 1 vs 4 workers", a.job.job_id);
+        assert_eq!(a.trace.points, c.trace.points, "job {}: 1 vs 9 workers", a.job.job_id);
+    }
+    let j1 = SweepSummary::from_result(&r1).to_json().to_pretty();
+    let j4 = SweepSummary::from_result(&r4).to_json().to_pretty();
+    let j9 = SweepSummary::from_result(&r9).to_json().to_pretty();
+    assert_eq!(j1, j4, "summary JSON must be byte-identical (1 vs 4 workers)");
+    assert_eq!(j1, j9, "summary JSON must be byte-identical (1 vs 9 workers)");
+}
+
+/// A single-cell sweep is exactly one `Driver::run`, point for point.
+#[test]
+fn single_cell_matches_direct_driver_run() {
+    let ds = synthetic_small(600, 60, 0.1, 78);
+    let cfg = base_cfg();
+    let direct = Driver::new(cfg.clone(), &ds)
+        .unwrap()
+        .run(&mut NativeEngine::new())
+        .unwrap();
+    let spec = SweepSpec::new(cfg);
+    let result = run_sweep(&spec, &ds, 3, &NativeEngineFactory).unwrap();
+    assert_eq!(result.jobs.len(), 1);
+    assert_eq!(result.jobs[0].trace.points, direct.points);
+}
+
+/// Cells aggregate across seeds only: per-cell stats bracket the
+/// individual runs and the cell count matches the grid.
+#[test]
+fn summary_cells_cover_grid() {
+    let ds = synthetic_small(600, 60, 0.1, 79);
+    let spec = SweepSpec::new(base_cfg()).minibatches(vec![8, 16]).seeds(vec![1, 2, 3]);
+    let result = run_sweep(&spec, &ds, 4, &NativeEngineFactory).unwrap();
+    let summary = SweepSummary::from_result(&result);
+    assert_eq!(summary.cells.len(), 2);
+    assert_eq!(summary.total_jobs, 6);
+    for (cell, chunk) in summary.cells.iter().zip(result.cells()) {
+        assert_eq!(cell.runs, 3);
+        let accs: Vec<f64> = chunk.iter().map(|j| j.trace.final_accuracy()).collect();
+        let lo = accs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = accs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(cell.final_accuracy.min, lo);
+        assert_eq!(cell.final_accuracy.max, hi);
+        let m = cell.final_accuracy.mean;
+        assert!(m >= lo - 1e-12 && m <= hi + 1e-12, "mean {m} outside [{lo}, {hi}]");
+    }
+}
+
+/// The Eq. 22 divisibility guard surfaces through the sweep as a
+/// deterministic config error (M=16 with S=2 would silently truncate).
+#[test]
+fn truncating_coded_minibatch_is_rejected() {
+    let ds = synthetic_small(600, 60, 0.1, 80);
+    let spec = SweepSpec::new(RunConfig {
+        algo: Algorithm::CsIAdmm(SchemeKind::Cyclic),
+        s_tolerated: 2,
+        minibatch: 16,
+        k_ecn: 2,
+        max_iters: 100,
+        eval_every: 50,
+        ..Default::default()
+    });
+    let err = run_sweep(&spec, &ds, 2, &NativeEngineFactory).unwrap_err();
+    assert!(err.to_string().contains("divisible"), "{err}");
+}
