@@ -78,7 +78,7 @@ impl GossipHarness {
                     iter: k,
                     comm_units: comm.total(),
                     sim_time: clock.now(),
-                    accuracy: accuracy(&xs, xstar),
+                    accuracy: accuracy(&xs, Some(xstar))?,
                     test_mse: test_mse(&zbar, test),
                 });
             }

@@ -16,19 +16,27 @@ pub const USAGE: &str = "\
 usage: csadmm <command> [--quick] [--pjrt] [--artifacts <dir>]
 
 commands:
-  run --config <file> [--seed N]   one experiment from a config file
+  run [--config <file>] [--seed N] [--objective <obj>]
+                                   one experiment from a config file
+                                   (default: examples/configs/quickstart.toml,
+                                   resolved relative to the working dir)
   table1                           Table I dataset inventory
   fig3-minibatch | fig3-baselines | fig3-stragglers | fig3-spc
   fig4 | fig5 | rate-check         figure/rate reproductions
   sweep [--config <file>] [--workers N] [--out <file>]
+        [--objective <obj>[,<obj>...]]
                                    parallel parameter grid: expands the
                                    [sweep] section of the config (or a
                                    built-in 24-job demo grid) and runs it
                                    on N worker threads (default: all
                                    cores); per-cell summary JSON goes to
                                    --out (default results/sweep.json) and
-                                   is byte-identical for any worker count
-  all                              every experiment above";
+                                   is byte-identical for any worker count.
+                                   --objective overrides the loss-zoo
+                                   axis, e.g. --objective ls,logistic
+  all                              every experiment above
+
+objectives (<obj>): ls (least squares, Eq. 24) | logistic | huber | enet";
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]

@@ -101,17 +101,22 @@ impl SchemeKind {
     }
 }
 
-#[cfg(test)]
-pub(crate) mod test_support {
+/// Invariant checkers shared by the in-crate unit tests and the
+/// `coding_properties` integration suite. Not part of the stable API —
+/// kept public (and `doc(hidden)`) so integration tests can drive them.
+#[doc(hidden)]
+pub mod test_support {
     use super::*;
     use crate::rng::{Rng, Xoshiro256pp};
 
-    /// Exhaustive / randomized check that a scheme recovers the exact
-    /// partition-gradient sum from every (or many random) R-subsets.
-    pub fn check_recovers_sum(code: &dyn GradientCode, rng: &mut Xoshiro256pp) {
+    /// Random per-partition gradients, their encodings, and the exact
+    /// sum a decoder must recover.
+    fn random_instance(
+        code: &dyn GradientCode,
+        rng: &mut Xoshiro256pp,
+    ) -> (Vec<Matrix>, Matrix) {
         let k = code.k();
         let (p, d) = (4, 2);
-        // Random per-partition gradients.
         let parts: Vec<Matrix> = (0..k)
             .map(|_| {
                 Matrix::from_vec(p, d, (0..p * d).map(|_| rng.normal()).collect()).unwrap()
@@ -121,7 +126,6 @@ pub(crate) mod test_support {
         for g in &parts {
             expect += g;
         }
-        // Each ECN encodes from its assigned partials.
         let coded: Vec<Matrix> = (0..k)
             .map(|j| {
                 let partial: Vec<&Matrix> =
@@ -129,6 +133,14 @@ pub(crate) mod test_support {
                 code.encode(j, &partial)
             })
             .collect();
+        (coded, expect)
+    }
+
+    /// Randomized check that a scheme recovers the exact
+    /// partition-gradient sum from many random R-subsets.
+    pub fn check_recovers_sum(code: &dyn GradientCode, rng: &mut Xoshiro256pp) {
+        let k = code.k();
+        let (coded, expect) = random_instance(code, rng);
         // Try many arrival subsets of size R.
         let r = code.r();
         let trials = 40;
@@ -142,6 +154,45 @@ pub(crate) mod test_support {
             assert!(
                 got.max_abs_diff(&expect) < 1e-8,
                 "{}: subset {subset:?} decode error {}",
+                code.name(),
+                got.max_abs_diff(&expect)
+            );
+        }
+    }
+
+    /// Exhaustive check over *every* straggler subset of size ≤ S: the
+    /// complement arrival set (size ≥ R = K − S) must always decode to
+    /// the exact partition sum — the §III-B guarantee, not just its
+    /// random sampling.
+    pub fn check_recovers_all_straggler_subsets(
+        code: &dyn GradientCode,
+        rng: &mut Xoshiro256pp,
+    ) {
+        let k = code.k();
+        assert!(k <= 16, "subset enumeration is capped at K = 16, got {k}");
+        let s = code.s();
+        let (coded, expect) = random_instance(code, rng);
+        for mask in 0u32..(1u32 << k) {
+            if mask.count_ones() as usize > s {
+                continue;
+            }
+            let arrived: Vec<(usize, Matrix)> = (0..k)
+                .filter(|j| mask & (1 << j) == 0)
+                .map(|j| (j, coded[j].clone()))
+                .collect();
+            let got = code.decode(&arrived).unwrap_or_else(|e| {
+                panic!(
+                    "{} (K={k}, S={s}) failed on straggler mask {mask:#b}: {e}",
+                    code.name()
+                )
+            });
+            // Slightly looser than the sampled check: this enumerates
+            // *every* subset, including the worst-conditioned one the
+            // cyclic decoder certifies to 1e-6.
+            let tol = 1e-6 * (1.0 + expect.max_abs());
+            assert!(
+                got.max_abs_diff(&expect) < tol,
+                "{} (K={k}, S={s}): straggler mask {mask:#b} decode error {}",
                 code.name(),
                 got.max_abs_diff(&expect)
             );

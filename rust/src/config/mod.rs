@@ -28,6 +28,38 @@ use crate::data::DatasetName;
 use crate::ecn::ResponseModel;
 use crate::error::{Error, Result};
 use crate::graph::TraversalKind;
+use crate::problem::ObjectiveKind;
+
+/// Apply the optional `[objective]` hyper-parameter section to a parsed
+/// objective kind:
+///
+/// ```text
+/// [objective]
+/// lambda = 0.01   # logistic ridge weight
+/// delta = 1.0     # huber transition point
+/// l1 = 0.001      # elastic-net ℓ1 weight
+/// l2 = 0.01       # elastic-net ridge weight
+/// ```
+///
+/// Keys that don't apply to the kind are ignored, so one section can
+/// parameterize a whole `objective = ls, logistic, huber, enet` sweep
+/// axis.
+pub fn apply_objective_params(kind: ObjectiveKind, doc: &ConfigDoc) -> ObjectiveKind {
+    let sec = "objective";
+    match kind {
+        ObjectiveKind::Logistic { lambda } => ObjectiveKind::Logistic {
+            lambda: doc.get_num(sec, "lambda").unwrap_or(lambda),
+        },
+        ObjectiveKind::Huber { delta } => ObjectiveKind::Huber {
+            delta: doc.get_num(sec, "delta").unwrap_or(delta),
+        },
+        ObjectiveKind::ElasticNet { l1, l2 } => ObjectiveKind::ElasticNet {
+            l1: doc.get_num(sec, "l1").unwrap_or(l1),
+            l2: doc.get_num(sec, "l2").unwrap_or(l2),
+        },
+        ls => ls,
+    }
+}
 
 /// Parse a run config (and dataset choice) from a config document's
 /// `[run]` section, starting from defaults.
@@ -36,6 +68,11 @@ pub fn run_config_from_doc(doc: &ConfigDoc) -> Result<(RunConfig, DatasetName)> 
     let sec = "run";
     let mut dataset = DatasetName::Synthetic;
 
+    if let Some(v) = doc.get_str(sec, "objective") {
+        cfg.objective = ObjectiveKind::parse(&v)
+            .ok_or_else(|| Error::Config(format!("unknown objective '{v}'")))?;
+    }
+    cfg.objective = apply_objective_params(cfg.objective, doc);
     if let Some(v) = doc.get_str(sec, "algo") {
         cfg.algo = match v.as_str() {
             "iadmm" => Algorithm::IAdmmExact,
@@ -148,6 +185,25 @@ delay = 0.01
     fn unknown_algo_rejected() {
         let doc = ConfigDoc::parse("[run]\nalgo = nope\n").unwrap();
         assert!(run_config_from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn objective_parsing_with_param_overrides() {
+        let doc = ConfigDoc::parse(
+            "[run]\nobjective = enet\n\n[objective]\nl1 = 0.05\nl2 = 0.2\n",
+        )
+        .unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.objective, ObjectiveKind::ElasticNet { l1: 0.05, l2: 0.2 });
+        // Defaults survive when the section is absent.
+        let doc = ConfigDoc::parse("[run]\nobjective = huber\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.objective, ObjectiveKind::Huber { delta: 1.0 });
+        // Unknown names error; missing key keeps least squares.
+        assert!(run_config_from_doc(&ConfigDoc::parse("[run]\nobjective = nope\n").unwrap())
+            .is_err());
+        let (cfg, _) = run_config_from_doc(&ConfigDoc::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.objective, ObjectiveKind::LeastSquares);
     }
 
     #[test]

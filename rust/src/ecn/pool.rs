@@ -5,8 +5,10 @@ use crate::coding::GradientCode;
 use crate::data::{partition_to_ecns, BatchCursor, EcnPartition, Split};
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
+use crate::problem::{LeastSquares, Objective};
 use crate::rng::{Rng, Xoshiro256pp};
 use crate::runtime::Engine;
+use std::rc::Rc;
 
 /// ECN compute-time model with straggler injection.
 ///
@@ -65,10 +67,10 @@ pub struct RoundResult {
     pub waited_for_straggler: bool,
 }
 
-/// One agent's pool of K ECNs.
+/// One agent's pool of K ECNs over the agent's local [`Objective`].
 pub struct EcnPool {
     agent: usize,
-    data: Split,
+    objective: Rc<dyn Objective>,
     code: Box<dyn GradientCode>,
     partitions: Vec<EcnPartition>,
     cursors: Vec<BatchCursor>,
@@ -87,21 +89,51 @@ impl EcnPool {
     /// coded ECN computes `(S+1)·M̄/K` rows — Alg. 2 step 7).
     pub fn new(
         agent: usize,
-        data: Split,
+        objective: Rc<dyn Objective>,
         code: Box<dyn GradientCode>,
         per_partition_batch_rows: usize,
         response: ResponseModel,
         rng: Xoshiro256pp,
     ) -> Result<Self> {
         let k = code.k();
-        let partitions = partition_to_ecns(agent, data.len(), k)?;
+        let partitions = partition_to_ecns(agent, objective.num_examples(), k)?;
         let cursors = partitions
             .iter()
             .map(|p| BatchCursor::new(p.len(), per_partition_batch_rows))
             .collect::<Result<Vec<_>>>()?;
         let part_grads = vec![];
         let part_done = vec![false; k];
-        Ok(Self { agent, data, code, partitions, cursors, response, rng, part_grads, part_done })
+        Ok(Self {
+            agent,
+            objective,
+            code,
+            partitions,
+            cursors,
+            response,
+            rng,
+            part_grads,
+            part_done,
+        })
+    }
+
+    /// Convenience: a pool over the paper's least-squares loss on an
+    /// owned shard (tests, examples).
+    pub fn least_squares(
+        agent: usize,
+        data: Split,
+        code: Box<dyn GradientCode>,
+        per_partition_batch_rows: usize,
+        response: ResponseModel,
+        rng: Xoshiro256pp,
+    ) -> Result<Self> {
+        Self::new(
+            agent,
+            Rc::new(LeastSquares::new(data)),
+            code,
+            per_partition_batch_rows,
+            response,
+            rng,
+        )
     }
 
     /// Owning agent id.
@@ -138,8 +170,10 @@ impl EcnPool {
         }
         // 1. Per-partition gradients (computed once even when replicated
         //    on several ECNs; the simulated clock still charges each ECN
-        //    for its own compute). Zero-copy row-range path — no
-        //    allocation in the steady state.
+        //    for its own compute). The objective routes least squares
+        //    through the engine's zero-copy row-range kernel and other
+        //    losses through their native oracle — no allocation in the
+        //    steady state either way.
         for done in &mut self.part_done {
             *done = false;
         }
@@ -149,12 +183,11 @@ impl EcnPool {
                     let (blo, bhi) = self.cursors[p].batch_range(cycle);
                     let lo = self.partitions[p].lo + blo;
                     let hi = self.partitions[p].lo + bhi;
-                    engine.grad_batch_range(
-                        &self.data.inputs,
-                        &self.data.targets,
+                    self.objective.grad_rows_engine(
+                        engine,
+                        x,
                         lo,
                         hi,
-                        x,
                         &mut self.part_grads[p],
                     )?;
                     self.part_done[p] = true;
@@ -230,14 +263,26 @@ mod tests {
     use crate::data::synthetic_small;
     use crate::runtime::NativeEngine;
 
+    fn pool_split() -> Split {
+        synthetic_small(600, 10, 0.1, 91).train
+    }
+
     fn make_pool(code: Box<dyn GradientCode>, per_part: usize, resp: ResponseModel) -> EcnPool {
-        let ds = synthetic_small(600, 10, 0.1, 91);
-        EcnPool::new(0, ds.train, code, per_part, resp, Xoshiro256pp::seed_from_u64(92)).unwrap()
+        EcnPool::least_squares(
+            0,
+            pool_split(),
+            code,
+            per_part,
+            resp,
+            Xoshiro256pp::seed_from_u64(92),
+        )
+        .unwrap()
     }
 
     /// Reference: plain mini-batch gradient over the same rows the pool
-    /// selects.
+    /// selects (recomputed from the deterministic generator).
     fn reference_grad(pool: &EcnPool, x: &Matrix, cycle: usize) -> Matrix {
+        let data = pool_split();
         let k = pool.code.k();
         let (p, d) = x.shape();
         let mut acc = Matrix::zeros(p, d);
@@ -246,11 +291,48 @@ mod tests {
             let (blo, bhi) = pool.cursors[pi].batch_range(cycle);
             let lo = pool.partitions[pi].lo + blo;
             let hi = pool.partitions[pi].lo + bhi;
-            let o = pool.data.inputs.slice_rows(lo, hi);
-            let t = pool.data.targets.slice_rows(lo, hi);
+            let o = data.inputs.slice_rows(lo, hi);
+            let t = data.targets.slice_rows(lo, hi);
             acc += &eng.grad_batch(&o, &t, x).unwrap();
         }
         acc.scaled(1.0 / k as f64)
+    }
+
+    /// A non-LS objective takes the native `grad_rows` path through the
+    /// pool and still decodes to its exact mini-batch gradient.
+    #[test]
+    fn generic_objective_round_matches_direct_grad_rows() {
+        use crate::problem::ObjectiveKind;
+        let kind = ObjectiveKind::Huber { delta: 1.0 };
+        let obj = kind.build(pool_split());
+        let mut pool = EcnPool::new(
+            0,
+            Rc::clone(&obj),
+            Box::new(CyclicRepetition::new(4, 1, 5).unwrap()),
+            8,
+            ResponseModel::default(),
+            Xoshiro256pp::seed_from_u64(92),
+        )
+        .unwrap();
+        let x = Matrix::full(3, 1, 0.4);
+        let mut eng = NativeEngine::new();
+        for cycle in 0..4 {
+            let mut expect = Matrix::zeros(3, 1);
+            let mut part = Matrix::zeros(3, 1);
+            for pi in 0..4 {
+                let (blo, bhi) = pool.cursors[pi].batch_range(cycle);
+                let lo = pool.partitions[pi].lo + blo;
+                let hi = pool.partitions[pi].lo + bhi;
+                obj.grad_rows(&x, lo, hi, &mut part);
+                expect.add_scaled(0.25, &part);
+            }
+            let res = pool.gradient_round(&x, cycle, &mut eng).unwrap();
+            assert!(
+                res.grad.max_abs_diff(&expect) < 1e-9,
+                "cycle {cycle}: {}",
+                res.grad.max_abs_diff(&expect)
+            );
+        }
     }
 
     #[test]
@@ -326,7 +408,8 @@ mod tests {
 
     #[test]
     fn effective_batch_accounting() {
-        let pool = make_pool(Box::new(CyclicRepetition::new(5, 2, 1).unwrap()), 6, Default::default());
+        let pool =
+            make_pool(Box::new(CyclicRepetition::new(5, 2, 1).unwrap()), 6, Default::default());
         assert_eq!(pool.effective_batch(), 30);
     }
 }

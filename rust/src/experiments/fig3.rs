@@ -6,7 +6,10 @@
 //! Every grid is declared as a [`SweepSpec`] and executed on the
 //! [`crate::sweep`] worker pool — results are identical to the old
 //! serial loops (each job is an independent, seed-determined
-//! `Driver::run`) but land in a fraction of the wall-clock.
+//! `Driver::run`) but land in a fraction of the wall-clock. The
+//! substrate is objective-generic: setting `objective` on the base
+//! config (or sweeping `objective = ls, logistic, huber, enet`) reruns
+//! any of these grids on the corresponding loss-zoo member.
 
 use super::{budget, load_dataset, write_traces, ROOT_SEED};
 use crate::baselines::{comparable_setup, DAdmm, Dgd, Extra, GossipHarness};

@@ -14,6 +14,7 @@ use crate::data::DatasetName;
 use crate::ecn::ResponseModel;
 use crate::error::Result;
 use crate::metrics::Trace;
+use crate::problem::ObjectiveKind;
 use crate::runtime::EngineFactory;
 use crate::sweep::{default_workers, run_sweep, SweepSpec};
 use crate::util::table::{fnum, Table};
@@ -86,6 +87,27 @@ pub fn run(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>> {
         traces.push(tr);
     }
 
+    // (f) classification workload: ijcnn1 is a binary-classification
+    // dataset, so run the same coded-vs-uncoded comparison on the
+    // L2-regularized logistic loss (the objective-generic pipeline; the
+    // accuracy trace references the cached full-gradient optimum).
+    let log_spec = SweepSpec::new(RunConfig {
+        objective: ObjectiveKind::Logistic { lambda: 1e-2 },
+        s_tolerated: 1,
+        response: ResponseModel {
+            straggler_count: 1,
+            straggler_delay: 5e-3,
+            ..Default::default()
+        },
+        ..base.clone()
+    })
+    .algos(vec![Algorithm::SIAdmm, Algorithm::CsIAdmm(SchemeKind::Cyclic)]);
+    for j in &run_sweep(&log_spec, &ds, workers, engines)?.jobs {
+        let mut tr = j.trace.clone();
+        tr.label = format!("logistic {}", j.job.cfg.algo.label());
+        traces.push(tr);
+    }
+
     let mut t = Table::new(
         "Fig. 4 — ijcnn1-like, N=20",
         &["series", "comm units", "sim time (s)", "accuracy", "test MSE"],
@@ -129,5 +151,13 @@ mod tests {
                 .sim_time
         };
         assert!(time("cyclic") < time("uncoded"), "coded dodges stragglers");
+        // Classification workload: the logistic traces converge toward
+        // their own (full-gradient) reference optimum.
+        for label in ["logistic sI-ADMM", "logistic csI-ADMM/cyclic"] {
+            let tr = traces.iter().find(|t| t.label == label).unwrap();
+            let first = tr.points.first().unwrap().accuracy;
+            let last = tr.final_accuracy();
+            assert!(last < first, "{label}: {last} !< {first}");
+        }
     }
 }

@@ -8,7 +8,15 @@
 //!
 //! * Substrates: [`rng`], [`linalg`], [`util`], [`graph`], [`data`],
 //!   [`problem`] — everything the paper's system depends on, built from
-//!   scratch (the build environment is fully offline).
+//!   scratch (the build environment is fully offline). The [`problem`]
+//!   layer is an objective *zoo*: the pipeline is generic over
+//!   [`problem::Objective`], with least squares (Eq. 24), L2-logistic
+//!   (the ijcnn1 classification workload), Huber, and elastic-net
+//!   instantiations selected by [`problem::ObjectiveKind`] — the
+//!   `--objective {ls,logistic,huber,enet}` CLI/config/sweep axis. The
+//!   accuracy metric (Eq. 23) references a per-objective reference
+//!   optimum: closed form for least squares, a cached high-iteration
+//!   full-gradient solve ([`problem::reference_optimum`]) otherwise.
 //! * Core contribution: [`coding`] (real-field MDS gradient codes),
 //!   [`ecn`] (edge-compute-node simulation with stragglers), [`admm`]
 //!   (I-ADMM / sI-ADMM / csI-ADMM), [`baselines`] (W-ADMM, D-ADMM, DGD,

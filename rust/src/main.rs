@@ -18,16 +18,34 @@
 
 use csadmm::cli::{Args, USAGE};
 use csadmm::coding::SchemeKind;
-use csadmm::config::{run_config_from_doc, ConfigDoc};
+use csadmm::config::{apply_objective_params, run_config_from_doc, ConfigDoc};
 use csadmm::coordinator::{Algorithm, Driver, RunConfig};
 use csadmm::data::DatasetName;
 use csadmm::ecn::ResponseModel;
 use csadmm::experiments::{self, load_dataset, ROOT_SEED};
+use csadmm::problem::ObjectiveKind;
 use csadmm::runtime::{EngineFactory, NativeEngineFactory, PjrtEngineFactory};
 use csadmm::sweep::{default_workers, run_sweep, SweepSpec, SweepSummary};
 use csadmm::util::json::write_json_file;
 use csadmm::util::table::{fnum, Table};
-use csadmm::Result;
+use csadmm::{Error, Result};
+
+/// Parse a comma-separated `--objective` list (`ls,logistic,huber,enet`),
+/// applying the config's `[objective]` hyper-parameter section (when a
+/// config is in play) just like the `[sweep] objective` axis does.
+fn parse_objective_list(list: &str, doc: Option<&ConfigDoc>) -> Result<Vec<ObjectiveKind>> {
+    list.split(',')
+        .map(|t| {
+            let t = t.trim();
+            let kind = ObjectiveKind::parse(t)
+                .ok_or_else(|| Error::Config(format!("unknown objective '{t}' (see usage)")))?;
+            Ok(match doc {
+                Some(doc) => apply_objective_params(kind, doc),
+                None => kind,
+            })
+        })
+        .collect()
+}
 
 fn make_factory(args: &Args) -> Box<dyn EngineFactory> {
     if args.has("pjrt") {
@@ -72,11 +90,21 @@ fn main() -> Result<()> {
             if let Some(seed) = args.get("seed").and_then(|s| s.parse().ok()) {
                 cfg.seed = seed;
             }
+            if let Some(tok) = args.get("objective") {
+                let kinds = parse_objective_list(tok, Some(&doc))?;
+                if kinds.len() != 1 {
+                    return Err(Error::Config(
+                        "run takes exactly one --objective (use `sweep` for an axis)".into(),
+                    ));
+                }
+                cfg.objective = kinds[0];
+            }
             let ds = load_dataset(dataset, quick);
             let mut engine = factory.create()?;
             println!(
-                "running {} on {} (N={}, K={}, M={}, engine={})",
+                "running {} [{}] on {} (N={}, K={}, M={}, engine={})",
                 cfg.algo.label(),
+                cfg.objective.as_str(),
                 dataset.as_str(),
                 cfg.n_agents,
                 cfg.k_ecn,
@@ -103,15 +131,18 @@ fn main() -> Result<()> {
         }
         Some("sweep") => {
             let workers = args.get_usize("workers").unwrap_or_else(default_workers);
-            let (spec, ds) = match args.get("config") {
+            let (mut spec, ds, doc) = match args.get("config") {
                 Some(path) => {
                     let doc = ConfigDoc::load(std::path::Path::new(path))?;
                     let (spec, dataset) = SweepSpec::from_doc(&doc)?;
-                    (spec, load_dataset(dataset, quick))
+                    (spec, load_dataset(dataset, quick), Some(doc))
                 }
                 // Bare `csadmm sweep`: the quick-scale demo grid.
-                None => (demo_sweep(), load_dataset(DatasetName::Synthetic, true)),
+                None => (demo_sweep(), load_dataset(DatasetName::Synthetic, true), None),
             };
+            if let Some(list) = args.get("objective") {
+                spec = spec.objectives(parse_objective_list(list, doc.as_ref())?);
+            }
             println!(
                 "sweep: {} jobs ({} cells × {} seeds) on {workers} workers, engine={}",
                 spec.num_jobs(),

@@ -14,18 +14,32 @@ mod recorder;
 pub use recorder::{Trace, TracePoint};
 
 use crate::data::Split;
+use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 
 /// Relative-error accuracy (Eq. 23). `xs` are the per-agent primal
-/// variables, `xstar` the global optimum; the initial iterates are the
-/// zero matrix, so each denominator is ‖x*‖.
-pub fn accuracy(xs: &[Matrix], xstar: &Matrix) -> f64 {
+/// variables, `xstar` the reference optimum of the configured
+/// objective; the initial iterates are the zero matrix, so each
+/// denominator is ‖x*‖.
+///
+/// The reference is explicit: callers pass `None` when no optimum is
+/// available (e.g. a reference solve was skipped), and get
+/// [`Error::Config`] instead of a silently meaningless value — Eq. 23
+/// is undefined without `x*`.
+pub fn accuracy(xs: &[Matrix], xstar: Option<&Matrix>) -> Result<f64> {
+    let xstar = xstar.ok_or_else(|| {
+        Error::Config(
+            "accuracy (Eq. 23) needs a reference optimum x*, but none is available \
+             for this objective"
+                .into(),
+        )
+    })?;
     let denom = xstar.norm();
     if denom == 0.0 {
-        return 0.0;
+        return Ok(0.0);
     }
     let n = xs.len() as f64;
-    xs.iter().map(|x| (x - xstar).norm() / denom).sum::<f64>() / n
+    Ok(xs.iter().map(|x| (x - xstar).norm() / denom).sum::<f64>() / n)
 }
 
 /// Mean-squared-error test loss of model `x` on a split:
@@ -67,16 +81,25 @@ mod tests {
     fn accuracy_is_one_at_init_zero_at_optimum() {
         let xstar = Matrix::from_rows(&[&[3.0], &[4.0]]);
         let zeros = vec![Matrix::zeros(2, 1); 4];
-        assert!((accuracy(&zeros, &xstar) - 1.0).abs() < 1e-12);
+        assert!((accuracy(&zeros, Some(&xstar)).unwrap() - 1.0).abs() < 1e-12);
         let solved = vec![xstar.clone(); 4];
-        assert_eq!(accuracy(&solved, &xstar), 0.0);
+        assert_eq!(accuracy(&solved, Some(&xstar)).unwrap(), 0.0);
     }
 
     #[test]
     fn accuracy_averages_over_agents() {
         let xstar = Matrix::from_rows(&[&[1.0]]);
         let xs = vec![Matrix::zeros(1, 1), Matrix::from_rows(&[&[1.0]])];
-        assert!((accuracy(&xs, &xstar) - 0.5).abs() < 1e-12);
+        assert!((accuracy(&xs, Some(&xstar)).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_without_reference_is_a_config_error() {
+        let xs = vec![Matrix::zeros(2, 1)];
+        match accuracy(&xs, None) {
+            Err(Error::Config(msg)) => assert!(msg.contains("reference optimum"), "{msg}"),
+            other => panic!("expected Error::Config, got {other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Elastic-net regression — least squares plus `l1‖x‖₁ + l2/2 ‖x‖²`:
+//!
+//! ```text
+//! f(x) = 1/(2b) ‖O x − T‖_F² + l1 ‖x‖₁ + l2/2 ‖x‖²
+//! ```
+//!
+//! The smooth part is (λ_max(OᵀO/b) + l2)-smooth; the stochastic oracle
+//! returns the block gradient of the smooth part plus the ℓ1
+//! subgradient `l1·sign(x)` (with `sign(0) = 0`), so block means stay
+//! unbiased. The exact prox is solved by ISTA soft-threshold iterations
+//! on the cached Gram matrix — the composite objective is ρ-strongly
+//! convex, so the iteration contracts linearly.
+
+use super::{data_spectral_bound, soft_threshold_inplace, Objective};
+use crate::data::Split;
+use crate::linalg::{matmul_at_b, Matrix};
+use std::cell::RefCell;
+
+/// One agent's elastic-net objective over its shard.
+pub struct ElasticNet {
+    data: Split,
+    l1: f64,
+    l2: f64,
+    /// Cached Gram matrix OᵀO / b (lazy, for prox/reference solves).
+    gram_over_b: RefCell<Option<Matrix>>,
+    /// Cached OᵀT / b.
+    cross_over_b: RefCell<Option<Matrix>>,
+    /// Cached λ_max(OᵀO/b).
+    ls_bound: RefCell<Option<f64>>,
+}
+
+impl ElasticNet {
+    /// Wrap an agent shard with ℓ1 weight `l1 ≥ 0` and ridge `l2 ≥ 0`.
+    pub fn new(data: Split, l1: f64, l2: f64) -> Self {
+        assert!(l1 >= 0.0 && l2 >= 0.0, "elastic-net weights must be non-negative");
+        Self {
+            data,
+            l1,
+            l2,
+            gram_over_b: RefCell::new(None),
+            cross_over_b: RefCell::new(None),
+            ls_bound: RefCell::new(None),
+        }
+    }
+
+    /// The (l1, l2) regularization weights.
+    pub fn weights(&self) -> (f64, f64) {
+        (self.l1, self.l2)
+    }
+
+    fn ensure_gram(&self) {
+        if self.gram_over_b.borrow().is_some() {
+            return;
+        }
+        let o = &self.data.inputs;
+        let t = &self.data.targets;
+        let b = self.data.len() as f64;
+        let mut gram = Matrix::zeros(o.cols(), o.cols());
+        matmul_at_b(o, o, &mut gram);
+        gram.scale(1.0 / b);
+        let mut cross = Matrix::zeros(o.cols(), t.cols());
+        matmul_at_b(o, t, &mut cross);
+        cross.scale(1.0 / b);
+        *self.gram_over_b.borrow_mut() = Some(gram);
+        *self.cross_over_b.borrow_mut() = Some(cross);
+    }
+
+    fn ls_spectral_bound(&self) -> f64 {
+        if let Some(l) = *self.ls_bound.borrow() {
+            return l;
+        }
+        let l = data_spectral_bound(&self.data.inputs);
+        *self.ls_bound.borrow_mut() = Some(l);
+        l
+    }
+
+    fn add_l1_subgradient(&self, x: &Matrix, out: &mut Matrix) {
+        for (g, &v) in out.as_mut_slice().iter_mut().zip(x.as_slice()) {
+            *g += if v > 0.0 {
+                self.l1
+            } else if v < 0.0 {
+                -self.l1
+            } else {
+                0.0
+            };
+        }
+    }
+}
+
+impl Objective for ElasticNet {
+    fn dims(&self) -> (usize, usize) {
+        (self.data.inputs.cols(), self.data.targets.cols())
+    }
+
+    fn num_examples(&self) -> usize {
+        self.data.len()
+    }
+
+    fn loss(&self, x: &Matrix) -> f64 {
+        let pred = self.data.inputs.matmul(x);
+        let resid = &pred - &self.data.targets;
+        let ls = resid.norm_sq() / (2.0 * self.data.len() as f64);
+        let l1: f64 = x.as_slice().iter().map(|v| v.abs()).sum();
+        ls + self.l1 * l1 + 0.5 * self.l2 * x.norm_sq()
+    }
+
+    fn grad(&self, x: &Matrix, out: &mut Matrix) {
+        self.grad_rows(x, 0, self.num_examples(), out);
+    }
+
+    fn grad_rows(&self, x: &Matrix, lo: usize, hi: usize, out: &mut Matrix) {
+        debug_assert!(lo < hi && hi <= self.num_examples());
+        let o = self.data.inputs.slice_rows(lo, hi);
+        let t = self.data.targets.slice_rows(lo, hi);
+        let mut resid = o.matmul(x);
+        resid -= &t;
+        matmul_at_b(&o, &resid, out);
+        out.scale(1.0 / (hi - lo) as f64);
+        out.add_scaled(self.l2, x);
+        self.add_l1_subgradient(x, out);
+    }
+
+    /// ISTA on the ρ-strongly-convex prox objective: gradient step on
+    /// the smooth part, soft-threshold at `η·l1`.
+    fn prox_exact(&self, z: &Matrix, y: &Matrix, rho: f64) -> Matrix {
+        self.ensure_gram();
+        let gram = self.gram_over_b.borrow();
+        let gram = gram.as_ref().unwrap();
+        let cross = self.cross_over_b.borrow();
+        let cross = cross.as_ref().unwrap();
+        let eta = 1.0 / (self.ls_spectral_bound() + self.l2 + rho);
+        let thr = eta * self.l1;
+        let mut v = z.clone();
+        let (p, d) = v.shape();
+        let mut g = Matrix::zeros(p, d);
+        for _ in 0..2_000 {
+            // ∇smooth = Gram v − cross + (l2 + ρ) v − ρ z − y.
+            let gv = gram.matmul(&v);
+            g.copy_from(&gv);
+            g -= cross;
+            g.add_scaled(self.l2 + rho, &v);
+            g.add_scaled(-rho, z);
+            g -= y;
+            let mut v_new = v.clone();
+            v_new.add_scaled(-eta, &g);
+            soft_threshold_inplace(&mut v_new, thr);
+            let delta = v_new.max_abs_diff(&v);
+            v = v_new;
+            if delta < 1e-13 * (1.0 + v.max_abs()) {
+                break;
+            }
+        }
+        v
+    }
+
+    fn lipschitz(&self) -> f64 {
+        self.ls_spectral_bound() + self.l2
+    }
+
+    fn l1_weight(&self) -> f64 {
+        self.l1
+    }
+
+    fn smooth_grad(&self, x: &Matrix, out: &mut Matrix) {
+        self.ensure_gram();
+        let gram = self.gram_over_b.borrow();
+        let gram = gram.as_ref().unwrap();
+        let cross = self.cross_over_b.borrow();
+        let cross = cross.as_ref().unwrap();
+        let gx = gram.matmul(x);
+        out.copy_from(&gx);
+        *out -= cross;
+        out.add_scaled(self.l2, x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_small;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    fn toy(seed: u64) -> ElasticNet {
+        ElasticNet::new(synthetic_small(100, 10, 0.1, seed).train, 1e-2, 5e-2)
+    }
+
+    #[test]
+    fn zero_weights_reduce_to_least_squares() {
+        let ds = synthetic_small(60, 6, 0.1, 92);
+        let en = ElasticNet::new(ds.train.clone(), 0.0, 0.0);
+        let ls = super::super::LeastSquares::new(ds.train);
+        let x = Matrix::full(3, 1, -0.4);
+        assert!((en.loss(&x) - ls.loss(&x)).abs() < 1e-12);
+        let mut ge = Matrix::zeros(3, 1);
+        let mut gl = Matrix::zeros(3, 1);
+        en.grad(&x, &mut ge);
+        ls.grad(&x, &mut gl);
+        assert!(ge.max_abs_diff(&gl) < 1e-12);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference_away_from_zero() {
+        let obj = toy(93);
+        let mut rng = Xoshiro256pp::seed_from_u64(94);
+        let (p, d) = obj.dims();
+        // Keep |x| bounded away from the ℓ1 kink so the central
+        // difference stays on one side of it.
+        let x = Matrix::from_vec(
+            p,
+            d,
+            (0..p * d)
+                .map(|_| {
+                    let v: f64 = rng.normal();
+                    v + 0.3 * v.signum()
+                })
+                .collect(),
+        )
+        .unwrap();
+        let mut g = Matrix::zeros(p, d);
+        obj.grad(&x, &mut g);
+        let eps = 1e-6;
+        for i in 0..p {
+            for j in 0..d {
+                let mut xp = x.clone();
+                xp[(i, j)] += eps;
+                let mut xm = x.clone();
+                xm[(i, j)] -= eps;
+                let fd = (obj.loss(&xp) - obj.loss(&xm)) / (2.0 * eps);
+                assert!((fd - g[(i, j)]).abs() < 1e-5, "({i},{j}): {fd} vs {}", g[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn smooth_grad_drops_the_l1_term() {
+        let obj = toy(95);
+        let (p, d) = obj.dims();
+        let x = Matrix::full(p, d, 0.7);
+        let mut g = Matrix::zeros(p, d);
+        let mut gs = Matrix::zeros(p, d);
+        obj.grad(&x, &mut g);
+        obj.smooth_grad(&x, &mut gs);
+        let mut diff = g;
+        diff -= &gs;
+        // Difference is exactly l1·sign(x) = l1 everywhere here.
+        for &v in diff.as_slice() {
+            assert!((v - obj.weights().0).abs() < 1e-9, "{v}");
+        }
+    }
+
+    #[test]
+    fn prox_satisfies_subgradient_optimality() {
+        let obj = toy(96);
+        let (p, d) = obj.dims();
+        let z = Matrix::full(p, d, 0.2);
+        let y = Matrix::full(p, d, 0.05);
+        let rho = 0.8;
+        let v = obj.prox_exact(&z, &y, rho);
+        let mut gs = Matrix::zeros(p, d);
+        obj.smooth_grad(&v, &mut gs);
+        let mut r = gs;
+        r.add_scaled(rho, &v);
+        r.add_scaled(-rho, &z);
+        r -= &y;
+        let l1 = obj.weights().0;
+        for (rv, &vv) in r.as_slice().iter().zip(v.as_slice()) {
+            if vv > 0.0 {
+                assert!((rv + l1).abs() < 1e-8, "{rv} at positive coord");
+            } else if vv < 0.0 {
+                assert!((rv - l1).abs() < 1e-8, "{rv} at negative coord");
+            } else {
+                assert!(rv.abs() <= l1 + 1e-8, "{rv} at zero coord");
+            }
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Huber-loss regression — robust alternative to least squares on the
+//! same `(O, T)` shards:
+//!
+//! ```text
+//! f(x) = (1/b) Σ_{j,c} h_δ(⟨o_j, x_c⟩ − t_{jc}),
+//! h_δ(r) = r²/2        for |r| ≤ δ,
+//!          δ(|r| − δ/2) otherwise.
+//! ```
+//!
+//! C¹ with ψ_δ(r) = clamp(r, −δ, δ) and λ_max(OᵀO/b)-smooth (|ψ′| ≤ 1),
+//! so Assumptions 2–3 hold with the same constants as least squares.
+//! The exact prox reuses the damped-Newton column solver with the
+//! IRLS-style 0/1 curvature weights (the generalized Hessian of h_δ).
+
+use super::newton::newton_prox_column;
+use super::{data_spectral_bound, Objective};
+use crate::data::Split;
+use crate::linalg::Matrix;
+use std::cell::RefCell;
+
+/// One agent's Huber objective over its shard.
+pub struct Huber {
+    data: Split,
+    delta: f64,
+    lips: RefCell<Option<f64>>,
+    /// Per-row clipped-residual scratch (d entries), reused every round.
+    coef: RefCell<Vec<f64>>,
+}
+
+impl Huber {
+    /// Wrap an agent shard with transition point `delta > 0`.
+    pub fn new(data: Split, delta: f64) -> Self {
+        assert!(delta > 0.0, "huber delta must be positive");
+        let d = data.targets.cols();
+        Self { data, delta, lips: RefCell::new(None), coef: RefCell::new(vec![0.0; d]) }
+    }
+
+    /// The transition point δ.
+    pub fn delta(&self) -> f64 {
+        self.delta
+    }
+
+    fn penalty(&self, r: f64) -> f64 {
+        let a = r.abs();
+        if a <= self.delta {
+            0.5 * r * r
+        } else {
+            self.delta * (a - 0.5 * self.delta)
+        }
+    }
+}
+
+impl Objective for Huber {
+    fn dims(&self) -> (usize, usize) {
+        (self.data.inputs.cols(), self.data.targets.cols())
+    }
+
+    fn num_examples(&self) -> usize {
+        self.data.len()
+    }
+
+    fn loss(&self, x: &Matrix) -> f64 {
+        let (p, d) = self.dims();
+        let b = self.num_examples();
+        let mut total = 0.0;
+        for j in 0..b {
+            let row = self.data.inputs.row(j);
+            for c in 0..d {
+                let mut m = 0.0;
+                for k in 0..p {
+                    m += row[k] * x[(k, c)];
+                }
+                total += self.penalty(m - self.data.targets[(j, c)]);
+            }
+        }
+        total / b as f64
+    }
+
+    fn grad(&self, x: &Matrix, out: &mut Matrix) {
+        self.grad_rows(x, 0, self.num_examples(), out);
+    }
+
+    /// `out = (1/rows) O_blockᵀ ψ_δ(O_block x − T_block)`.
+    fn grad_rows(&self, x: &Matrix, lo: usize, hi: usize, out: &mut Matrix) {
+        debug_assert!(lo < hi && hi <= self.num_examples());
+        let (p, d) = self.dims();
+        debug_assert_eq!(out.shape(), (p, d));
+        out.fill_zero();
+        let mut coef = self.coef.borrow_mut();
+        for j in lo..hi {
+            let row = self.data.inputs.row(j);
+            for c in 0..d {
+                let mut m = 0.0;
+                for k in 0..p {
+                    m += row[k] * x[(k, c)];
+                }
+                let r = m - self.data.targets[(j, c)];
+                coef[c] = r.clamp(-self.delta, self.delta);
+            }
+            for k in 0..p {
+                let o_jk = row[k];
+                let orow = out.row_mut(k);
+                for c in 0..d {
+                    orow[c] += o_jk * coef[c];
+                }
+            }
+        }
+        out.scale(1.0 / (hi - lo) as f64);
+    }
+
+    fn prox_exact(&self, z: &Matrix, y: &Matrix, rho: f64) -> Matrix {
+        let (p, d) = self.dims();
+        let b = self.num_examples();
+        let delta = self.delta;
+        let mut out = Matrix::zeros(p, d);
+        for c in 0..d {
+            let ts: Vec<f64> = (0..b).map(|j| self.data.targets[(j, c)]).collect();
+            let zc: Vec<f64> = (0..p).map(|k| z[(k, c)]).collect();
+            let uc: Vec<f64> = (0..p).map(|k| y[(k, c)]).collect();
+            let v = newton_prox_column(
+                &self.data.inputs,
+                &ts,
+                &|m, t| {
+                    let r = m - t;
+                    if r.abs() <= delta {
+                        (0.5 * r * r, r, 1.0)
+                    } else {
+                        (delta * (r.abs() - 0.5 * delta), delta * r.signum(), 0.0)
+                    }
+                },
+                0.0,
+                rho,
+                &zc,
+                &uc,
+                zc.clone(),
+            );
+            for k in 0..p {
+                out[(k, c)] = v[k];
+            }
+        }
+        out
+    }
+
+    fn lipschitz(&self) -> f64 {
+        if let Some(l) = *self.lips.borrow() {
+            return l;
+        }
+        let l = data_spectral_bound(&self.data.inputs);
+        *self.lips.borrow_mut() = Some(l);
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_small;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    fn toy(seed: u64) -> Huber {
+        Huber::new(synthetic_small(80, 8, 0.1, seed).train, 1.0)
+    }
+
+    #[test]
+    fn quadratic_region_matches_least_squares_gradient() {
+        // With a huge delta every residual is in the quadratic region —
+        // Huber degenerates to least squares exactly.
+        let ds = synthetic_small(60, 6, 0.1, 87);
+        let hub = Huber::new(ds.train.clone(), 1e9);
+        let ls = super::super::LeastSquares::new(ds.train);
+        let x = Matrix::full(3, 1, 0.3);
+        assert!((hub.loss(&x) - ls.loss(&x)).abs() < 1e-9);
+        let mut gh = Matrix::zeros(3, 1);
+        let mut gl = Matrix::zeros(3, 1);
+        hub.grad(&x, &mut gh);
+        ls.grad(&x, &mut gl);
+        assert!(gh.max_abs_diff(&gl) < 1e-10);
+    }
+
+    #[test]
+    fn gradient_is_bounded_by_delta() {
+        // Far from the data the clipped residual caps the gradient.
+        let obj = toy(88);
+        let x = Matrix::full(3, 1, 1e6);
+        let mut g = Matrix::zeros(3, 1);
+        obj.grad(&x, &mut g);
+        // |g_k| ≤ δ · mean_j |o_jk| ≤ δ · max row magnitude.
+        let bound = obj.delta()
+            * obj
+                .data
+                .inputs
+                .as_slice()
+                .iter()
+                .fold(0.0_f64, |m, &v| m.max(v.abs()))
+            * obj.dims().1 as f64;
+        assert!(g.max_abs() <= bound, "{} vs {bound}", g.max_abs());
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let obj = toy(89);
+        let mut rng = Xoshiro256pp::seed_from_u64(90);
+        let (p, d) = obj.dims();
+        let x = Matrix::from_vec(p, d, (0..p * d).map(|_| rng.normal()).collect()).unwrap();
+        let mut g = Matrix::zeros(p, d);
+        obj.grad(&x, &mut g);
+        let eps = 1e-6;
+        for i in 0..p {
+            for j in 0..d {
+                let mut xp = x.clone();
+                xp[(i, j)] += eps;
+                let mut xm = x.clone();
+                xm[(i, j)] -= eps;
+                let fd = (obj.loss(&xp) - obj.loss(&xm)) / (2.0 * eps);
+                assert!((fd - g[(i, j)]).abs() < 1e-5, "({i},{j}): {fd} vs {}", g[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn prox_satisfies_optimality() {
+        let obj = toy(91);
+        let (p, d) = obj.dims();
+        let z = Matrix::full(p, d, 0.5);
+        let y = Matrix::full(p, d, -0.2);
+        let rho = 0.9;
+        let v = obj.prox_exact(&z, &y, rho);
+        let mut g = Matrix::zeros(p, d);
+        obj.grad(&v, &mut g);
+        let mut kkt = g;
+        kkt.add_scaled(rho, &v);
+        kkt.add_scaled(-rho, &z);
+        kkt -= &y;
+        assert!(kkt.max_abs() < 1e-7, "KKT residual {}", kkt.max_abs());
+    }
+}

@@ -5,6 +5,8 @@ use super::Objective;
 use crate::data::Split;
 use crate::error::Result;
 use crate::linalg::{cholesky_factor, cholesky_solve, matmul_at_b, CholeskyFactor, Matrix};
+use crate::runtime::Engine;
+use std::borrow::Borrow;
 use std::cell::RefCell;
 
 /// One agent's least-squares objective over its shard `(O_i, T_i)`:
@@ -33,29 +35,6 @@ impl LeastSquares {
     /// Access the underlying shard.
     pub fn data(&self) -> &Split {
         &self.data
-    }
-
-    /// Smoothness constant L = λ_max(OᵀO / b) (Assumption 2's Lipschitz
-    /// gradient constant), estimated by power iteration. Used by the
-    /// driver to auto-scale the τ-schedule so that the inexact proximal
-    /// step `1/(ρ + τ^k)` is stable from the first iteration.
-    pub fn lipschitz(&self) -> f64 {
-        self.ensure_gram();
-        let gram = self.gram_over_b.borrow();
-        let gram = gram.as_ref().unwrap();
-        let p = gram.rows();
-        let mut v = Matrix::full(p, 1, 1.0 / (p as f64).sqrt());
-        let mut lambda = 0.0;
-        for _ in 0..60 {
-            let w = gram.matmul(&v);
-            let norm = w.norm();
-            if norm < 1e-300 {
-                return 0.0;
-            }
-            lambda = norm;
-            v = w.scaled(1.0 / norm);
-        }
-        lambda
     }
 
     fn ensure_gram(&self) {
@@ -142,19 +121,64 @@ impl Objective for LeastSquares {
         *self.prox_factor.borrow_mut() = Some((rho, f));
         sol
     }
+
+    /// Smoothness constant L = λ_max(OᵀO / b) (Assumption 2's Lipschitz
+    /// gradient constant), estimated by power iteration on the cached
+    /// Gram matrix. Used by the driver to auto-scale the τ-schedule so
+    /// that the inexact proximal step `1/(ρ + τ^k)` is stable from the
+    /// first iteration.
+    fn lipschitz(&self) -> f64 {
+        self.ensure_gram();
+        let gram = self.gram_over_b.borrow();
+        let gram = gram.as_ref().unwrap();
+        let p = gram.rows();
+        let mut v = Matrix::full(p, 1, 1.0 / (p as f64).sqrt());
+        let mut lambda = 0.0;
+        for _ in 0..60 {
+            let w = gram.matmul(&v);
+            let norm = w.norm();
+            if norm < 1e-300 {
+                return 0.0;
+            }
+            lambda = norm;
+            v = w.scaled(1.0 / norm);
+        }
+        lambda
+    }
+
+    /// The ECN hot path: route the row-block gradient through the
+    /// engine's fused least-squares kernel (native loops or the AOT
+    /// PJRT artifact) — exactly the computation of Alg. 1 step 17.
+    fn grad_rows_engine(
+        &self,
+        engine: &mut dyn Engine,
+        x: &Matrix,
+        lo: usize,
+        hi: usize,
+        out: &mut Matrix,
+    ) -> Result<()> {
+        engine.grad_batch_range(&self.data.inputs, &self.data.targets, lo, hi, x, out)
+    }
+
+    fn as_least_squares(&self) -> Option<&LeastSquares> {
+        Some(self)
+    }
 }
 
 /// Global optimum `x*` of (P-1): solves the normal equations of the
 /// *sum* objective `Σ_i f_i`, i.e. `(Σ OᵢᵀOᵢ/bᵢ) x = Σ OᵢᵀTᵢ/bᵢ`.
 /// A tiny ridge `lambda` keeps rank-deficient toy shards solvable.
-pub fn global_optimum(objectives: &[LeastSquares], lambda: f64) -> Result<Matrix> {
+/// Accepts owned or borrowed objectives (`&[LeastSquares]` or
+/// `&[&LeastSquares]`) — the reference-optimum dispatcher holds borrows.
+pub fn global_optimum<T: Borrow<LeastSquares>>(objectives: &[T], lambda: f64) -> Result<Matrix> {
     assert!(!objectives.is_empty());
-    let (p, d) = objectives[0].dims();
+    let (p, d) = objectives[0].borrow().dims();
     let mut gram = Matrix::zeros(p, p);
     let mut cross = Matrix::zeros(p, d);
     let mut tmp_g = Matrix::zeros(p, p);
     let mut tmp_c = Matrix::zeros(p, d);
     for obj in objectives {
+        let obj = obj.borrow();
         let b = obj.data().len() as f64;
         matmul_at_b(&obj.data().inputs, &obj.data().inputs, &mut tmp_g);
         tmp_g.scale(1.0 / b);

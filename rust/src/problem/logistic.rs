@@ -1,0 +1,268 @@
+//! L2-regularized binary logistic regression — the classification
+//! instantiation of (P-1) (ijcnn1 is a binary-classification dataset).
+//!
+//! Targets are binarized at construction: entry `t > 0.5 ↦ +1`, else
+//! `−1` — which maps the one-hot-style columns of the usps/ijcnn1
+//! stand-ins to per-column ±1 labels and thresholds regression targets
+//! into a planted two-class problem. Each of the `d` model columns is
+//! an independent binary problem:
+//!
+//! ```text
+//! f(x) = (1/b) Σ_j Σ_c log(1 + exp(−y_{jc} ⟨o_j, x_c⟩)) + λ/2 ‖x‖²
+//! ```
+//!
+//! The loss is (λ + λ_max(OᵀO/b)/4)-smooth; the mini-batch oracle
+//! carries the full regularizer in every batch so block means stay
+//! unbiased. The exact prox runs a few damped-Newton steps per column
+//! on the cached Cholesky machinery (see [`super::newton`]).
+
+use super::newton::newton_prox_column;
+use super::{data_spectral_bound, Objective};
+use crate::data::Split;
+use crate::linalg::Matrix;
+use std::cell::RefCell;
+
+/// One agent's logistic objective over its shard.
+pub struct LogisticRegression {
+    inputs: Matrix,
+    /// ±1 labels, one column per model column.
+    labels: Matrix,
+    lambda: f64,
+    /// Cached smoothness constant.
+    lips: RefCell<Option<f64>>,
+    /// Per-row coefficient scratch (d entries), reused across rounds so
+    /// the gradient hot loop allocates nothing after warm-up.
+    coef: RefCell<Vec<f64>>,
+}
+
+/// σ(−u) computed stably for any sign of `u`.
+fn sigmoid_neg(u: f64) -> f64 {
+    if u >= 0.0 {
+        let e = (-u).exp();
+        e / (1.0 + e)
+    } else {
+        1.0 / (1.0 + u.exp())
+    }
+}
+
+/// `log(1 + exp(−u))` computed stably for any sign of `u`.
+fn log1p_exp_neg(u: f64) -> f64 {
+    if u >= 0.0 {
+        (-u).exp().ln_1p()
+    } else {
+        -u + u.exp().ln_1p()
+    }
+}
+
+impl LogisticRegression {
+    /// Wrap an agent shard, binarizing targets at `t > 0.5`.
+    pub fn new(data: Split, lambda: f64) -> Self {
+        let (b, d) = data.targets.shape();
+        let mut labels = Matrix::zeros(b, d);
+        for j in 0..b {
+            for c in 0..d {
+                labels[(j, c)] = if data.targets[(j, c)] > 0.5 { 1.0 } else { -1.0 };
+            }
+        }
+        Self {
+            inputs: data.inputs,
+            labels,
+            lambda,
+            lips: RefCell::new(None),
+            coef: RefCell::new(vec![0.0; d]),
+        }
+    }
+
+    /// The regularization weight λ.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// The ±1 label matrix (tests).
+    pub fn labels(&self) -> &Matrix {
+        &self.labels
+    }
+}
+
+impl Objective for LogisticRegression {
+    fn dims(&self) -> (usize, usize) {
+        (self.inputs.cols(), self.labels.cols())
+    }
+
+    fn num_examples(&self) -> usize {
+        self.inputs.rows()
+    }
+
+    fn loss(&self, x: &Matrix) -> f64 {
+        let (p, d) = self.dims();
+        let b = self.num_examples();
+        let mut total = 0.0;
+        for j in 0..b {
+            let row = self.inputs.row(j);
+            for c in 0..d {
+                let mut m = 0.0;
+                for k in 0..p {
+                    m += row[k] * x[(k, c)];
+                }
+                total += log1p_exp_neg(self.labels[(j, c)] * m);
+            }
+        }
+        total / b as f64 + 0.5 * self.lambda * x.norm_sq()
+    }
+
+    fn grad(&self, x: &Matrix, out: &mut Matrix) {
+        self.grad_rows(x, 0, self.num_examples(), out);
+    }
+
+    /// `out = (1/rows) Σ_j o_j · cᵀ_j + λx` with `c_{jc} = −y σ(−y m)`.
+    fn grad_rows(&self, x: &Matrix, lo: usize, hi: usize, out: &mut Matrix) {
+        debug_assert!(lo < hi && hi <= self.num_examples());
+        let (p, d) = self.dims();
+        debug_assert_eq!(out.shape(), (p, d));
+        out.fill_zero();
+        let mut coef = self.coef.borrow_mut();
+        for j in lo..hi {
+            let row = self.inputs.row(j);
+            for c in 0..d {
+                let mut m = 0.0;
+                for k in 0..p {
+                    m += row[k] * x[(k, c)];
+                }
+                let y = self.labels[(j, c)];
+                coef[c] = -y * sigmoid_neg(y * m);
+            }
+            for k in 0..p {
+                let o_jk = row[k];
+                let orow = out.row_mut(k);
+                for c in 0..d {
+                    orow[c] += o_jk * coef[c];
+                }
+            }
+        }
+        out.scale(1.0 / (hi - lo) as f64);
+        out.add_scaled(self.lambda, x);
+    }
+
+    /// Damped Newton per column: the logistic curvature ℓ″(m) =
+    /// σ(u)(1 − σ(u)) with u = y·m is label-sign symmetric.
+    fn prox_exact(&self, z: &Matrix, y: &Matrix, rho: f64) -> Matrix {
+        let (p, d) = self.dims();
+        let b = self.num_examples();
+        let mut out = Matrix::zeros(p, d);
+        for c in 0..d {
+            let ys: Vec<f64> = (0..b).map(|j| self.labels[(j, c)]).collect();
+            let zc: Vec<f64> = (0..p).map(|k| z[(k, c)]).collect();
+            let uc: Vec<f64> = (0..p).map(|k| y[(k, c)]).collect();
+            let v = newton_prox_column(
+                &self.inputs,
+                &ys,
+                &|m, yy| {
+                    let u = yy * m;
+                    let s_neg = sigmoid_neg(u);
+                    (log1p_exp_neg(u), -yy * s_neg, s_neg * (1.0 - s_neg))
+                },
+                self.lambda,
+                rho,
+                &zc,
+                &uc,
+                zc.clone(),
+            );
+            for k in 0..p {
+                out[(k, c)] = v[k];
+            }
+        }
+        out
+    }
+
+    fn lipschitz(&self) -> f64 {
+        if let Some(l) = *self.lips.borrow() {
+            return l;
+        }
+        let l = data_spectral_bound(&self.inputs) / 4.0 + self.lambda;
+        *self.lips.borrow_mut() = Some(l);
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    fn toy(b: usize, p: usize, d: usize, seed: u64) -> LogisticRegression {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let inputs =
+            Matrix::from_vec(b, p, (0..b * p).map(|_| rng.normal()).collect()).unwrap();
+        let targets =
+            Matrix::from_vec(b, d, (0..b * d).map(|_| 0.5 + rng.normal()).collect()).unwrap();
+        LogisticRegression::new(Split { inputs, targets }, 1e-2)
+    }
+
+    #[test]
+    fn labels_are_plus_minus_one() {
+        let obj = toy(50, 4, 2, 81);
+        assert!(obj.labels().as_slice().iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn loss_at_zero_is_log_two_plus_reg() {
+        let obj = toy(40, 3, 2, 82);
+        let x = Matrix::zeros(3, 2);
+        // Each of the d=2 label columns contributes ln 2 at x = 0.
+        assert!((obj.loss(&x) - 2.0 * std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let obj = toy(60, 3, 2, 83);
+        let mut rng = Xoshiro256pp::seed_from_u64(84);
+        let (p, d) = obj.dims();
+        let x = Matrix::from_vec(p, d, (0..p * d).map(|_| rng.normal()).collect()).unwrap();
+        let mut g = Matrix::zeros(p, d);
+        obj.grad(&x, &mut g);
+        let eps = 1e-6;
+        for i in 0..p {
+            for j in 0..d {
+                let mut xp = x.clone();
+                xp[(i, j)] += eps;
+                let mut xm = x.clone();
+                xm[(i, j)] -= eps;
+                let fd = (obj.loss(&xp) - obj.loss(&xm)) / (2.0 * eps);
+                assert!((fd - g[(i, j)]).abs() < 1e-6, "({i},{j}): {fd} vs {}", g[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn prox_satisfies_optimality() {
+        let obj = toy(80, 3, 1, 85);
+        let (p, d) = obj.dims();
+        let z = Matrix::full(p, d, 0.4);
+        let y = Matrix::full(p, d, -0.1);
+        let rho = 1.1;
+        let v = obj.prox_exact(&z, &y, rho);
+        let mut g = Matrix::zeros(p, d);
+        obj.grad(&v, &mut g);
+        let mut kkt = g;
+        kkt.add_scaled(rho, &v);
+        kkt.add_scaled(-rho, &z);
+        kkt -= &y;
+        assert!(kkt.max_abs() < 1e-8, "KKT residual {}", kkt.max_abs());
+    }
+
+    #[test]
+    fn block_gradients_average_to_full() {
+        let obj = toy(60, 4, 1, 86);
+        let (p, d) = obj.dims();
+        let x = Matrix::full(p, d, 0.2);
+        let mut full = Matrix::zeros(p, d);
+        obj.grad(&x, &mut full);
+        let mut acc = Matrix::zeros(p, d);
+        let mut part = Matrix::zeros(p, d);
+        for b in 0..3 {
+            obj.grad_rows(&x, b * 20, (b + 1) * 20, &mut part);
+            acc.add_scaled(1.0 / 3.0, &part);
+        }
+        assert!(acc.max_abs_diff(&full) < 1e-12);
+    }
+}

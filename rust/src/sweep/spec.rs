@@ -7,6 +7,7 @@ use crate::config::ConfigDoc;
 use crate::coordinator::{Algorithm, RunConfig};
 use crate::data::DatasetName;
 use crate::error::{Error, Result};
+use crate::problem::ObjectiveKind;
 
 /// A cartesian grid over experiment axes.
 ///
@@ -15,13 +16,17 @@ use crate::error::{Error, Result};
 /// `seeds` axis is special: jobs that differ only in seed belong to the
 /// same *cell* and are aggregated by [`crate::sweep::SweepSummary`].
 ///
-/// Expansion order is fixed (algo → S → ε → M → ρ → quantize-bits →
-/// seed, seeds innermost), so job and cell ids are stable across
-/// processes and independent of how many workers execute the grid.
+/// Expansion order is fixed (objective → algo → S → ε → M → ρ →
+/// quantize-bits → seed, seeds innermost), so job and cell ids are
+/// stable across processes and independent of how many workers execute
+/// the grid.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
     /// Template config; axis values override its fields per job.
     pub base: RunConfig,
+    /// Objective axis — the loss zoo (`ls`, `logistic`, `huber`,
+    /// `enet`).
+    pub objectives: Vec<ObjectiveKind>,
     /// Algorithm axis (includes the coding scheme for csI-ADMM).
     pub algos: Vec<Algorithm>,
     /// Tolerated-straggler axis S.
@@ -42,6 +47,7 @@ impl SweepSpec {
     /// Grid with every axis pinned to the base config's value.
     pub fn new(base: RunConfig) -> Self {
         Self {
+            objectives: vec![base.objective],
             algos: vec![base.algo],
             s_values: vec![base.s_tolerated],
             epsilons: vec![base.response.straggler_delay],
@@ -51,6 +57,12 @@ impl SweepSpec {
             seeds: vec![base.seed],
             base,
         }
+    }
+
+    /// Set the objective axis (the loss zoo).
+    pub fn objectives(mut self, v: Vec<ObjectiveKind>) -> Self {
+        self.objectives = v;
+        self
     }
 
     /// Set the algorithm axis.
@@ -97,7 +109,8 @@ impl SweepSpec {
 
     /// Number of cells (all axes except seeds).
     pub fn num_cells(&self) -> usize {
-        self.algos.len()
+        self.objectives.len()
+            * self.algos.len()
             * self.s_values.len()
             * self.epsilons.len()
             * self.minibatches.len()
@@ -117,31 +130,35 @@ impl SweepSpec {
         }
         let mut jobs = Vec::with_capacity(self.num_jobs());
         let mut cell_id = 0usize;
-        for &algo in &self.algos {
-            for &s in &self.s_values {
-                for &eps in &self.epsilons {
-                    for &m in &self.minibatches {
-                        for &rho in &self.rhos {
-                            for &bits in &self.quantize_bits {
-                                let label = self.cell_label(algo, s, eps, m, rho, bits);
-                                for (seed_index, &seed) in self.seeds.iter().enumerate() {
-                                    let mut cfg = self.base.clone();
-                                    cfg.algo = algo;
-                                    cfg.s_tolerated = s;
-                                    cfg.response.straggler_delay = eps;
-                                    cfg.minibatch = m;
-                                    cfg.rho = rho;
-                                    cfg.quantize_bits = bits;
-                                    cfg.seed = seed;
-                                    jobs.push(SweepJob {
-                                        job_id: jobs.len(),
-                                        cell_id,
-                                        seed_index,
-                                        label: label.clone(),
-                                        cfg,
-                                    });
+        for &objective in &self.objectives {
+            for &algo in &self.algos {
+                for &s in &self.s_values {
+                    for &eps in &self.epsilons {
+                        for &m in &self.minibatches {
+                            for &rho in &self.rhos {
+                                for &bits in &self.quantize_bits {
+                                    let label =
+                                        self.cell_label(objective, algo, s, eps, m, rho, bits);
+                                    for (seed_index, &seed) in self.seeds.iter().enumerate() {
+                                        let mut cfg = self.base.clone();
+                                        cfg.objective = objective;
+                                        cfg.algo = algo;
+                                        cfg.s_tolerated = s;
+                                        cfg.response.straggler_delay = eps;
+                                        cfg.minibatch = m;
+                                        cfg.rho = rho;
+                                        cfg.quantize_bits = bits;
+                                        cfg.seed = seed;
+                                        jobs.push(SweepJob {
+                                            job_id: jobs.len(),
+                                            cell_id,
+                                            seed_index,
+                                            label: label.clone(),
+                                            cfg,
+                                        });
+                                    }
+                                    cell_id += 1;
                                 }
-                                cell_id += 1;
                             }
                         }
                     }
@@ -154,8 +171,10 @@ impl SweepSpec {
     /// Cell label: the algorithm name plus a `key=value` suffix for each
     /// axis that actually varies (single-value axes stay out of the
     /// label, so `M ∈ {4,16,48}` sweeps read "sI-ADMM M=4" …).
+    #[allow(clippy::too_many_arguments)]
     fn cell_label(
         &self,
+        objective: ObjectiveKind,
         algo: Algorithm,
         s: usize,
         eps: f64,
@@ -164,6 +183,9 @@ impl SweepSpec {
         bits: Option<u32>,
     ) -> String {
         let mut label = algo.label();
+        if self.objectives.len() > 1 {
+            label.push_str(&format!(" obj={}", objective.as_str()));
+        }
         if self.s_values.len() > 1 {
             label.push_str(&format!(" S={s}"));
         }
@@ -197,6 +219,7 @@ impl SweepSpec {
     /// max_iters = 1000
     ///
     /// [sweep]
+    /// objective = ls, logistic, huber, enet   # the loss zoo axis
     /// algos = siadmm, csiadmm-cyclic   # iadmm|siadmm|wadmm|csiadmm[-<scheme>]
     /// s = 1                            # tolerated stragglers
     /// eps = 1e-3, 5e-3                 # straggler delay ε
@@ -205,10 +228,26 @@ impl SweepSpec {
     /// quantize_bits = none, 16         # token quantization ('none' = exact)
     /// seeds = 1, 2, 3                  # or: num_seeds = 3 (derived from base seed)
     /// ```
+    ///
+    /// Objective hyper-parameters come from the `[objective]` section
+    /// (see [`crate::config::apply_objective_params`]) and apply to
+    /// every entry of the objective axis.
     pub fn from_doc(doc: &ConfigDoc) -> Result<(SweepSpec, DatasetName)> {
         let (base, dataset) = crate::config::run_config_from_doc(doc)?;
         let mut spec = SweepSpec::new(base);
         let sec = "sweep";
+        if let Some(tokens) = doc.get_list(sec, "objective") {
+            spec.objectives = tokens
+                .iter()
+                .map(|t| {
+                    ObjectiveKind::parse(t)
+                        .map(|k| crate::config::apply_objective_params(k, doc))
+                        .ok_or_else(|| {
+                            Error::Config(format!("sweep.objective: unknown objective '{t}'"))
+                        })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
         if let Some(tokens) = doc.get_list(sec, "algos") {
             spec.algos =
                 tokens.iter().map(|t| parse_algo(t)).collect::<Result<Vec<_>>>()?;
@@ -363,10 +402,42 @@ mod tests {
         .unwrap();
         let (spec, ds) = SweepSpec::from_doc(&doc).unwrap();
         assert_eq!(ds, DatasetName::Synthetic);
+        assert_eq!(spec.objectives, vec![ObjectiveKind::LeastSquares]);
         assert_eq!(spec.algos.len(), 2);
         assert_eq!(spec.epsilons, vec![1e-3, 5e-3]);
         assert_eq!(spec.minibatches, vec![16, 32]);
         assert_eq!(spec.seeds, vec![9, 10, 11]);
         assert_eq!(spec.num_jobs(), 2 * 2 * 2 * 3);
+    }
+
+    #[test]
+    fn objective_axis_expands_outermost_with_labels() {
+        let spec = SweepSpec::new(RunConfig::default())
+            .objectives(vec![
+                ObjectiveKind::LeastSquares,
+                ObjectiveKind::Logistic { lambda: 1e-2 },
+            ])
+            .seeds(vec![1, 2]);
+        assert_eq!(spec.num_cells(), 2);
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs[0].cfg.objective, ObjectiveKind::LeastSquares);
+        assert_eq!(jobs[2].cfg.objective, ObjectiveKind::Logistic { lambda: 1e-2 });
+        assert_eq!(jobs[0].label, "sI-ADMM obj=ls");
+        assert_eq!(jobs[2].label, "sI-ADMM obj=logistic");
+    }
+
+    #[test]
+    fn from_doc_reads_objective_axis_with_params() {
+        let doc = ConfigDoc::parse(
+            "[run]\nk_ecn = 2\n\n[sweep]\nobjective = ls, logistic, huber, enet\n\n[objective]\nlambda = 0.5\ndelta = 2.0\n",
+        )
+        .unwrap();
+        let (spec, _) = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.objectives.len(), 4);
+        assert_eq!(spec.objectives[1], ObjectiveKind::Logistic { lambda: 0.5 });
+        assert_eq!(spec.objectives[2], ObjectiveKind::Huber { delta: 2.0 });
+        let bad = ConfigDoc::parse("[sweep]\nobjective = nope\n").unwrap();
+        assert!(SweepSpec::from_doc(&bad).is_err());
     }
 }

@@ -1,0 +1,67 @@
+//! Property tests over the gradient-coding schemes: every
+//! [`SchemeKind`] must recover the exact partition-gradient sum across
+//! random (K, S) grids — on random R-subsets *and* on every straggler
+//! subset of size ≤ S (exhaustive complement enumeration), not just the
+//! fixed experiment configurations.
+//!
+//! Root seed is overridable via `CSADMM_PROP_SEED` (the CI matrix runs
+//! three distinct values).
+
+use csadmm::coding::test_support::{
+    check_recovers_all_straggler_subsets, check_recovers_sum,
+};
+use csadmm::coding::{CyclicRepetition, FractionalRepetition, GradientCode, SchemeKind, Uncoded};
+use csadmm::rng::Rng;
+use csadmm::util::prop::property;
+
+#[test]
+fn uncoded_recovers_for_random_k() {
+    property("uncoded recovers the partition sum for random K", 24, |rng| {
+        let k = 1 + rng.below(8) as usize;
+        let code = Uncoded::new(k).unwrap();
+        check_recovers_sum(&code, rng);
+        check_recovers_all_straggler_subsets(&code, rng);
+    });
+}
+
+#[test]
+fn fractional_recovers_across_random_grids() {
+    property("fractional recovers on random (K,S) grids", 24, |rng| {
+        let group = 1 + rng.below(3) as usize; // S+1 ∈ {1, 2, 3}
+        let groups = 1 + rng.below(3) as usize; // 1..=3 groups
+        let k = group * groups;
+        let s = group - 1;
+        let code = FractionalRepetition::new(k, s).unwrap();
+        assert_eq!(code.r(), k - s);
+        check_recovers_sum(&code, rng);
+        check_recovers_all_straggler_subsets(&code, rng);
+    });
+}
+
+#[test]
+fn cyclic_recovers_across_random_grids() {
+    property("cyclic recovers on random (K,S) grids", 16, |rng| {
+        let k = 2 + rng.below(6) as usize; // 2..=7
+        let s = rng.below(k.min(3) as u64) as usize; // 0..min(K,3)
+        let code = CyclicRepetition::new(k, s, rng.next_u64()).unwrap();
+        assert_eq!(code.r(), k - s);
+        check_recovers_sum(&code, rng);
+        check_recovers_all_straggler_subsets(&code, rng);
+    });
+}
+
+#[test]
+fn scheme_kind_build_survives_every_straggler_subset() {
+    property("SchemeKind::build codes survive all straggler subsets", 12, |rng| {
+        let group = 1 + rng.below(2) as usize; // S+1 ∈ {1, 2}
+        let groups = 1 + rng.below(3) as usize;
+        let k = group * groups;
+        let s = group - 1;
+        for kind in [SchemeKind::Uncoded, SchemeKind::Fractional, SchemeKind::Cyclic] {
+            // The uncoded baseline is S = 0 by construction.
+            let s_kind = if kind == SchemeKind::Uncoded { 0 } else { s };
+            let code = kind.build(k, s_kind, rng.next_u64()).unwrap();
+            check_recovers_all_straggler_subsets(code.as_ref(), rng);
+        }
+    });
+}

@@ -23,12 +23,12 @@ fn more_stragglers_than_tolerated_still_decodes_correctly() {
     };
     let code = Box::new(CyclicRepetition::new(4, 1, 3).unwrap());
     let mut pool =
-        EcnPool::new(0, ds.train.clone(), code, 8, resp, Xoshiro256pp::seed_from_u64(41)).unwrap();
+        EcnPool::least_squares(0, ds.train.clone(), code, 8, resp, Xoshiro256pp::seed_from_u64(41)).unwrap();
     let mut eng = NativeEngine::new();
     let x = Matrix::full(3, 1, 0.1);
 
     // Reference gradient from an all-fast uncoded pool over the same data.
-    let mut ref_pool = EcnPool::new(
+    let mut ref_pool = EcnPool::least_squares(
         0,
         ds.train.clone(),
         Box::new(Uncoded::new(4).unwrap()),
@@ -65,7 +65,7 @@ fn exactly_s_stragglers_never_block_cyclic() {
     };
     let code = Box::new(CyclicRepetition::new(6, 2, 9).unwrap());
     let mut pool =
-        EcnPool::new(0, ds.train, code, 4, resp, Xoshiro256pp::seed_from_u64(43)).unwrap();
+        EcnPool::least_squares(0, ds.train, code, 4, resp, Xoshiro256pp::seed_from_u64(43)).unwrap();
     let mut eng = NativeEngine::new();
     let x = Matrix::zeros(3, 1);
     for cycle in 0..25 {

@@ -1,0 +1,74 @@
+//! Golden-trace regression: a tiny least-squares `Driver::run` (fixed
+//! grid, fixed seeds, native engine) must serialize to *byte-identical*
+//! JSON run over run — and match the blessed trace committed under
+//! `rust/tests/golden/`, so refactors (like the objective-generic
+//! driver) provably do not perturb the least-squares numerics.
+//!
+//! Blessing protocol: if the golden file is absent the test writes it
+//! and passes (first run on a fresh machine / CI cache); any later
+//! numeric drift fails the comparison. To intentionally re-bless after
+//! a justified numeric change, delete the file and re-run the test.
+
+use csadmm::coordinator::{Driver, RunConfig};
+use csadmm::data::synthetic_small;
+use csadmm::runtime::NativeEngine;
+use std::path::Path;
+
+const GOLDEN_PATH: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/least_squares_trace.json");
+
+fn golden_cfg() -> RunConfig {
+    RunConfig {
+        n_agents: 4,
+        k_ecn: 2,
+        minibatch: 8,
+        rho: 0.3,
+        max_iters: 240,
+        eval_every: 40,
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+fn render_trace() -> String {
+    let ds = synthetic_small(400, 40, 0.1, 77);
+    let mut driver = Driver::new(golden_cfg(), &ds).expect("golden driver builds");
+    let trace = driver.run(&mut NativeEngine::new()).expect("golden run succeeds");
+    trace.to_json().to_string()
+}
+
+#[test]
+fn least_squares_trace_is_byte_identical_to_golden() {
+    let a = render_trace();
+    let b = render_trace();
+    assert_eq!(a, b, "Driver::run must be bitwise deterministic");
+
+    let path = Path::new(GOLDEN_PATH);
+    if path.exists() {
+        let want = std::fs::read_to_string(path).expect("golden file readable");
+        assert_eq!(
+            a,
+            want.trim_end(),
+            "least-squares numerics drifted from the blessed golden trace at {GOLDEN_PATH}; \
+             if the change is intentional, delete the file and re-run to re-bless"
+        );
+    } else {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("golden dir creatable");
+        std::fs::write(path, &a).expect("golden file writable");
+        eprintln!("blessed new golden trace at {GOLDEN_PATH}");
+    }
+}
+
+/// The golden config sanity-checks itself: evaluation points land where
+/// `eval_every` says, and the trace improves from its first point (a
+/// drifting generator or schedule would silently invalidate the golden
+/// comparison's meaning, not just its bytes).
+#[test]
+fn golden_config_produces_a_sane_trace() {
+    let ds = synthetic_small(400, 40, 0.1, 77);
+    let mut driver = Driver::new(golden_cfg(), &ds).unwrap();
+    let trace = driver.run(&mut NativeEngine::new()).unwrap();
+    let iters: Vec<usize> = trace.points.iter().map(|p| p.iter).collect();
+    assert_eq!(iters, vec![1, 40, 80, 120, 160, 200, 240]);
+    assert!(trace.final_accuracy() < trace.points[0].accuracy);
+}

@@ -1,0 +1,208 @@
+//! Property tests over the objective zoo: for every [`ObjectiveKind`],
+//! the mini-batch stochastic gradient is unbiased (the mean over all
+//! size-M̄ batches equals the full gradient — Assumption 3), the
+//! analytic gradient matches a central finite difference, and the exact
+//! prox satisfies first-order optimality. Plus the end-to-end check the
+//! tentpole promises: a `csadmm sweep` grid over
+//! `objective = ls, logistic, huber, enet` runs and every csI-ADMM
+//! trace trends toward its per-objective reference optimum.
+//!
+//! Root seed is overridable via `CSADMM_PROP_SEED` (the CI matrix runs
+//! three distinct values).
+
+use csadmm::coding::SchemeKind;
+use csadmm::coordinator::{Algorithm, RunConfig};
+use csadmm::data::{synthetic_small, Split};
+use csadmm::linalg::Matrix;
+use csadmm::problem::{Objective, ObjectiveKind};
+use csadmm::rng::{Rng, Xoshiro256pp};
+use csadmm::runtime::NativeEngineFactory;
+use csadmm::sweep::{run_sweep, SweepSpec};
+use csadmm::util::prop::property;
+
+const ZOO: [ObjectiveKind; 4] = [
+    ObjectiveKind::LeastSquares,
+    ObjectiveKind::Logistic { lambda: 1e-2 },
+    ObjectiveKind::Huber { delta: 1.0 },
+    ObjectiveKind::ElasticNet { l1: 1e-3, l2: 1e-2 },
+];
+
+/// Random shard: standard-normal inputs; targets offset by 0.5 so the
+/// logistic binarization (`t > 0.5`) sees both label signs.
+fn random_split(rng: &mut Xoshiro256pp, n: usize, p: usize, d: usize) -> Split {
+    let inputs =
+        Matrix::from_vec(n, p, (0..n * p).map(|_| rng.normal()).collect()).unwrap();
+    let targets =
+        Matrix::from_vec(n, d, (0..n * d).map(|_| 0.5 + rng.normal()).collect()).unwrap();
+    Split { inputs, targets }
+}
+
+/// Random model point with every entry bounded away from zero (|x| ≥
+/// 0.3), so central differences never cross the elastic-net ℓ1 kink.
+fn random_x(rng: &mut Xoshiro256pp, p: usize, d: usize) -> Matrix {
+    Matrix::from_vec(
+        p,
+        d,
+        (0..p * d)
+            .map(|_| {
+                let v: f64 = rng.normal();
+                v + 0.3 * v.signum()
+            })
+            .collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn minibatch_gradient_is_unbiased_for_every_objective() {
+    property("mean over all size-M batches equals the full gradient", 24, |rng| {
+        let batches = 2 + rng.below(4) as usize;
+        let m = 1 + rng.below(5) as usize;
+        let n = batches * m;
+        let p = 1 + rng.below(4) as usize;
+        let d = 1 + rng.below(3) as usize;
+        let split = random_split(rng, n, p, d);
+        let x = random_x(rng, p, d);
+        for kind in ZOO {
+            let obj = kind.build(split.clone());
+            let mut full = Matrix::zeros(p, d);
+            obj.grad(&x, &mut full);
+            let mut mean = Matrix::zeros(p, d);
+            let mut part = Matrix::zeros(p, d);
+            for b in 0..batches {
+                obj.grad_rows(&x, b * m, (b + 1) * m, &mut part);
+                mean.add_scaled(1.0 / batches as f64, &part);
+            }
+            let tol = 1e-9 * (1.0 + full.max_abs());
+            assert!(
+                mean.max_abs_diff(&full) < tol,
+                "{}: batch-mean bias {} (n={n}, M={m})",
+                kind.as_str(),
+                mean.max_abs_diff(&full)
+            );
+        }
+    });
+}
+
+#[test]
+fn analytic_gradient_matches_central_finite_difference() {
+    property("analytic gradient matches a central finite difference", 12, |rng| {
+        let n = 20 + rng.below(30) as usize;
+        let p = 1 + rng.below(3) as usize;
+        let d = 1 + rng.below(2) as usize;
+        let split = random_split(rng, n, p, d);
+        let x = random_x(rng, p, d);
+        let eps = 1e-6;
+        for kind in ZOO {
+            let obj = kind.build(split.clone());
+            let mut g = Matrix::zeros(p, d);
+            obj.grad(&x, &mut g);
+            for i in 0..p {
+                for j in 0..d {
+                    let mut xp = x.clone();
+                    xp[(i, j)] += eps;
+                    let mut xm = x.clone();
+                    xm[(i, j)] -= eps;
+                    let fd = (obj.loss(&xp) - obj.loss(&xm)) / (2.0 * eps);
+                    let tol = 1e-6 * (1.0 + g[(i, j)].abs());
+                    assert!(
+                        (fd - g[(i, j)]).abs() < tol,
+                        "{} at ({i},{j}): fd {fd} vs analytic {}",
+                        kind.as_str(),
+                        g[(i, j)]
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prox_exact_satisfies_first_order_optimality() {
+    property("prox_exact minimizes f(v) + rho/2 ||z - v + y/rho||^2", 10, |rng| {
+        let n = 30 + rng.below(30) as usize;
+        let p = 1 + rng.below(3) as usize;
+        let d = 1 + rng.below(2) as usize;
+        let split = random_split(rng, n, p, d);
+        let rho = 0.5 + rng.next_f64();
+        let z = random_x(rng, p, d);
+        let y = random_x(rng, p, d).scaled(0.3);
+        for kind in ZOO {
+            let obj = kind.build(split.clone());
+            let v = obj.prox_exact(&z, &y, rho);
+            match kind {
+                ObjectiveKind::ElasticNet { l1, .. } => {
+                    // ℓ1 subgradient optimality:
+                    // 0 ∈ ∇smooth(v) + ρ(v − z) − y + l1·∂‖v‖₁.
+                    let mut r = Matrix::zeros(p, d);
+                    obj.smooth_grad(&v, &mut r);
+                    r.add_scaled(rho, &v);
+                    r.add_scaled(-rho, &z);
+                    r -= &y;
+                    for (rv, &vv) in r.as_slice().iter().zip(v.as_slice()) {
+                        if vv > 0.0 {
+                            assert!((rv + l1).abs() < 1e-6, "enet +: {rv}");
+                        } else if vv < 0.0 {
+                            assert!((rv - l1).abs() < 1e-6, "enet -: {rv}");
+                        } else {
+                            assert!(rv.abs() <= l1 + 1e-6, "enet 0: {rv}");
+                        }
+                    }
+                }
+                _ => {
+                    // Smooth KKT: ∇f(v) + ρ(v − z) − y = 0.
+                    let mut kkt = Matrix::zeros(p, d);
+                    obj.grad(&v, &mut kkt);
+                    kkt.add_scaled(rho, &v);
+                    kkt.add_scaled(-rho, &z);
+                    kkt -= &y;
+                    assert!(
+                        kkt.max_abs() < 1e-6,
+                        "{}: KKT residual {}",
+                        kind.as_str(),
+                        kkt.max_abs()
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// The acceptance-criterion grid: `objective = ls logistic huber enet`
+/// under csI-ADMM. Every trace must trend toward its own
+/// `reference_optimum()` — below the initial relative error, and with a
+/// decreasing first-half → second-half mean.
+#[test]
+fn sweep_runs_the_objective_zoo_grid_and_converges() {
+    let ds = synthetic_small(600, 60, 0.1, 13);
+    let spec = SweepSpec::new(RunConfig {
+        algo: Algorithm::CsIAdmm(SchemeKind::Cyclic),
+        n_agents: 5,
+        k_ecn: 2,
+        s_tolerated: 1,
+        minibatch: 16,
+        rho: 0.3,
+        max_iters: 600,
+        eval_every: 40,
+        seed: 3,
+        ..Default::default()
+    })
+    .objectives(ZOO.to_vec());
+    let result = run_sweep(&spec, &ds, 2, &NativeEngineFactory).unwrap();
+    assert_eq!(result.jobs.len(), 4);
+    for j in &result.jobs {
+        let pts = &j.trace.points;
+        let first = pts.first().unwrap().accuracy;
+        let last = j.trace.final_accuracy();
+        assert!(last < first, "{}: {last} !< {first}", j.job.label);
+        let mid = pts.len() / 2;
+        let mean = |s: &[csadmm::metrics::TracePoint]| {
+            s.iter().map(|point| point.accuracy).sum::<f64>() / s.len() as f64
+        };
+        assert!(
+            mean(&pts[mid..]) < mean(&pts[..mid]),
+            "{}: accuracy must trend down across the run",
+            j.job.label
+        );
+    }
+}
