@@ -1,0 +1,23 @@
+//! Full-scale Fig. 6: wall-clock time-to-ε for coded vs uncoded
+//! sI-ADMM across the latency-regime zoo (plus the fail-stop scenario).
+//!
+//! Run with `cargo bench --bench fig6_walltime`.
+
+use csadmm::experiments::fig6;
+use csadmm::runtime::NativeEngineFactory;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let comparisons = fig6::run(false, &NativeEngineFactory).expect("fig6 runs");
+    for c in &comparisons {
+        println!(
+            "{:12} eps={:.3}  uncoded {:.4}s  coded {:.4}s  speedup {:.2}x",
+            c.regime.as_str(),
+            c.epsilon,
+            c.uncoded_time,
+            c.coded_time,
+            c.uncoded_time / c.coded_time
+        );
+    }
+    println!("fig6 bench completed in {:.2?}", t0.elapsed());
+}

@@ -6,7 +6,7 @@
 //! * [`ConsensusState`] — per-agent `(x_i, y_i)` plus the token's global
 //!   `z`, with the I-ADMM conservation invariant
 //!   `N·z = Σ_i (x_i − y_i/ρ)` checked in tests.
-//! * [`iadmm`] — exact incremental ADMM (Eqs. 4a–4c), the [34]
+//! * [`iadmm_step`] — exact incremental ADMM (Eqs. 4a–4c), the \[34\]
 //!   baseline whose x-update solves the full proximal subproblem.
 //! * The stochastic inexact update (Eqs. 5a/5b/4c) itself lives in
 //!   [`crate::runtime::native_admm_step`] so the AOT artifact and the

@@ -16,15 +16,18 @@ pub const USAGE: &str = "\
 usage: csadmm <command> [--quick] [--pjrt] [--artifacts <dir>]
 
 commands:
-  run [--config <file>] [--seed N] [--objective <obj>]
+  run [--config <file>] [--seed N] [--objective <obj>] [--latency <lat>]
                                    one experiment from a config file
                                    (default: examples/configs/quickstart.toml,
                                    resolved relative to the working dir)
   table1                           Table I dataset inventory
   fig3-minibatch | fig3-baselines | fig3-stragglers | fig3-spc
   fig4 | fig5 | rate-check         figure/rate reproductions
+  fig6                             wall-clock time-to-eps per latency
+                                   regime (coded vs uncoded across the
+                                   straggler zoo + fail-stop scenario)
   sweep [--config <file>] [--workers N] [--out <file>]
-        [--objective <obj>[,<obj>...]]
+        [--objective <obj>[,<obj>...]] [--latency <lat>[,<lat>...]]
                                    parallel parameter grid: expands the
                                    [sweep] section of the config (or a
                                    built-in 24-job demo grid) and runs it
@@ -33,10 +36,14 @@ commands:
                                    --out (default results/sweep.json) and
                                    is byte-identical for any worker count.
                                    --objective overrides the loss-zoo
-                                   axis, e.g. --objective ls,logistic
+                                   axis, e.g. --objective ls,logistic;
+                                   --latency overrides the straggler-zoo
+                                   axis, e.g. --latency uniform,pareto
   all                              every experiment above
 
-objectives (<obj>): ls (least squares, Eq. 24) | logistic | huber | enet";
+objectives (<obj>): ls (least squares, Eq. 24) | logistic | huber | enet
+latency regimes (<lat>): uniform (paper baseline) | shifted-exp | pareto
+                         | slownode | bimodal   (params via [latency])";
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]

@@ -28,6 +28,7 @@ use crate::data::DatasetName;
 use crate::ecn::ResponseModel;
 use crate::error::{Error, Result};
 use crate::graph::TraversalKind;
+use crate::latency::{ClockSpec, FaultSpec, LatencyKind, LatencySpec};
 use crate::problem::ObjectiveKind;
 
 /// Apply the optional `[objective]` hyper-parameter section to a parsed
@@ -58,6 +59,122 @@ pub fn apply_objective_params(kind: ObjectiveKind, doc: &ConfigDoc) -> Objective
             l2: doc.get_num(sec, "l2").unwrap_or(l2),
         },
         ls => ls,
+    }
+}
+
+/// Apply the optional `[latency]` parameter keys to a parsed latency
+/// kind (the regime selected by `[latency] kind = …`, `--latency` or a
+/// `[sweep] latency = …` axis):
+///
+/// ```text
+/// [latency]
+/// kind = pareto       # uniform|shifted-exp|pareto|slownode|bimodal
+/// shift = 5e-5        # shifted-exp: constant floor (s)
+/// mean = 5e-5         # shifted-exp: exponential tail mean (s)
+/// scale = 2e-5        # pareto: tail scale (s)
+/// alpha = 1.3         # pareto: tail index (smaller = heavier)
+/// n_slow = 1          # slownode: slow ECNs per pool
+/// factor = 20         # slownode: slowdown multiplier
+/// p_slow = 0.1        # bimodal: probability a response straggles
+/// slow_delay = 1e-3   # bimodal: extra delay of a slow response (s)
+/// ```
+///
+/// Keys that don't apply to the kind are ignored, so one section can
+/// parameterize a whole `latency = uniform, pareto, slownode` sweep
+/// axis (mirroring [`apply_objective_params`]).
+pub fn apply_latency_params(kind: LatencyKind, doc: &ConfigDoc) -> LatencyKind {
+    let sec = "latency";
+    match kind {
+        LatencyKind::ShiftedExp { shift, mean } => LatencyKind::ShiftedExp {
+            shift: doc.get_num(sec, "shift").unwrap_or(shift),
+            mean: doc.get_num(sec, "mean").unwrap_or(mean),
+        },
+        LatencyKind::Pareto { scale, alpha } => LatencyKind::Pareto {
+            scale: doc.get_num(sec, "scale").unwrap_or(scale),
+            alpha: doc.get_num(sec, "alpha").unwrap_or(alpha),
+        },
+        LatencyKind::SlowNode { n_slow, factor } => LatencyKind::SlowNode {
+            n_slow: doc.get_num(sec, "n_slow").map_or(n_slow, |v| v as usize),
+            factor: doc.get_num(sec, "factor").unwrap_or(factor),
+        },
+        LatencyKind::Bimodal { p_slow, slow_delay } => LatencyKind::Bimodal {
+            p_slow: doc.get_num(sec, "p_slow").unwrap_or(p_slow),
+            slow_delay: doc.get_num(sec, "slow_delay").unwrap_or(slow_delay),
+        },
+        LatencyKind::Uniform => LatencyKind::Uniform,
+    }
+}
+
+/// Parse the full `[latency]` scenario: the regime kind (see
+/// [`apply_latency_params`] for the per-kind keys), the decode
+/// deadline, per-ECN clock heterogeneity and a fail-stop fault:
+///
+/// ```text
+/// [latency]
+/// kind = slownode
+/// deadline = 5e-4       # per-round decode deadline (s)
+/// rates = 1.0, 1.5      # per-ECN service-TIME multipliers (2.0 = half
+///                       # speed), cycled over the K ECNs
+/// drift_ppm = 0, 200    # per-ECN clock drift (ppm), cycled
+/// skews = 0, 1e-5       # per-ECN constant skew (s), cycled
+/// fail_ecn = 0          # fail-stop: ECN index that dies
+/// fail_at = 0.01        # … at this simulated time (s)
+/// recover_at = 0.05     # … optionally recovering here (s)
+/// fail_agent = 2        # … at this agent only (default: every agent)
+/// ```
+pub fn latency_spec_from_doc(doc: &ConfigDoc) -> Result<LatencySpec> {
+    let sec = "latency";
+    let mut spec = LatencySpec::default();
+    if let Some(tok) = doc.get_str(sec, "kind") {
+        let kind = LatencyKind::parse(&tok)
+            .ok_or_else(|| Error::Config(format!("unknown latency kind '{tok}'")))?;
+        spec.kind = apply_latency_params(kind, doc);
+    }
+    if let Some(d) = doc.get_num(sec, "deadline") {
+        spec.deadline = Some(d);
+    }
+    let rates = parse_f64_list(doc, sec, "rates")?;
+    let drifts = parse_f64_list(doc, sec, "drift_ppm")?;
+    let skews = parse_f64_list(doc, sec, "skews")?;
+    let n_clocks = rates.len().max(drifts.len()).max(skews.len());
+    if n_clocks > 0 {
+        let pick = |xs: &[f64], i: usize, default: f64| {
+            if xs.is_empty() {
+                default
+            } else {
+                xs[i % xs.len()]
+            }
+        };
+        spec.clocks = (0..n_clocks)
+            .map(|i| ClockSpec {
+                rate: pick(&rates, i, 1.0),
+                drift_ppm: pick(&drifts, i, 0.0),
+                skew: pick(&skews, i, 0.0),
+            })
+            .collect();
+    }
+    if let Some(ecn) = doc.get_num(sec, "fail_ecn") {
+        spec.faults.push(FaultSpec {
+            agent: doc.get_num(sec, "fail_agent").map(|v| v as usize),
+            ecn: ecn as usize,
+            fail_at: doc.get_num(sec, "fail_at").unwrap_or(0.0),
+            recover_at: doc.get_num(sec, "recover_at"),
+        });
+    }
+    Ok(spec)
+}
+
+/// Parse an optional comma-separated f64 list from a config key.
+fn parse_f64_list(doc: &ConfigDoc, sec: &str, key: &str) -> Result<Vec<f64>> {
+    match doc.get_list(sec, key) {
+        None => Ok(vec![]),
+        Some(tokens) => tokens
+            .iter()
+            .map(|t| {
+                t.parse::<f64>()
+                    .map_err(|_| Error::Config(format!("{sec}.{key}: bad entry '{t}'")))
+            })
+            .collect(),
     }
 }
 
@@ -141,6 +258,8 @@ pub fn run_config_from_doc(doc: &ConfigDoc) -> Result<(RunConfig, DatasetName)> 
         resp.per_row = v;
     }
     cfg.response = resp;
+    // Latency scenario ([latency] table).
+    cfg.latency = latency_spec_from_doc(doc)?;
     Ok((cfg, dataset))
 }
 
@@ -212,5 +331,60 @@ delay = 0.01
         let (cfg, ds) = run_config_from_doc(&doc).unwrap();
         assert_eq!(cfg.n_agents, RunConfig::default().n_agents);
         assert_eq!(ds, DatasetName::Synthetic);
+        assert_eq!(cfg.latency, LatencySpec::default());
+    }
+
+    #[test]
+    fn latency_table_full_round_trip() {
+        let text = r#"
+[run]
+n_agents = 6
+
+[latency]
+kind = pareto
+scale = 1e-4
+alpha = 1.8
+deadline = 5e-4
+rates = 1.0, 2.0
+drift_ppm = 0, 300
+skews = 0, 1e-5
+fail_ecn = 1
+fail_at = 0.01
+recover_at = 0.05
+"#;
+        let doc = ConfigDoc::parse(text).unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.latency.kind, LatencyKind::Pareto { scale: 1e-4, alpha: 1.8 });
+        assert_eq!(cfg.latency.deadline, Some(5e-4));
+        assert_eq!(cfg.latency.clocks.len(), 2);
+        assert_eq!(cfg.latency.clocks[1].rate, 2.0);
+        assert_eq!(cfg.latency.clocks[1].drift_ppm, 300.0);
+        assert_eq!(cfg.latency.clocks[1].skew, 1e-5);
+        assert_eq!(
+            cfg.latency.faults,
+            vec![FaultSpec { agent: None, ecn: 1, fail_at: 0.01, recover_at: Some(0.05) }]
+        );
+    }
+
+    #[test]
+    fn latency_kind_param_overrides_per_kind() {
+        let doc = ConfigDoc::parse(
+            "[latency]\nkind = slownode\nn_slow = 2\nfactor = 50\nscale = 99\n",
+        )
+        .unwrap();
+        let spec = latency_spec_from_doc(&doc).unwrap();
+        assert_eq!(spec.kind, LatencyKind::SlowNode { n_slow: 2, factor: 50.0 });
+        // Defaults survive when keys are absent; shared section
+        // parameterizes other kinds too.
+        let shifted = apply_latency_params(LatencyKind::parse("shifted-exp").unwrap(), &doc);
+        assert_eq!(shifted, LatencyKind::ShiftedExp { shift: 5e-5, mean: 5e-5 });
+        let pareto = apply_latency_params(LatencyKind::parse("pareto").unwrap(), &doc);
+        assert_eq!(pareto, LatencyKind::Pareto { scale: 99.0, alpha: 1.3 });
+        // Unknown kinds error.
+        let bad = ConfigDoc::parse("[latency]\nkind = warp\n").unwrap();
+        assert!(latency_spec_from_doc(&bad).is_err());
+        // Bad clock entries error.
+        let bad2 = ConfigDoc::parse("[latency]\nrates = 1.0, fast\n").unwrap();
+        assert!(latency_spec_from_doc(&bad2).is_err());
     }
 }

@@ -5,9 +5,10 @@
 use crate::admm::{iadmm_step, AdmmParams, ConsensusState};
 use crate::coding::SchemeKind;
 use crate::data::{shard_to_agents, Dataset};
-use crate::ecn::{CommModel, EcnPool, ResponseModel, SimClock};
+use crate::ecn::{CommModel, EcnPool, ResponseModel, RoundOutcome, SimClock};
 use crate::error::{Error, Result};
 use crate::graph::{Topology, Traversal, TraversalKind};
+use crate::latency::LatencySpec;
 use crate::metrics::{accuracy, test_mse, CommCost, Trace, TracePoint};
 use crate::problem::{
     reference_cache_key, reference_optimum, reference_optimum_cached, Objective, ObjectiveKind,
@@ -79,6 +80,10 @@ pub struct RunConfig {
     pub c_gamma: Option<f64>,
     /// ECN response-time model (stragglers, ε).
     pub response: ResponseModel,
+    /// Latency scenario (service-time regime, per-ECN clocks, fail-stop
+    /// faults, decode deadline); the default Uniform spec reproduces
+    /// the paper's benign timing byte-for-byte.
+    pub latency: LatencySpec,
     /// Agent-link communication-time model.
     pub comm: CommModel,
     pub max_iters: usize,
@@ -107,6 +112,7 @@ impl Default for RunConfig {
             c_tau: None,
             c_gamma: None,
             response: ResponseModel::default(),
+            latency: LatencySpec::default(),
             comm: CommModel::default(),
             max_iters: 2_000,
             eval_every: 20,
@@ -218,12 +224,13 @@ impl Driver {
             let code = scheme.build(cfg.k_ecn, s_design, cfg.seed ^ shard.agent as u64)?;
             let pool_rng = rng.split();
             let obj = cfg.objective.build(shard.data);
-            pools.push(EcnPool::new(
+            pools.push(EcnPool::with_latency(
                 shard.agent,
                 Rc::clone(&obj),
                 code,
                 per_part,
                 cfg.response.clone(),
+                &cfg.latency,
                 pool_rng,
             )?);
             objectives.push(obj);
@@ -316,22 +323,34 @@ impl Driver {
                 }
                 Algorithm::SIAdmm | Algorithm::CsIAdmm(_) | Algorithm::WAdmm => {
                     // Alg. 1/2: broadcast x_i to ECNs, coded gradient
-                    // round, then the inexact proximal update.
-                    let round = self.pools[i].gradient_round(&state.x[i], cycle, engine)?;
-                    clock.advance(round.response_time);
-                    let (xn, yn, zn) = engine.admm_step(
-                        &state.x[i],
-                        &state.y[i],
-                        &state.z,
-                        &round.grad,
-                        cfg.rho,
-                        params.tau(k),
-                        params.gamma(k),
-                        n,
-                    )?;
-                    state.x[i] = xn;
-                    state.y[i] = yn;
-                    state.z = zn;
+                    // round, then the inexact proximal update. The
+                    // deadline policy resolves fail-stopped rounds to a
+                    // timeout: the agent charges the wait and skips its
+                    // update (the token still moves on).
+                    let now = clock.now();
+                    let outcome =
+                        self.pools[i].gradient_round_at(&state.x[i], cycle, now, engine)?;
+                    match outcome {
+                        RoundOutcome::Decoded(round) => {
+                            clock.advance(round.response_time);
+                            let (xn, yn, zn) = engine.admm_step(
+                                &state.x[i],
+                                &state.y[i],
+                                &state.z,
+                                &round.grad,
+                                cfg.rho,
+                                params.tau(k),
+                                params.gamma(k),
+                                n,
+                            )?;
+                            state.x[i] = xn;
+                            state.y[i] = yn;
+                            state.z = zn;
+                        }
+                        RoundOutcome::TimedOut { elapsed } => {
+                            clock.advance(elapsed);
+                        }
+                    }
                 }
             }
 

@@ -15,10 +15,10 @@
 //! the experiments measure depend only on (n, p, d), conditioning and
 //! noise level, which the generators match.
 //!
-//! Data flows: [`Dataset`] → [`partition::shard_to_agents`] (disjoint
-//! per-agent shards) → [`partition::partition_to_ecns`] (per-ECN
+//! Data flows: [`Dataset`] → [`shard_to_agents`] (disjoint
+//! per-agent shards) → [`partition_to_ecns`] (per-ECN
 //! partitions ξ_{i,j}, disjoint for sI-ADMM, replicated per the coding
-//! scheme for csI-ADMM) → [`batch::BatchCursor`] (the circulant batch
+//! scheme for csI-ADMM) → [`BatchCursor`] (the circulant batch
 //! index `I_{i,j}^k = m mod ⌊|ξ|·K/M⌋` of Alg. 1 step 16).
 
 mod batch;

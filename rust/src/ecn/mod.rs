@@ -6,13 +6,19 @@
 //! * [`SimClock`] / [`CommModel`] — the paper's timing model: per-link
 //!   communication time `~ U(10⁻⁵, 10⁻⁴) s`, per-iteration response
 //!   time = time until the agent has enough ECN responses to decode.
-//! * [`ResponseModel`] — ECN compute-time model with straggler
-//!   injection: base time per processed row, exponential jitter, and a
-//!   maximum straggler delay `ε` (the paper's max-delay parameter).
+//! * [`ResponseModel`] — baseline ECN compute-cost parameters with
+//!   straggler injection: base time per processed row, exponential
+//!   jitter, and a maximum straggler delay `ε` (the paper's max-delay
+//!   parameter). Richer service-time regimes — heavy tails, slow nodes,
+//!   fail-stop faults, decode deadlines — come from
+//!   [`crate::latency::LatencySpec`].
 //! * [`EcnPool`] — the per-agent pool tying data partitions, batch
-//!   cursors, a [`crate::coding::GradientCode`] and the response model
-//!   into one `gradient_round` (Alg. 1 steps 13–20 / Alg. 2 steps
-//!   12–19) on a simulated clock.
+//!   cursors, a [`crate::coding::GradientCode`], per-node latency state
+//!   and the response model into one `gradient_round` (Alg. 1 steps
+//!   13–20 / Alg. 2 steps 12–19) on a simulated clock;
+//!   [`EcnPool::gradient_round_at`] is the timeout-aware variant
+//!   ([`RoundOutcome`]) that drives fault windows and the deadline
+//!   policy.
 //! * [`ThreadedEcnPool`] — the same round on real OS threads (one per
 //!   ECN) with arrival-order decoding, proving the coded path composes
 //!   with true parallelism; used by examples and integration tests.
@@ -22,5 +28,5 @@ mod pool;
 mod threaded;
 
 pub use clock::{CommModel, SimClock};
-pub use pool::{EcnPool, ResponseModel, RoundResult};
+pub use pool::{EcnPool, ResponseModel, RoundOutcome, RoundResult};
 pub use threaded::ThreadedEcnPool;

@@ -4,18 +4,24 @@
 use crate::coding::GradientCode;
 use crate::data::{partition_to_ecns, BatchCursor, EcnPartition, Split};
 use crate::error::{Error, Result};
+use crate::latency::{LatencySpec, NodeLatency};
 use crate::linalg::Matrix;
 use crate::problem::{LeastSquares, Objective};
 use crate::rng::{Rng, Xoshiro256pp};
 use crate::runtime::Engine;
 use std::rc::Rc;
 
-/// ECN compute-time model with straggler injection.
+/// Baseline ECN compute-cost parameters plus straggler injection.
 ///
-/// Response time of a non-straggling ECN processing `rows` examples:
+/// Response time of a non-straggling ECN processing `rows` examples in
+/// the default (Uniform) latency regime:
 /// `base + per_row·rows + Exp(jitter_mean)`. Straggling ECNs add the
 /// paper's maximum delay parameter ε on top. `straggler_count` ECNs per
 /// round are chosen uniformly at random to straggle.
+///
+/// Richer service-time regimes (heavy tails, persistently slow nodes,
+/// fail-stop faults) reuse these cost parameters through
+/// [`crate::latency::LatencySpec`] / [`crate::latency::LatencyModel`].
 #[derive(Clone, Debug)]
 pub struct ResponseModel {
     pub base: f64,
@@ -39,19 +45,6 @@ impl Default for ResponseModel {
     }
 }
 
-impl ResponseModel {
-    fn sample(&self, rows: usize, is_straggler: bool, rng: &mut Xoshiro256pp) -> f64 {
-        let mut t = self.base + self.per_row * rows as f64;
-        if self.jitter_mean > 0.0 {
-            t += rng.exponential(1.0 / self.jitter_mean);
-        }
-        if is_straggler {
-            t += self.straggler_delay;
-        }
-        t
-    }
-}
-
 /// Result of one coded gradient round at an agent.
 #[derive(Clone, Debug)]
 pub struct RoundResult {
@@ -67,6 +60,20 @@ pub struct RoundResult {
     pub waited_for_straggler: bool,
 }
 
+/// Outcome of a timeout-aware gradient round
+/// ([`EcnPool::gradient_round_at`]): either a decoded gradient or a
+/// deadline expiry (fail-stop faults / pathological tails kept the
+/// round undecodable for `deadline` seconds and the agent gave it up).
+#[derive(Clone, Debug)]
+pub enum RoundOutcome {
+    /// The round decoded; proceed with the ADMM update.
+    Decoded(RoundResult),
+    /// No decodable subset of live arrivals landed before the deadline:
+    /// the agent abandons this round's gradient, charging the full
+    /// `elapsed = deadline` wait.
+    TimedOut { elapsed: f64 },
+}
+
 /// One agent's pool of K ECNs over the agent's local [`Objective`].
 pub struct EcnPool {
     agent: usize,
@@ -75,6 +82,11 @@ pub struct EcnPool {
     partitions: Vec<EcnPartition>,
     cursors: Vec<BatchCursor>,
     response: ResponseModel,
+    /// Per-ECN latency state (service-time model, clock, fault window)
+    /// built from the run's [`LatencySpec`].
+    nodes: Vec<NodeLatency>,
+    /// Per-round decode deadline (None = wait indefinitely).
+    deadline: Option<f64>,
     rng: Xoshiro256pp,
     /// Scratch: per-partition gradient buffers, reused every round
     /// (§Perf: the hot loop allocates nothing after warm-up).
@@ -84,7 +96,8 @@ pub struct EcnPool {
 }
 
 impl EcnPool {
-    /// Build a pool. `per_partition_batch_rows` is the per-partition
+    /// Build a pool in the default (Uniform / paper-baseline) latency
+    /// regime. `per_partition_batch_rows` is the per-partition
     /// batch size: `M/K` for sI-ADMM, `M̄/K` for csI-ADMM (so that each
     /// coded ECN computes `(S+1)·M̄/K` rows — Alg. 2 step 7).
     pub fn new(
@@ -95,12 +108,35 @@ impl EcnPool {
         response: ResponseModel,
         rng: Xoshiro256pp,
     ) -> Result<Self> {
+        Self::with_latency(
+            agent,
+            objective,
+            code,
+            per_partition_batch_rows,
+            response,
+            &LatencySpec::default(),
+            rng,
+        )
+    }
+
+    /// Build a pool under an explicit latency scenario (service-time
+    /// regime, per-ECN clocks, fail-stop faults, decode deadline).
+    pub fn with_latency(
+        agent: usize,
+        objective: Rc<dyn Objective>,
+        code: Box<dyn GradientCode>,
+        per_partition_batch_rows: usize,
+        response: ResponseModel,
+        latency: &LatencySpec,
+        rng: Xoshiro256pp,
+    ) -> Result<Self> {
         let k = code.k();
         let partitions = partition_to_ecns(agent, objective.num_examples(), k)?;
         let cursors = partitions
             .iter()
             .map(|p| BatchCursor::new(p.len(), per_partition_batch_rows))
             .collect::<Result<Vec<_>>>()?;
+        let nodes = latency.build_nodes(agent, k, &response);
         let part_grads = vec![];
         let part_done = vec![false; k];
         Ok(Self {
@@ -110,6 +146,8 @@ impl EcnPool {
             partitions,
             cursors,
             response,
+            nodes,
+            deadline: latency.deadline,
             rng,
             part_grads,
             part_done,
@@ -156,12 +194,41 @@ impl EcnPool {
     /// broadcast `x`, compute per-partition gradients on the selected
     /// batches, encode per ECN, simulate response times, decode from the
     /// earliest decodable prefix.
+    ///
+    /// Convenience wrapper over [`Self::gradient_round_at`] at simulated
+    /// time 0 that treats a deadline expiry as an error — use the
+    /// timeout-aware variant when fail-stop faults or deadlines are in
+    /// play.
     pub fn gradient_round(
         &mut self,
         x: &Matrix,
         cycle: usize,
         engine: &mut dyn Engine,
     ) -> Result<RoundResult> {
+        match self.gradient_round_at(x, cycle, 0.0, engine)? {
+            RoundOutcome::Decoded(r) => Ok(r),
+            RoundOutcome::TimedOut { .. } => Err(Error::Latency(format!(
+                "agent {}: gradient round timed out (use gradient_round_at for \
+                 timeout-aware rounds)",
+                self.agent
+            ))),
+        }
+    }
+
+    /// Timeout-aware gradient round at simulated time `now` (drives
+    /// fail-stop fault windows). The decode-deadline policy lives here:
+    /// the agent proceeds as soon as any decodable subset of the
+    /// fastest arrivals is in, charging only elapsed simulated time; if
+    /// a deadline is configured and no decodable subset of live
+    /// arrivals lands in time, the round resolves to
+    /// [`RoundOutcome::TimedOut`] instead of stalling forever.
+    pub fn gradient_round_at(
+        &mut self,
+        x: &Matrix,
+        cycle: usize,
+        now: f64,
+        engine: &mut dyn Engine,
+    ) -> Result<RoundOutcome> {
         let k = self.code.k();
         let (px, dx) = x.shape();
         // Warm-up: size the reusable per-partition gradient buffers.
@@ -194,7 +261,8 @@ impl EcnPool {
                 }
             }
         }
-        // 2. Encode per ECN + sample response times.
+        // 2. Encode per ECN + sample response times through each node's
+        //    latency state (service-time model, clock, fault window).
         let stragglers: Vec<usize> = if self.response.straggler_count > 0 {
             self.rng.sample_indices(k, self.response.straggler_count.min(k))
         } else {
@@ -215,7 +283,10 @@ impl EcnPool {
                     .map(|&p| self.cursors[p].batch_rows())
                     .sum();
                 let is_straggler = stragglers.contains(&j);
-                let t = self.response.sample(rows, is_straggler, &mut self.rng);
+                let mut t = self.nodes[j].response_time(rows, now, &mut self.rng);
+                if is_straggler {
+                    t += self.response.straggler_delay;
+                }
                 (t, j, coded, is_straggler)
             })
             .collect();
@@ -224,14 +295,22 @@ impl EcnPool {
         // ECN index so arrival order stays deterministic.
         responses.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         // 4. Decode from the earliest decodable prefix (paper: wait for
-        //    the R-th fastest; uncoded degenerates to all K).
+        //    the R-th fastest; uncoded degenerates to all K). Arrivals
+        //    past the deadline — and down nodes, which "arrive" at
+        //    t = ∞ — are never consumed; the list is sorted, so the
+        //    first such arrival ends the wait.
         let r = self.code.r();
         let mut arrived: Vec<(usize, Matrix)> = Vec::with_capacity(k);
         let mut used = 0;
         let mut response_time = 0.0;
         let mut waited_for_straggler = false;
+        let mut saw_unreachable = false;
         let mut decoded: Option<Matrix> = None;
         for (t, j, coded, is_straggler) in responses {
+            if !t.is_finite() || self.deadline.is_some_and(|d| t > d) {
+                saw_unreachable |= !t.is_finite();
+                break;
+            }
             arrived.push((j, coded));
             used += 1;
             response_time = t;
@@ -248,11 +327,31 @@ impl EcnPool {
                 Err(e) => return Err(e),
             }
         }
-        let sum = decoded
-            .ok_or_else(|| Error::Coding(format!("agent {}: round undecodable", self.agent)))?;
+        let sum = match decoded {
+            Some(sum) => sum,
+            None => {
+                return if let Some(d) = self.deadline {
+                    Ok(RoundOutcome::TimedOut { elapsed: d })
+                } else if saw_unreachable {
+                    Err(Error::Latency(format!(
+                        "agent {}: round stalled — fail-stopped ECNs leave no decodable \
+                         subset; set a [latency] deadline or use a coded scheme that \
+                         tolerates the failure",
+                        self.agent
+                    )))
+                } else {
+                    Err(Error::Coding(format!("agent {}: round undecodable", self.agent)))
+                };
+            }
+        };
         // G = (1/K) Σ_p g̃_p (Eq. 6).
         let grad = sum.scaled(1.0 / k as f64);
-        Ok(RoundResult { grad, response_time, responses_used: used, waited_for_straggler })
+        Ok(RoundOutcome::Decoded(RoundResult {
+            grad,
+            response_time,
+            responses_used: used,
+            waited_for_straggler,
+        }))
     }
 }
 
@@ -411,5 +510,99 @@ mod tests {
         let pool =
             make_pool(Box::new(CyclicRepetition::new(5, 2, 1).unwrap()), 6, Default::default());
         assert_eq!(pool.effective_batch(), 30);
+    }
+
+    use crate::latency::{FaultSpec, LatencySpec};
+
+    fn latency_pool(code: Box<dyn GradientCode>, latency: &LatencySpec) -> EcnPool {
+        EcnPool::with_latency(
+            0,
+            Rc::new(crate::problem::LeastSquares::new(pool_split())),
+            code,
+            8,
+            ResponseModel::default(),
+            latency,
+            Xoshiro256pp::seed_from_u64(92),
+        )
+        .unwrap()
+    }
+
+    /// Fail-stop on an uncoded pool without a deadline stalls the round
+    /// with a latency error; with a deadline it times out instead.
+    #[test]
+    fn fail_stop_uncoded_stalls_or_times_out() {
+        let fault = FaultSpec { agent: None, ecn: 0, fail_at: 0.0, recover_at: None };
+        let x = Matrix::zeros(3, 1);
+        let mut eng = NativeEngine::new();
+
+        let spec = LatencySpec { faults: vec![fault], ..Default::default() };
+        let mut stalled = latency_pool(Box::new(Uncoded::new(4).unwrap()), &spec);
+        match stalled.gradient_round_at(&x, 0, 1.0, &mut eng) {
+            Err(crate::error::Error::Latency(msg)) => assert!(msg.contains("stalled"), "{msg}"),
+            other => panic!("expected latency stall, got {other:?}"),
+        }
+
+        let spec = LatencySpec { deadline: Some(1e-3), ..spec };
+        let mut timed = latency_pool(Box::new(Uncoded::new(4).unwrap()), &spec);
+        match timed.gradient_round_at(&x, 0, 1.0, &mut eng).unwrap() {
+            RoundOutcome::TimedOut { elapsed } => assert_eq!(elapsed, 1e-3),
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        // Before the fault fires (now < fail_at is impossible here with
+        // fail_at = 0; use a later window instead).
+        let spec = LatencySpec {
+            faults: vec![FaultSpec { agent: None, ecn: 0, fail_at: 0.5, recover_at: Some(0.8) }],
+            ..Default::default()
+        };
+        let mut windowed = latency_pool(Box::new(Uncoded::new(4).unwrap()), &spec);
+        for (cycle, now) in [(0usize, 0.0), (1, 0.9)] {
+            match windowed.gradient_round_at(&x, cycle, now, &mut eng).unwrap() {
+                RoundOutcome::Decoded(r) => assert_eq!(r.responses_used, 4),
+                other => panic!("expected decode at now={now}, got {other:?}"),
+            }
+        }
+    }
+
+    /// A coded pool rides through the same fail-stop fault: the dead
+    /// node sorts last (t = ∞) and the first R arrivals decode.
+    #[test]
+    fn fail_stop_coded_decodes_from_survivors() {
+        let spec = LatencySpec {
+            faults: vec![FaultSpec { agent: None, ecn: 0, fail_at: 0.0, recover_at: None }],
+            ..Default::default()
+        };
+        let mut pool = latency_pool(Box::new(CyclicRepetition::new(4, 1, 5).unwrap()), &spec);
+        let x = Matrix::full(3, 1, 0.2);
+        let mut eng = NativeEngine::new();
+        for cycle in 0..4 {
+            match pool.gradient_round_at(&x, cycle, 1.0, &mut eng).unwrap() {
+                RoundOutcome::Decoded(r) => {
+                    assert!(r.response_time.is_finite());
+                    assert!(r.responses_used <= 3, "never waits for the dead node");
+                }
+                other => panic!("cycle {cycle}: expected decode, got {other:?}"),
+            }
+        }
+    }
+
+    /// Per-node clock stretch shifts response times but never the
+    /// decoded gradient.
+    #[test]
+    fn clock_stretch_slows_but_preserves_gradient() {
+        use crate::latency::ClockSpec;
+        let x = Matrix::full(3, 1, 0.5);
+        let mut eng = NativeEngine::new();
+        let mut nominal =
+            latency_pool(Box::new(Uncoded::new(4).unwrap()), &LatencySpec::default());
+        let stretched_spec = LatencySpec {
+            clocks: vec![ClockSpec { rate: 10.0, drift_ppm: 0.0, skew: 0.0 }],
+            ..Default::default()
+        };
+        let mut stretched = latency_pool(Box::new(Uncoded::new(4).unwrap()), &stretched_spec);
+        let a = nominal.gradient_round(&x, 0, &mut eng).unwrap();
+        let b = stretched.gradient_round(&x, 0, &mut eng).unwrap();
+        assert!(a.grad.max_abs_diff(&b.grad) < 1e-15, "gradient must not depend on clocks");
+        let (ta, tb) = (a.response_time, b.response_time);
+        assert!(tb > 5.0 * ta, "{tb} vs {ta}");
     }
 }

@@ -21,6 +21,11 @@ pub enum Error {
     /// Experiment / algorithm configuration error.
     Config(String),
 
+    /// Latency-simulation failure (a round stalled on fail-stopped
+    /// ECNs with no deadline policy, timed out where timeouts are not
+    /// tolerated, ...).
+    Latency(String),
+
     /// PJRT runtime failure (artifact missing, compile/execute error).
     Runtime(String),
 
@@ -36,6 +41,7 @@ impl fmt::Display for Error {
             Error::Coding(m) => write!(f, "coding error: {m}"),
             Error::Data(m) => write!(f, "data error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Latency(m) => write!(f, "latency error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -76,6 +82,7 @@ mod tests {
     fn display_prefixes() {
         assert_eq!(Error::Config("bad".into()).to_string(), "config error: bad");
         assert_eq!(Error::Coding("x".into()).to_string(), "coding error: x");
+        assert_eq!(Error::Latency("slow".into()).to_string(), "latency error: slow");
         let io = Error::from(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
         assert!(io.to_string().starts_with("io error:"));
     }

@@ -15,10 +15,12 @@
 //! | Fig. 4         | [`fig4::run`] |
 //! | Fig. 5         | [`fig5::run`] |
 //! | Thm. 2 / Cor. 1| [`rate_check::run`] |
+//! | Fig. 6 (ext.)  | [`fig6::run`] — wall-clock time-to-ε per latency regime |
 
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
+pub mod fig6;
 pub mod rate_check;
 pub mod table1;
 

@@ -8,9 +8,9 @@
 //! * [`Topology`] — undirected graph with adjacency queries, Metropolis
 //!   mixing weights (for the DGD / EXTRA / D-ADMM baselines), and the
 //!   random generator used by the experiments.
-//! * [`hamiltonian`] — exact backtracking Hamiltonian-cycle search with
+//! * `hamiltonian` — exact backtracking Hamiltonian-cycle search with
 //!   degree-sorted branching (N ≤ 32 in all experiments).
-//! * [`shortest_path`] — BFS shortest paths and the shortest-path-cycle
+//! * `shortest_path` — BFS shortest paths and the shortest-path-cycle
 //!   construction.
 //! * [`Traversal`] — the cycle abstraction the coordinator walks.
 

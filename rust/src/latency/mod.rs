@@ -1,0 +1,264 @@
+//! Heterogeneous straggler / latency simulation (the scenario axis).
+//!
+//! The paper's evaluation (§V-A) uses one benign timing regime: uniform
+//! link times plus light exponential ECN service jitter, with the
+//! straggler delay ε injected on top. Coding only *pays off* in harsher
+//! regimes — heavy-tailed service times, persistently slow devices,
+//! fail-stop faults — so this module makes the timing regime a
+//! first-class, sweepable axis:
+//!
+//! * [`LatencyModel`] — the per-ECN service-time sampler. Shipped
+//!   models: [`UniformBaseline`] (the paper's regime, byte-identical
+//!   to the pre-latency-subsystem draws), [`ShiftedExponential`],
+//!   [`ParetoService`] (heavy tail), [`SlowNodeService`] (persistently
+//!   slow devices) and [`BimodalService`] (any response slow with
+//!   probability p).
+//! * [`LatencyKind`] — the config/CLI-level selector
+//!   (`--latency {uniform,shifted-exp,pareto,slownode,bimodal}`), carrying
+//!   each regime's parameters; also the sweep axis element
+//!   (`[sweep] latency = uniform, pareto, …`).
+//! * [`ClockSpec`] — per-ECN clock heterogeneity: service-rate factor,
+//!   drift in parts-per-million, constant skew. Nominal specs are exact
+//!   identities so the default path stays bitwise reproducible.
+//! * [`FaultSpec`] — fail-stop fault injection with optional
+//!   recovery-after-t: a down ECN simply never responds.
+//! * [`LatencySpec`] — the whole scenario (kind + clocks + faults +
+//!   decode deadline) as carried by
+//!   [`RunConfig`](crate::coordinator::RunConfig) and parsed from the
+//!   `[latency]` config table.
+//!
+//! The deadline policy lives in the decode loop of
+//! [`EcnPool::gradient_round_at`](crate::ecn::EcnPool::gradient_round_at):
+//! the agent proceeds as soon as *any* decodable subset of the fastest
+//! arrivals is in (charging only elapsed simulated time), and — when a
+//! deadline is set — gives the round up after `deadline` seconds so that
+//! fail-stop faults stall a single round, not the whole run.
+
+mod models;
+mod node;
+
+pub use models::{
+    BimodalService, LatencyModel, ParetoService, ShiftedExponential, SlowNodeService,
+    UniformBaseline,
+};
+pub use node::{ClockSpec, FaultSpec, NodeLatency};
+
+use crate::ecn::ResponseModel;
+
+/// Config-level latency-regime selector: which service-time distribution
+/// the ECNs of every agent draw from, with the regime's parameters.
+///
+/// `Uniform` is the paper's baseline (uniform link times + exponential
+/// service jitter) and reproduces the pre-latency-subsystem simulation
+/// byte-for-byte; the other kinds open the regimes where gradient coding
+/// actually earns its keep.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyKind {
+    /// The paper's benign regime (§V-A): deterministic compute plus
+    /// exponential jitter with mean `ResponseModel::jitter_mean`.
+    Uniform,
+    /// Exponential service tail shifted right: `shift + Exp(mean)`
+    /// replaces the baseline jitter (cold caches / queueing floors).
+    ShiftedExp {
+        /// Constant extra delay every response pays (s).
+        shift: f64,
+        /// Mean of the exponential tail (s).
+        mean: f64,
+    },
+    /// Heavy-tailed (Lomax/Pareto-II) service jitter:
+    /// `scale · ((1−U)^(−1/alpha) − 1)`. For `alpha ≤ 1` the mean is
+    /// infinite — the regime where waiting for the slowest ECN is
+    /// catastrophic.
+    Pareto {
+        /// Tail scale (s).
+        scale: f64,
+        /// Tail index α (smaller = heavier).
+        alpha: f64,
+    },
+    /// Persistently slow devices: the first `n_slow` ECNs of every pool
+    /// run `factor`× slower than the rest (baseline jitter elsewhere).
+    SlowNode {
+        /// How many ECNs per pool are slow.
+        n_slow: usize,
+        /// Service-time multiplier of a slow ECN.
+        factor: f64,
+    },
+    /// Bimodal responses: baseline jitter, but any single response is
+    /// slow with probability `p_slow`, paying `slow_delay` extra
+    /// (GC pauses, transient contention).
+    Bimodal {
+        /// Probability that one response straggles.
+        p_slow: f64,
+        /// Extra delay of a slow response (s).
+        slow_delay: f64,
+    },
+}
+
+impl LatencyKind {
+    /// Parse a CLI/config token into a kind with that regime's default
+    /// parameters (override via the `[latency]` table — see
+    /// [`crate::config::apply_latency_params`]).
+    pub fn parse(token: &str) -> Option<LatencyKind> {
+        match token {
+            "uniform" => Some(LatencyKind::Uniform),
+            "shifted-exp" | "shiftedexp" => {
+                Some(LatencyKind::ShiftedExp { shift: 5e-5, mean: 5e-5 })
+            }
+            "pareto" => Some(LatencyKind::Pareto { scale: 2e-5, alpha: 1.3 }),
+            "slownode" | "slow-node" => Some(LatencyKind::SlowNode { n_slow: 1, factor: 20.0 }),
+            "bimodal" => Some(LatencyKind::Bimodal { p_slow: 0.1, slow_delay: 1e-3 }),
+            _ => None,
+        }
+    }
+
+    /// Short token used in sweep cell labels and tables.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LatencyKind::Uniform => "uniform",
+            LatencyKind::ShiftedExp { .. } => "shifted-exp",
+            LatencyKind::Pareto { .. } => "pareto",
+            LatencyKind::SlowNode { .. } => "slownode",
+            LatencyKind::Bimodal { .. } => "bimodal",
+        }
+    }
+
+    /// Build the service-time model for ECN `ecn` of a pool
+    /// (structurally heterogeneous kinds like `SlowNode` hand different
+    /// models to different node indices).
+    pub fn build_model(&self, ecn: usize, response: &ResponseModel) -> Box<dyn LatencyModel> {
+        let base = response.base;
+        let per_row = response.per_row;
+        let jitter_mean = response.jitter_mean;
+        match *self {
+            LatencyKind::Uniform => Box::new(UniformBaseline { base, per_row, jitter_mean }),
+            LatencyKind::ShiftedExp { shift, mean } => {
+                Box::new(ShiftedExponential { base, per_row, shift, mean })
+            }
+            LatencyKind::Pareto { scale, alpha } => {
+                Box::new(ParetoService { base, per_row, scale, alpha })
+            }
+            LatencyKind::SlowNode { n_slow, factor } => Box::new(SlowNodeService {
+                base,
+                per_row,
+                jitter_mean,
+                factor: if ecn < n_slow { factor } else { 1.0 },
+            }),
+            LatencyKind::Bimodal { p_slow, slow_delay } => {
+                Box::new(BimodalService { base, per_row, jitter_mean, p_slow, slow_delay })
+            }
+        }
+    }
+}
+
+/// The full latency scenario of a run: regime, per-ECN clock
+/// heterogeneity, fail-stop faults and the decode-deadline policy.
+///
+/// The default spec (Uniform kind, no clocks, no faults, no deadline) is
+/// the paper's setting and leaves every simulated timestamp — and hence
+/// the golden least-squares trace — byte-identical to the
+/// pre-latency-subsystem code.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencySpec {
+    /// Service-time regime.
+    pub kind: LatencyKind,
+    /// Per-ECN clock specs, cycled over each pool's K ECNs
+    /// (`clocks[j % clocks.len()]`); empty = all nominal.
+    pub clocks: Vec<ClockSpec>,
+    /// Fail-stop faults (a down ECN never responds).
+    pub faults: Vec<FaultSpec>,
+    /// Per-round decode deadline (s): if no decodable subset of live
+    /// arrivals lands in time, the agent gives the round up (skipping
+    /// its update) instead of stalling the run.
+    pub deadline: Option<f64>,
+}
+
+impl Default for LatencySpec {
+    fn default() -> Self {
+        Self { kind: LatencyKind::Uniform, clocks: vec![], faults: vec![], deadline: None }
+    }
+}
+
+impl LatencySpec {
+    /// Instantiate the per-ECN latency state for one agent's pool of
+    /// `k` ECNs.
+    pub fn build_nodes(
+        &self,
+        agent: usize,
+        k: usize,
+        response: &ResponseModel,
+    ) -> Vec<NodeLatency> {
+        (0..k)
+            .map(|j| {
+                let clock = if self.clocks.is_empty() {
+                    ClockSpec::default()
+                } else {
+                    self.clocks[j % self.clocks.len()]
+                };
+                let fault = self
+                    .faults
+                    .iter()
+                    .find(|f| f.applies_to(agent, j))
+                    .map(|f| (f.fail_at, f.recover_at));
+                NodeLatency { model: self.kind.build_model(j, response), clock, fault }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_as_str() {
+        for token in ["uniform", "shifted-exp", "pareto", "slownode", "bimodal"] {
+            let kind = LatencyKind::parse(token).unwrap();
+            assert_eq!(kind.as_str(), token);
+        }
+        assert!(LatencyKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn default_spec_is_nominal() {
+        let spec = LatencySpec::default();
+        assert_eq!(spec.kind, LatencyKind::Uniform);
+        assert!(spec.clocks.is_empty());
+        assert!(spec.faults.is_empty());
+        assert!(spec.deadline.is_none());
+        let nodes = spec.build_nodes(0, 4, &ResponseModel::default());
+        assert_eq!(nodes.len(), 4);
+        assert!(nodes.iter().all(|n| n.clock.is_nominal() && n.fault.is_none()));
+    }
+
+    #[test]
+    fn slownode_builds_heterogeneous_models() {
+        let kind = LatencyKind::SlowNode { n_slow: 2, factor: 10.0 };
+        let resp = ResponseModel { jitter_mean: 0.0, ..Default::default() };
+        let spec = LatencySpec { kind, ..Default::default() };
+        let nodes = spec.build_nodes(0, 4, &resp);
+        // Deterministic (jitter off): slow nodes are exactly 10× slower.
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(1);
+        let fast = nodes[3].model.sample(10, &mut rng);
+        let slow = nodes[0].model.sample(10, &mut rng);
+        assert!((slow - 10.0 * fast).abs() < 1e-12, "slow {slow} vs fast {fast}");
+    }
+
+    #[test]
+    fn clock_cycling_and_fault_resolution() {
+        let spec = LatencySpec {
+            clocks: vec![ClockSpec::default(), ClockSpec { rate: 2.0, drift_ppm: 0.0, skew: 0.0 }],
+            faults: vec![FaultSpec { agent: Some(1), ecn: 0, fail_at: 0.5, recover_at: None }],
+            ..Default::default()
+        };
+        let resp = ResponseModel::default();
+        let nodes = spec.build_nodes(1, 4, &resp);
+        assert!(nodes[0].clock.is_nominal());
+        assert_eq!(nodes[1].clock.rate, 2.0);
+        assert!(nodes[2].clock.is_nominal());
+        assert_eq!(nodes[0].fault, Some((0.5, None)));
+        assert!(nodes[1].fault.is_none());
+        // Different agent: the fault does not apply.
+        let other = spec.build_nodes(0, 4, &resp);
+        assert!(other[0].fault.is_none());
+    }
+}

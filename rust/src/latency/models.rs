@@ -1,0 +1,277 @@
+//! Service-time distributions — one [`LatencyModel`] per regime.
+
+use crate::rng::{Rng, Xoshiro256pp};
+
+/// Per-ECN service-time sampler: how long one ECN takes to compute and
+/// return its coded partial gradient over `rows` examples.
+///
+/// Implementations must be deterministic functions of `(rows, rng)` so
+/// that runs — and whole sweeps — replay bitwise from a seed; straggler
+/// ε-injection ([`crate::ecn::ResponseModel::straggler_delay`]) and
+/// per-node clock skew ([`super::ClockSpec`]) are applied by the caller
+/// on top of the sampled value.
+pub trait LatencyModel: std::fmt::Debug {
+    /// Sample one response time (seconds) for `rows` processed rows.
+    fn sample(&self, rows: usize, rng: &mut Xoshiro256pp) -> f64;
+
+    /// Expected response time for `rows` rows (`f64::INFINITY` when the
+    /// distribution has no finite mean) — distribution sanity tests and
+    /// tables.
+    fn mean(&self, rows: usize) -> f64;
+}
+
+/// The paper's baseline (§V-A): deterministic compute
+/// `base + per_row·rows` plus exponential jitter with mean
+/// `jitter_mean`. **Byte-identical** to the pre-latency-subsystem
+/// `ResponseModel` draws — the default path of every run.
+#[derive(Clone, Debug)]
+pub struct UniformBaseline {
+    pub base: f64,
+    pub per_row: f64,
+    pub jitter_mean: f64,
+}
+
+impl LatencyModel for UniformBaseline {
+    fn sample(&self, rows: usize, rng: &mut Xoshiro256pp) -> f64 {
+        let mut t = self.base + self.per_row * rows as f64;
+        if self.jitter_mean > 0.0 {
+            t += rng.exponential(1.0 / self.jitter_mean);
+        }
+        t
+    }
+
+    fn mean(&self, rows: usize) -> f64 {
+        self.base + self.per_row * rows as f64 + self.jitter_mean
+    }
+}
+
+/// Shifted-exponential service tail: every response pays a constant
+/// `shift` (queueing / cold-start floor) plus `Exp(mean)`.
+#[derive(Clone, Debug)]
+pub struct ShiftedExponential {
+    pub base: f64,
+    pub per_row: f64,
+    pub shift: f64,
+    pub mean: f64,
+}
+
+impl LatencyModel for ShiftedExponential {
+    fn sample(&self, rows: usize, rng: &mut Xoshiro256pp) -> f64 {
+        let mut t = self.base + self.per_row * rows as f64 + self.shift;
+        if self.mean > 0.0 {
+            t += rng.exponential(1.0 / self.mean);
+        }
+        t
+    }
+
+    fn mean(&self, rows: usize) -> f64 {
+        self.base + self.per_row * rows as f64 + self.shift + self.mean
+    }
+}
+
+/// Heavy-tailed (Lomax / Pareto-II) jitter:
+/// `scale · ((1−U)^(−1/alpha) − 1)`, support `[0, ∞)`, survival
+/// `P[X > x] = (1 + x/scale)^(−alpha)`. For `alpha ≤ 1` the mean
+/// diverges; for `alpha ≤ 2` the variance does — the regimes where the
+/// slowest of K ECNs dominates every uncoded round.
+#[derive(Clone, Debug)]
+pub struct ParetoService {
+    pub base: f64,
+    pub per_row: f64,
+    pub scale: f64,
+    pub alpha: f64,
+}
+
+impl LatencyModel for ParetoService {
+    fn sample(&self, rows: usize, rng: &mut Xoshiro256pp) -> f64 {
+        // 1 − U ∈ (0, 1]: the tail draw is finite with probability 1.
+        let u = 1.0 - rng.next_f64();
+        let tail = self.scale * (u.powf(-1.0 / self.alpha) - 1.0);
+        self.base + self.per_row * rows as f64 + tail
+    }
+
+    fn mean(&self, rows: usize) -> f64 {
+        let det = self.base + self.per_row * rows as f64;
+        if self.alpha > 1.0 {
+            det + self.scale / (self.alpha - 1.0)
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Persistently slow device: the whole baseline response (compute and
+/// jitter) is stretched by `factor`. [`super::LatencyKind::SlowNode`]
+/// hands `factor > 1` to the designated slow ECNs and `factor = 1` to
+/// the rest, so every node still draws exactly one jitter value per
+/// round.
+#[derive(Clone, Debug)]
+pub struct SlowNodeService {
+    pub base: f64,
+    pub per_row: f64,
+    pub jitter_mean: f64,
+    pub factor: f64,
+}
+
+impl LatencyModel for SlowNodeService {
+    fn sample(&self, rows: usize, rng: &mut Xoshiro256pp) -> f64 {
+        let mut t = self.base + self.per_row * rows as f64;
+        if self.jitter_mean > 0.0 {
+            t += rng.exponential(1.0 / self.jitter_mean);
+        }
+        t * self.factor
+    }
+
+    fn mean(&self, rows: usize) -> f64 {
+        (self.base + self.per_row * rows as f64 + self.jitter_mean) * self.factor
+    }
+}
+
+/// Bimodal responses: baseline jitter, plus — with probability
+/// `p_slow` per response — a `slow_delay` excursion (GC pause,
+/// transient contention). Draws exactly two rng values per sample so
+/// the stream layout is row-independent.
+#[derive(Clone, Debug)]
+pub struct BimodalService {
+    pub base: f64,
+    pub per_row: f64,
+    pub jitter_mean: f64,
+    pub p_slow: f64,
+    pub slow_delay: f64,
+}
+
+impl LatencyModel for BimodalService {
+    fn sample(&self, rows: usize, rng: &mut Xoshiro256pp) -> f64 {
+        let mut t = self.base + self.per_row * rows as f64;
+        if self.jitter_mean > 0.0 {
+            t += rng.exponential(1.0 / self.jitter_mean);
+        }
+        if rng.next_f64() < self.p_slow {
+            t += self.slow_delay;
+        }
+        t
+    }
+
+    fn mean(&self, rows: usize) -> f64 {
+        self.base + self.per_row * rows as f64 + self.jitter_mean + self.p_slow * self.slow_delay
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mean as stat_mean;
+
+    fn sample_mean(model: &dyn LatencyModel, rows: usize, n: usize, seed: u64) -> f64 {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let xs: Vec<f64> = (0..n).map(|_| model.sample(rows, &mut rng)).collect();
+        stat_mean(&xs)
+    }
+
+    #[test]
+    fn baseline_matches_legacy_response_model_draws() {
+        // The exact draw sequence of the pre-latency ResponseModel:
+        // one exponential per sample when jitter_mean > 0.
+        let m = UniformBaseline { base: 1e-5, per_row: 1e-6, jitter_mean: 2e-5 };
+        let mut a = Xoshiro256pp::seed_from_u64(9);
+        let mut b = Xoshiro256pp::seed_from_u64(9);
+        for rows in [0usize, 8, 64] {
+            let got = m.sample(rows, &mut a);
+            let want = 1e-5 + 1e-6 * rows as f64 + b.exponential(1.0 / 2e-5);
+            assert_eq!(got.to_bits(), want.to_bits(), "rows {rows}");
+        }
+        // Jitter off: deterministic, no rng perturbation of the value.
+        let m0 = UniformBaseline { base: 2.0, per_row: 0.5, jitter_mean: 0.0 };
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        assert_eq!(m0.sample(4, &mut rng), 4.0);
+    }
+
+    #[test]
+    fn sample_means_match_analytic_means() {
+        let n = 40_000;
+        let models: Vec<Box<dyn LatencyModel>> = vec![
+            Box::new(UniformBaseline { base: 1e-4, per_row: 1e-6, jitter_mean: 3e-4 }),
+            Box::new(ShiftedExponential { base: 1e-4, per_row: 1e-6, shift: 2e-4, mean: 3e-4 }),
+            // alpha well above 2 so the sample mean concentrates.
+            Box::new(ParetoService { base: 1e-4, per_row: 1e-6, scale: 3e-4, alpha: 3.5 }),
+            Box::new(SlowNodeService { base: 1e-4, per_row: 1e-6, jitter_mean: 3e-4, factor: 7.0 }),
+            Box::new(BimodalService {
+                base: 1e-4,
+                per_row: 1e-6,
+                jitter_mean: 3e-4,
+                p_slow: 0.2,
+                slow_delay: 2e-3,
+            }),
+        ];
+        for (i, m) in models.iter().enumerate() {
+            let want = m.mean(16);
+            let got = sample_mean(m.as_ref(), 16, n, 100 + i as u64);
+            assert!(
+                (got - want).abs() < 0.08 * want,
+                "model {i}: sample mean {got} vs analytic {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn pareto_tail_is_heavier_than_exponential() {
+        // Match the means (Lomax(alpha=1.5, scale) has mean 2·scale),
+        // then compare far-tail exceedance rates.
+        let scale = 1e-3;
+        let pareto = ParetoService { base: 0.0, per_row: 0.0, scale, alpha: 1.5 };
+        let expo = UniformBaseline { base: 0.0, per_row: 0.0, jitter_mean: 2.0 * scale };
+        let threshold = 20.0 * scale; // 10× the common mean
+        let n = 60_000;
+        let count = |m: &dyn LatencyModel, seed: u64| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            (0..n).filter(|_| m.sample(0, &mut rng) > threshold).count()
+        };
+        let p_tail = count(&pareto, 7);
+        let e_tail = count(&expo, 7);
+        // Exp: P ≈ e^{-10} ≈ 4.5e-5; Lomax(1.5): P = 11^{-1.5} ≈ 2.7e-2.
+        assert!(
+            p_tail > 10 * (e_tail + 1),
+            "pareto tail {p_tail} should dwarf exponential tail {e_tail}"
+        );
+    }
+
+    #[test]
+    fn pareto_mean_diverges_at_alpha_one() {
+        let m = ParetoService { base: 0.0, per_row: 0.0, scale: 1e-3, alpha: 1.0 };
+        assert!(m.mean(0).is_infinite());
+        let m2 = ParetoService { base: 0.0, per_row: 0.0, scale: 1e-3, alpha: 2.0 };
+        assert!((m2.mean(0) - 1e-3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fixed_seed_streams_are_identical() {
+        let models: Vec<Box<dyn LatencyModel>> = vec![
+            Box::new(UniformBaseline { base: 1e-5, per_row: 1e-6, jitter_mean: 2e-5 }),
+            Box::new(ShiftedExponential { base: 1e-5, per_row: 1e-6, shift: 5e-5, mean: 5e-5 }),
+            Box::new(ParetoService { base: 1e-5, per_row: 1e-6, scale: 2e-5, alpha: 1.3 }),
+            Box::new(SlowNodeService {
+                base: 1e-5,
+                per_row: 1e-6,
+                jitter_mean: 2e-5,
+                factor: 20.0,
+            }),
+            Box::new(BimodalService {
+                base: 1e-5,
+                per_row: 1e-6,
+                jitter_mean: 2e-5,
+                p_slow: 0.1,
+                slow_delay: 1e-3,
+            }),
+        ];
+        for m in &models {
+            let mut a = Xoshiro256pp::seed_from_u64(42);
+            let mut b = Xoshiro256pp::seed_from_u64(42);
+            for rows in 0..50 {
+                let x = m.sample(rows, &mut a);
+                let y = m.sample(rows, &mut b);
+                assert_eq!(x.to_bits(), y.to_bits());
+                assert!(x >= 0.0 && x.is_finite());
+            }
+        }
+    }
+}

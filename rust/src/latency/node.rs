@@ -1,0 +1,168 @@
+//! Per-ECN latency state: clock heterogeneity and fail-stop faults.
+
+use super::models::LatencyModel;
+use crate::rng::Xoshiro256pp;
+
+/// Per-ECN clock specification: a service-rate factor, drift in
+/// parts-per-million and a constant skew (cf. the simulated-clock specs
+/// of discrete-event tower/edge simulators).
+///
+/// A *nominal* spec (`rate = 1`, `drift_ppm = 0`, `skew = 0`) is applied
+/// as an exact identity — no `t·1.0 + 0.0` rounding excursions — so the
+/// default configuration stays bitwise reproducible against the golden
+/// trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClockSpec {
+    /// Service-time multiplier (1.0 = nominal; 2.0 = half speed).
+    pub rate: f64,
+    /// Clock drift in parts-per-million, applied multiplicatively on
+    /// top of `rate`.
+    pub drift_ppm: f64,
+    /// Constant startup offset added to every response (seconds).
+    pub skew: f64,
+}
+
+impl Default for ClockSpec {
+    fn default() -> Self {
+        Self { rate: 1.0, drift_ppm: 0.0, skew: 0.0 }
+    }
+}
+
+impl ClockSpec {
+    /// Whether this spec is the exact-identity nominal clock.
+    pub fn is_nominal(&self) -> bool {
+        self.rate == 1.0 && self.drift_ppm == 0.0 && self.skew == 0.0
+    }
+
+    /// Total service-time stretch factor: `rate · (1 + drift_ppm·10⁻⁶)`.
+    pub fn stretch(&self) -> f64 {
+        self.rate * (1.0 + self.drift_ppm * 1e-6)
+    }
+
+    /// Apply the clock to a sampled service time.
+    pub fn apply(&self, t: f64) -> f64 {
+        if self.is_nominal() {
+            t
+        } else {
+            self.skew + t * self.stretch()
+        }
+    }
+}
+
+/// Fail-stop fault: ECN `ecn` (of one agent, or of every agent) stops
+/// responding at simulated time `fail_at`, optionally recovering at
+/// `recover_at`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Affected agent (`None` = the given ECN index at *every* agent).
+    pub agent: Option<usize>,
+    /// Affected ECN index within the pool.
+    pub ecn: usize,
+    /// Simulated time (s) at which the node stops responding.
+    pub fail_at: f64,
+    /// Optional simulated time (s) at which it comes back.
+    pub recover_at: Option<f64>,
+}
+
+impl FaultSpec {
+    /// Whether this fault targets `(agent, ecn)`.
+    pub fn applies_to(&self, agent: usize, ecn: usize) -> bool {
+        self.ecn == ecn && self.agent.is_none_or(|a| a == agent)
+    }
+}
+
+/// One ECN's assembled latency state inside a pool: its service-time
+/// model, its clock, and its (resolved) fail-stop window.
+#[derive(Debug)]
+pub struct NodeLatency {
+    /// Service-time distribution for this node.
+    pub model: Box<dyn LatencyModel>,
+    /// Clock heterogeneity applied to every sample.
+    pub clock: ClockSpec,
+    /// Resolved fail-stop window `(fail_at, recover_at)`, if any.
+    pub fault: Option<(f64, Option<f64>)>,
+}
+
+impl NodeLatency {
+    /// Whether the node is down (fail-stopped, not yet recovered) at
+    /// simulated time `now`.
+    pub fn is_down(&self, now: f64) -> bool {
+        match self.fault {
+            Some((fail_at, recover_at)) => {
+                now >= fail_at && recover_at.is_none_or(|r| now < r)
+            }
+            None => false,
+        }
+    }
+
+    /// Sample this node's response time for `rows` rows at simulated
+    /// time `now`. Down nodes still consume their rng draws (keeping the
+    /// stream layout independent of fault timing) but return
+    /// `f64::INFINITY` — they never respond.
+    pub fn response_time(&self, rows: usize, now: f64, rng: &mut Xoshiro256pp) -> f64 {
+        let t = self.clock.apply(self.model.sample(rows, rng));
+        if self.is_down(now) {
+            f64::INFINITY
+        } else {
+            t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::UniformBaseline;
+
+    #[test]
+    fn nominal_clock_is_exact_identity() {
+        let c = ClockSpec::default();
+        assert!(c.is_nominal());
+        for t in [0.0, 1e-5, 0.3, f64::INFINITY] {
+            assert_eq!(c.apply(t).to_bits(), t.to_bits());
+        }
+    }
+
+    #[test]
+    fn clock_stretch_and_skew() {
+        let c = ClockSpec { rate: 2.0, drift_ppm: 500.0, skew: 1e-3 };
+        assert!(!c.is_nominal());
+        assert!((c.stretch() - 2.001).abs() < 1e-12);
+        assert!((c.apply(1.0) - (1e-3 + 2.001)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_windows() {
+        let n = NodeLatency {
+            model: Box::new(UniformBaseline { base: 1.0, per_row: 0.0, jitter_mean: 0.0 }),
+            clock: ClockSpec::default(),
+            fault: Some((2.0, Some(5.0))),
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        assert!(!n.is_down(0.0));
+        assert!(n.is_down(2.0));
+        assert!(n.is_down(4.9));
+        assert!(!n.is_down(5.0));
+        assert_eq!(n.response_time(0, 0.0, &mut rng), 1.0);
+        assert!(n.response_time(0, 3.0, &mut rng).is_infinite());
+        assert_eq!(n.response_time(0, 6.0, &mut rng), 1.0);
+        // Permanent fault: never recovers.
+        let p = NodeLatency {
+            model: Box::new(UniformBaseline { base: 1.0, per_row: 0.0, jitter_mean: 0.0 }),
+            clock: ClockSpec::default(),
+            fault: Some((1.0, None)),
+        };
+        assert!(p.is_down(1e9));
+    }
+
+    #[test]
+    fn fault_spec_targeting() {
+        let all_agents = FaultSpec { agent: None, ecn: 2, fail_at: 0.0, recover_at: None };
+        assert!(all_agents.applies_to(0, 2));
+        assert!(all_agents.applies_to(7, 2));
+        assert!(!all_agents.applies_to(0, 1));
+        let one = FaultSpec { agent: Some(3), ecn: 0, fail_at: 0.0, recover_at: None };
+        assert!(one.applies_to(3, 0));
+        assert!(!one.applies_to(2, 0));
+    }
+}

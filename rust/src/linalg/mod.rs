@@ -6,8 +6,9 @@
 //! * [`Matrix`] — row-major dense matrix with arithmetic, views, norms.
 //! * [`matmul`] / [`Matrix::matmul`] — blocked, transposed-B matmul tuned
 //!   for the hot path (see `benches/perf_hotpath.rs`).
-//! * [`solve`] — Cholesky (SPD) and partial-pivot LU solvers, used for
-//!   exact ADMM x-updates and for the global optimum `x*`.
+//! * `solve` — Cholesky (SPD) and partial-pivot LU solvers
+//!   ([`cholesky_solve`], [`lu_solve`]), used for exact ADMM x-updates
+//!   and for the global optimum `x*`.
 //!
 //! Shapes follow the paper: model `x ∈ R^{p×d}`, data `O ∈ R^{m×p}`,
 //! targets `T ∈ R^{m×d}`.

@@ -6,7 +6,7 @@
 //! csadmm run --config examples/configs/usps_csiadmm.toml [--pjrt]
 //! csadmm table1 [--quick]
 //! csadmm fig3-minibatch | fig3-baselines | fig3-stragglers | fig3-spc
-//! csadmm fig4 | fig5 | rate-check          [--quick] [--pjrt]
+//! csadmm fig4 | fig5 | fig6 | rate-check   [--quick] [--pjrt]
 //! csadmm sweep [--config <file>] [--workers N] [--out <file>]
 //! csadmm all [--quick]
 //! ```
@@ -18,11 +18,12 @@
 
 use csadmm::cli::{Args, USAGE};
 use csadmm::coding::SchemeKind;
-use csadmm::config::{apply_objective_params, run_config_from_doc, ConfigDoc};
+use csadmm::config::{apply_latency_params, apply_objective_params, run_config_from_doc, ConfigDoc};
 use csadmm::coordinator::{Algorithm, Driver, RunConfig};
 use csadmm::data::DatasetName;
 use csadmm::ecn::ResponseModel;
 use csadmm::experiments::{self, load_dataset, ROOT_SEED};
+use csadmm::latency::LatencyKind;
 use csadmm::problem::ObjectiveKind;
 use csadmm::runtime::{EngineFactory, NativeEngineFactory, PjrtEngineFactory};
 use csadmm::sweep::{default_workers, run_sweep, SweepSpec, SweepSummary};
@@ -41,6 +42,23 @@ fn parse_objective_list(list: &str, doc: Option<&ConfigDoc>) -> Result<Vec<Objec
                 .ok_or_else(|| Error::Config(format!("unknown objective '{t}' (see usage)")))?;
             Ok(match doc {
                 Some(doc) => apply_objective_params(kind, doc),
+                None => kind,
+            })
+        })
+        .collect()
+}
+
+/// Parse a comma-separated `--latency` list (`uniform,pareto,...`),
+/// applying the config's `[latency]` parameter keys (when a config is
+/// in play) just like the `[sweep] latency` axis does.
+fn parse_latency_list(list: &str, doc: Option<&ConfigDoc>) -> Result<Vec<LatencyKind>> {
+    list.split(',')
+        .map(|t| {
+            let t = t.trim();
+            let kind = LatencyKind::parse(t)
+                .ok_or_else(|| Error::Config(format!("unknown latency kind '{t}' (see usage)")))?;
+            Ok(match doc {
+                Some(doc) => apply_latency_params(kind, doc),
                 None => kind,
             })
         })
@@ -99,16 +117,26 @@ fn main() -> Result<()> {
                 }
                 cfg.objective = kinds[0];
             }
+            if let Some(tok) = args.get("latency") {
+                let kinds = parse_latency_list(tok, Some(&doc))?;
+                if kinds.len() != 1 {
+                    return Err(Error::Config(
+                        "run takes exactly one --latency (use `sweep` for an axis)".into(),
+                    ));
+                }
+                cfg.latency.kind = kinds[0];
+            }
             let ds = load_dataset(dataset, quick);
             let mut engine = factory.create()?;
             println!(
-                "running {} [{}] on {} (N={}, K={}, M={}, engine={})",
+                "running {} [{}] on {} (N={}, K={}, M={}, lat={}, engine={})",
                 cfg.algo.label(),
                 cfg.objective.as_str(),
                 dataset.as_str(),
                 cfg.n_agents,
                 cfg.k_ecn,
                 cfg.minibatch,
+                cfg.latency.kind.as_str(),
                 engine.name()
             );
             let trace = Driver::new(cfg, &ds)?.run(engine.as_mut())?;
@@ -142,6 +170,9 @@ fn main() -> Result<()> {
             };
             if let Some(list) = args.get("objective") {
                 spec = spec.objectives(parse_objective_list(list, doc.as_ref())?);
+            }
+            if let Some(list) = args.get("latency") {
+                spec = spec.latencies(parse_latency_list(list, doc.as_ref())?);
             }
             println!(
                 "sweep: {} jobs ({} cells × {} seeds) on {workers} workers, engine={}",
@@ -183,6 +214,9 @@ fn main() -> Result<()> {
         Some("fig5") => {
             experiments::fig5::run(quick, factory.as_ref())?;
         }
+        Some("fig6") => {
+            experiments::fig6::run(quick, factory.as_ref())?;
+        }
         Some("rate-check") => {
             experiments::rate_check::run(quick, factory.as_ref())?;
         }
@@ -194,6 +228,7 @@ fn main() -> Result<()> {
             experiments::fig3::shortest_path_cycle(quick, factory.as_ref())?;
             experiments::fig4::run(quick, factory.as_ref())?;
             experiments::fig5::run(quick, factory.as_ref())?;
+            experiments::fig6::run(quick, factory.as_ref())?;
             experiments::rate_check::run(quick, factory.as_ref())?;
         }
         other => {

@@ -14,7 +14,7 @@
 //! The loss is (λ + λ_max(OᵀO/b)/4)-smooth; the mini-batch oracle
 //! carries the full regularizer in every batch so block means stay
 //! unbiased. The exact prox runs a few damped-Newton steps per column
-//! on the cached Cholesky machinery (see [`super::newton`]).
+//! on the cached Cholesky machinery (see the `newton` module).
 
 use super::newton::newton_prox_column;
 use super::{data_spectral_bound, Objective};

@@ -22,6 +22,11 @@
 //! produces the `x*` the accuracy metric (Eq. 23) references: closed
 //! form for least squares, a high-iteration FISTA solve (cached per
 //! dataset fingerprint via [`reference_optimum_cached`]) for the rest.
+//!
+//! To add a loss: implement [`Objective`] (oracle + prox + smoothness
+//! surface), give it an [`ObjectiveKind`] variant for config/CLI
+//! selection, and the driver, ECN pools, sweeps and experiments pick it
+//! up unchanged — see the module map in the top-level `README.md`.
 
 mod elastic_net;
 mod huber;

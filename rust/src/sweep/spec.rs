@@ -7,6 +7,7 @@ use crate::config::ConfigDoc;
 use crate::coordinator::{Algorithm, RunConfig};
 use crate::data::DatasetName;
 use crate::error::{Error, Result};
+use crate::latency::LatencyKind;
 use crate::problem::ObjectiveKind;
 
 /// A cartesian grid over experiment axes.
@@ -16,8 +17,8 @@ use crate::problem::ObjectiveKind;
 /// `seeds` axis is special: jobs that differ only in seed belong to the
 /// same *cell* and are aggregated by [`crate::sweep::SweepSummary`].
 ///
-/// Expansion order is fixed (objective → algo → S → ε → M → ρ →
-/// quantize-bits → seed, seeds innermost), so job and cell ids are
+/// Expansion order is fixed (objective → algo → S → ε → latency → M →
+/// ρ → quantize-bits → seed, seeds innermost), so job and cell ids are
 /// stable across processes and independent of how many workers execute
 /// the grid.
 #[derive(Clone, Debug)]
@@ -33,6 +34,9 @@ pub struct SweepSpec {
     pub s_values: Vec<usize>,
     /// Straggler-delay axis ε (`response.straggler_delay`).
     pub epsilons: Vec<f64>,
+    /// Latency-regime axis (`latency.kind`): the straggler zoo. Clocks,
+    /// faults and deadline stay as configured on the base spec.
+    pub latencies: Vec<LatencyKind>,
     /// Mini-batch axis M.
     pub minibatches: Vec<usize>,
     /// Penalty axis ρ.
@@ -51,6 +55,7 @@ impl SweepSpec {
             algos: vec![base.algo],
             s_values: vec![base.s_tolerated],
             epsilons: vec![base.response.straggler_delay],
+            latencies: vec![base.latency.kind],
             minibatches: vec![base.minibatch],
             rhos: vec![base.rho],
             quantize_bits: vec![base.quantize_bits],
@@ -80,6 +85,12 @@ impl SweepSpec {
     /// Set the straggler-delay axis ε.
     pub fn epsilons(mut self, v: Vec<f64>) -> Self {
         self.epsilons = v;
+        self
+    }
+
+    /// Set the latency-regime axis (the straggler zoo).
+    pub fn latencies(mut self, v: Vec<LatencyKind>) -> Self {
+        self.latencies = v;
         self
     }
 
@@ -113,6 +124,7 @@ impl SweepSpec {
             * self.algos.len()
             * self.s_values.len()
             * self.epsilons.len()
+            * self.latencies.len()
             * self.minibatches.len()
             * self.rhos.len()
             * self.quantize_bits.len()
@@ -134,30 +146,33 @@ impl SweepSpec {
             for &algo in &self.algos {
                 for &s in &self.s_values {
                     for &eps in &self.epsilons {
-                        for &m in &self.minibatches {
-                            for &rho in &self.rhos {
-                                for &bits in &self.quantize_bits {
-                                    let label =
-                                        self.cell_label(objective, algo, s, eps, m, rho, bits);
-                                    for (seed_index, &seed) in self.seeds.iter().enumerate() {
-                                        let mut cfg = self.base.clone();
-                                        cfg.objective = objective;
-                                        cfg.algo = algo;
-                                        cfg.s_tolerated = s;
-                                        cfg.response.straggler_delay = eps;
-                                        cfg.minibatch = m;
-                                        cfg.rho = rho;
-                                        cfg.quantize_bits = bits;
-                                        cfg.seed = seed;
-                                        jobs.push(SweepJob {
-                                            job_id: jobs.len(),
-                                            cell_id,
-                                            seed_index,
-                                            label: label.clone(),
-                                            cfg,
-                                        });
+                        for &lat in &self.latencies {
+                            for &m in &self.minibatches {
+                                for &rho in &self.rhos {
+                                    for &bits in &self.quantize_bits {
+                                        let label = self
+                                            .cell_label(objective, algo, s, eps, lat, m, rho, bits);
+                                        for (seed_index, &seed) in self.seeds.iter().enumerate() {
+                                            let mut cfg = self.base.clone();
+                                            cfg.objective = objective;
+                                            cfg.algo = algo;
+                                            cfg.s_tolerated = s;
+                                            cfg.response.straggler_delay = eps;
+                                            cfg.latency.kind = lat;
+                                            cfg.minibatch = m;
+                                            cfg.rho = rho;
+                                            cfg.quantize_bits = bits;
+                                            cfg.seed = seed;
+                                            jobs.push(SweepJob {
+                                                job_id: jobs.len(),
+                                                cell_id,
+                                                seed_index,
+                                                label: label.clone(),
+                                                cfg,
+                                            });
+                                        }
+                                        cell_id += 1;
                                     }
-                                    cell_id += 1;
                                 }
                             }
                         }
@@ -178,6 +193,7 @@ impl SweepSpec {
         algo: Algorithm,
         s: usize,
         eps: f64,
+        lat: LatencyKind,
         m: usize,
         rho: f64,
         bits: Option<u32>,
@@ -191,6 +207,9 @@ impl SweepSpec {
         }
         if self.epsilons.len() > 1 {
             label.push_str(&format!(" eps={eps}"));
+        }
+        if self.latencies.len() > 1 {
+            label.push_str(&format!(" lat={}", lat.as_str()));
         }
         if self.minibatches.len() > 1 {
             label.push_str(&format!(" M={m}"));
@@ -223,6 +242,7 @@ impl SweepSpec {
     /// algos = siadmm, csiadmm-cyclic   # iadmm|siadmm|wadmm|csiadmm[-<scheme>]
     /// s = 1                            # tolerated stragglers
     /// eps = 1e-3, 5e-3                 # straggler delay ε
+    /// latency = uniform, pareto        # straggler-zoo regime axis
     /// minibatch = 16, 32
     /// rho = 0.08
     /// quantize_bits = none, 16         # token quantization ('none' = exact)
@@ -231,7 +251,10 @@ impl SweepSpec {
     ///
     /// Objective hyper-parameters come from the `[objective]` section
     /// (see [`crate::config::apply_objective_params`]) and apply to
-    /// every entry of the objective axis.
+    /// every entry of the objective axis; latency-regime parameters,
+    /// clocks, faults and the decode deadline come from the `[latency]`
+    /// section (see [`crate::config::latency_spec_from_doc`]) and apply
+    /// to every entry of the latency axis.
     pub fn from_doc(doc: &ConfigDoc) -> Result<(SweepSpec, DatasetName)> {
         let (base, dataset) = crate::config::run_config_from_doc(doc)?;
         let mut spec = SweepSpec::new(base);
@@ -257,6 +280,18 @@ impl SweepSpec {
         }
         if let Some(v) = doc.get_list(sec, "eps") {
             spec.epsilons = parse_f64s(&v, "sweep.eps")?;
+        }
+        if let Some(tokens) = doc.get_list(sec, "latency") {
+            spec.latencies = tokens
+                .iter()
+                .map(|t| {
+                    crate::latency::LatencyKind::parse(t)
+                        .map(|k| crate::config::apply_latency_params(k, doc))
+                        .ok_or_else(|| {
+                            Error::Config(format!("sweep.latency: unknown latency kind '{t}'"))
+                        })
+                })
+                .collect::<Result<Vec<_>>>()?;
         }
         if let Some(v) = doc.get_list(sec, "minibatch") {
             spec.minibatches = parse_nums(&v, "sweep.minibatch")?;
@@ -425,6 +460,50 @@ mod tests {
         assert_eq!(jobs[2].cfg.objective, ObjectiveKind::Logistic { lambda: 1e-2 });
         assert_eq!(jobs[0].label, "sI-ADMM obj=ls");
         assert_eq!(jobs[2].label, "sI-ADMM obj=logistic");
+    }
+
+    #[test]
+    fn latency_axis_expands_with_labels() {
+        let spec = SweepSpec::new(RunConfig::default())
+            .latencies(vec![
+                LatencyKind::Uniform,
+                LatencyKind::Pareto { scale: 2e-5, alpha: 1.3 },
+            ])
+            .minibatches(vec![8, 16]);
+        assert_eq!(spec.num_cells(), 4);
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 4);
+        // Latency expands outside the minibatch axis.
+        assert_eq!(jobs[0].cfg.latency.kind, LatencyKind::Uniform);
+        assert_eq!(jobs[2].cfg.latency.kind, LatencyKind::Pareto { scale: 2e-5, alpha: 1.3 });
+        assert_eq!(jobs[0].label, "sI-ADMM lat=uniform M=8");
+        assert_eq!(jobs[3].label, "sI-ADMM lat=pareto M=16");
+        // Base-spec clocks/faults/deadline survive the axis override.
+        let base = RunConfig {
+            latency: crate::latency::LatencySpec { deadline: Some(0.5), ..Default::default() },
+            ..RunConfig::default()
+        };
+        let jobs = SweepSpec::new(base)
+            .latencies(vec![LatencyKind::Uniform, LatencyKind::Pareto { scale: 1.0, alpha: 2.0 }])
+            .expand()
+            .unwrap();
+        assert!(jobs.iter().all(|j| j.cfg.latency.deadline == Some(0.5)));
+    }
+
+    #[test]
+    fn from_doc_reads_latency_axis_with_params() {
+        let doc = ConfigDoc::parse(
+            "[run]\nk_ecn = 2\n\n[sweep]\nlatency = uniform, pareto, slownode\n\n\
+             [latency]\nscale = 1e-4\nalpha = 2.5\nfactor = 8\ndeadline = 1e-3\n",
+        )
+        .unwrap();
+        let (spec, _) = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.latencies.len(), 3);
+        assert_eq!(spec.latencies[1], LatencyKind::Pareto { scale: 1e-4, alpha: 2.5 });
+        assert_eq!(spec.latencies[2], LatencyKind::SlowNode { n_slow: 1, factor: 8.0 });
+        assert_eq!(spec.base.latency.deadline, Some(1e-3));
+        let bad = ConfigDoc::parse("[sweep]\nlatency = nope\n").unwrap();
+        assert!(SweepSpec::from_doc(&bad).is_err());
     }
 
     #[test]

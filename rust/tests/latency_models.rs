@@ -1,0 +1,173 @@
+//! Driver-level tests of the latency subsystem: default-regime byte
+//! identity against the golden trace, wall-clock inflation under harsh
+//! regimes, fail-stop semantics, and sweep determinism along the
+//! latency axis.
+//!
+//! (Distribution-level sanity — sample means, tail weight, fixed-seed
+//! determinism — lives in the unit tests of `csadmm::latency`.)
+
+use csadmm::coding::SchemeKind;
+use csadmm::coordinator::{Algorithm, Driver, RunConfig};
+use csadmm::data::synthetic_small;
+use csadmm::latency::{ClockSpec, FaultSpec, LatencyKind, LatencySpec};
+use csadmm::runtime::{NativeEngine, NativeEngineFactory};
+use csadmm::sweep::{run_sweep, SweepSpec, SweepSummary};
+
+/// The exact config of the blessed golden trace (`golden_trace.rs`).
+fn golden_cfg() -> RunConfig {
+    RunConfig {
+        n_agents: 4,
+        k_ecn: 2,
+        minibatch: 8,
+        rho: 0.3,
+        max_iters: 240,
+        eval_every: 40,
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+fn golden_trace_json(cfg: RunConfig) -> String {
+    let ds = synthetic_small(400, 40, 0.1, 77);
+    let mut driver = Driver::new(cfg, &ds).expect("driver builds");
+    let trace = driver.run(&mut NativeEngine::new()).expect("run succeeds");
+    trace.to_json().to_string()
+}
+
+/// The Uniform default must reproduce the pre-latency-subsystem
+/// simulation byte-for-byte: explicitly-nominal clocks and a
+/// never-binding deadline may not perturb a single bit of the golden
+/// trace, and if the blessed golden file is committed, the default path
+/// must still match it exactly.
+#[test]
+fn uniform_default_is_byte_identical_to_golden_trace() {
+    let default_json = golden_trace_json(golden_cfg());
+    let explicit = RunConfig {
+        latency: LatencySpec {
+            kind: LatencyKind::Uniform,
+            clocks: vec![ClockSpec::default(); 2],
+            faults: vec![],
+            deadline: Some(f64::INFINITY),
+        },
+        ..golden_cfg()
+    };
+    assert_eq!(
+        default_json,
+        golden_trace_json(explicit),
+        "nominal clocks + non-binding deadline must be exact identities"
+    );
+    let golden_path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/golden/least_squares_trace.json"
+    );
+    if let Ok(blessed) = std::fs::read_to_string(golden_path) {
+        assert_eq!(
+            default_json,
+            blessed.trim_end(),
+            "Uniform default drifted from the blessed golden trace"
+        );
+    }
+}
+
+/// Harsh service-time regimes inflate the uncoded wall-clock relative
+/// to the paper's baseline (same seeds, same iteration count).
+#[test]
+fn harsh_regimes_inflate_uncoded_wall_clock() {
+    let ds = synthetic_small(1_000, 100, 0.05, 77);
+    let sim_time = |kind: LatencyKind| {
+        let cfg = RunConfig {
+            n_agents: 5,
+            k_ecn: 4,
+            minibatch: 8,
+            max_iters: 300,
+            eval_every: 100,
+            seed: 11,
+            latency: LatencySpec { kind, ..Default::default() },
+            ..Default::default()
+        };
+        let mut d = Driver::new(cfg, &ds).unwrap();
+        d.run(&mut NativeEngine::new()).unwrap().final_sim_time()
+    };
+    let uniform = sim_time(LatencyKind::Uniform);
+    let shifted = sim_time(LatencyKind::ShiftedExp { shift: 5e-5, mean: 5e-5 });
+    let pareto = sim_time(LatencyKind::Pareto { scale: 2e-5, alpha: 1.3 });
+    let slownode = sim_time(LatencyKind::SlowNode { n_slow: 1, factor: 20.0 });
+    assert!(shifted > uniform, "shifted-exp {shifted} vs uniform {uniform}");
+    assert!(pareto > uniform, "pareto {pareto} vs uniform {uniform}");
+    assert!(slownode > 3.0 * uniform, "slownode {slownode} vs uniform {uniform}");
+}
+
+/// Fail-stop end to end: an uncoded run with no deadline dies with a
+/// latency error the moment the outage makes a round undecodable; with
+/// a deadline it completes (stalled but alive); a coded run tolerates
+/// the outage outright.
+#[test]
+fn fail_stop_driver_semantics() {
+    let ds = synthetic_small(1_000, 100, 0.05, 78);
+    let fault = FaultSpec { agent: None, ecn: 0, fail_at: 1e-3, recover_at: None };
+    let cfg = |algo, s, m, latency| RunConfig {
+        algo,
+        s_tolerated: s,
+        minibatch: m,
+        n_agents: 5,
+        k_ecn: 4,
+        max_iters: 400,
+        eval_every: 100,
+        seed: 13,
+        latency,
+        ..Default::default()
+    };
+
+    let stalled = LatencySpec { faults: vec![fault], ..Default::default() };
+    let err = Driver::new(cfg(Algorithm::SIAdmm, 0, 8, stalled.clone()), &ds)
+        .unwrap()
+        .run(&mut NativeEngine::new());
+    match err {
+        Err(csadmm::Error::Latency(msg)) => assert!(msg.contains("stalled"), "{msg}"),
+        other => panic!("expected latency stall, got {other:?}"),
+    }
+
+    let rescued = LatencySpec { deadline: Some(5e-4), ..stalled };
+    let unc = Driver::new(cfg(Algorithm::SIAdmm, 0, 8, rescued.clone()), &ds)
+        .unwrap()
+        .run(&mut NativeEngine::new())
+        .expect("deadline policy keeps the run alive");
+    let cod = Driver::new(cfg(Algorithm::CsIAdmm(SchemeKind::Cyclic), 1, 16, rescued), &ds)
+        .unwrap()
+        .run(&mut NativeEngine::new())
+        .expect("coded run tolerates the outage");
+    assert!(
+        cod.final_accuracy() < unc.final_accuracy(),
+        "coded {} must out-converge the stalled uncoded arm {}",
+        cod.final_accuracy(),
+        unc.final_accuracy()
+    );
+}
+
+/// A latency-axis sweep stays bitwise deterministic and
+/// worker-count-independent (the 1-vs-N invariant of the sweep pool).
+#[test]
+fn latency_axis_sweep_is_worker_count_invariant() {
+    let ds = synthetic_small(600, 60, 0.1, 79);
+    let spec = SweepSpec::new(RunConfig {
+        n_agents: 4,
+        k_ecn: 2,
+        minibatch: 8,
+        max_iters: 120,
+        eval_every: 40,
+        seed: 21,
+        ..Default::default()
+    })
+    .latencies(vec![
+        LatencyKind::Uniform,
+        LatencyKind::Pareto { scale: 2e-5, alpha: 1.3 },
+        LatencyKind::SlowNode { n_slow: 1, factor: 20.0 },
+    ])
+    .seeds(vec![1, 2]);
+    let a = run_sweep(&spec, &ds, 1, &NativeEngineFactory).unwrap();
+    let b = run_sweep(&spec, &ds, 3, &NativeEngineFactory).unwrap();
+    let ja = SweepSummary::from_result(&a).to_json().to_string();
+    let jb = SweepSummary::from_result(&b).to_json().to_string();
+    assert_eq!(ja, jb, "latency-axis sweep JSON must not depend on worker count");
+    assert!(ja.contains("lat=pareto") && ja.contains("lat=slownode"), "{ja}");
+}
