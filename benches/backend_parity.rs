@@ -1,0 +1,157 @@
+//! Backend-parity bench: rounds/sec of the simulated vs the real-thread
+//! gradient backend over the same coded rounds, plus decode-prefix
+//! sizes — the PR-4 perf baseline.
+//!
+//! Emits `BENCH_pr4.json`:
+//!
+//! ```text
+//! {
+//!   "bench": "backend_parity",
+//!   "rounds": <rounds per backend per regime>,
+//!   "regimes": [{
+//!     "regime": "uniform" | "slownode",
+//!     "sim_rounds_per_sec":       simulated-backend throughput,
+//!     "threaded_rounds_per_sec":  real-thread-backend throughput,
+//!     "decode_prefix_mean":       mean responses consumed per decode
+//!                                 (identical across backends — asserted),
+//!     "modeled_time_total_s":     summed modeled response time
+//!                                 (identical across backends — asserted),
+//!     "threaded_real_s":          measured real wall-clock inside rounds
+//!   }, ...]
+//! }
+//! ```
+//!
+//! ```bash
+//! cargo bench --bench backend_parity
+//! ```
+
+use csadmm::coding::SchemeKind;
+use csadmm::data::synthetic_small;
+use csadmm::ecn::{
+    EcnPool, GradientBackend, ResponseModel, RoundOutcome, SimBackend, ThreadedBackend,
+};
+use csadmm::latency::{LatencyKind, LatencySpec};
+use csadmm::linalg::Matrix;
+use csadmm::problem::ObjectiveKind;
+use csadmm::rng::Xoshiro256pp;
+use csadmm::runtime::NativeEngine;
+use csadmm::util::json::{write_json_file, Json};
+use std::time::Instant;
+
+const K_ECN: usize = 4;
+const S: usize = 1;
+const CODE_SEED: u64 = 7;
+const PER_PART: usize = 8;
+const RNG_SEED: u64 = 92;
+
+fn sim_backend(latency: &LatencySpec) -> SimBackend {
+    let ds = synthetic_small(960, 40, 0.1, 95);
+    SimBackend::new(
+        EcnPool::with_latency(
+            0,
+            ObjectiveKind::LeastSquares.build(ds.train),
+            SchemeKind::Cyclic.build(K_ECN, S, CODE_SEED).unwrap(),
+            PER_PART,
+            ResponseModel::default(),
+            latency,
+            Xoshiro256pp::seed_from_u64(RNG_SEED),
+        )
+        .unwrap(),
+    )
+}
+
+fn threaded_backend(latency: &LatencySpec) -> ThreadedBackend {
+    let ds = synthetic_small(960, 40, 0.1, 95);
+    ThreadedBackend::new(
+        0,
+        ObjectiveKind::LeastSquares,
+        ds.train,
+        SchemeKind::Cyclic,
+        S,
+        CODE_SEED,
+        K_ECN,
+        PER_PART,
+        ResponseModel::default(),
+        latency,
+        Xoshiro256pp::seed_from_u64(RNG_SEED),
+    )
+    .unwrap()
+}
+
+/// Drive `rounds` gradient rounds; returns (rounds/sec, mean decode
+/// prefix, summed modeled response time).
+fn drive(backend: &mut dyn GradientBackend, rounds: usize) -> (f64, f64, f64) {
+    let x = Matrix::full(3, 1, 0.2);
+    let mut eng = NativeEngine::new();
+    let mut used_total = 0usize;
+    let mut modeled = 0.0;
+    let t0 = Instant::now();
+    for cycle in 0..rounds {
+        match backend.round(&x, cycle, 0.0, &mut eng).expect("bench round") {
+            RoundOutcome::Decoded(r) => {
+                used_total += r.responses_used;
+                modeled += r.response_time;
+            }
+            RoundOutcome::TimedOut { elapsed } => modeled += elapsed,
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    (rounds as f64 / secs, used_total as f64 / rounds as f64, modeled)
+}
+
+fn main() {
+    let rounds = 400;
+    let regimes = [
+        ("uniform", LatencySpec::default()),
+        (
+            "slownode",
+            LatencySpec {
+                kind: LatencyKind::SlowNode { n_slow: 1, factor: 20.0 },
+                ..Default::default()
+            },
+        ),
+    ];
+    let mut entries = vec![];
+    println!("backend parity — {rounds} coded rounds per backend (K={K_ECN}, S={S})");
+    for (name, latency) in regimes {
+        let mut sim = sim_backend(&latency);
+        let (sim_rps, sim_prefix, sim_modeled) = drive(&mut sim, rounds);
+        let mut thr = threaded_backend(&latency);
+        let (thr_rps, thr_prefix, thr_modeled) = drive(&mut thr, rounds);
+        // Parity cross-checks: the backends consume the same prefixes
+        // and model the same time, to the bit.
+        assert_eq!(
+            sim_prefix.to_bits(),
+            thr_prefix.to_bits(),
+            "{name}: decode-prefix parity violated"
+        );
+        assert_eq!(
+            sim_modeled.to_bits(),
+            thr_modeled.to_bits(),
+            "{name}: modeled-time parity violated"
+        );
+        let real = thr.real_elapsed().expect("threaded reports real time").as_secs_f64();
+        println!(
+            "  {name:<9} sim {sim_rps:>10.0} rounds/s | threaded {thr_rps:>9.0} rounds/s \
+             | mean prefix {sim_prefix:.2} | modeled {sim_modeled:.4}s | real {real:.4}s"
+        );
+        entries.push(
+            Json::obj()
+                .str("regime", name)
+                .num("sim_rounds_per_sec", sim_rps)
+                .num("threaded_rounds_per_sec", thr_rps)
+                .num("decode_prefix_mean", sim_prefix)
+                .num("modeled_time_total_s", sim_modeled)
+                .num("threaded_real_s", real)
+                .build(),
+        );
+    }
+    let out = Json::obj()
+        .str("bench", "backend_parity")
+        .num("rounds", rounds as f64)
+        .field("regimes", Json::Arr(entries))
+        .build();
+    write_json_file(std::path::Path::new("BENCH_pr4.json"), &out)
+        .expect("write BENCH_pr4.json");
+    println!("wrote BENCH_pr4.json");
+}

@@ -2,22 +2,24 @@
 //!
 //! 1. On the simulated clock: uncoded sI-ADMM vs csI-ADMM under a slow
 //!    ECN per agent — coded runs dodge the straggler delay ε.
-//! 2. On real OS threads: a `ThreadedEcnPool` with one sleeping ECN —
-//!    the agent decodes from the R fastest responses and returns before
-//!    the straggler wakes up.
+//! 2. On real OS threads: a `ThreadedBackend` under the slow-node
+//!    latency regime — the agent decodes from the R fastest responses
+//!    and returns before the slow worker's sleep ends.
 //!
 //! ```bash
 //! cargo run --release --offline --example straggler_tolerance
 //! ```
 
-use csadmm::coding::{CyclicRepetition, SchemeKind};
+use csadmm::coding::SchemeKind;
 use csadmm::coordinator::{Algorithm, Driver, RunConfig};
 use csadmm::data::synthetic_small;
-use csadmm::ecn::{ResponseModel, ThreadedEcnPool};
+use csadmm::ecn::{GradientBackend, ResponseModel, RoundOutcome, ThreadedBackend};
+use csadmm::latency::{LatencyKind, LatencySpec};
 use csadmm::linalg::Matrix;
+use csadmm::problem::ObjectiveKind;
+use csadmm::rng::Xoshiro256pp;
 use csadmm::runtime::NativeEngine;
 use csadmm::util::table::{fnum, Table};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() -> csadmm::Result<()> {
@@ -66,20 +68,39 @@ fn main() -> csadmm::Result<()> {
     t.print();
 
     // --- Part 2: real threads ----------------------------------------
-    println!("threaded: ECN 2 sleeps 200 ms; coded round must not wait for it");
-    let code = Arc::new(CyclicRepetition::new(4, 1, 9)?);
-    let mut pool = ThreadedEcnPool::new(ds.train.slice(0, 240), code, 10)?;
-    pool.inject_delay[2] = Duration::from_millis(200);
+    println!("threaded backend: one 2000x-slow ECN; coded round must not wait for it");
+    let latency = LatencySpec {
+        kind: LatencyKind::SlowNode { n_slow: 1, factor: 2_000.0 },
+        ..Default::default()
+    };
+    let mut backend = ThreadedBackend::with_time_scale(
+        0,
+        ObjectiveKind::LeastSquares,
+        ds.train.slice(0, 240),
+        SchemeKind::Cyclic,
+        1, // S: tolerated stragglers
+        9, // code seed
+        4, // K ECNs (= 4 worker threads)
+        10,
+        ResponseModel::default(),
+        &latency,
+        Xoshiro256pp::seed_from_u64(9),
+        4.0, // real seconds per modeled second: slow sleep in the 100s of ms
+    )?;
     let x = Matrix::zeros(3, 1);
     let t0 = Instant::now();
-    let (grad, used) = pool.gradient_round(&x, 0)?;
+    let res = match backend.round(&x, 0, 0.0, &mut NativeEngine::new())? {
+        RoundOutcome::Decoded(r) => r,
+        other => panic!("expected a decoded round, got {other:?}"),
+    };
     let elapsed = t0.elapsed();
     println!(
-        "decoded from {used}/4 responses in {elapsed:?} (grad norm {:.4})",
-        grad.norm()
+        "decoded from {}/4 responses in {elapsed:?} (grad norm {:.4})",
+        res.responses_used,
+        res.grad.norm()
     );
-    assert!(used < 4, "decoded before the straggler responded");
+    assert!(res.responses_used < 4, "decoded before the slow worker responded");
     assert!(elapsed < Duration::from_millis(150));
-    println!("OK: coded round returned {:?} before the 200 ms straggler", elapsed);
+    println!("OK: coded round returned in {elapsed:?}, slow worker still sleeping");
     Ok(())
 }

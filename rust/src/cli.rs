@@ -17,7 +17,7 @@ usage: csadmm <command> [--quick] [--pjrt] [--artifacts <dir>]
 
 commands:
   run [--config <file>] [--seed N] [--objective <obj>] [--latency <lat>]
-                                   one experiment from a config file
+      [--backend <be>]             one experiment from a config file
                                    (default: examples/configs/quickstart.toml,
                                    resolved relative to the working dir)
   table1                           Table I dataset inventory
@@ -26,8 +26,13 @@ commands:
   fig6                             wall-clock time-to-eps per latency
                                    regime (coded vs uncoded across the
                                    straggler zoo + fail-stop scenario)
+  fig6-backend                     backend cross-check: the fig6 slow-node
+                                   comparison on the simulated AND the
+                                   real-thread backend — identical traces,
+                                   real wall-clock measured on threads
   sweep [--config <file>] [--workers N] [--out <file>]
         [--objective <obj>[,<obj>...]] [--latency <lat>[,<lat>...]]
+        [--backend <be>[,<be>...]]
                                    parallel parameter grid: expands the
                                    [sweep] section of the config (or a
                                    built-in 24-job demo grid) and runs it
@@ -38,12 +43,16 @@ commands:
                                    --objective overrides the loss-zoo
                                    axis, e.g. --objective ls,logistic;
                                    --latency overrides the straggler-zoo
-                                   axis, e.g. --latency uniform,pareto
+                                   axis, e.g. --latency uniform,pareto;
+                                   --backend overrides the backend axis,
+                                   e.g. --backend sim,threaded
   all                              every experiment above
 
 objectives (<obj>): ls (least squares, Eq. 24) | logistic | huber | enet
 latency regimes (<lat>): uniform (paper baseline) | shifted-exp | pareto
-                         | slownode | bimodal   (params via [latency])";
+                         | slownode | bimodal   (params via [latency])
+backends (<be>): sim (simulated clock, default) | threaded (one real OS
+                 thread per ECN; same decoded bytes, real wall-clock)";
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]

@@ -25,7 +25,7 @@ pub use parser::{ConfigDoc, Value};
 use crate::coding::SchemeKind;
 use crate::coordinator::{Algorithm, RunConfig, TopologyKind};
 use crate::data::DatasetName;
-use crate::ecn::ResponseModel;
+use crate::ecn::{BackendKind, ResponseModel};
 use crate::error::{Error, Result};
 use crate::graph::TraversalKind;
 use crate::latency::{ClockSpec, FaultSpec, LatencyKind, LatencySpec};
@@ -209,6 +209,11 @@ pub fn run_config_from_doc(doc: &ConfigDoc) -> Result<(RunConfig, DatasetName)> 
         dataset = DatasetName::parse(&v)
             .ok_or_else(|| Error::Config(format!("unknown dataset '{v}'")))?;
     }
+    if let Some(v) = doc.get_str(sec, "backend") {
+        cfg.backend = BackendKind::parse(&v).ok_or_else(|| {
+            Error::Config(format!("unknown backend '{v}' (expected sim or threaded)"))
+        })?;
+    }
     if let Some(v) = doc.get_str(sec, "traversal") {
         cfg.traversal = match v.as_str() {
             "hamiltonian" => TraversalKind::Hamiltonian,
@@ -332,6 +337,19 @@ delay = 0.01
         assert_eq!(cfg.n_agents, RunConfig::default().n_agents);
         assert_eq!(ds, DatasetName::Synthetic);
         assert_eq!(cfg.latency, LatencySpec::default());
+        assert_eq!(cfg.backend, BackendKind::Sim);
+    }
+
+    #[test]
+    fn backend_key_round_trip() {
+        let doc = ConfigDoc::parse("[run]\nbackend = threaded\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.backend, BackendKind::Threaded);
+        let doc = ConfigDoc::parse("[run]\nbackend = sim\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.backend, BackendKind::Sim);
+        let bad = ConfigDoc::parse("[run]\nbackend = quantum\n").unwrap();
+        assert!(run_config_from_doc(&bad).is_err());
     }
 
     #[test]

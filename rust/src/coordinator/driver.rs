@@ -5,11 +5,14 @@
 use crate::admm::{iadmm_step, AdmmParams, ConsensusState};
 use crate::coding::SchemeKind;
 use crate::data::{shard_to_agents, Dataset};
-use crate::ecn::{CommModel, EcnPool, ResponseModel, RoundOutcome, SimClock};
+use crate::ecn::{
+    BackendKind, CommModel, EcnPool, GradientBackend, ResponseModel, RoundOutcome, SimBackend,
+    SimClock, ThreadedBackend,
+};
 use crate::error::{Error, Result};
 use crate::graph::{Topology, Traversal, TraversalKind};
 use crate::latency::LatencySpec;
-use crate::metrics::{accuracy, test_mse, CommCost, Trace, TracePoint};
+use crate::metrics::{accuracy, CommCost, Trace, TracePoint};
 use crate::problem::{
     reference_cache_key, reference_optimum, reference_optimum_cached, Objective, ObjectiveKind,
 };
@@ -84,6 +87,12 @@ pub struct RunConfig {
     /// faults, decode deadline); the default Uniform spec reproduces
     /// the paper's benign timing byte-for-byte.
     pub latency: LatencySpec,
+    /// Gradient-round execution backend (`[run] backend` /
+    /// `--backend`): the simulated clock (default) or one real OS
+    /// thread per ECN. Both decode to the same bytes; the threaded
+    /// backend additionally reports real wall-clock through
+    /// [`Driver::backend_real_elapsed`].
+    pub backend: BackendKind,
     /// Agent-link communication-time model.
     pub comm: CommModel,
     pub max_iters: usize,
@@ -113,6 +122,7 @@ impl Default for RunConfig {
             c_gamma: None,
             response: ResponseModel::default(),
             latency: LatencySpec::default(),
+            backend: BackendKind::Sim,
             comm: CommModel::default(),
             max_iters: 2_000,
             eval_every: 20,
@@ -175,13 +185,14 @@ impl RunConfig {
     }
 }
 
-/// A fully-assembled experiment (network + agents + pools + state),
-/// generic over the agents' [`Objective`].
+/// A fully-assembled experiment (network + agents + backends + state),
+/// generic over the agents' [`Objective`] *and* over the gradient-round
+/// execution backend ([`GradientBackend`]).
 pub struct Driver {
     cfg: RunConfig,
     topo: Topology,
     objectives: Vec<Rc<dyn Objective>>,
-    pools: Vec<EcnPool>,
+    pools: Vec<Box<dyn GradientBackend>>,
     /// Reference optimum for the accuracy metric (Eq. 23): closed form
     /// for least squares, cached full-gradient solve otherwise.
     xstar: Option<crate::linalg::Matrix>,
@@ -218,22 +229,48 @@ impl Driver {
             Algorithm::CsIAdmm(_) => cfg.s_tolerated,
             _ => 0,
         };
-        let mut pools = Vec::with_capacity(cfg.n_agents);
+        let mut pools: Vec<Box<dyn GradientBackend>> = Vec::with_capacity(cfg.n_agents);
         let mut objectives: Vec<Rc<dyn Objective>> = Vec::with_capacity(cfg.n_agents);
         for shard in shards {
-            let code = scheme.build(cfg.k_ecn, s_design, cfg.seed ^ shard.agent as u64)?;
+            let code_seed = cfg.seed ^ shard.agent as u64;
             let pool_rng = rng.split();
-            let obj = cfg.objective.build(shard.data);
-            pools.push(EcnPool::with_latency(
-                shard.agent,
-                Rc::clone(&obj),
-                code,
-                per_part,
-                cfg.response.clone(),
-                &cfg.latency,
-                pool_rng,
-            )?);
-            objectives.push(obj);
+            match cfg.backend {
+                BackendKind::Sim => {
+                    let code = scheme.build(cfg.k_ecn, s_design, code_seed)?;
+                    let obj = cfg.objective.build(shard.data);
+                    pools.push(Box::new(SimBackend::new(EcnPool::with_latency(
+                        shard.agent,
+                        Rc::clone(&obj),
+                        code,
+                        per_part,
+                        cfg.response.clone(),
+                        &cfg.latency,
+                        pool_rng,
+                    )?)));
+                    objectives.push(obj);
+                }
+                BackendKind::Threaded => {
+                    // The coordinator-side objective (reference optimum,
+                    // exact-ADMM path, smoothness floor) and the worker
+                    // threads' objectives are built from the same shard
+                    // bytes, so the two backends' numerics coincide.
+                    let obj = cfg.objective.build(shard.data.clone());
+                    pools.push(Box::new(ThreadedBackend::new(
+                        shard.agent,
+                        cfg.objective,
+                        shard.data,
+                        scheme,
+                        s_design,
+                        code_seed,
+                        cfg.k_ecn,
+                        per_part,
+                        cfg.response.clone(),
+                        &cfg.latency,
+                        pool_rng,
+                    )?));
+                    objectives.push(obj);
+                }
+            }
         }
         // Reference optimum x* (Eq. 23): least squares takes the
         // closed-form normal equations; other losses run the cached
@@ -277,6 +314,19 @@ impl Driver {
     /// when no reference is available for the configured objective).
     pub fn xstar(&self) -> Option<&crate::linalg::Matrix> {
         self.xstar.as_ref()
+    }
+
+    /// Total *real* wall-clock the gradient backends spent inside
+    /// rounds, summed over agents — `Some` only for backends that run
+    /// on genuine hardware parallelism (`--backend threaded`); `None`
+    /// for the simulated backend, whose rounds take no real time worth
+    /// measuring. This is the number the `fig6-backend` cross-check and
+    /// `benches/backend_parity.rs` report next to the simulated clock.
+    pub fn backend_real_elapsed(&self) -> Option<std::time::Duration> {
+        self.pools
+            .iter()
+            .map(|p| p.real_elapsed())
+            .try_fold(std::time::Duration::ZERO, |acc, e| e.map(|d| acc + d))
     }
 
     /// Execute the run, producing a metrics trace.
@@ -328,8 +378,7 @@ impl Driver {
                     // timeout: the agent charges the wait and skips its
                     // update (the token still moves on).
                     let now = clock.now();
-                    let outcome =
-                        self.pools[i].gradient_round_at(&state.x[i], cycle, now, engine)?;
+                    let outcome = self.pools[i].round(&state.x[i], cycle, now, engine)?;
                     match outcome {
                         RoundOutcome::Decoded(round) => {
                             clock.advance(round.response_time);
@@ -360,7 +409,10 @@ impl Driver {
                     comm_units: comm.total(),
                     sim_time: clock.now(),
                     accuracy: accuracy(&state.x, self.xstar.as_ref())?,
-                    test_mse: test_mse(&state.z, &self.test),
+                    // Objective-routed test metric: MSE for the
+                    // regression losses, classification error for
+                    // logistic (Eq. 23's companion column).
+                    test_mse: self.objectives[0].test_loss(&state.z, &self.test),
                 });
             }
         }
@@ -438,6 +490,24 @@ mod tests {
         };
         assert!(exact.final_accuracy() < stoch.final_accuracy());
         assert!(exact.final_accuracy() < 1e-2);
+    }
+
+    /// The backend boundary is transparent: a threaded-backend run
+    /// produces the exact same trace as the simulated default (same
+    /// draws, same decode walk), while real wall-clock actually
+    /// elapses on the worker threads.
+    #[test]
+    fn threaded_backend_trace_matches_sim_backend() {
+        let ds = ds();
+        let sim_cfg = RunConfig { max_iters: 200, eval_every: 40, ..base_cfg() };
+        let thr_cfg = RunConfig { backend: BackendKind::Threaded, ..sim_cfg.clone() };
+        let sim_driver = &mut Driver::new(sim_cfg, &ds).unwrap();
+        let t_sim = sim_driver.run(&mut NativeEngine::new()).unwrap();
+        assert!(sim_driver.backend_real_elapsed().is_none(), "sim reports no real time");
+        let thr_driver = &mut Driver::new(thr_cfg, &ds).unwrap();
+        let t_thr = thr_driver.run(&mut NativeEngine::new()).unwrap();
+        assert_eq!(t_sim.points, t_thr.points, "backend must not perturb the trace");
+        assert!(thr_driver.backend_real_elapsed().unwrap() > std::time::Duration::ZERO);
     }
 
     #[test]

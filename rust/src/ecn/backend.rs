@@ -1,0 +1,197 @@
+//! Backend-unified gradient-round execution.
+//!
+//! The coordinator's token loop needs exactly one thing from an agent's
+//! ECN fleet: "run one coded gradient round for `x` at cycle `m` and
+//! simulated time `now`". [`GradientBackend`] is that contract, with
+//! two first-class implementations:
+//!
+//! * [`SimBackend`] — wraps the simulated [`EcnPool`]; the paper's
+//!   timing studies and the default path. Byte-identical to calling
+//!   [`EcnPool::gradient_round_at`] directly (it *is* that call), so
+//!   the blessed golden trace pins its numerics.
+//! * [`ThreadedBackend`](super::ThreadedBackend) — one real OS thread
+//!   per ECN with objective-generic gradients, injected service delays
+//!   scaled from the *same* latency-model draws, fail-stop faults,
+//!   `recv_timeout`-watchdogged channel waits and the same
+//!   [`RoundOutcome`] deadline semantics. Decodes to the same bytes as
+//!   [`SimBackend`] (the draws, arrival order and decode walk are
+//!   shared), while the wall clock genuinely elapses on hardware —
+//!   see [`GradientBackend::real_elapsed`].
+//!
+//! [`BackendKind`] is the config/CLI selector (`[run] backend`,
+//! `--backend sim|threaded`) and the `[sweep] backend` axis element.
+
+use super::pool::{EcnPool, RoundOutcome};
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::runtime::Engine;
+use std::time::Duration;
+
+/// Config/CLI-level execution-backend selector.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Simulated clock ([`SimBackend`]) — the paper's setting and the
+    /// default; response times are model draws, nothing sleeps.
+    #[default]
+    Sim,
+    /// Real OS threads ([`super::ThreadedBackend`]) — one thread per
+    /// ECN, service delays injected as scaled real sleeps from the same
+    /// model draws.
+    Threaded,
+}
+
+impl BackendKind {
+    /// Parse a config/CLI token.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sim" | "simulated" => Some(BackendKind::Sim),
+            "threaded" | "threads" | "real" => Some(BackendKind::Threaded),
+            _ => None,
+        }
+    }
+
+    /// Short token used in sweep cell labels and tables.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Sim => "sim",
+            BackendKind::Threaded => "threaded",
+        }
+    }
+}
+
+/// One agent's gradient-round executor — the coordinator/ECN boundary.
+///
+/// Implementations must be deterministic functions of the construction
+/// seed and the call sequence: for the same config, every backend
+/// returns the same [`RoundOutcome`] bytes (the wall-clock backends may
+/// *take* different real time, which they report separately through
+/// [`Self::real_elapsed`]).
+pub trait GradientBackend {
+    /// Run one coded gradient round for iterate `x` at cycle index
+    /// `m = ⌊k/N⌋` and simulated time `now`. `engine` is the
+    /// coordinator-side compute engine; backends with their own
+    /// per-worker engines (the threaded backend) may ignore it.
+    fn round(
+        &mut self,
+        x: &Matrix,
+        cycle: usize,
+        now: f64,
+        engine: &mut dyn Engine,
+    ) -> Result<RoundOutcome>;
+
+    /// Owning agent id.
+    fn agent(&self) -> usize;
+
+    /// Effective mini-batch rows per round (distinct examples).
+    fn effective_batch(&self) -> usize;
+
+    /// Backend name for logs/JSON.
+    fn name(&self) -> &'static str;
+
+    /// Cumulative *real* wall-clock spent inside [`Self::round`], when
+    /// the backend runs on genuine hardware parallelism (`None` for
+    /// purely simulated backends).
+    fn real_elapsed(&self) -> Option<Duration> {
+        None
+    }
+}
+
+/// The simulated backend: a transparent wrapper over [`EcnPool`].
+pub struct SimBackend {
+    pool: EcnPool,
+}
+
+impl SimBackend {
+    /// Wrap a simulated pool.
+    pub fn new(pool: EcnPool) -> Self {
+        Self { pool }
+    }
+
+    /// The wrapped pool (tests / inspection).
+    pub fn pool(&self) -> &EcnPool {
+        &self.pool
+    }
+}
+
+impl GradientBackend for SimBackend {
+    fn round(
+        &mut self,
+        x: &Matrix,
+        cycle: usize,
+        now: f64,
+        engine: &mut dyn Engine,
+    ) -> Result<RoundOutcome> {
+        self.pool.gradient_round_at(x, cycle, now, engine)
+    }
+
+    fn agent(&self) -> usize {
+        self.pool.agent()
+    }
+
+    fn effective_batch(&self) -> usize {
+        self.pool.effective_batch()
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_round_trips_as_str() {
+        for token in ["sim", "threaded"] {
+            let kind = BackendKind::parse(token).unwrap();
+            assert_eq!(kind.as_str(), token);
+        }
+        assert_eq!(BackendKind::parse("real"), Some(BackendKind::Threaded));
+        assert!(BackendKind::parse("nope").is_none());
+        assert_eq!(BackendKind::default(), BackendKind::Sim);
+    }
+
+    #[test]
+    fn sim_backend_is_byte_identical_to_direct_pool_call() {
+        use crate::coding::CyclicRepetition;
+        use crate::data::synthetic_small;
+        use crate::ecn::ResponseModel;
+        use crate::problem::LeastSquares;
+        use crate::rng::Xoshiro256pp;
+        use crate::runtime::NativeEngine;
+        use std::rc::Rc;
+
+        let make_pool = || {
+            EcnPool::new(
+                0,
+                Rc::new(LeastSquares::new(synthetic_small(240, 20, 0.1, 13).train)),
+                Box::new(CyclicRepetition::new(4, 1, 5).unwrap()),
+                8,
+                ResponseModel { straggler_count: 1, ..Default::default() },
+                Xoshiro256pp::seed_from_u64(21),
+            )
+            .unwrap()
+        };
+        let mut direct = make_pool();
+        let mut wrapped = SimBackend::new(make_pool());
+        assert_eq!(wrapped.agent(), 0);
+        assert_eq!(wrapped.effective_batch(), direct.effective_batch());
+        let x = Matrix::full(3, 1, 0.3);
+        let mut eng = NativeEngine::new();
+        for cycle in 0..4 {
+            let a = match direct.gradient_round_at(&x, cycle, 0.0, &mut eng).unwrap() {
+                RoundOutcome::Decoded(r) => r,
+                other => panic!("expected decode, got {other:?}"),
+            };
+            let b = match wrapped.round(&x, cycle, 0.0, &mut eng).unwrap() {
+                RoundOutcome::Decoded(r) => r,
+                other => panic!("expected decode, got {other:?}"),
+            };
+            assert_eq!(a.grad, b.grad, "cycle {cycle}");
+            assert_eq!(a.response_time.to_bits(), b.response_time.to_bits());
+            assert_eq!(a.responses_used, b.responses_used);
+            assert!(wrapped.real_elapsed().is_none());
+        }
+    }
+}

@@ -18,15 +18,23 @@
 //!   13–20 / Alg. 2 steps 12–19) on a simulated clock;
 //!   [`EcnPool::gradient_round_at`] is the timeout-aware variant
 //!   ([`RoundOutcome`]) that drives fault windows and the deadline
-//!   policy.
-//! * [`ThreadedEcnPool`] — the same round on real OS threads (one per
-//!   ECN) with arrival-order decoding, proving the coded path composes
-//!   with true parallelism; used by examples and integration tests.
+//!   policy, and [`EcnPool::draw_arrivals`] is the shared per-round
+//!   arrival-time sampler both backends consume.
+//! * [`GradientBackend`] — the coordinator/ECN execution boundary
+//!   ([`BackendKind`] selects it via `[run] backend` / `--backend`):
+//!   [`SimBackend`] wraps the simulated pool byte-identically, and
+//!   [`ThreadedBackend`] runs the same round on one real OS thread per
+//!   ECN — objective-generic gradients, latency-zoo service delays as
+//!   scaled real sleeps from the same model draws, fail-stop faults,
+//!   `recv_timeout`-watchdogged channel waits, and the same
+//!   [`RoundOutcome`] deadline semantics.
 
+mod backend;
 mod clock;
 mod pool;
 mod threaded;
 
+pub use backend::{BackendKind, GradientBackend, SimBackend};
 pub use clock::{CommModel, SimClock};
-pub use pool::{EcnPool, ResponseModel, RoundOutcome, RoundResult};
-pub use threaded::ThreadedEcnPool;
+pub use pool::{ArrivalDraw, EcnPool, ResponseModel, RoundOutcome, RoundResult};
+pub use threaded::ThreadedBackend;

@@ -61,9 +61,11 @@ pub struct RoundResult {
 }
 
 /// Outcome of a timeout-aware gradient round
-/// ([`EcnPool::gradient_round_at`]): either a decoded gradient or a
-/// deadline expiry (fail-stop faults / pathological tails kept the
-/// round undecodable for `deadline` seconds and the agent gave it up).
+/// ([`EcnPool::gradient_round_at`] /
+/// [`GradientBackend::round`](super::GradientBackend::round)): either a
+/// decoded gradient or a deadline expiry (fail-stop faults /
+/// pathological tails kept the round undecodable for `deadline` seconds
+/// and the agent gave it up).
 #[derive(Clone, Debug)]
 pub enum RoundOutcome {
     /// The round decoded; proceed with the ADMM update.
@@ -72,6 +74,23 @@ pub enum RoundOutcome {
     /// the agent abandons this round's gradient, charging the full
     /// `elapsed = deadline` wait.
     TimedOut { elapsed: f64 },
+}
+
+/// One ECN's drawn response for a round: the modeled arrival time (on
+/// the simulated clock; `f64::INFINITY` for a fail-stopped node), the
+/// ECN index and whether the ε-injection straggler delay was applied.
+///
+/// Produced in arrival order by [`EcnPool::draw_arrivals`]; both the
+/// simulated decode loop and the real-thread backend consume the same
+/// draws, which is what keeps the two backends byte-identical.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrivalDraw {
+    /// Modeled response time (seconds on the simulated clock).
+    pub t: f64,
+    /// Responding ECN index.
+    pub ecn: usize,
+    /// Whether this response paid the straggler delay ε.
+    pub straggler: bool,
 }
 
 /// One agent's pool of K ECNs over the agent's local [`Objective`].
@@ -190,6 +209,69 @@ impl EcnPool {
         self.code.k() * self.cursors[0].batch_rows()
     }
 
+    /// Per-round decode deadline (seconds), if configured.
+    pub fn deadline(&self) -> Option<f64> {
+        self.deadline
+    }
+
+    /// Absolute row ranges (into the agent's shard) ECN `ecn` processes
+    /// at cycle `cycle` — one `(lo, hi)` per assigned partition, in
+    /// assignment order. This is the work order a real ECN worker
+    /// receives from the agent each round.
+    pub fn batch_ranges(&self, ecn: usize, cycle: usize) -> Vec<(usize, usize)> {
+        self.code
+            .assignment(ecn)
+            .iter()
+            .map(|&p| {
+                let (blo, bhi) = self.cursors[p].batch_range(cycle);
+                (self.partitions[p].lo + blo, self.partitions[p].lo + bhi)
+            })
+            .collect()
+    }
+
+    /// Sample this round's per-ECN response times at simulated time
+    /// `now` (straggler ε-injection, service-time regime, clocks,
+    /// fail-stop windows), returning them in arrival order (NaN-safe
+    /// `total_cmp`, ECN-index tie-break — deterministic).
+    ///
+    /// This is the *only* stochastic part of a gradient round, so both
+    /// backends route through it: the simulated decode loop consumes the
+    /// draws directly, and [`super::ThreadedBackend`] turns the same
+    /// draws into scaled real sleeps — which is what keeps the two
+    /// backends' decoded bytes identical.
+    pub fn draw_arrivals(&mut self, now: f64) -> Vec<ArrivalDraw> {
+        let k = self.code.k();
+        let stragglers: Vec<usize> = if self.response.straggler_count > 0 {
+            self.rng.sample_indices(k, self.response.straggler_count.min(k))
+        } else {
+            vec![]
+        };
+        let mut arrivals: Vec<ArrivalDraw> = (0..k)
+            .map(|j| {
+                // Charge each ECN for the rows of *its own* assigned
+                // partitions (cursors can differ per partition; do not
+                // assume cursor 0's geometry).
+                let rows: usize = self
+                    .code
+                    .assignment(j)
+                    .iter()
+                    .map(|&p| self.cursors[p].batch_rows())
+                    .sum();
+                let straggler = stragglers.contains(&j);
+                let mut t = self.nodes[j].response_time(rows, now, &mut self.rng);
+                if straggler {
+                    t += self.response.straggler_delay;
+                }
+                ArrivalDraw { t, ecn: j, straggler }
+            })
+            .collect();
+        // Arrival order. `total_cmp` is NaN-safe (a degenerate response
+        // model must not panic the round); ties break on the ECN index
+        // so arrival order stays deterministic.
+        arrivals.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.ecn.cmp(&b.ecn)));
+        arrivals
+    }
+
     /// Run one gradient round at cycle index `m = ⌊k/N⌋`:
     /// broadcast `x`, compute per-partition gradients on the selected
     /// batches, encode per ECN, simulate response times, decode from the
@@ -261,44 +343,18 @@ impl EcnPool {
                 }
             }
         }
-        // 2. Encode per ECN + sample response times through each node's
-        //    latency state (service-time model, clock, fault window).
-        let stragglers: Vec<usize> = if self.response.straggler_count > 0 {
-            self.rng.sample_indices(k, self.response.straggler_count.min(k))
-        } else {
-            vec![]
-        };
-        let mut responses: Vec<(f64, usize, Matrix, bool)> = (0..k)
-            .map(|j| {
-                let partial: Vec<&Matrix> =
-                    self.code.assignment(j).iter().map(|&p| &self.part_grads[p]).collect();
-                let coded = self.code.encode(j, &partial);
-                // Charge each ECN for the rows of *its own* assigned
-                // partitions (cursors can differ per partition; do not
-                // assume cursor 0's geometry).
-                let rows: usize = self
-                    .code
-                    .assignment(j)
-                    .iter()
-                    .map(|&p| self.cursors[p].batch_rows())
-                    .sum();
-                let is_straggler = stragglers.contains(&j);
-                let mut t = self.nodes[j].response_time(rows, now, &mut self.rng);
-                if is_straggler {
-                    t += self.response.straggler_delay;
-                }
-                (t, j, coded, is_straggler)
-            })
-            .collect();
-        // 3. Arrival order. `total_cmp` is NaN-safe (a degenerate
-        // response model must not panic the round); ties break on the
-        // ECN index so arrival order stays deterministic.
-        responses.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-        // 4. Decode from the earliest decodable prefix (paper: wait for
+        // 2. Sample response times through each node's latency state
+        //    (service-time model, clock, fault window), sorted into
+        //    arrival order.
+        let arrivals = self.draw_arrivals(now);
+        // 3. Decode from the earliest decodable prefix (paper: wait for
         //    the R-th fastest; uncoded degenerates to all K). Arrivals
         //    past the deadline — and down nodes, which "arrive" at
         //    t = ∞ — are never consumed; the list is sorted, so the
-        //    first such arrival ends the wait.
+        //    first such arrival ends the wait. Encoding happens lazily
+        //    per consumed arrival (pure per-ECN linear combination of
+        //    the shared partition gradients, so the bytes are identical
+        //    to encoding everything up front).
         let r = self.code.r();
         let mut arrived: Vec<(usize, Matrix)> = Vec::with_capacity(k);
         let mut used = 0;
@@ -306,15 +362,17 @@ impl EcnPool {
         let mut waited_for_straggler = false;
         let mut saw_unreachable = false;
         let mut decoded: Option<Matrix> = None;
-        for (t, j, coded, is_straggler) in responses {
+        for ArrivalDraw { t, ecn: j, straggler } in arrivals {
             if !t.is_finite() || self.deadline.is_some_and(|d| t > d) {
                 saw_unreachable |= !t.is_finite();
                 break;
             }
-            arrived.push((j, coded));
+            let partial: Vec<&Matrix> =
+                self.code.assignment(j).iter().map(|&p| &self.part_grads[p]).collect();
+            arrived.push((j, self.code.encode(j, &partial)));
             used += 1;
             response_time = t;
-            waited_for_straggler |= is_straggler;
+            waited_for_straggler |= straggler;
             if used < r {
                 continue;
             }

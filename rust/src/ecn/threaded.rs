@@ -1,170 +1,702 @@
-//! Real-thread ECN pool: one OS thread per ECN, arrival-order decoding.
+//! Real-thread ECN backend: one long-lived OS thread per ECN.
 //!
-//! The simulated [`super::EcnPool`] drives the paper's timing studies;
-//! this pool demonstrates the same coded round on genuine parallel
-//! hardware — gradients are computed concurrently, responses arrive over
-//! an mpsc channel in true completion order, and the agent decodes as
-//! soon as the earliest decodable prefix is in. Used by the
-//! `straggler_tolerance` example and integration tests.
+//! [`ThreadedBackend`] is the wall-clock twin of [`super::SimBackend`]:
+//! the same coded gradient round — objective-
+//! generic gradients, straggler ε-injection, the latency zoo, fail-stop
+//! faults and the decode-deadline policy — executed on genuine parallel
+//! hardware instead of a simulated clock.
+//!
+//! Design for byte parity with the simulated backend:
+//!
+//! * **Same draws.** Response times come from the shared
+//!   [`EcnPool::draw_arrivals`] sampler (service-time model × clock ×
+//!   fault window × ε-injection), so the modeled timing of every round
+//!   is bit-identical to the simulated backend's.
+//! * **Same decode walk.** The agent consumes responses in the drawn
+//!   arrival order (the draws *are* the response timestamps), decoding
+//!   from the earliest decodable prefix — it never waits for ECNs past
+//!   that prefix, which is exactly the straggler tolerance the paper
+//!   claims, now on real threads.
+//! * **Real waits.** Each worker computes its coded partial gradient on
+//!   its own thread (own [`NativeEngine`] + own objective instance over
+//!   a clone of the shard) and *sleeps* its drawn service time scaled
+//!   by [`ThreadedBackend::time_scale`] before responding over an mpsc
+//!   channel. The coordinator genuinely blocks on channel receives,
+//!   under a `recv_timeout` watchdog: a worker thread that died without
+//!   responding surfaces as an error instead of hanging the round. The
+//!   `[latency] deadline` policy itself is decided by the *modeled*
+//!   arrival times — exactly like the simulated backend — and resolves
+//!   to the same [`RoundOutcome::TimedOut`]; tying it to the real clock
+//!   instead would let scheduler noise break the byte-parity contract.
+//!
+//! Fail-stopped ECNs (drawn arrival `t = ∞`) receive no work order and
+//! are never waited on; the drawn walk breaks before reaching them,
+//! mirroring the simulated policy. Cumulative real wall-clock spent
+//! inside rounds is reported through
+//! [`GradientBackend::real_elapsed`] — that is the number the
+//! `fig6-backend` experiment and `benches/backend_parity.rs` measure.
 
-use crate::coding::GradientCode;
-use crate::data::{partition_to_ecns, BatchCursor, Split};
+use super::backend::GradientBackend;
+use super::pool::{ArrivalDraw, EcnPool, ResponseModel, RoundOutcome, RoundResult};
+use crate::coding::{GradientCode, SchemeKind};
+use crate::data::Split;
 use crate::error::{Error, Result};
+use crate::latency::LatencySpec;
 use crate::linalg::Matrix;
+use crate::problem::ObjectiveKind;
+use crate::rng::Xoshiro256pp;
 use crate::runtime::{Engine, NativeEngine};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-/// Thread-parallel ECN pool over one agent's shard.
-pub struct ThreadedEcnPool {
-    data: Arc<Split>,
-    code: Arc<dyn GradientCode>,
-    cursors: Vec<BatchCursor>,
-    part_lo: Vec<usize>,
-    /// Artificial per-ECN delay injected before responding (for
-    /// straggler demonstrations); indexed by ECN.
-    pub inject_delay: Vec<Duration>,
+/// Upper bound on one injected sleep (seconds of *real* time). Keeps a
+/// pathological tail draw (Pareto with α ≤ 1 has infinite mean) from
+/// parking a worker thread for minutes; the modeled time is unaffected.
+const MAX_INJECTED_SLEEP: f64 = 1.0;
+
+/// Watchdog interval for channel waits: every time it elapses without a
+/// response, the coordinator checks whether the awaited worker thread
+/// is still alive (an alive worker always responds eventually — sleeps
+/// are capped — so only a dead one justifies giving the round up).
+const WORKER_WATCHDOG: Duration = Duration::from_millis(500);
+
+/// Granularity of worker sleeps: injected delays are slept in slices
+/// with a staleness re-check between them, so a round the coordinator
+/// already resolved (or a backend being dropped) interrupts a long
+/// sleep within one slice instead of parking the thread for up to
+/// [`MAX_INJECTED_SLEEP`].
+const SLEEP_SLICE: Duration = Duration::from_millis(50);
+
+/// One round's work order for a worker thread.
+struct WorkerRequest {
+    /// Round id (stale requests are skipped cheaply).
+    id: u64,
+    /// Broadcast iterate (shared — one allocation per round, not per
+    /// worker).
+    x: Arc<Matrix>,
+    /// Absolute row ranges to process, in assignment order.
+    ranges: Vec<(usize, usize)>,
+    /// Injected service delay (already scaled to real time).
+    sleep: Duration,
 }
 
-impl ThreadedEcnPool {
-    /// Build over an owned shard.
+/// One worker's coded response.
+struct WorkerResponse {
+    id: u64,
+    ecn: usize,
+    coded: Matrix,
+}
+
+/// Real-thread gradient backend over one agent's shard.
+pub struct ThreadedBackend {
+    /// Simulated-pool core: geometry, latency state and the rng — the
+    /// single source of every draw, shared with [`super::SimBackend`]
+    /// semantics.
+    pool: EcnPool,
+    /// Monotone round counter published to workers so stale queued
+    /// requests (rounds the coordinator already resolved) drain without
+    /// sleeping.
+    current_round: Arc<AtomicU64>,
+    req_txs: Vec<Sender<WorkerRequest>>,
+    resp_rx: Receiver<WorkerResponse>,
+    handles: Vec<JoinHandle<()>>,
+    /// Per-ECN out-of-order response buffer for the current round.
+    buffered: Vec<Option<Matrix>>,
+    /// Real seconds slept per modeled second (1.0 = the drawn times).
+    time_scale: f64,
+    round_id: u64,
+    real_elapsed: Duration,
+}
+
+impl ThreadedBackend {
+    /// Build the backend: an [`EcnPool`] core for draws/geometry plus
+    /// one worker thread per ECN, each holding its own objective
+    /// instance (built from `objective` over a clone of `shard`), its
+    /// own [`NativeEngine`] and a shared handle to the coding scheme.
+    ///
+    /// `scheme`/`s_design`/`code_seed` must match the pool's code so
+    /// worker-side encoding and coordinator-side decoding agree —
+    /// [`SchemeKind::build`] is deterministic in those inputs.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
-        data: Split,
-        code: Arc<dyn GradientCode>,
+        agent: usize,
+        objective: ObjectiveKind,
+        shard: Split,
+        scheme: SchemeKind,
+        s_design: usize,
+        code_seed: u64,
+        k_ecn: usize,
         per_partition_batch_rows: usize,
+        response: ResponseModel,
+        latency: &LatencySpec,
+        rng: Xoshiro256pp,
     ) -> Result<Self> {
-        let k = code.k();
-        let partitions = partition_to_ecns(0, data.len(), k)?;
-        let cursors = partitions
-            .iter()
-            .map(|p| BatchCursor::new(p.len(), per_partition_batch_rows))
-            .collect::<Result<Vec<_>>>()?;
-        let part_lo = partitions.iter().map(|p| p.lo).collect();
-        Ok(Self { data: Arc::new(data), code, cursors, part_lo, inject_delay: vec![Duration::ZERO; k] })
+        Self::with_time_scale(
+            agent,
+            objective,
+            shard,
+            scheme,
+            s_design,
+            code_seed,
+            k_ecn,
+            per_partition_batch_rows,
+            response,
+            latency,
+            rng,
+            1.0,
+        )
     }
 
-    /// One coded gradient round on real threads. Returns the decoded
-    /// mini-batch gradient `G` and the number of responses consumed.
-    pub fn gradient_round(&self, x: &Matrix, cycle: usize) -> Result<(Matrix, usize)> {
-        let k = self.code.k();
-        let (tx, rx) = mpsc::channel::<(usize, Matrix)>();
-        let mut handles = vec![];
-        for j in 0..k {
-            let tx = tx.clone();
-            let data = Arc::clone(&self.data);
-            let code = Arc::clone(&self.code);
-            let x = x.clone();
-            let delay = self.inject_delay[j];
-            // Snapshot this ECN's batch ranges.
-            let ranges: Vec<(usize, usize)> = code
-                .assignment(j)
-                .iter()
-                .map(|&p| {
-                    let (blo, bhi) = self.cursors[p].batch_range(cycle);
-                    (self.part_lo[p] + blo, self.part_lo[p] + bhi)
-                })
-                .collect();
-            handles.push(std::thread::spawn(move || {
-                if !delay.is_zero() {
-                    std::thread::sleep(delay);
-                }
-                let mut eng = NativeEngine::new();
-                let partials: Vec<Matrix> = ranges
-                    .iter()
-                    .map(|&(lo, hi)| {
-                        let o = data.inputs.slice_rows(lo, hi);
-                        let t = data.targets.slice_rows(lo, hi);
-                        eng.grad_batch(&o, &t, &x).expect("grad")
-                    })
-                    .collect();
-                let refs: Vec<&Matrix> = partials.iter().collect();
-                let coded = code.encode(j, &refs);
-                // Receiver may have hung up after early decode — fine.
-                let _ = tx.send((j, coded));
-            }));
+    /// [`Self::new`] with an explicit real-seconds-per-modeled-second
+    /// factor (tests and demos stretch tiny modeled delays into
+    /// robustly observable real sleeps; `0.0` disables sleeping).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_time_scale(
+        agent: usize,
+        objective: ObjectiveKind,
+        shard: Split,
+        scheme: SchemeKind,
+        s_design: usize,
+        code_seed: u64,
+        k_ecn: usize,
+        per_partition_batch_rows: usize,
+        response: ResponseModel,
+        latency: &LatencySpec,
+        rng: Xoshiro256pp,
+        time_scale: f64,
+    ) -> Result<Self> {
+        if !time_scale.is_finite() || time_scale < 0.0 {
+            return Err(Error::Config(format!(
+                "threaded backend time_scale must be finite and >= 0, got {time_scale}"
+            )));
         }
-        drop(tx);
+        // Worker-side encoder: same deterministic construction as the
+        // pool's decoder ([`GradientCode`] is `Send + Sync`).
+        let worker_code: Arc<dyn GradientCode> =
+            Arc::from(scheme.build(k_ecn, s_design, code_seed)?);
+        let current_round = Arc::new(AtomicU64::new(0));
+        let (resp_tx, resp_rx) = mpsc::channel::<WorkerResponse>();
+        let mut req_txs = Vec::with_capacity(k_ecn);
+        let mut handles = Vec::with_capacity(k_ecn);
+        for j in 0..k_ecn {
+            let (req_tx, req_rx) = mpsc::channel::<WorkerRequest>();
+            req_txs.push(req_tx);
+            let resp_tx = resp_tx.clone();
+            // Each worker owns a private objective over its own copy of
+            // the shard: per-thread instances keep the RefCell-caching
+            // objectives thread-local without demanding `Sync` of the
+            // whole zoo. (K copies of one agent's shard — the price of
+            // genuinely independent edge nodes.)
+            let worker_shard = shard.clone();
+            let code = Arc::clone(&worker_code);
+            let current = Arc::clone(&current_round);
+            let handle = std::thread::Builder::new()
+                .name(format!("csadmm-ecn-{agent}-{j}"))
+                .spawn(move || {
+                    worker_loop(j, objective, worker_shard, code, req_rx, resp_tx, current)
+                })
+                .map_err(|e| Error::Runtime(format!("spawning ECN worker {j}: {e}")))?;
+            handles.push(handle);
+        }
+        // The pool core's objective only provides geometry (row counts)
+        // to the draw path — build it from the original shard, moved.
+        let pool = EcnPool::with_latency(
+            agent,
+            objective.build(shard),
+            scheme.build(k_ecn, s_design, code_seed)?,
+            per_partition_batch_rows,
+            response,
+            latency,
+            rng,
+        )?;
+        Ok(Self {
+            buffered: (0..k_ecn).map(|_| None).collect(),
+            pool,
+            current_round,
+            req_txs,
+            resp_rx,
+            handles,
+            time_scale,
+            round_id: 0,
+            real_elapsed: Duration::ZERO,
+        })
+    }
 
-        let r = self.code.r();
+    /// Real seconds slept per modeled second.
+    pub fn time_scale(&self) -> f64 {
+        self.time_scale
+    }
+
+    /// The simulated-pool core (inspection/tests).
+    pub fn pool(&self) -> &EcnPool {
+        &self.pool
+    }
+
+    fn round_inner(&mut self, x: &Matrix, cycle: usize, now: f64) -> Result<RoundOutcome> {
+        self.round_id += 1;
+        let id = self.round_id;
+        self.current_round.store(id, Ordering::Release);
+        // Anything buffered — in the channel or in the per-ECN slots —
+        // belongs to an abandoned earlier round.
+        while self.resp_rx.try_recv().is_ok() {}
+        for slot in &mut self.buffered {
+            *slot = None;
+        }
+
+        let arrivals = self.pool.draw_arrivals(now);
+        let deadline = self.pool.deadline();
+        let k = self.pool.code().k();
+        let mut t_of = vec![f64::INFINITY; k];
+        for a in &arrivals {
+            t_of[a.ecn] = a.t;
+        }
+        // Broadcast this round's work orders. Fail-stopped nodes
+        // (t = ∞) get none: they are never waited on, and staleness is
+        // id-based, so skipping them costs nothing.
+        let x_shared = Arc::new(x.clone());
+        for (j, tx) in self.req_txs.iter().enumerate() {
+            let t = t_of[j];
+            if !t.is_finite() {
+                continue;
+            }
+            let req = WorkerRequest {
+                id,
+                x: Arc::clone(&x_shared),
+                ranges: self.pool.batch_ranges(j, cycle),
+                sleep: Duration::from_secs_f64(
+                    (t * self.time_scale).clamp(0.0, MAX_INJECTED_SLEEP),
+                ),
+            };
+            if tx.send(req).is_err() {
+                return Err(worker_died(self.pool.agent(), j));
+            }
+        }
+
+        // Decode walk: identical control flow to the simulated pool's,
+        // except each consumed arrival blocks on the worker's real
+        // response. Split borrows so the helper can take the channel +
+        // buffer while the pool stays readable.
+        let Self { ref pool, ref resp_rx, ref mut buffered, ref handles, .. } = *self;
+        let r = pool.code().r();
         let mut arrived: Vec<(usize, Matrix)> = Vec::with_capacity(k);
+        let mut used = 0;
+        let mut response_time = 0.0;
+        let mut waited_for_straggler = false;
+        let mut saw_unreachable = false;
         let mut decoded: Option<Matrix> = None;
-        for msg in rx {
-            arrived.push(msg);
-            if arrived.len() >= r {
-                if let Ok(sum) = self.code.decode(&arrived) {
+        for ArrivalDraw { t, ecn: j, straggler } in arrivals {
+            if !t.is_finite() || deadline.is_some_and(|d| t > d) {
+                saw_unreachable |= !t.is_finite();
+                break;
+            }
+            let coded = wait_for_response(resp_rx, buffered, handles, id, j)?;
+            arrived.push((j, coded));
+            used += 1;
+            response_time = t;
+            waited_for_straggler |= straggler;
+            if used < r {
+                continue;
+            }
+            match pool.code().decode(&arrived) {
+                Ok(sum) => {
                     decoded = Some(sum);
                     break;
                 }
+                Err(_) if used < k => continue,
+                Err(e) => return Err(e),
             }
         }
-        let used = arrived.len();
-        // Stragglers keep running detached; their send to the dropped
-        // receiver fails harmlessly. Joining here would re-introduce the
-        // very straggler stall the code avoids.
-        drop(handles);
-        let sum = decoded.ok_or_else(|| Error::Coding("threaded round undecodable".into()))?;
-        Ok((sum.scaled(1.0 / k as f64), used))
+        let sum = match decoded {
+            Some(sum) => sum,
+            None => {
+                return if let Some(d) = deadline {
+                    Ok(RoundOutcome::TimedOut { elapsed: d })
+                } else if saw_unreachable {
+                    Err(Error::Latency(format!(
+                        "agent {}: round stalled — fail-stopped ECNs leave no decodable \
+                         subset; set a [latency] deadline or use a coded scheme that \
+                         tolerates the failure",
+                        pool.agent()
+                    )))
+                } else {
+                    Err(Error::Coding(format!("agent {}: round undecodable", pool.agent())))
+                };
+            }
+        };
+        // G = (1/K) Σ_p g̃_p (Eq. 6).
+        let grad = sum.scaled(1.0 / k as f64);
+        Ok(RoundOutcome::Decoded(RoundResult {
+            grad,
+            response_time,
+            responses_used: used,
+            waited_for_straggler,
+        }))
     }
+}
+
+impl GradientBackend for ThreadedBackend {
+    /// Worker threads compute on private [`NativeEngine`]s (engines are
+    /// not `Send`), so a coordinator engine with *different* numerics
+    /// would silently break the sim/threaded byte-parity contract —
+    /// such engines are rejected up front. The native engine and the
+    /// offline PJRT stub (which delegates every call to the native
+    /// engine) are accepted.
+    fn round(
+        &mut self,
+        x: &Matrix,
+        cycle: usize,
+        now: f64,
+        engine: &mut dyn Engine,
+    ) -> Result<RoundOutcome> {
+        let name = engine.name();
+        if name != "native" && name != "pjrt-stub(native)" {
+            return Err(Error::Config(format!(
+                "threaded backend computes worker gradients on the native engine; \
+                 coordinator engine '{name}' would break sim/threaded byte parity — \
+                 use --backend sim with this engine"
+            )));
+        }
+        let t0 = Instant::now();
+        let out = self.round_inner(x, cycle, now);
+        self.real_elapsed += t0.elapsed();
+        out
+    }
+
+    fn agent(&self) -> usize {
+        self.pool.agent()
+    }
+
+    fn effective_batch(&self) -> usize {
+        self.pool.effective_batch()
+    }
+
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn real_elapsed(&self) -> Option<Duration> {
+        Some(self.real_elapsed)
+    }
+}
+
+impl Drop for ThreadedBackend {
+    fn drop(&mut self) {
+        // Mark every queued request stale (drains without sleeping),
+        // close the channels, then reap the threads.
+        self.current_round.store(u64::MAX, Ordering::Release);
+        self.req_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Body of one ECN worker thread: build a private objective over the
+/// shard clone and a private engine, then serve round requests until
+/// the coordinator hangs up.
+fn worker_loop(
+    ecn: usize,
+    objective: ObjectiveKind,
+    shard: Split,
+    code: Arc<dyn GradientCode>,
+    req_rx: Receiver<WorkerRequest>,
+    resp_tx: Sender<WorkerResponse>,
+    current: Arc<AtomicU64>,
+) {
+    let obj = objective.build(shard);
+    let (p, d) = obj.dims();
+    let mut engine = NativeEngine::new();
+    let mut bufs: Vec<Matrix> = Vec::new();
+    while let Ok(req) = req_rx.recv() {
+        // A round the coordinator already resolved: consume the queued
+        // request without work or sleep (lets a backlogged slow worker
+        // catch up instantly).
+        if current.load(Ordering::Acquire) > req.id {
+            continue;
+        }
+        if bufs.len() != req.ranges.len() {
+            bufs = (0..req.ranges.len()).map(|_| Matrix::zeros(p, d)).collect();
+        }
+        for (buf, &(lo, hi)) in bufs.iter_mut().zip(&req.ranges) {
+            obj.grad_rows_engine(&mut engine, &req.x, lo, hi, buf)
+                .expect("ECN worker gradient");
+        }
+        let refs: Vec<&Matrix> = bufs.iter().collect();
+        let coded = code.encode(ecn, &refs);
+        // Injected service delay — the drawn response time, realized.
+        // Sliced so staleness (round resolved, backend dropping) cuts a
+        // long sleep short within one slice.
+        let mut remaining = req.sleep;
+        while !remaining.is_zero() && current.load(Ordering::Acquire) == req.id {
+            let slice = remaining.min(SLEEP_SLICE);
+            std::thread::sleep(slice);
+            remaining = remaining.saturating_sub(slice);
+        }
+        // Receiver may be gone during shutdown — fine.
+        let _ = resp_tx.send(WorkerResponse { id: req.id, ecn, coded });
+    }
+}
+
+/// Wait for ECN `ecn`'s response to round `id`, buffering other ECNs'
+/// responses and discarding stale rounds. Every wait runs under the
+/// [`WORKER_WATCHDOG`] `recv_timeout`: when it elapses, the awaited
+/// worker's thread is checked for liveness — a dead worker is an error
+/// instead of a hang, while an alive (slow or sleeping) worker is
+/// simply waited out. The real clock never decides `TimedOut`; the
+/// modeled deadline policy in the caller does, which is what keeps the
+/// threaded bytes identical to the simulated ones under load.
+fn wait_for_response(
+    rx: &Receiver<WorkerResponse>,
+    buffered: &mut [Option<Matrix>],
+    handles: &[JoinHandle<()>],
+    id: u64,
+    ecn: usize,
+) -> Result<Matrix> {
+    if let Some(m) = buffered[ecn].take() {
+        return Ok(m);
+    }
+    loop {
+        match rx.recv_timeout(WORKER_WATCHDOG) {
+            Ok(resp) => {
+                if resp.id != id {
+                    continue;
+                }
+                if resp.ecn == ecn {
+                    return Ok(resp.coded);
+                }
+                buffered[resp.ecn] = Some(resp.coded);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if handles[ecn].is_finished() {
+                    return Err(Error::Runtime(format!(
+                        "threaded backend: ECN {ecn} worker thread died (panicked?)"
+                    )));
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                return Err(Error::Runtime(
+                    "threaded backend: ECN worker threads died (panicked?)".into(),
+                ))
+            }
+        }
+    }
+}
+
+fn worker_died(agent: usize, ecn: usize) -> Error {
+    Error::Runtime(format!("agent {agent}: ECN {ecn} worker thread died (panicked?)"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coding::{CyclicRepetition, Uncoded};
     use crate::data::synthetic_small;
-    use crate::runtime::Engine;
+    use crate::ecn::SimBackend;
+    use crate::latency::{FaultSpec, LatencyKind};
+    use crate::runtime::NativeEngine;
 
-    fn reference_grad(pool: &ThreadedEcnPool, x: &Matrix, cycle: usize) -> Matrix {
-        let k = pool.code.k();
-        let (p, d) = x.shape();
-        let mut acc = Matrix::zeros(p, d);
-        let mut eng = NativeEngine::new();
-        for pi in 0..k {
-            let (blo, bhi) = pool.cursors[pi].batch_range(cycle);
-            let (lo, hi) = (pool.part_lo[pi] + blo, pool.part_lo[pi] + bhi);
-            let o = pool.data.inputs.slice_rows(lo, hi);
-            let t = pool.data.targets.slice_rows(lo, hi);
-            acc += &eng.grad_batch(&o, &t, x).unwrap();
-        }
-        acc.scaled(1.0 / k as f64)
-    }
-
-    #[test]
-    fn threaded_uncoded_matches_reference() {
-        let ds = synthetic_small(240, 10, 0.1, 95);
-        let pool =
-            ThreadedEcnPool::new(ds.train, Arc::new(Uncoded::new(4).unwrap()), 10).unwrap();
-        let x = Matrix::full(3, 1, 0.2);
-        for cycle in 0..3 {
-            let expect = reference_grad(&pool, &x, cycle);
-            let (g, used) = pool.gradient_round(&x, cycle).unwrap();
-            assert_eq!(used, 4);
-            assert!(g.max_abs_diff(&expect) < 1e-12);
-        }
-    }
-
-    #[test]
-    fn threaded_coded_decodes_despite_slow_ecn() {
-        let ds = synthetic_small(240, 10, 0.1, 96);
-        let mut pool = ThreadedEcnPool::new(
-            ds.train,
-            Arc::new(CyclicRepetition::new(4, 1, 7).unwrap()),
-            10,
+    fn sim_twin(
+        scheme: SchemeKind,
+        s: usize,
+        latency: &LatencySpec,
+        resp: ResponseModel,
+    ) -> SimBackend {
+        let ds = synthetic_small(240, 20, 0.1, 95);
+        let obj = ObjectiveKind::LeastSquares.build(ds.train);
+        let pool = EcnPool::with_latency(
+            0,
+            obj,
+            scheme.build(4, s, 7).unwrap(),
+            8,
+            resp,
+            latency,
+            Xoshiro256pp::seed_from_u64(92),
         )
         .unwrap();
-        // ECN 2 sleeps far longer than the rest take to compute.
-        pool.inject_delay[2] = Duration::from_millis(300);
-        let x = Matrix::full(3, 1, -0.4);
-        let t0 = std::time::Instant::now();
-        let expect = reference_grad(&pool, &x, 0);
-        let (g, used) = pool.gradient_round(&x, 0).unwrap();
+        SimBackend::new(pool)
+    }
+
+    fn threaded_twin(
+        scheme: SchemeKind,
+        s: usize,
+        latency: &LatencySpec,
+        resp: ResponseModel,
+        time_scale: f64,
+    ) -> ThreadedBackend {
+        let ds = synthetic_small(240, 20, 0.1, 95);
+        ThreadedBackend::with_time_scale(
+            0,
+            ObjectiveKind::LeastSquares,
+            ds.train,
+            scheme,
+            s,
+            7,
+            4,
+            8,
+            resp,
+            latency,
+            Xoshiro256pp::seed_from_u64(92),
+            time_scale,
+        )
+        .unwrap()
+    }
+
+    /// The uniform-regime acceptance property at backend level: same
+    /// decoded bytes, same modeled timing, for round after round.
+    #[test]
+    fn threaded_matches_sim_bytes_in_uniform_regime() {
+        let latency = LatencySpec::default();
+        let resp = ResponseModel { straggler_count: 1, ..Default::default() };
+        let mut sim = sim_twin(SchemeKind::Cyclic, 1, &latency, resp.clone());
+        let mut thr = threaded_twin(SchemeKind::Cyclic, 1, &latency, resp, 0.0);
+        let x = Matrix::full(3, 1, 0.4);
+        let mut eng = NativeEngine::new();
+        for cycle in 0..5 {
+            let a = match sim.round(&x, cycle, 0.0, &mut eng).unwrap() {
+                RoundOutcome::Decoded(r) => r,
+                other => panic!("sim: expected decode, got {other:?}"),
+            };
+            let b = match thr.round(&x, cycle, 0.0, &mut eng).unwrap() {
+                RoundOutcome::Decoded(r) => r,
+                other => panic!("threaded: expected decode, got {other:?}"),
+            };
+            assert_eq!(a.grad, b.grad, "cycle {cycle}: decoded gradient bytes");
+            assert_eq!(a.response_time.to_bits(), b.response_time.to_bits());
+            assert_eq!(a.responses_used, b.responses_used);
+            assert_eq!(a.waited_for_straggler, b.waited_for_straggler);
+        }
+        assert!(thr.real_elapsed().unwrap() > Duration::ZERO);
+    }
+
+    /// A persistently slow node: the round decodes from the fast prefix
+    /// without waiting out the slow thread's (much longer) sleep.
+    #[test]
+    fn slow_node_decodes_from_fast_prefix() {
+        let latency = LatencySpec {
+            kind: LatencyKind::SlowNode { n_slow: 1, factor: 2_000.0 },
+            ..Default::default()
+        };
+        // Scale so the slow node's modeled ~2000×(base+jitter) response
+        // becomes a sleep in the hundreds of ms while the fast prefix
+        // stays in the low ms.
+        let mut thr =
+            threaded_twin(SchemeKind::Cyclic, 1, &latency, ResponseModel::default(), 4.0);
+        let x = Matrix::full(3, 1, -0.2);
+        let mut eng = NativeEngine::new();
+        let t0 = Instant::now();
+        let res = match thr.round(&x, 0, 0.0, &mut eng).unwrap() {
+            RoundOutcome::Decoded(r) => r,
+            other => panic!("expected decode, got {other:?}"),
+        };
         let elapsed = t0.elapsed();
-        assert!(g.max_abs_diff(&expect) < 1e-9);
-        assert!(used < 4, "decoded from {used} < K responses");
+        assert!(res.responses_used < 4, "decoded from {} < K responses", res.responses_used);
+        // The slow node (ECN 0 under SlowNode) is not in the consumed
+        // prefix, and the real wait stayed well under its sleep.
         assert!(
-            elapsed < Duration::from_millis(250),
-            "must not wait for the straggler; took {elapsed:?}"
+            elapsed < Duration::from_millis(150),
+            "must not wait for the slow thread; took {elapsed:?}"
         );
+    }
+
+    /// Fail-stop + deadline on an uncoded scheme: the round resolves to
+    /// `TimedOut` immediately (no hang on the dead worker).
+    #[test]
+    fn fail_stop_with_deadline_times_out() {
+        let latency = LatencySpec {
+            faults: vec![FaultSpec { agent: None, ecn: 0, fail_at: 0.0, recover_at: None }],
+            deadline: Some(1e-3),
+            ..Default::default()
+        };
+        let mut thr =
+            threaded_twin(SchemeKind::Uncoded, 0, &latency, ResponseModel::default(), 0.0);
+        let x = Matrix::zeros(3, 1);
+        let mut eng = NativeEngine::new();
+        match thr.round(&x, 0, 1.0, &mut eng).unwrap() {
+            RoundOutcome::TimedOut { elapsed } => assert_eq!(elapsed, 1e-3),
+            other => panic!("expected timeout, got {other:?}"),
+        }
+        // Without a deadline the same stall is a latency error, exactly
+        // like the simulated pool.
+        let latency = LatencySpec {
+            faults: vec![FaultSpec { agent: None, ecn: 0, fail_at: 0.0, recover_at: None }],
+            ..Default::default()
+        };
+        let mut thr =
+            threaded_twin(SchemeKind::Uncoded, 0, &latency, ResponseModel::default(), 0.0);
+        match thr.round(&x, 0, 1.0, &mut eng) {
+            Err(Error::Latency(msg)) => assert!(msg.contains("stalled"), "{msg}"),
+            other => panic!("expected latency stall, got {other:?}"),
+        }
+    }
+
+    /// A coded scheme rides through the fail-stop fault on real
+    /// threads: the dead worker never responds and is never waited on.
+    #[test]
+    fn fail_stop_coded_decodes_from_survivors() {
+        let latency = LatencySpec {
+            faults: vec![FaultSpec { agent: None, ecn: 0, fail_at: 0.0, recover_at: None }],
+            ..Default::default()
+        };
+        let mut thr =
+            threaded_twin(SchemeKind::Cyclic, 1, &latency, ResponseModel::default(), 0.0);
+        let x = Matrix::full(3, 1, 0.2);
+        let mut eng = NativeEngine::new();
+        for cycle in 0..3 {
+            match thr.round(&x, cycle, 1.0, &mut eng).unwrap() {
+                RoundOutcome::Decoded(r) => {
+                    assert!(r.responses_used <= 3, "never waits for the dead node");
+                }
+                other => panic!("cycle {cycle}: expected decode, got {other:?}"),
+            }
+        }
+    }
+
+    /// Huber (a native-oracle, non-engine objective) runs through the
+    /// worker threads and matches its simulated twin byte for byte.
+    #[test]
+    fn non_ls_objective_matches_sim() {
+        let ds = synthetic_small(240, 20, 0.1, 95);
+        let kind = ObjectiveKind::Huber { delta: 1.0 };
+        let mut sim = SimBackend::new(
+            EcnPool::with_latency(
+                0,
+                kind.build(ds.train.clone()),
+                SchemeKind::Fractional.build(4, 1, 7).unwrap(),
+                8,
+                ResponseModel::default(),
+                &LatencySpec::default(),
+                Xoshiro256pp::seed_from_u64(92),
+            )
+            .unwrap(),
+        );
+        let mut thr = ThreadedBackend::with_time_scale(
+            0,
+            kind,
+            ds.train,
+            SchemeKind::Fractional,
+            1,
+            7,
+            4,
+            8,
+            ResponseModel::default(),
+            &LatencySpec::default(),
+            Xoshiro256pp::seed_from_u64(92),
+            0.0,
+        )
+        .unwrap();
+        let x = Matrix::full(3, 1, 0.4);
+        let mut eng = NativeEngine::new();
+        for cycle in 0..3 {
+            let (a, b) = match (
+                sim.round(&x, cycle, 0.0, &mut eng).unwrap(),
+                thr.round(&x, cycle, 0.0, &mut eng).unwrap(),
+            ) {
+                (RoundOutcome::Decoded(a), RoundOutcome::Decoded(b)) => (a, b),
+                other => panic!("expected decodes, got {other:?}"),
+            };
+            assert_eq!(a.grad, b.grad, "cycle {cycle}");
+        }
     }
 }

@@ -48,7 +48,7 @@ pub fn minibatch(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>>
     let traces = result.labelled_traces();
     let mut t = Table::new(
         "Fig. 3(a)(b) — mini-batch size sweep (USPS-like)",
-        &["series", "comm units", "accuracy", "test MSE"],
+        &["series", "comm units", "accuracy", "test metric"],
     );
     for tr in &traces {
         let last = tr.points.last().unwrap();
@@ -105,7 +105,7 @@ pub fn baselines(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>>
 
     let mut t = Table::new(
         "Fig. 3(c)(d) — methods at equal comm budget (USPS-like)",
-        &["method", "comm units", "accuracy", "test MSE"],
+        &["method", "comm units", "accuracy", "test metric"],
     );
     for tr in &traces {
         let last = tr.points.last().unwrap();
@@ -196,7 +196,7 @@ pub fn shortest_path_cycle(quick: bool, engines: &dyn EngineFactory) -> Result<V
         .collect();
     let mut t = Table::new(
         "Fig. 3(f) — shortest-path-cycle network (USPS-like)",
-        &["series", "comm units", "accuracy", "test MSE"],
+        &["series", "comm units", "accuracy", "test metric"],
     );
     for tr in &traces {
         let last = tr.points.last().unwrap();

@@ -110,7 +110,7 @@ pub fn run(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>> {
 
     let mut t = Table::new(
         "Fig. 4 — ijcnn1-like, N=20",
-        &["series", "comm units", "sim time (s)", "accuracy", "test MSE"],
+        &["series", "comm units", "sim time (s)", "accuracy", "test metric"],
     );
     for tr in &traces {
         let last = tr.points.last().unwrap();

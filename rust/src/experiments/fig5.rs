@@ -49,7 +49,7 @@ pub fn run(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>> {
         // Average the cell's runs point-wise (the paper averages 10).
         let s = cell[0].job.cfg.s_tolerated;
         let refs: Vec<&Trace> = cell.iter().map(|j| &j.trace).collect();
-        let mut avg = mean_trace(&refs);
+        let mut avg = mean_trace(&refs)?;
         avg.label = format!("csI-ADMM S={s} (M̄={})", m_base / (s + 1));
         traces.push(avg);
     }

@@ -21,7 +21,8 @@ use super::{budget, load_dataset, write_traces, ROOT_SEED};
 use crate::coding::SchemeKind;
 use crate::coordinator::{Algorithm, Driver, RunConfig};
 use crate::data::DatasetName;
-use crate::error::Result;
+use crate::ecn::BackendKind;
+use crate::error::{Error, Result};
 use crate::latency::{FaultSpec, LatencyKind, LatencySpec};
 use crate::metrics::Trace;
 use crate::runtime::EngineFactory;
@@ -64,7 +65,7 @@ fn regime_arm(cfg: RunConfig, quick: bool, engines: &dyn EngineFactory) -> Resul
     let mut traces = vec![];
     for cell in result.cells() {
         let refs: Vec<&Trace> = cell.iter().map(|j| &j.trace).collect();
-        let mut avg = mean_trace(&refs);
+        let mut avg = mean_trace(&refs)?;
         avg.label = format!(
             "{} lat={}",
             cell[0].job.cfg.algo.label(),
@@ -160,6 +161,104 @@ pub fn run(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<RegimeCompari
     Ok(comparisons)
 }
 
+/// One arm of the backend cross-check: the paired simulated/threaded
+/// runs of a single algorithm.
+#[derive(Clone, Debug)]
+pub struct BackendComparison {
+    /// Algorithm label ("sI-ADMM", "csI-ADMM/cyclic").
+    pub label: String,
+    /// Final Eq. 23 accuracy (identical on both backends).
+    pub final_accuracy: f64,
+    /// Final simulated wall-clock (identical on both backends).
+    pub sim_time: f64,
+    /// Measured *real* wall-clock the threaded backend spent inside
+    /// gradient rounds.
+    pub real_time_secs: f64,
+}
+
+/// The fig6 wall-clock backend variant (`csadmm fig6-backend`): run the
+/// slow-node coded-vs-uncoded comparison on the simulated AND the
+/// real-thread backend. Errors if any trace point diverges between the
+/// backends (the parity contract), and reports the threaded backend's
+/// *measured* real wall-clock next to the simulated clock so the
+/// time-to-ε ordering can be cross-checked on genuine hardware: the
+/// uncoded arm really does wait out the slow device's sleep every
+/// round, the coded arm really does return from the fast prefix.
+pub fn backend_walltime(
+    quick: bool,
+    engines: &dyn EngineFactory,
+) -> Result<Vec<BackendComparison>> {
+    let ds = load_dataset(DatasetName::Synthetic, quick);
+    // Small fleet: the threaded variant runs N·K live worker threads.
+    let base = RunConfig {
+        n_agents: 4,
+        k_ecn: 4,
+        rho: 0.15,
+        max_iters: budget(800, quick),
+        eval_every: 25,
+        seed: ROOT_SEED ^ 11,
+        latency: LatencySpec {
+            kind: LatencyKind::SlowNode { n_slow: 1, factor: 20.0 },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut engine = engines.create()?;
+    let mut comparisons = vec![];
+    let mut traces = vec![];
+    for (algo, s, m) in [
+        (Algorithm::SIAdmm, 0usize, M_BAR),
+        (Algorithm::CsIAdmm(SchemeKind::Cyclic), S_DESIGN, (S_DESIGN + 1) * M_BAR),
+    ] {
+        let cfg = RunConfig { algo, s_tolerated: s, minibatch: m, ..base.clone() };
+        let mut sim_driver =
+            Driver::new(RunConfig { backend: BackendKind::Sim, ..cfg.clone() }, &ds)?;
+        let sim_trace = sim_driver.run(engine.as_mut())?;
+        let mut thr_driver =
+            Driver::new(RunConfig { backend: BackendKind::Threaded, ..cfg }, &ds)?;
+        let thr_trace = thr_driver.run(engine.as_mut())?;
+        if sim_trace.points != thr_trace.points {
+            return Err(Error::Runtime(format!(
+                "backend parity violated for {}: the threaded trace diverged from the \
+                 simulated one",
+                algo.label()
+            )));
+        }
+        let real = thr_driver
+            .backend_real_elapsed()
+            .expect("threaded backend reports real elapsed time");
+        comparisons.push(BackendComparison {
+            label: algo.label(),
+            final_accuracy: sim_trace.final_accuracy(),
+            sim_time: sim_trace.final_sim_time(),
+            real_time_secs: real.as_secs_f64(),
+        });
+        let mut t = sim_trace;
+        t.label = format!("{} (sim=threaded)", algo.label());
+        traces.push(t);
+    }
+    let mut t = Table::new(
+        "fig6-backend — simulated vs measured real wall-clock (slownode, K=4, S=1)",
+        &["series", "final accuracy", "sim time (s)", "threaded real (s)"],
+    );
+    for c in &comparisons {
+        t.row(&[
+            c.label.clone(),
+            fnum(c.final_accuracy),
+            fnum(c.sim_time),
+            format!("{:.4}", c.real_time_secs),
+        ]);
+    }
+    t.print();
+    println!(
+        "cross-check: sim-clock speedup {:.2}x, real-clock speedup {:.2}x (coded vs uncoded)",
+        comparisons[0].sim_time / comparisons[1].sim_time,
+        comparisons[0].real_time_secs / comparisons[1].real_time_secs,
+    );
+    write_traces("fig6_backend_walltime", &traces)?;
+    Ok(comparisons)
+}
+
 /// The fail-stop pair: uncoded (deadline-rescued) vs coded, both under
 /// a permanent ECN-0 outage at every agent.
 pub fn fail_stop_scenario(quick: bool, engines: &dyn EngineFactory) -> Result<(Trace, Trace)> {
@@ -234,6 +333,29 @@ mod tests {
             "slownode speedup should exceed 2x: coded {} vs uncoded {}",
             slow.coded_time,
             slow.uncoded_time
+        );
+    }
+
+    /// The backend cross-check: identical traces on both backends (the
+    /// function errors otherwise), and the simulated time-to-ε ordering
+    /// — coded dodges the slow node, uncoded waits for it — reproduces
+    /// on the *measured* real wall-clock of the threaded backend.
+    #[test]
+    fn backend_walltime_orderings_agree() {
+        let comparisons = backend_walltime(true, &NativeEngineFactory).unwrap();
+        assert_eq!(comparisons.len(), 2);
+        let (unc, cod) = (&comparisons[0], &comparisons[1]);
+        assert!(
+            cod.sim_time < unc.sim_time,
+            "sim clock: coded {} should beat uncoded {}",
+            cod.sim_time,
+            unc.sim_time
+        );
+        assert!(
+            cod.real_time_secs < unc.real_time_secs,
+            "real clock: coded {} should beat uncoded {}",
+            cod.real_time_secs,
+            unc.real_time_secs
         );
     }
 

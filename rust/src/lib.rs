@@ -18,7 +18,11 @@
 //!   optimum: closed form for least squares, a cached high-iteration
 //!   full-gradient solve ([`problem::reference_optimum`]) otherwise.
 //! * Core contribution: [`coding`] (real-field MDS gradient codes),
-//!   [`ecn`] (edge-compute-node simulation with stragglers), [`admm`]
+//!   [`ecn`] (edge-compute-node execution behind the
+//!   [`ecn::GradientBackend`] boundary: the simulated clock
+//!   ([`ecn::SimBackend`], default) or one real OS thread per ECN
+//!   ([`ecn::ThreadedBackend`]) — selected by `[run] backend` /
+//!   `--backend`, byte-identical decoded gradients either way), [`admm`]
 //!   (I-ADMM / sI-ADMM / csI-ADMM), [`baselines`] (W-ADMM, D-ADMM, DGD,
 //!   EXTRA), [`coordinator`] (token-passing event loop).
 //! * Scenario axis: [`latency`] — heterogeneous straggler/latency

@@ -21,7 +21,7 @@ use csadmm::coding::SchemeKind;
 use csadmm::config::{apply_latency_params, apply_objective_params, run_config_from_doc, ConfigDoc};
 use csadmm::coordinator::{Algorithm, Driver, RunConfig};
 use csadmm::data::DatasetName;
-use csadmm::ecn::ResponseModel;
+use csadmm::ecn::{BackendKind, ResponseModel};
 use csadmm::experiments::{self, load_dataset, ROOT_SEED};
 use csadmm::latency::LatencyKind;
 use csadmm::problem::ObjectiveKind;
@@ -61,6 +61,17 @@ fn parse_latency_list(list: &str, doc: Option<&ConfigDoc>) -> Result<Vec<Latency
                 Some(doc) => apply_latency_params(kind, doc),
                 None => kind,
             })
+        })
+        .collect()
+}
+
+/// Parse a comma-separated `--backend` list (`sim,threaded`).
+fn parse_backend_list(list: &str) -> Result<Vec<BackendKind>> {
+    list.split(',')
+        .map(|t| {
+            let t = t.trim();
+            BackendKind::parse(t)
+                .ok_or_else(|| Error::Config(format!("unknown backend '{t}' (see usage)")))
         })
         .collect()
 }
@@ -126,10 +137,19 @@ fn main() -> Result<()> {
                 }
                 cfg.latency.kind = kinds[0];
             }
+            if let Some(tok) = args.get("backend") {
+                let kinds = parse_backend_list(tok)?;
+                if kinds.len() != 1 {
+                    return Err(Error::Config(
+                        "run takes exactly one --backend (use `sweep` for an axis)".into(),
+                    ));
+                }
+                cfg.backend = kinds[0];
+            }
             let ds = load_dataset(dataset, quick);
             let mut engine = factory.create()?;
             println!(
-                "running {} [{}] on {} (N={}, K={}, M={}, lat={}, engine={})",
+                "running {} [{}] on {} (N={}, K={}, M={}, lat={}, backend={}, engine={})",
                 cfg.algo.label(),
                 cfg.objective.as_str(),
                 dataset.as_str(),
@@ -137,12 +157,20 @@ fn main() -> Result<()> {
                 cfg.k_ecn,
                 cfg.minibatch,
                 cfg.latency.kind.as_str(),
+                cfg.backend.as_str(),
                 engine.name()
             );
-            let trace = Driver::new(cfg, &ds)?.run(engine.as_mut())?;
+            // Objective-specific column label (classification error for
+            // logistic, Huber penalty for huber, MSE otherwise).
+            let metric_label = cfg.objective.test_metric_name();
+            let mut driver = Driver::new(cfg, &ds)?;
+            let trace = driver.run(engine.as_mut())?;
+            if let Some(real) = driver.backend_real_elapsed() {
+                println!("backend real wall-clock inside rounds: {real:.2?}");
+            }
             let mut t = Table::new(
                 "run result",
-                &["iter", "comm units", "sim time (s)", "accuracy", "test MSE"],
+                &["iter", "comm units", "sim time (s)", "accuracy", metric_label],
             );
             for p in trace.points.iter().rev().take(5).rev() {
                 t.row(&[
@@ -173,6 +201,9 @@ fn main() -> Result<()> {
             }
             if let Some(list) = args.get("latency") {
                 spec = spec.latencies(parse_latency_list(list, doc.as_ref())?);
+            }
+            if let Some(list) = args.get("backend") {
+                spec = spec.backends(parse_backend_list(list)?);
             }
             println!(
                 "sweep: {} jobs ({} cells × {} seeds) on {workers} workers, engine={}",
@@ -217,6 +248,9 @@ fn main() -> Result<()> {
         Some("fig6") => {
             experiments::fig6::run(quick, factory.as_ref())?;
         }
+        Some("fig6-backend") => {
+            experiments::fig6::backend_walltime(quick, factory.as_ref())?;
+        }
         Some("rate-check") => {
             experiments::rate_check::run(quick, factory.as_ref())?;
         }
@@ -229,6 +263,7 @@ fn main() -> Result<()> {
             experiments::fig4::run(quick, factory.as_ref())?;
             experiments::fig5::run(quick, factory.as_ref())?;
             experiments::fig6::run(quick, factory.as_ref())?;
+            experiments::fig6::backend_walltime(quick, factory.as_ref())?;
             experiments::rate_check::run(quick, factory.as_ref())?;
         }
         other => {

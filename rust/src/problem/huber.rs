@@ -108,6 +108,30 @@ impl Objective for Huber {
         out.scale(1.0 / (hi - lo) as f64);
     }
 
+    /// Mean Huber penalty of the held-out residuals — the loss this
+    /// objective actually optimizes, evaluated on the test split
+    /// (plain MSE would re-weight exactly the outliers Huber is chosen
+    /// to discount).
+    fn test_loss(&self, x: &Matrix, test: &Split) -> f64 {
+        let (p, d) = self.dims();
+        let n = test.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for j in 0..n {
+            let row = test.inputs.row(j);
+            for c in 0..d {
+                let mut m = 0.0;
+                for k in 0..p {
+                    m += row[k] * x[(k, c)];
+                }
+                total += self.penalty(m - test.targets[(j, c)]);
+            }
+        }
+        total / n as f64
+    }
+
     fn prox_exact(&self, z: &Matrix, y: &Matrix, rho: f64) -> Matrix {
         let (p, d) = self.dims();
         let b = self.num_examples();

@@ -59,6 +59,19 @@ impl ObjectiveKind {
         }
     }
 
+    /// Column label of the kind's held-out test metric
+    /// ([`Objective::test_loss`]): prediction MSE for the squared-error
+    /// losses, classification error for logistic, the Huber penalty for
+    /// Huber. Single-objective tables print this instead of a generic
+    /// "test metric".
+    pub fn test_metric_name(&self) -> &'static str {
+        match self {
+            ObjectiveKind::Logistic { .. } => "test err",
+            ObjectiveKind::Huber { .. } => "test huber",
+            ObjectiveKind::LeastSquares | ObjectiveKind::ElasticNet { .. } => "test MSE",
+        }
+    }
+
     /// Instantiate the objective over one agent's shard.
     pub fn build(&self, data: Split) -> Rc<dyn Objective> {
         match *self {
@@ -97,6 +110,17 @@ mod tests {
             assert_eq!(kind.as_str(), name);
         }
         assert!(ObjectiveKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn test_metric_names_per_kind() {
+        assert_eq!(ObjectiveKind::LeastSquares.test_metric_name(), "test MSE");
+        assert_eq!(ObjectiveKind::Logistic { lambda: 1e-2 }.test_metric_name(), "test err");
+        assert_eq!(ObjectiveKind::Huber { delta: 1.0 }.test_metric_name(), "test huber");
+        assert_eq!(
+            ObjectiveKind::ElasticNet { l1: 1e-3, l2: 1e-2 }.test_metric_name(),
+            "test MSE"
+        );
     }
 
     #[test]

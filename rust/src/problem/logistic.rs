@@ -182,6 +182,34 @@ impl Objective for LogisticRegression {
         *self.lips.borrow_mut() = Some(l);
         l
     }
+
+    /// Classification error on the held-out split: the fraction of
+    /// (example, column) decisions `sign⟨o_j, x_c⟩` that disagree with
+    /// the ±1 label binarized at `t > 0.5` — the natural test metric
+    /// for the classification workload (a squared error against soft
+    /// targets says nothing about ±1 decisions).
+    fn test_loss(&self, x: &Matrix, test: &Split) -> f64 {
+        let (p, d) = self.dims();
+        let n = test.len();
+        if n == 0 || d == 0 {
+            return 0.0;
+        }
+        let mut wrong = 0usize;
+        for j in 0..n {
+            let row = test.inputs.row(j);
+            for c in 0..d {
+                let mut m = 0.0;
+                for k in 0..p {
+                    m += row[k] * x[(k, c)];
+                }
+                let y = if test.targets[(j, c)] > 0.5 { 1.0 } else { -1.0 };
+                if y * m <= 0.0 {
+                    wrong += 1;
+                }
+            }
+        }
+        wrong as f64 / (n * d) as f64
+    }
 }
 
 #[cfg(test)]
@@ -248,6 +276,21 @@ mod tests {
         kkt.add_scaled(-rho, &z);
         kkt -= &y;
         assert!(kkt.max_abs() < 1e-8, "KKT residual {}", kkt.max_abs());
+    }
+
+    #[test]
+    fn test_loss_is_classification_error() {
+        let inputs = Matrix::from_rows(&[&[1.0], &[-2.0], &[3.0]]);
+        let targets = Matrix::from_rows(&[&[1.0], &[0.0], &[1.0]]);
+        let obj = LogisticRegression::new(
+            Split { inputs: inputs.clone(), targets: targets.clone() },
+            1e-2,
+        );
+        let test = Split { inputs, targets };
+        // x = +1 decides sign(o): every example classified correctly.
+        assert_eq!(obj.test_loss(&Matrix::from_rows(&[&[1.0]]), &test), 0.0);
+        // x = −1 inverts every decision.
+        assert_eq!(obj.test_loss(&Matrix::from_rows(&[&[-1.0]]), &test), 1.0);
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub use least_squares::{global_optimum, LeastSquares};
 pub use logistic::LogisticRegression;
 pub use reference::{reference_cache_key, reference_optimum, reference_optimum_cached};
 
+use crate::data::Split;
 use crate::error::Result;
 use crate::linalg::{matmul_at_b, Matrix};
 use crate::runtime::Engine;
@@ -105,6 +106,19 @@ pub trait Objective {
         let _ = engine;
         self.grad_rows(x, lo, hi, out);
         Ok(())
+    }
+
+    /// Held-out test metric at iterate `x` — the "test metric" column
+    /// of the figures/tables (labelled per kind by
+    /// [`ObjectiveKind::test_metric_name`]). Default: mean-squared
+    /// prediction error `‖O x − T‖_F² / n_test` (the paper's regression
+    /// metric, exactly [`crate::metrics::test_mse`] — the least-squares
+    /// path is byte-identical to the pre-hook pipeline). Losses with a
+    /// different natural held-out metric override it: logistic reports
+    /// classification error, Huber its own penalty — reporting plain
+    /// MSE there silently mislabeled the column.
+    fn test_loss(&self, x: &Matrix, test: &Split) -> f64 {
+        crate::metrics::test_mse(x, test)
     }
 
     /// Downcast hook: `Some(self)` for [`LeastSquares`], letting

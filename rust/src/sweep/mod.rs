@@ -6,11 +6,12 @@
 //! seed. This module turns such a grid into a first-class object:
 //!
 //! * [`SweepSpec`] — the grid: a template [`RunConfig`] plus one value
-//!   list per axis (objective, algorithm, S, ε, latency regime, M, ρ,
-//!   quantize-bits, seeds). [`SweepSpec::expand`] produces the ordered
-//!   job list; [`SweepSpec::from_doc`] parses a grid from a config
-//!   file's `[sweep]` section (the full grid syntax lives on that
-//!   method's documentation and in the top-level `README.md`).
+//!   list per axis (objective, algorithm, S, ε, latency regime,
+//!   execution backend, M, ρ, quantize-bits, seeds).
+//!   [`SweepSpec::expand`] produces the ordered job list;
+//!   [`SweepSpec::from_doc`] parses a grid from a config file's
+//!   `[sweep]` section (the full grid syntax lives on that method's
+//!   documentation and in the top-level `README.md`).
 //! * [`run_sweep`] — executes the jobs on `workers` std threads. Each
 //!   worker builds its own engine via
 //!   [`EngineFactory`](crate::runtime::EngineFactory) (engines are not

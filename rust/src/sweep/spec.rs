@@ -6,6 +6,7 @@ use crate::coding::SchemeKind;
 use crate::config::ConfigDoc;
 use crate::coordinator::{Algorithm, RunConfig};
 use crate::data::DatasetName;
+use crate::ecn::BackendKind;
 use crate::error::{Error, Result};
 use crate::latency::LatencyKind;
 use crate::problem::ObjectiveKind;
@@ -17,10 +18,10 @@ use crate::problem::ObjectiveKind;
 /// `seeds` axis is special: jobs that differ only in seed belong to the
 /// same *cell* and are aggregated by [`crate::sweep::SweepSummary`].
 ///
-/// Expansion order is fixed (objective → algo → S → ε → latency → M →
-/// ρ → quantize-bits → seed, seeds innermost), so job and cell ids are
-/// stable across processes and independent of how many workers execute
-/// the grid.
+/// Expansion order is fixed (objective → algo → S → ε → latency →
+/// backend → M → ρ → quantize-bits → seed, seeds innermost), so job
+/// and cell ids are stable across processes and independent of how
+/// many workers execute the grid.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
     /// Template config; axis values override its fields per job.
@@ -37,6 +38,10 @@ pub struct SweepSpec {
     /// Latency-regime axis (`latency.kind`): the straggler zoo. Clocks,
     /// faults and deadline stay as configured on the base spec.
     pub latencies: Vec<LatencyKind>,
+    /// Execution-backend axis (`sim`, `threaded`): same decoded bytes,
+    /// different runtimes — sweeping it cross-checks the backend parity
+    /// across whole grids.
+    pub backends: Vec<BackendKind>,
     /// Mini-batch axis M.
     pub minibatches: Vec<usize>,
     /// Penalty axis ρ.
@@ -56,6 +61,7 @@ impl SweepSpec {
             s_values: vec![base.s_tolerated],
             epsilons: vec![base.response.straggler_delay],
             latencies: vec![base.latency.kind],
+            backends: vec![base.backend],
             minibatches: vec![base.minibatch],
             rhos: vec![base.rho],
             quantize_bits: vec![base.quantize_bits],
@@ -94,6 +100,12 @@ impl SweepSpec {
         self
     }
 
+    /// Set the execution-backend axis.
+    pub fn backends(mut self, v: Vec<BackendKind>) -> Self {
+        self.backends = v;
+        self
+    }
+
     /// Set the mini-batch axis M.
     pub fn minibatches(mut self, v: Vec<usize>) -> Self {
         self.minibatches = v;
@@ -125,6 +137,7 @@ impl SweepSpec {
             * self.s_values.len()
             * self.epsilons.len()
             * self.latencies.len()
+            * self.backends.len()
             * self.minibatches.len()
             * self.rhos.len()
             * self.quantize_bits.len()
@@ -140,38 +153,30 @@ impl SweepSpec {
         if self.num_jobs() == 0 {
             return Err(Error::Config("sweep grid has an empty axis (zero jobs)".into()));
         }
-        let mut jobs = Vec::with_capacity(self.num_jobs());
-        let mut cell_id = 0usize;
+        // Cartesian product over the non-seed axes first (one entry per
+        // cell, in cell order), then the seed axis innermost.
+        let mut cells: Vec<RunConfig> = Vec::with_capacity(self.num_cells());
         for &objective in &self.objectives {
             for &algo in &self.algos {
                 for &s in &self.s_values {
                     for &eps in &self.epsilons {
                         for &lat in &self.latencies {
-                            for &m in &self.minibatches {
-                                for &rho in &self.rhos {
-                                    for &bits in &self.quantize_bits {
-                                        let label = self
-                                            .cell_label(objective, algo, s, eps, lat, m, rho, bits);
-                                        for (seed_index, &seed) in self.seeds.iter().enumerate() {
+                            for &backend in &self.backends {
+                                for &m in &self.minibatches {
+                                    for &rho in &self.rhos {
+                                        for &bits in &self.quantize_bits {
                                             let mut cfg = self.base.clone();
                                             cfg.objective = objective;
                                             cfg.algo = algo;
                                             cfg.s_tolerated = s;
                                             cfg.response.straggler_delay = eps;
                                             cfg.latency.kind = lat;
+                                            cfg.backend = backend;
                                             cfg.minibatch = m;
                                             cfg.rho = rho;
                                             cfg.quantize_bits = bits;
-                                            cfg.seed = seed;
-                                            jobs.push(SweepJob {
-                                                job_id: jobs.len(),
-                                                cell_id,
-                                                seed_index,
-                                                label: label.clone(),
-                                                cfg,
-                                            });
+                                            cells.push(cfg);
                                         }
-                                        cell_id += 1;
                                     }
                                 }
                             }
@@ -180,45 +185,52 @@ impl SweepSpec {
                 }
             }
         }
+        let mut jobs = Vec::with_capacity(self.num_jobs());
+        for (cell_id, cell_cfg) in cells.into_iter().enumerate() {
+            let label = self.cell_label(&cell_cfg);
+            for (seed_index, &seed) in self.seeds.iter().enumerate() {
+                let mut cfg = cell_cfg.clone();
+                cfg.seed = seed;
+                jobs.push(SweepJob {
+                    job_id: jobs.len(),
+                    cell_id,
+                    seed_index,
+                    label: label.clone(),
+                    cfg,
+                });
+            }
+        }
         Ok(jobs)
     }
 
     /// Cell label: the algorithm name plus a `key=value` suffix for each
     /// axis that actually varies (single-value axes stay out of the
     /// label, so `M ∈ {4,16,48}` sweeps read "sI-ADMM M=4" …).
-    #[allow(clippy::too_many_arguments)]
-    fn cell_label(
-        &self,
-        objective: ObjectiveKind,
-        algo: Algorithm,
-        s: usize,
-        eps: f64,
-        lat: LatencyKind,
-        m: usize,
-        rho: f64,
-        bits: Option<u32>,
-    ) -> String {
-        let mut label = algo.label();
+    fn cell_label(&self, cfg: &RunConfig) -> String {
+        let mut label = cfg.algo.label();
         if self.objectives.len() > 1 {
-            label.push_str(&format!(" obj={}", objective.as_str()));
+            label.push_str(&format!(" obj={}", cfg.objective.as_str()));
         }
         if self.s_values.len() > 1 {
-            label.push_str(&format!(" S={s}"));
+            label.push_str(&format!(" S={}", cfg.s_tolerated));
         }
         if self.epsilons.len() > 1 {
-            label.push_str(&format!(" eps={eps}"));
+            label.push_str(&format!(" eps={}", cfg.response.straggler_delay));
         }
         if self.latencies.len() > 1 {
-            label.push_str(&format!(" lat={}", lat.as_str()));
+            label.push_str(&format!(" lat={}", cfg.latency.kind.as_str()));
+        }
+        if self.backends.len() > 1 {
+            label.push_str(&format!(" be={}", cfg.backend.as_str()));
         }
         if self.minibatches.len() > 1 {
-            label.push_str(&format!(" M={m}"));
+            label.push_str(&format!(" M={}", cfg.minibatch));
         }
         if self.rhos.len() > 1 {
-            label.push_str(&format!(" rho={rho}"));
+            label.push_str(&format!(" rho={}", cfg.rho));
         }
         if self.quantize_bits.len() > 1 {
-            match bits {
+            match cfg.quantize_bits {
                 Some(b) => label.push_str(&format!(" q={b}bit")),
                 None => label.push_str(" q=exact"),
             }
@@ -243,6 +255,7 @@ impl SweepSpec {
     /// s = 1                            # tolerated stragglers
     /// eps = 1e-3, 5e-3                 # straggler delay ε
     /// latency = uniform, pareto        # straggler-zoo regime axis
+    /// backend = sim, threaded          # execution-backend axis
     /// minibatch = 16, 32
     /// rho = 0.08
     /// quantize_bits = none, 16         # token quantization ('none' = exact)
@@ -290,6 +303,16 @@ impl SweepSpec {
                         .ok_or_else(|| {
                             Error::Config(format!("sweep.latency: unknown latency kind '{t}'"))
                         })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(tokens) = doc.get_list(sec, "backend") {
+            spec.backends = tokens
+                .iter()
+                .map(|t| {
+                    BackendKind::parse(t).ok_or_else(|| {
+                        Error::Config(format!("sweep.backend: unknown backend '{t}'"))
+                    })
                 })
                 .collect::<Result<Vec<_>>>()?;
         }
@@ -488,6 +511,35 @@ mod tests {
             .expand()
             .unwrap();
         assert!(jobs.iter().all(|j| j.cfg.latency.deadline == Some(0.5)));
+    }
+
+    #[test]
+    fn backend_axis_expands_between_latency_and_minibatch() {
+        let spec = SweepSpec::new(RunConfig::default())
+            .backends(vec![BackendKind::Sim, BackendKind::Threaded])
+            .minibatches(vec![8, 16]);
+        assert_eq!(spec.num_cells(), 4);
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 4);
+        // Backend expands outside the minibatch axis.
+        assert_eq!(jobs[0].cfg.backend, BackendKind::Sim);
+        assert_eq!(jobs[1].cfg.backend, BackendKind::Sim);
+        assert_eq!(jobs[2].cfg.backend, BackendKind::Threaded);
+        assert_eq!(jobs[0].label, "sI-ADMM be=sim M=8");
+        assert_eq!(jobs[3].label, "sI-ADMM be=threaded M=16");
+        // Single-value backend axis stays out of labels entirely.
+        let jobs = SweepSpec::new(RunConfig::default()).minibatches(vec![8, 16]).expand().unwrap();
+        assert_eq!(jobs[0].label, "sI-ADMM M=8");
+    }
+
+    #[test]
+    fn from_doc_reads_backend_axis() {
+        let doc = ConfigDoc::parse("[run]\nk_ecn = 2\n\n[sweep]\nbackend = sim, threaded\n")
+            .unwrap();
+        let (spec, _) = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.backends, vec![BackendKind::Sim, BackendKind::Threaded]);
+        let bad = ConfigDoc::parse("[sweep]\nbackend = nope\n").unwrap();
+        assert!(SweepSpec::from_doc(&bad).is_err());
     }
 
     #[test]

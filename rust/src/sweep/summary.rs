@@ -2,6 +2,7 @@
 //! deterministic JSON export.
 
 use super::pool::SweepResult;
+use crate::error::{Error, Result};
 use crate::metrics::Trace;
 use crate::util::json::Json;
 use crate::util::stats::mean;
@@ -104,7 +105,7 @@ impl SweepSummary {
     pub fn print(&self) {
         let mut t = Table::new(
             "sweep summary (mean over seeds; final-point metrics)",
-            &["cell", "runs", "accuracy", "test MSE", "sim time (s)", "comm units"],
+            &["cell", "runs", "accuracy", "test metric", "sim time (s)", "comm units"],
         );
         for c in &self.cells {
             t.row(&[
@@ -123,10 +124,29 @@ impl SweepSummary {
 /// Point-wise mean of equal-length traces (the paper's "average of 10
 /// independent runs", Fig. 5). Label and iteration grid come from the
 /// first trace.
-pub fn mean_trace(traces: &[&Trace]) -> Trace {
-    assert!(!traces.is_empty(), "mean_trace of zero traces");
+///
+/// Returns [`Error::Config`] on an empty set or on ragged lengths
+/// instead of panicking: runs that resolve rounds to `TimedOut` under a
+/// `[latency] deadline` (or that error out mid-run upstream) can
+/// legitimately record different numbers of evaluation points, and an
+/// aggregation harness must surface that as a config problem, not
+/// crash the whole sweep.
+pub fn mean_trace(traces: &[&Trace]) -> Result<Trace> {
+    if traces.is_empty() {
+        return Err(Error::Config("mean_trace needs at least one trace".into()));
+    }
     let n = traces[0].points.len();
-    assert!(traces.iter().all(|t| t.points.len() == n), "ragged traces");
+    if let Some(bad) = traces.iter().find(|t| t.points.len() != n) {
+        return Err(Error::Config(format!(
+            "mean_trace over ragged traces: '{}' has {} points but '{}' has {} — runs \
+             that time rounds out (deadline policy) can terminate at different lengths; \
+             align the evaluation grids before averaging",
+            traces[0].label,
+            n,
+            bad.label,
+            bad.points.len()
+        )));
+    }
     let mut out = traces[0].clone();
     let inv = 1.0 / traces.len() as f64;
     for (i, pt) in out.points.iter_mut().enumerate() {
@@ -135,7 +155,7 @@ pub fn mean_trace(traces: &[&Trace]) -> Trace {
         pt.accuracy = traces.iter().map(|t| t.points[i].accuracy).sum::<f64>() * inv;
         pt.test_mse = traces.iter().map(|t| t.points[i].test_mse).sum::<f64>() * inv;
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -169,10 +189,30 @@ mod tests {
     fn mean_trace_pointwise() {
         let a = trace("a", &[1.0, 0.5]);
         let b = trace("a", &[3.0, 1.5]);
-        let m = mean_trace(&[&a, &b]);
+        let m = mean_trace(&[&a, &b]).unwrap();
         assert_eq!(m.label, "a");
         assert!((m.points[0].accuracy - 2.0).abs() < 1e-12);
         assert!((m.points[1].accuracy - 1.0).abs() < 1e-12);
         assert!((m.points[1].test_mse - 2.0).abs() < 1e-12);
+    }
+
+    /// Regression: empty and ragged trace sets are config errors, not
+    /// panics (reachable once deadline'd runs terminate at different
+    /// lengths).
+    #[test]
+    fn mean_trace_rejects_empty_and_ragged_sets() {
+        match mean_trace(&[]) {
+            Err(Error::Config(msg)) => assert!(msg.contains("at least one"), "{msg}"),
+            other => panic!("expected Error::Config on empty set, got {other:?}"),
+        }
+        let a = trace("short", &[1.0]);
+        let b = trace("long", &[1.0, 0.5, 0.25]);
+        match mean_trace(&[&a, &b]) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("ragged"), "{msg}");
+                assert!(msg.contains("short") && msg.contains("long"), "{msg}");
+            }
+            other => panic!("expected Error::Config on ragged set, got {other:?}"),
+        }
     }
 }

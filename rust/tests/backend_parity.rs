@@ -1,0 +1,186 @@
+//! Backend-parity integration suite: the real-thread backend must be a
+//! byte-transparent drop-in for the simulated one.
+//!
+//! * Uniform regime: a threaded `Driver::run` serializes to the exact
+//!   same trace JSON as the simulated backend for every `SchemeKind`
+//!   (the decoded gradient bytes, the modeled times, everything).
+//! * Slow-node injection: a threaded round decodes from the fast
+//!   prefix while the slow worker thread is still sleeping.
+//! * Deadline policy: a fail-stopped threaded round resolves to
+//!   `RoundOutcome::TimedOut` — it must not hang on the dead worker —
+//!   and whole deadline'd runs stay byte-identical across backends.
+
+use csadmm::coding::SchemeKind;
+use csadmm::coordinator::{Algorithm, Driver, RunConfig};
+use csadmm::data::synthetic_small;
+use csadmm::ecn::{
+    BackendKind, GradientBackend, ResponseModel, RoundOutcome, ThreadedBackend,
+};
+use csadmm::latency::{FaultSpec, LatencyKind, LatencySpec};
+use csadmm::linalg::Matrix;
+use csadmm::problem::ObjectiveKind;
+use csadmm::rng::Xoshiro256pp;
+use csadmm::runtime::NativeEngine;
+use std::time::{Duration, Instant};
+
+fn base_cfg(algo: Algorithm, s: usize) -> RunConfig {
+    RunConfig {
+        algo,
+        s_tolerated: s,
+        n_agents: 4,
+        k_ecn: 4,
+        minibatch: 16,
+        rho: 0.3,
+        max_iters: 240,
+        eval_every: 40,
+        seed: 23,
+        response: ResponseModel { straggler_count: 1, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn run_trace(cfg: RunConfig) -> String {
+    let ds = synthetic_small(400, 40, 0.1, 90);
+    Driver::new(cfg, &ds)
+        .unwrap()
+        .run(&mut NativeEngine::new())
+        .unwrap()
+        .to_json()
+        .to_string()
+}
+
+/// The acceptance property: under the uniform regime the threaded
+/// backend decodes to the same gradient bytes as the simulated one for
+/// every coding scheme — asserted at full-run granularity (any decoded
+/// byte difference would compound through the ADMM iterates and change
+/// the serialized trace).
+#[test]
+fn uniform_regime_traces_are_byte_identical_for_every_scheme() {
+    for (algo, s) in [
+        // sI-ADMM runs SchemeKind::Uncoded internally; the two coded
+        // algorithms cover cyclic and fractional repetition.
+        (Algorithm::SIAdmm, 0usize),
+        (Algorithm::CsIAdmm(SchemeKind::Uncoded), 1),
+        (Algorithm::CsIAdmm(SchemeKind::Cyclic), 1),
+        (Algorithm::CsIAdmm(SchemeKind::Fractional), 1),
+    ] {
+        let sim_cfg = base_cfg(algo, s);
+        let thr_cfg = RunConfig { backend: BackendKind::Threaded, ..sim_cfg.clone() };
+        let sim = run_trace(sim_cfg);
+        let thr = run_trace(thr_cfg);
+        assert_eq!(sim, thr, "{}: threaded trace diverged from simulated", algo.label());
+    }
+}
+
+/// Objective-generic parity: the worker threads rebuild the loss-zoo
+/// objectives from the shard bytes, so non-LS losses match too.
+#[test]
+fn objective_zoo_parity_on_threaded_backend() {
+    let ds = synthetic_small(400, 40, 0.1, 93);
+    for kind in [
+        ObjectiveKind::Logistic { lambda: 1e-2 },
+        ObjectiveKind::ElasticNet { l1: 1e-3, l2: 1e-2 },
+    ] {
+        let sim_cfg = RunConfig {
+            objective: kind,
+            max_iters: 120,
+            ..base_cfg(Algorithm::CsIAdmm(SchemeKind::Cyclic), 1)
+        };
+        let thr_cfg = RunConfig { backend: BackendKind::Threaded, ..sim_cfg.clone() };
+        let sim = Driver::new(sim_cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+        let thr = Driver::new(thr_cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+        assert_eq!(sim.points, thr.points, "{}", kind.as_str());
+    }
+}
+
+/// A slow-node round returns from the fast prefix while the slow
+/// worker thread is still asleep (the mechanism the paper's Fig. 2
+/// illustrates, on real threads).
+#[test]
+fn slow_node_decodes_from_fast_prefix_before_slow_thread() {
+    let ds = synthetic_small(240, 24, 0.1, 91);
+    let latency = LatencySpec {
+        kind: LatencyKind::SlowNode { n_slow: 1, factor: 2_000.0 },
+        ..Default::default()
+    };
+    let mut backend = ThreadedBackend::with_time_scale(
+        0,
+        ObjectiveKind::LeastSquares,
+        ds.train,
+        SchemeKind::Cyclic,
+        1,
+        5,
+        4,
+        8,
+        ResponseModel::default(),
+        &latency,
+        Xoshiro256pp::seed_from_u64(17),
+        // Stretch the ~0.1 modeled seconds of the slow node into a
+        // ~0.4 s real sleep; the fast prefix stays sub-millisecond.
+        4.0,
+    )
+    .unwrap();
+    let x = Matrix::zeros(3, 1);
+    let t0 = Instant::now();
+    match backend.round(&x, 0, 0.0, &mut NativeEngine::new()).unwrap() {
+        RoundOutcome::Decoded(r) => {
+            assert!(r.responses_used < 4, "decoded from {} < K responses", r.responses_used);
+        }
+        other => panic!("expected decode, got {other:?}"),
+    }
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_millis(150),
+        "round must not wait out the slow thread's sleep; took {elapsed:?}"
+    );
+}
+
+/// Deadline policy on real threads: a fail-stopped uncoded round
+/// resolves to `TimedOut` immediately instead of hanging on the dead
+/// worker, and a whole deadline'd run stays byte-identical to the
+/// simulated backend.
+#[test]
+fn threaded_deadline_expiry_times_out_not_hangs() {
+    let latency = LatencySpec {
+        faults: vec![FaultSpec { agent: None, ecn: 0, fail_at: 0.0, recover_at: None }],
+        deadline: Some(5e-4),
+        ..Default::default()
+    };
+    // Backend-level: the very first round times out.
+    let ds = synthetic_small(240, 24, 0.1, 92);
+    let mut backend = ThreadedBackend::new(
+        0,
+        ObjectiveKind::LeastSquares,
+        ds.train,
+        SchemeKind::Uncoded,
+        0,
+        5,
+        4,
+        8,
+        ResponseModel::default(),
+        &latency,
+        Xoshiro256pp::seed_from_u64(18),
+    )
+    .unwrap();
+    let x = Matrix::zeros(3, 1);
+    let t0 = Instant::now();
+    match backend.round(&x, 0, 1.0, &mut NativeEngine::new()).unwrap() {
+        RoundOutcome::TimedOut { elapsed } => assert_eq!(elapsed, 5e-4),
+        other => panic!("expected timeout, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(2), "timeout must not hang");
+
+    // Run-level: every round of the uncoded arm times out (the dead
+    // node blocks full decode), the run completes, and the trace is
+    // byte-identical across backends.
+    let sim_cfg = RunConfig {
+        latency,
+        max_iters: 80,
+        eval_every: 20,
+        ..base_cfg(Algorithm::SIAdmm, 0)
+    };
+    let thr_cfg = RunConfig { backend: BackendKind::Threaded, ..sim_cfg.clone() };
+    let sim = run_trace(sim_cfg);
+    let thr = run_trace(thr_cfg);
+    assert_eq!(sim, thr, "deadline'd run diverged across backends");
+}

@@ -2,12 +2,15 @@
 //! grid, fixed seeds, native engine) must serialize to *byte-identical*
 //! JSON run over run — and match the blessed trace committed under
 //! `rust/tests/golden/`, so refactors (like the objective-generic
-//! driver) provably do not perturb the least-squares numerics.
+//! driver, the latency subsystem or the backend unification) provably
+//! do not perturb the least-squares numerics.
 //!
-//! Blessing protocol: if the golden file is absent the test writes it
-//! and passes (first run on a fresh machine / CI cache); any later
-//! numeric drift fails the comparison. To intentionally re-bless after
-//! a justified numeric change, delete the file and re-run the test.
+//! Blessing protocol: the blessed file is committed; a missing or
+//! mismatching golden file **fails** (no silent self-bless). To
+//! intentionally re-bless after a justified numeric change, run
+//! `CSADMM_GOLDEN_REBLESS=1 cargo test --test golden_trace` and commit
+//! the regenerated file alongside the change that justified it (see
+//! `rust/tests/golden/README.md`).
 
 use csadmm::coordinator::{Driver, RunConfig};
 use csadmm::data::synthetic_small;
@@ -44,19 +47,26 @@ fn least_squares_trace_is_byte_identical_to_golden() {
     assert_eq!(a, b, "Driver::run must be bitwise deterministic");
 
     let path = Path::new(GOLDEN_PATH);
-    if path.exists() {
-        let want = std::fs::read_to_string(path).expect("golden file readable");
-        assert_eq!(
-            a,
-            want.trim_end(),
-            "least-squares numerics drifted from the blessed golden trace at {GOLDEN_PATH}; \
-             if the change is intentional, delete the file and re-run to re-bless"
-        );
-    } else {
+    if std::env::var_os("CSADMM_GOLDEN_REBLESS").is_some_and(|v| v == "1") {
         std::fs::create_dir_all(path.parent().unwrap()).expect("golden dir creatable");
         std::fs::write(path, &a).expect("golden file writable");
-        eprintln!("blessed new golden trace at {GOLDEN_PATH}");
+        eprintln!("re-blessed golden trace at {GOLDEN_PATH} — commit it");
+        return;
     }
+    let want = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        panic!(
+            "blessed golden trace missing/unreadable at {GOLDEN_PATH} ({e}); the file is \
+             committed, so an absent golden must fail loudly instead of silently \
+             re-blessing. To regenerate after an intentional numeric change, run with \
+             CSADMM_GOLDEN_REBLESS=1 and commit the result."
+        )
+    });
+    assert_eq!(
+        a,
+        want.trim_end(),
+        "least-squares numerics drifted from the blessed golden trace at {GOLDEN_PATH}; \
+         if the change is intentional, re-bless with CSADMM_GOLDEN_REBLESS=1 and commit"
+    );
 }
 
 /// The golden config sanity-checks itself: evaluation points land where
