@@ -1,0 +1,182 @@
+//! Communication-subsystem bench: codec throughput, bytes-to-ε and
+//! backend parity under compression — the PR-5 perf baseline.
+//!
+//! Emits `BENCH_pr5.json`:
+//!
+//! ```text
+//! {
+//!   "bench": "comm_tradeoff",
+//!   "token_entries": <entries per encoded token in the throughput loop>,
+//!   "eps": <fixed accuracy target of the bytes-to-eps comparison>,
+//!   "codecs": [{
+//!     "codec": "identity" | "f32" | "q8" | ...,
+//!     "encode_ns_per_entry":  encode+decode time per token entry,
+//!     "bytes_per_transfer":   exact wire bytes of one token transfer,
+//!     "final_accuracy":       Eq. 23 accuracy after the run budget,
+//!     "bytes_to_eps":         cumulative wire bytes when accuracy first
+//!                             reached eps (null if never)
+//!   }, ...],
+//!   "parity": {
+//!     "codec": "q8",
+//!     "sim_threaded_identical": true,   (asserted)
+//!     "sim_run_s":      wall-clock of the simulated-backend run,
+//!     "threaded_run_s": wall-clock of the threaded-backend run
+//!   }
+//! }
+//! ```
+//!
+//! ```bash
+//! cargo bench --bench comm_tradeoff [-- --quick]
+//! ```
+
+use csadmm::comm::CodecSpec;
+use csadmm::coordinator::{Driver, RunConfig};
+use csadmm::data::synthetic_small;
+use csadmm::ecn::BackendKind;
+use csadmm::experiments::fig7::ZOO;
+use csadmm::linalg::Matrix;
+use csadmm::metrics::Trace;
+use csadmm::rng::{Rng, Xoshiro256pp};
+use csadmm::runtime::NativeEngine;
+use csadmm::util::json::{write_json_file, Json};
+use csadmm::util::table::{fnum, Table};
+use std::time::Instant;
+
+// The zoo swept here is exactly fig7's — one source of truth, so a new
+// codec lands in both the figure and this baseline.
+const TOKEN_ENTRIES: usize = 512;
+
+/// Encode+decode nanoseconds per token entry for one codec.
+fn encode_ns_per_entry(token: &str, reps: usize) -> f64 {
+    let spec = CodecSpec::parse(token).expect("bench codec token");
+    let mut codec = spec.build(17).expect("bench codec builds");
+    let mut rng = Xoshiro256pp::seed_from_u64(99);
+    let v = Matrix::from_vec(
+        TOKEN_ENTRIES,
+        1,
+        (0..TOKEN_ENTRIES).map(|_| rng.normal()).collect(),
+    )
+    .unwrap();
+    // Warm-up (stochastic codecs advance their streams; that's fine).
+    let mut w = v.clone();
+    codec.transmit(&mut w);
+    let t0 = Instant::now();
+    let mut sink = 0.0;
+    for _ in 0..reps {
+        let mut t = v.clone();
+        codec.transmit(&mut t);
+        sink += t.as_slice()[0];
+    }
+    let ns = t0.elapsed().as_nanos() as f64;
+    // Keep the sink observable so the loop cannot be optimized away.
+    assert!(sink.is_finite());
+    ns / (reps as f64 * TOKEN_ENTRIES as f64)
+}
+
+fn run_with(token: &str, backend: BackendKind, iters: usize) -> Trace {
+    let cfg = RunConfig {
+        n_agents: 6,
+        k_ecn: 2,
+        minibatch: 8,
+        rho: 0.2,
+        max_iters: iters,
+        eval_every: 25,
+        seed: 41,
+        backend,
+        comm: CodecSpec::parse(token).expect("bench codec token"),
+        ..Default::default()
+    };
+    let ds = synthetic_small(1_200, 120, 0.1, 31);
+    Driver::new(cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 400 } else { 4_000 };
+    let iters = if quick { 600 } else { 2_400 };
+
+    // 1) Codec throughput + one-transfer wire bytes.
+    let mut per_codec: Vec<(String, f64, f64)> = vec![];
+    for token in ZOO {
+        let ns = encode_ns_per_entry(token, reps);
+        let mut probe = Matrix::full(TOKEN_ENTRIES, 1, 0.5);
+        let bytes = CodecSpec::parse(token)
+            .unwrap()
+            .build(17)
+            .unwrap()
+            .transmit(&mut probe)
+            .bytes() as f64;
+        per_codec.push((token.to_string(), ns, bytes));
+    }
+
+    // 2) Bytes-to-ε at a fixed accuracy target across the zoo.
+    let traces: Vec<(String, Trace)> = ZOO
+        .iter()
+        .map(|t| (t.to_string(), run_with(t, BackendKind::Sim, iters)))
+        .collect();
+    // Fixed target every *unbiased* codec provably reaches: 1.1× the
+    // worst final accuracy among identity/f32/q8 — the biased
+    // sparsifiers without EF may legitimately miss it (reported null).
+    let eps = 1.1
+        * traces
+            .iter()
+            .filter(|(t, _)| matches!(t.as_str(), "identity" | "f32" | "q8"))
+            .map(|(_, tr)| tr.final_accuracy())
+            .fold(0.0_f64, f64::max);
+
+    let mut table = Table::new(
+        "comm trade-off — encode speed, wire bytes, bytes-to-eps",
+        &["codec", "ns/entry", "B/transfer", "final acc", "kB to eps"],
+    );
+    let mut entries = vec![];
+    for ((token, ns, bytes), (_, trace)) in per_codec.iter().zip(&traces) {
+        let to_eps = trace.bytes_to_accuracy(eps);
+        table.row(&[
+            token.clone(),
+            format!("{ns:.1}"),
+            fnum(*bytes),
+            fnum(trace.final_accuracy()),
+            to_eps.map(|b| fnum(b / 1e3)).unwrap_or_else(|| "—".into()),
+        ]);
+        entries.push(
+            Json::obj()
+                .str("codec", token)
+                .num("encode_ns_per_entry", *ns)
+                .num("bytes_per_transfer", *bytes)
+                .num("final_accuracy", trace.final_accuracy())
+                .num("bytes_to_eps", to_eps.unwrap_or(f64::NAN)) // null in JSON
+                .build(),
+        );
+    }
+    table.print();
+    println!("eps target: {eps:.4}");
+
+    // 3) Sim vs threaded parity under compression (q8), timed.
+    let t0 = Instant::now();
+    let sim = run_with("q8", BackendKind::Sim, iters.min(400));
+    let sim_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let thr = run_with("q8", BackendKind::Threaded, iters.min(400));
+    let thr_s = t0.elapsed().as_secs_f64();
+    assert_eq!(sim.points, thr.points, "q8: sim/threaded parity violated under compression");
+    println!("parity: q8 sim {sim_s:.3}s vs threaded {thr_s:.3}s — traces identical");
+
+    let out = Json::obj()
+        .str("bench", "comm_tradeoff")
+        .num("token_entries", TOKEN_ENTRIES as f64)
+        .num("eps", eps)
+        .field("codecs", Json::Arr(entries))
+        .field(
+            "parity",
+            Json::obj()
+                .str("codec", "q8")
+                .field("sim_threaded_identical", Json::Bool(true))
+                .num("sim_run_s", sim_s)
+                .num("threaded_run_s", thr_s)
+                .build(),
+        )
+        .build();
+    write_json_file(std::path::Path::new("BENCH_pr5.json"), &out)
+        .expect("write BENCH_pr5.json");
+    println!("wrote BENCH_pr5.json");
+}

@@ -14,10 +14,9 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let ds = synthetic_small(2_000, 200, 0.1, 17);
     let iters = if quick { 1_000 } else { 4_000 };
-    let entries = 3 * 1; // p×d of the synthetic model
     let mut t = Table::new(
         "quantized token ablation (synthetic, sI-ADMM)",
-        &["bits/entry", "wire kbits", "accuracy"],
+        &["bits/entry", "wire kB (exact)", "accuracy"],
     );
     for bits in [None, Some(16u32), Some(8), Some(4)] {
         let cfg = RunConfig {
@@ -32,11 +31,13 @@ fn main() {
             ..Default::default()
         };
         let trace = Driver::new(cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
-        let per_transfer = bits.map(|b| b as u64 * entries + 64).unwrap_or(64 * entries);
-        let kbits = (iters as u64 * per_transfer) as f64 / 1e3;
+        // Exact wire bytes now come from the comm ledger itself (the
+        // hand-computed estimate this bench used before the comm
+        // subsystem existed is gone).
+        let kbytes = trace.final_comm_bytes().expect("trace has points") / 1e3;
         t.row(&[
             bits.map(|b| b.to_string()).unwrap_or("f64 (exact)".into()),
-            fnum(kbits),
+            fnum(kbytes),
             fnum(trace.final_accuracy()),
         ]);
     }

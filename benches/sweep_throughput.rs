@@ -71,7 +71,7 @@ fn main() {
         for (a, b) in serial_traces.iter().zip(&result.jobs) {
             assert_eq!(a.points, b.trace.points, "pool diverged from serial");
         }
-        let json = SweepSummary::from_result(&result).to_json().to_pretty();
+        let json = SweepSummary::from_result(&result).expect("summary").to_json().to_pretty();
         match workers {
             1 => json_w1 = Some(json),
             4 => json_w4 = Some(json),

@@ -77,6 +77,7 @@ impl GossipHarness {
                 trace.push(TracePoint {
                     iter: k,
                     comm_units: comm.total(),
+                    comm_bytes: comm.bytes(),
                     sim_time: clock.now(),
                     accuracy: accuracy(&xs, Some(xstar))?,
                     test_mse: test_mse(&zbar, test),

@@ -17,7 +17,8 @@ usage: csadmm <command> [--quick] [--pjrt] [--artifacts <dir>]
 
 commands:
   run [--config <file>] [--seed N] [--objective <obj>] [--latency <lat>]
-      [--backend <be>]             one experiment from a config file
+      [--backend <be>] [--compress <cx>]
+                                   one experiment from a config file
                                    (default: examples/configs/quickstart.toml,
                                    resolved relative to the working dir)
   table1                           Table I dataset inventory
@@ -30,9 +31,13 @@ commands:
                                    comparison on the simulated AND the
                                    real-thread backend — identical traces,
                                    real wall-clock measured on threads
+  fig7                             communication frontier: accuracy vs
+                                   cumulative wire bytes across the
+                                   compressor zoo, coded vs uncoded
+                                   (error feedback rescuing topk/randk)
   sweep [--config <file>] [--workers N] [--out <file>]
         [--objective <obj>[,<obj>...]] [--latency <lat>[,<lat>...]]
-        [--backend <be>[,<be>...]]
+        [--backend <be>[,<be>...]] [--compress <cx>[,<cx>...]]
                                    parallel parameter grid: expands the
                                    [sweep] section of the config (or a
                                    built-in 24-job demo grid) and runs it
@@ -45,14 +50,19 @@ commands:
                                    --latency overrides the straggler-zoo
                                    axis, e.g. --latency uniform,pareto;
                                    --backend overrides the backend axis,
-                                   e.g. --backend sim,threaded
+                                   e.g. --backend sim,threaded;
+                                   --compress overrides the token-codec
+                                   axis, e.g. --compress identity,q8,topk+ef
   all                              every experiment above
 
 objectives (<obj>): ls (least squares, Eq. 24) | logistic | huber | enet
 latency regimes (<lat>): uniform (paper baseline) | shifted-exp | pareto
                          | slownode | bimodal   (params via [latency])
 backends (<be>): sim (simulated clock, default) | threaded (one real OS
-                 thread per ECN; same decoded bytes, real wall-clock)";
+                 thread per ECN; same decoded bytes, real wall-clock)
+token codecs (<cx>): identity (exact f64, default) | f32 | q<bits>
+                     (stochastic quantizer, e.g. q8) | topk | randk
+                     — append +ef for error feedback; params via [comm]";
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]

@@ -1,0 +1,521 @@
+//! Token codecs: the compressor zoo behind [`TokenCodec`].
+//!
+//! Every codec simulates one wire transfer of the token variable:
+//! *encode at the sender, decode at the receiver* collapses to an
+//! in-place transform of the matrix (the receiver's reconstruction),
+//! plus an exact [`WireCost`] for what actually crossed the link.
+
+use crate::linalg::Matrix;
+use crate::rng::{Rng, Xoshiro256pp};
+
+/// Exact wire cost of one encoded transfer: a fixed-size header (scale
+/// factors, element counts, sync fields) plus the payload. Costs are
+/// accounted in bits and converted to bytes at the transfer granularity
+/// (a transfer occupies whole bytes on the wire).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireCost {
+    /// Header bits (per-transfer metadata the decoder needs).
+    pub header_bits: u64,
+    /// Payload bits (the encoded entries themselves).
+    pub payload_bits: u64,
+}
+
+impl WireCost {
+    /// Total bits of the transfer.
+    pub fn total_bits(&self) -> u64 {
+        self.header_bits + self.payload_bits
+    }
+
+    /// Bytes occupied on the wire: the transfer's total bits rounded up
+    /// to whole bytes.
+    pub fn bytes(&self) -> u64 {
+        self.total_bits().div_ceil(8)
+    }
+}
+
+/// One token-channel codec: encode + decode the exchanged variable in
+/// place and report the exact wire bytes of the transfer.
+///
+/// Implementations must be deterministic functions of their
+/// construction seed and call sequence (the sweep pool and the
+/// sim/threaded backend parity both rely on it). Stateful codecs
+/// (stochastic quantization, random sparsification, error feedback)
+/// advance their private streams once per [`Self::transmit`] call.
+pub trait TokenCodec {
+    /// Simulate one transfer: `token` leaves as the receiver's decoded
+    /// reconstruction; the return value is the exact wire cost.
+    fn transmit(&mut self, token: &mut Matrix) -> WireCost;
+
+    /// Codec label for traces/tables (e.g. `"q8+ef"`).
+    fn label(&self) -> String;
+}
+
+/// Wire cost of an *unquantized* f64 matrix — the [`Identity`]
+/// baseline's payload, kept as a free function for comparable bit
+/// accounting in ablations.
+pub fn raw_bits(m: &Matrix) -> u64 {
+    m.len() as u64 * 64
+}
+
+/// Exact f64 transfer (the paper's setting): no transform, no header,
+/// 64 payload bits per entry.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Identity;
+
+impl TokenCodec for Identity {
+    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
+        WireCost { header_bits: 0, payload_bits: raw_bits(token) }
+    }
+
+    fn label(&self) -> String {
+        "identity".into()
+    }
+}
+
+/// Half-width float transfer: every entry is rounded through `f32` (the
+/// receiver widens back), 32 payload bits per entry, no header.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct F32Cast;
+
+impl TokenCodec for F32Cast {
+    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
+        for v in token.as_mut_slice() {
+            *v = *v as f32 as f64;
+        }
+        WireCost { header_bits: 0, payload_bits: token.len() as u64 * 32 }
+    }
+
+    fn label(&self) -> String {
+        "f32".into()
+    }
+}
+
+/// Unbiased stochastic uniform quantizer with `bits` bits per entry.
+///
+/// Encodes `v` as `scale · round_stochastic(v/scale)` where the grid
+/// scale is `max|v| / (2^(bits−1) − 1)`; the stochastic rounding makes
+/// the quantizer unbiased: `E[Q(v)] = v` (the property the convergence
+/// analyses of QSGD-style methods need).
+///
+/// Wire cost: a 64-bit scale header plus `bits` payload bits per entry.
+/// The **all-zero matrix costs only the header**: when `max|v| == 0`
+/// nothing is encoded (the scale announces the zero grid and the
+/// decoder reconstructs zeros), so charging `entries·bits` there would
+/// overstate the wire by the whole payload.
+#[derive(Clone, Debug)]
+pub struct StochasticQuantizer {
+    bits: u32,
+    rng: Xoshiro256pp,
+}
+
+impl StochasticQuantizer {
+    /// New quantizer with `bits ∈ [2, 32]` bits per entry.
+    pub fn new(bits: u32, seed: u64) -> Self {
+        assert!((2..=32).contains(&bits), "bits {bits} out of [2,32]");
+        Self { bits, rng: Xoshiro256pp::seed_from_u64(seed ^ 0x9042) }
+    }
+
+    /// Bits per matrix entry on the wire.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Quantize in place (simulates transmit + dequantize at receiver).
+    /// Returns the number of wire bits used: `entries·bits` payload +
+    /// 64 for the scale header, or the 64-bit header alone for an
+    /// all-zero matrix (nothing is encoded — regression for the legacy
+    /// accounting bug that charged the full payload there).
+    pub fn quantize(&mut self, m: &mut Matrix) -> u64 {
+        self.transmit_cost(m).total_bits()
+    }
+
+    fn transmit_cost(&mut self, m: &mut Matrix) -> WireCost {
+        let levels = (1u64 << (self.bits - 1)) - 1;
+        let maxabs = m.max_abs();
+        if maxabs > 0.0 {
+            let scale = maxabs / levels as f64;
+            for v in m.as_mut_slice() {
+                let x = *v / scale;
+                let lo = x.floor();
+                // Stochastic rounding: up with prob = frac(x).
+                let frac = x - lo;
+                let q = if self.rng.next_f64() < frac { lo + 1.0 } else { lo };
+                *v = q * scale;
+            }
+            WireCost { header_bits: 64, payload_bits: m.len() as u64 * self.bits as u64 }
+        } else {
+            WireCost { header_bits: 64, payload_bits: 0 }
+        }
+    }
+}
+
+impl TokenCodec for StochasticQuantizer {
+    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
+        self.transmit_cost(token)
+    }
+
+    fn label(&self) -> String {
+        format!("q{}", self.bits)
+    }
+}
+
+/// How many entries a `frac` sparsifier keeps out of `len`: at least
+/// one, at most all of them.
+fn kept_entries(frac: f64, len: usize) -> usize {
+    ((frac * len as f64).ceil() as usize).clamp(1, len.max(1))
+}
+
+/// Bits needed to address one of `len` entries (`⌈log2 len⌉`; a
+/// single-entry token needs no index bits).
+fn index_bits(len: usize) -> u64 {
+    if len <= 1 {
+        0
+    } else {
+        (usize::BITS - (len - 1).leading_zeros()) as u64
+    }
+}
+
+/// Top-k magnitude sparsification: keep the `⌈frac·len⌉` largest-|v|
+/// entries (index tie-break for determinism), zero the rest.
+///
+/// Wire cost: a 32-bit count header, then per kept entry 64 value bits
+/// **plus** `⌈log2 len⌉` index bits — unlike [`RandK`], the receiver
+/// cannot know which coordinates survived, so the indices travel too.
+///
+/// TopK is *biased* (`E[C(v)] ≠ v`); wrap it in [`ErrorFeedback`] to
+/// recover convergence.
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    frac: f64,
+}
+
+impl TopK {
+    /// Keep the top `frac ∈ (0, 1]` fraction of entries per transfer.
+    pub fn new(frac: f64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "topk frac {frac} out of (0,1]");
+        Self { frac }
+    }
+}
+
+impl TokenCodec for TopK {
+    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
+        let len = token.len();
+        let k = kept_entries(self.frac, len);
+        if k < len {
+            let mut order: Vec<usize> = (0..len).collect();
+            let vals = token.as_slice();
+            // Partition around the k-th largest magnitude — O(n), this
+            // is the hot encode path. The index tie-break makes the
+            // comparator a total order, so the selected *set* is
+            // deterministic even though the partition is unordered.
+            order.select_nth_unstable_by(k - 1, |&a, &b| {
+                vals[b].abs().total_cmp(&vals[a].abs()).then(a.cmp(&b))
+            });
+            let slice = token.as_mut_slice();
+            for &i in &order[k..] {
+                slice[i] = 0.0;
+            }
+        }
+        WireCost { header_bits: 32, payload_bits: k as u64 * (64 + index_bits(len)) }
+    }
+
+    fn label(&self) -> String {
+        "topk".into()
+    }
+}
+
+/// Random-k sparsification: keep `⌈frac·len⌉` uniformly sampled
+/// coordinates, zero the rest. The coordinate sample is drawn from a
+/// stream both endpoints seed identically, so **only the values
+/// travel** — the wire carries a 64-bit sync header plus 64 bits per
+/// kept value, no index bits (the classic shared-randomness trick).
+///
+/// Like [`TopK`] this is biased; wrap in [`ErrorFeedback`] to recover
+/// convergence.
+#[derive(Clone, Debug)]
+pub struct RandK {
+    frac: f64,
+    rng: Xoshiro256pp,
+}
+
+impl RandK {
+    /// Keep a random `frac ∈ (0, 1]` fraction of entries per transfer;
+    /// `seed` fixes the shared coordinate stream.
+    pub fn new(frac: f64, seed: u64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "randk frac {frac} out of (0,1]");
+        Self { frac, rng: Xoshiro256pp::seed_from_u64(seed ^ 0x524B) }
+    }
+}
+
+impl TokenCodec for RandK {
+    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
+        let len = token.len();
+        let k = kept_entries(self.frac, len);
+        if k < len {
+            let kept = self.rng.sample_indices(len, k);
+            let mut keep = vec![false; len];
+            for i in kept {
+                keep[i] = true;
+            }
+            for (i, v) in token.as_mut_slice().iter_mut().enumerate() {
+                if !keep[i] {
+                    *v = 0.0;
+                }
+            }
+        }
+        WireCost { header_bits: 64, payload_bits: k as u64 * 64 }
+    }
+
+    fn label(&self) -> String {
+        "randk".into()
+    }
+}
+
+/// Per-link error-feedback memory around any inner codec: the residual
+/// `e` of every compression is carried into the next transfer,
+///
+/// ```text
+/// send_t = C(token_t + e_{t-1}),   e_t = (token_t + e_{t-1}) − send_t
+/// ```
+///
+/// so the transmitted stream telescopes — `Σ send_t = Σ token_t + e_0 −
+/// e_T` — and biased compressors (TopK/RandK) eventually deliver every
+/// coordinate. Wire cost is exactly the inner codec's (the residual
+/// never crosses the link).
+pub struct ErrorFeedback {
+    inner: Box<dyn TokenCodec>,
+    residual: Option<Matrix>,
+}
+
+impl ErrorFeedback {
+    /// Wrap `inner` with a fresh (zero) residual memory.
+    pub fn new(inner: Box<dyn TokenCodec>) -> Self {
+        Self { inner, residual: None }
+    }
+
+    /// The residual currently held back (tests / inspection); `None`
+    /// before the first transfer.
+    pub fn residual(&self) -> Option<&Matrix> {
+        self.residual.as_ref()
+    }
+}
+
+impl TokenCodec for ErrorFeedback {
+    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
+        if let Some(e) = &self.residual {
+            token.add_scaled(1.0, e);
+        }
+        let corrected = token.clone();
+        let cost = self.inner.transmit(token);
+        let mut e = corrected;
+        e.add_scaled(-1.0, token);
+        self.residual = Some(e);
+        cost
+    }
+
+    fn label(&self) -> String {
+        format!("{}+ef", self.inner.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::property;
+
+    #[test]
+    fn identity_and_f32_costs_and_values() {
+        let mut m = Matrix::from_rows(&[&[1.0, 0.1, -2.5e-9]]);
+        let exact = m.clone();
+        let c = Identity.transmit(&mut m);
+        assert_eq!((c.header_bits, c.payload_bits, c.bytes()), (0, 192, 24));
+        assert_eq!(m.as_slice(), exact.as_slice(), "identity must not perturb the token");
+        let c = F32Cast.transmit(&mut m);
+        assert_eq!((c.header_bits, c.payload_bits, c.bytes()), (0, 96, 12));
+        for (a, b) in m.as_slice().iter().zip(exact.as_slice()) {
+            assert_eq!(*a, *b as f32 as f64);
+        }
+    }
+
+    #[test]
+    fn quantizer_is_unbiased() {
+        // E[Q(v)] = v: average many quantizations of the same vector.
+        let mut q = StochasticQuantizer::new(4, 1);
+        let v = Matrix::from_rows(&[&[0.37, -1.42, 0.0, 2.0]]);
+        let trials = 20_000;
+        let mut mean = Matrix::zeros(1, 4);
+        for _ in 0..trials {
+            let mut c = v.clone();
+            q.quantize(&mut c);
+            mean.add_scaled(1.0 / trials as f64, &c);
+        }
+        assert!(
+            mean.max_abs_diff(&v) < 0.02,
+            "bias {} too large",
+            mean.max_abs_diff(&v)
+        );
+    }
+
+    #[test]
+    fn error_bounded_by_one_level() {
+        property("quantization error bound", 24, |rng| {
+            let bits = 2 + rng.below(7) as u32;
+            let n = 1 + rng.below(30) as usize;
+            let v = Matrix::from_vec(1, n, (0..n).map(|_| 3.0 * rng.normal()).collect()).unwrap();
+            let levels = (1u64 << (bits - 1)) - 1;
+            let scale = v.max_abs() / levels as f64;
+            let mut q = StochasticQuantizer::new(bits, rng.next_u64());
+            let mut c = v.clone();
+            q.quantize(&mut c);
+            assert!(
+                c.max_abs_diff(&v) <= scale + 1e-12,
+                "bits={bits}: err {} > scale {scale}",
+                c.max_abs_diff(&v)
+            );
+        });
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let v = Matrix::from_vec(4, 4, (0..16).map(|i| (i as f64).sin()).collect()).unwrap();
+        let mut errs = vec![];
+        for bits in [3u32, 6, 12] {
+            let mut q = StochasticQuantizer::new(bits, 7);
+            let mut c = v.clone();
+            q.quantize(&mut c);
+            errs.push(c.max_abs_diff(&v));
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    /// Regression (PR 5 satellite): the all-zero matrix encodes nothing,
+    /// so only the 64-bit scale header is charged — the legacy
+    /// accounting charged the full `entries·bits` payload too.
+    #[test]
+    fn zero_matrix_charges_header_only() {
+        let mut q = StochasticQuantizer::new(8, 3);
+        let mut m = Matrix::zeros(3, 3);
+        let bits = q.quantize(&mut m);
+        assert_eq!(bits, 64, "all-zero matrix must cost the scale header alone");
+        assert_eq!(m.max_abs(), 0.0);
+        // A single nonzero entry restores the full payload charge.
+        let mut m = Matrix::zeros(3, 3);
+        m.as_mut_slice()[4] = 1.0;
+        assert_eq!(q.quantize(&mut m), 9 * 8 + 64);
+    }
+
+    #[test]
+    fn raw_bits_accounting() {
+        assert_eq!(raw_bits(&Matrix::zeros(4, 2)), 512);
+    }
+
+    #[test]
+    fn topk_keeps_largest_and_accounts_indices() {
+        let mut m = Matrix::from_rows(&[&[0.1, -3.0, 0.2, 2.0, -0.05, 0.0, 1.0, 0.3]]);
+        let mut c = TopK::new(0.25);
+        let cost = c.transmit(&mut m);
+        // k = ceil(0.25·8) = 2 of 8 entries; 3 index bits each.
+        assert_eq!(cost, WireCost { header_bits: 32, payload_bits: 2 * (64 + 3) });
+        assert_eq!(m.as_slice(), &[0.0, -3.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+        // frac = 1 keeps everything (and still pays index bits — the
+        // receiver can't assume density).
+        let mut m = Matrix::from_rows(&[&[1.0, 2.0]]);
+        let cost = TopK::new(1.0).transmit(&mut m);
+        assert_eq!(cost.payload_bits, 2 * (64 + 1));
+        assert_eq!(m.as_slice(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn topk_tie_break_is_deterministic() {
+        let mut a = Matrix::from_rows(&[&[1.0, -1.0, 1.0, 1.0]]);
+        let mut b = a.clone();
+        TopK::new(0.5).transmit(&mut a);
+        TopK::new(0.5).transmit(&mut b);
+        assert_eq!(a.as_slice(), b.as_slice());
+        // Lowest indices win ties.
+        assert_eq!(a.as_slice(), &[1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn randk_pays_no_index_bits_and_is_seed_deterministic() {
+        let v = Matrix::from_vec(1, 16, (0..16).map(|i| i as f64 + 1.0).collect()).unwrap();
+        let (mut a, mut b) = (v.clone(), v.clone());
+        let cost = RandK::new(0.25, 9).transmit(&mut a);
+        RandK::new(0.25, 9).transmit(&mut b);
+        assert_eq!(cost, WireCost { header_bits: 64, payload_bits: 4 * 64 });
+        assert_eq!(a.as_slice(), b.as_slice(), "same seed, same coordinates");
+        let kept = a.as_slice().iter().filter(|v| **v != 0.0).count();
+        assert_eq!(kept, 4);
+        // Successive transfers draw fresh coordinates from the stream:
+        // over several rounds at least one selection must differ.
+        let mut c = RandK::new(0.25, 9);
+        let mut first = v.clone();
+        c.transmit(&mut first);
+        let mut advanced = false;
+        for _ in 0..6 {
+            let mut t = v.clone();
+            c.transmit(&mut t);
+            advanced |= t.as_slice() != first.as_slice();
+        }
+        assert!(advanced, "coordinate stream must advance across transfers");
+    }
+
+    /// The error-feedback telescoping property: over any prefix of
+    /// transfers, Σ sent = Σ input − residual, exactly (same additions,
+    /// no reordering).
+    #[test]
+    fn error_feedback_residual_telescopes() {
+        let mut ef = ErrorFeedback::new(Box::new(TopK::new(0.25)));
+        let mut sum_in = Matrix::zeros(1, 8);
+        let mut sum_sent = Matrix::zeros(1, 8);
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        for t in 0..40 {
+            let token =
+                Matrix::from_vec(1, 8, (0..8).map(|_| rng.normal()).collect()).unwrap();
+            sum_in.add_scaled(1.0, &token);
+            let mut sent = token.clone();
+            ef.transmit(&mut sent);
+            sum_sent.add_scaled(1.0, &sent);
+            let mut telescoped = sum_sent.clone();
+            telescoped.add_scaled(1.0, ef.residual().unwrap());
+            assert!(
+                telescoped.max_abs_diff(&sum_in) < 1e-9,
+                "t={t}: Σsent + e = {:?} but Σin = {:?}",
+                telescoped.as_slice(),
+                sum_in.as_slice()
+            );
+        }
+        // The biased codec really is holding mass back (EF has work to
+        // do): after 40 rounds the residual is nonzero.
+        assert!(ef.residual().unwrap().max_abs() > 0.0);
+    }
+
+    #[test]
+    fn error_feedback_over_identity_is_transparent() {
+        let mut ef = ErrorFeedback::new(Box::new(Identity));
+        let v = Matrix::from_rows(&[&[0.3, -0.7]]);
+        let mut t = v.clone();
+        let cost = ef.transmit(&mut t);
+        assert_eq!(t.as_slice(), v.as_slice());
+        assert_eq!(cost.payload_bits, 128);
+        assert_eq!(ef.residual().unwrap().max_abs(), 0.0);
+        assert_eq!(ef.label(), "identity+ef");
+    }
+
+    #[test]
+    fn index_bits_addressing() {
+        assert_eq!(index_bits(1), 0);
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(8), 3);
+        assert_eq!(index_bits(9), 4);
+        assert_eq!(index_bits(1024), 10);
+    }
+
+    #[test]
+    fn wire_cost_rounds_up_to_whole_bytes() {
+        let c = WireCost { header_bits: 32, payload_bits: 3 };
+        assert_eq!(c.total_bits(), 35);
+        assert_eq!(c.bytes(), 5);
+        assert_eq!(WireCost::default().bytes(), 0);
+    }
+}

@@ -1,0 +1,80 @@
+//! The byte-exact wire ledger: one accumulator for everything a run
+//! sends over agent-pair links.
+
+use super::codec::WireCost;
+
+/// Cumulative wire accounting of one run.
+///
+/// Two parallel books are kept:
+///
+/// * **units** — the paper's abstract count: one unit per variable
+///   exchange over one link (relay hops each cost one unit). This is
+///   the historical `comm_units` stream; it is codec-independent, so
+///   the blessed golden trace is pinned to it.
+/// * **bytes** — the exact wire bytes of every transfer: each hop of a
+///   transfer retransmits the encoded token, so a transfer over `hops`
+///   links costs `hops · WireCost::bytes()`.
+///
+/// [`crate::metrics::CommCost`] is a thin view over this ledger.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireLedger {
+    units: f64,
+    bytes: f64,
+    transfers: u64,
+}
+
+impl WireLedger {
+    /// New zeroed ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge a unit-only exchange (no codec in play — the gossip
+    /// baselines' book-keeping): `units` link-transmissions, zero
+    /// bytes.
+    pub fn charge_units(&mut self, units: usize) {
+        self.units += units as f64;
+    }
+
+    /// Charge one encoded token transfer across `hops` links: `hops`
+    /// units and `hops · cost.bytes()` wire bytes.
+    pub fn charge_transfer(&mut self, hops: usize, cost: WireCost) {
+        self.units += hops as f64;
+        self.bytes += (hops as u64 * cost.bytes()) as f64;
+        if hops > 0 {
+            self.transfers += 1;
+        }
+    }
+
+    /// Total communication units so far.
+    pub fn units(&self) -> f64 {
+        self.units
+    }
+
+    /// Total wire bytes so far.
+    pub fn bytes(&self) -> f64 {
+        self.bytes
+    }
+
+    /// Number of encoded transfers charged (hops > 0).
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn units_and_bytes_accumulate_separately() {
+        let mut l = WireLedger::new();
+        l.charge_units(3);
+        assert_eq!((l.units(), l.bytes(), l.transfers()), (3.0, 0.0, 0));
+        let cost = WireCost { header_bits: 64, payload_bits: 256 };
+        l.charge_transfer(2, cost); // 2 hops × 40 bytes
+        assert_eq!((l.units(), l.bytes(), l.transfers()), (5.0, 80.0, 1));
+        l.charge_transfer(0, cost); // zero-hop transfer is free
+        assert_eq!((l.units(), l.bytes(), l.transfers()), (5.0, 80.0, 1));
+    }
+}

@@ -1,0 +1,52 @@
+//! The communication subsystem: token codecs, error feedback and
+//! byte-exact wire accounting.
+//!
+//! The paper's first headline challenge is the communication
+//! bottleneck, and its §I survey points at quantized SGD/ADMM as the
+//! orthogonal lever: fewer *bits* per exchanged variable instead of
+//! fewer exchanges. This module promotes that lever to a first-class
+//! subsystem:
+//!
+//! * [`TokenCodec`] — the channel contract: encode + decode the
+//!   exchanged token variable in place (the simulation's transmit) and
+//!   report the **exact** wire cost of the transfer as a [`WireCost`]
+//!   (header bits + payload bits, converted to bytes at the transfer
+//!   granularity).
+//! * The compressor zoo — [`Identity`] (exact f64 tokens, the paper's
+//!   setting), [`F32Cast`] (half-width floats), [`StochasticQuantizer`]
+//!   (the unbiased uniform quantizer, moved here from the legacy
+//!   `compression` module with its rng stream preserved), [`TopK`]
+//!   (magnitude sparsification; value *and* index bits accounted) and
+//!   [`RandK`] (random sparsification; indices regenerated from a
+//!   shared seeded stream, so only values travel).
+//! * [`ErrorFeedback`] — per-link residual memory (Ren, Bastianello,
+//!   Johansson & Parisini, arXiv:2501.13516 style): the compression
+//!   error of every transfer is carried into the next one, so *biased*
+//!   compressors (TopK/RandK) still converge. Wrap any codec via
+//!   [`CodecSpec::error_feedback`] / the `+ef` token suffix.
+//! * [`CodecSpec`] / [`CodecKind`] — the config/CLI/sweep surface:
+//!   `[comm]` table keys, `--compress` tokens (`identity`, `f32`,
+//!   `q<bits>`, `topk`, `randk`, each optionally `+ef`) and the
+//!   `[sweep] compress` axis (`cx=` cell labels).
+//! * [`WireLedger`] — the one byte-exact ledger every layer charges
+//!   into; [`crate::metrics::CommCost`] is a thin view over it, so the
+//!   historical comm-unit stream is unchanged (and byte-identical for
+//!   the default identity path — the blessed golden trace does not
+//!   move) while `comm_bytes` is now tracked next to it.
+//!
+//! The codec is applied by the coordinator to the token variable z on
+//! every hop of a transfer, identically for the simulated and the
+//! threaded gradient backend, so backend traces stay byte-identical
+//! under every codec in the zoo. `csadmm fig7` sweeps the zoo and
+//! plots the accuracy-vs-cumulative-bytes trade-off, coded vs uncoded.
+
+mod codec;
+mod ledger;
+mod spec;
+
+pub use codec::{
+    raw_bits, ErrorFeedback, F32Cast, Identity, RandK, StochasticQuantizer, TokenCodec, TopK,
+    WireCost,
+};
+pub use ledger::WireLedger;
+pub use spec::{CodecKind, CodecSpec, DEFAULT_SPARSE_FRAC};

@@ -1,0 +1,194 @@
+//! Codec selection: the config/CLI/sweep surface of the compressor zoo.
+
+use super::codec::{ErrorFeedback, F32Cast, Identity, RandK, StochasticQuantizer, TokenCodec, TopK};
+use crate::error::{Error, Result};
+
+/// Default kept fraction for the sparsifying codecs (`topk`, `randk`)
+/// when no `[comm] frac` is configured.
+pub const DEFAULT_SPARSE_FRAC: f64 = 0.25;
+
+/// Which compressor encodes the token variable on the wire.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum CodecKind {
+    /// Exact f64 tokens — the paper's setting and the default; the
+    /// golden-trace path.
+    #[default]
+    Identity,
+    /// Round every entry through `f32` (half the payload).
+    F32Cast,
+    /// Unbiased stochastic uniform quantization to `bits` bits/entry.
+    Quantize {
+        /// Bits per entry on the wire, `∈ [2, 32]`.
+        bits: u32,
+    },
+    /// Magnitude top-k sparsification (biased; pair with error
+    /// feedback).
+    TopK {
+        /// Kept fraction of entries per transfer, `∈ (0, 1]`.
+        frac: f64,
+    },
+    /// Random-k sparsification with shared-seed coordinates (biased;
+    /// pair with error feedback).
+    RandK {
+        /// Kept fraction of entries per transfer, `∈ (0, 1]`.
+        frac: f64,
+    },
+}
+
+impl CodecKind {
+    /// Short token used in labels, tables and config/CLI round trips
+    /// (`identity`, `f32`, `q<bits>`, `topk`, `randk`).
+    pub fn as_str(&self) -> String {
+        match self {
+            CodecKind::Identity => "identity".into(),
+            CodecKind::F32Cast => "f32".into(),
+            CodecKind::Quantize { bits } => format!("q{bits}"),
+            CodecKind::TopK { .. } => "topk".into(),
+            CodecKind::RandK { .. } => "randk".into(),
+        }
+    }
+}
+
+/// A fully-specified token codec: the compressor plus whether it is
+/// wrapped in per-link [`ErrorFeedback`] memory.
+///
+/// This is the value carried by `RunConfig.comm`, the `[comm]` config
+/// table, the `--compress` CLI flag and the `[sweep] compress` axis.
+/// The default (`identity`, no error feedback) reproduces the paper's
+/// exact-token setting byte-for-byte.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CodecSpec {
+    /// The compressor.
+    pub kind: CodecKind,
+    /// Wrap the compressor in error-feedback residual memory (`+ef`).
+    pub error_feedback: bool,
+}
+
+impl CodecSpec {
+    /// Parse a codec token: `identity` (aliases `exact`, `f64`), `f32`,
+    /// `q<bits>` (e.g. `q8`), `topk`, `randk` — each optionally
+    /// suffixed `+ef` for error feedback. Sparsifier fractions beyond
+    /// the token default come from the `[comm]` table
+    /// ([`crate::config::apply_comm_params`]); quantizer bits always
+    /// live in the token itself.
+    pub fn parse(token: &str) -> Option<CodecSpec> {
+        let (body, error_feedback) = match token.strip_suffix("+ef") {
+            Some(body) => (body, true),
+            None => (token, false),
+        };
+        let kind = match body {
+            "identity" | "exact" | "f64" => CodecKind::Identity,
+            "f32" => CodecKind::F32Cast,
+            "topk" => CodecKind::TopK { frac: DEFAULT_SPARSE_FRAC },
+            "randk" => CodecKind::RandK { frac: DEFAULT_SPARSE_FRAC },
+            other => {
+                let bits = other.strip_prefix('q')?.parse::<u32>().ok()?;
+                CodecKind::Quantize { bits }
+            }
+        };
+        Some(CodecSpec { kind, error_feedback })
+    }
+
+    /// Label token (round-trips through [`Self::parse`] for the default
+    /// sparsifier fraction): `identity`, `q8+ef`, `topk`, …
+    pub fn as_str(&self) -> String {
+        let mut s = self.kind.as_str();
+        if self.error_feedback {
+            s.push_str("+ef");
+        }
+        s
+    }
+
+    /// Whether this is the plain default path (exact f64 tokens, no
+    /// error feedback): the golden-trace / legacy-JSON regime.
+    pub fn is_plain_identity(&self) -> bool {
+        self.kind == CodecKind::Identity && !self.error_feedback
+    }
+
+    /// Validate the parameters without building (bits range, fraction
+    /// range) — called by `Driver::new` so bad configs fail before any
+    /// work runs.
+    pub fn validate(&self) -> Result<()> {
+        match self.kind {
+            CodecKind::Quantize { bits } if !(2..=32).contains(&bits) => Err(Error::Config(
+                format!("comm codec q{bits}: bits must be in [2, 32]"),
+            )),
+            CodecKind::TopK { frac } | CodecKind::RandK { frac }
+                if !(frac > 0.0 && frac <= 1.0) =>
+            {
+                Err(Error::Config(format!(
+                    "comm codec {}: frac {frac} must be in (0, 1]",
+                    self.kind.as_str()
+                )))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Build the codec instance for one run. `seed` is the run seed;
+    /// stochastic codecs derive their private streams from it with
+    /// fixed salts (the quantizer keeps the historical `seed ^ 0x5154`
+    /// stream of the legacy `quantize_bits` path, so `q<bits>` traces
+    /// are byte-identical to pre-refactor quantized runs).
+    pub fn build(&self, seed: u64) -> Result<Box<dyn TokenCodec>> {
+        self.validate()?;
+        let inner: Box<dyn TokenCodec> = match self.kind {
+            CodecKind::Identity => Box::new(Identity),
+            CodecKind::F32Cast => Box::new(F32Cast),
+            CodecKind::Quantize { bits } => {
+                Box::new(StochasticQuantizer::new(bits, seed ^ 0x5154))
+            }
+            CodecKind::TopK { frac } => Box::new(TopK::new(frac)),
+            CodecKind::RandK { frac } => Box::new(RandK::new(frac, seed)),
+        };
+        Ok(if self.error_feedback { Box::new(ErrorFeedback::new(inner)) } else { inner })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_labels() {
+        for token in ["identity", "f32", "q8", "q16", "topk", "randk", "topk+ef", "q4+ef"] {
+            let spec = CodecSpec::parse(token).unwrap();
+            assert_eq!(spec.as_str(), token, "token {token} must round-trip");
+        }
+        assert_eq!(CodecSpec::parse("exact").unwrap(), CodecSpec::default());
+        assert_eq!(CodecSpec::parse("f64").unwrap(), CodecSpec::default());
+        assert!(CodecSpec::parse("nope").is_none());
+        assert!(CodecSpec::parse("q").is_none());
+        assert!(CodecSpec::parse("qx8").is_none());
+    }
+
+    #[test]
+    fn default_is_plain_identity() {
+        assert!(CodecSpec::default().is_plain_identity());
+        assert!(!CodecSpec::parse("identity+ef").unwrap().is_plain_identity());
+        assert!(!CodecSpec::parse("q8").unwrap().is_plain_identity());
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        assert!(CodecSpec::parse("q1").unwrap().validate().is_err());
+        assert!(CodecSpec::parse("q33").unwrap().validate().is_err());
+        assert!(CodecSpec { kind: CodecKind::TopK { frac: 0.0 }, error_feedback: false }
+            .validate()
+            .is_err());
+        assert!(CodecSpec { kind: CodecKind::RandK { frac: 1.5 }, error_feedback: true }
+            .validate()
+            .is_err());
+        assert!(CodecSpec::parse("q8").unwrap().validate().is_ok());
+        assert!(CodecSpec::parse("topk").unwrap().validate().is_ok());
+    }
+
+    #[test]
+    fn build_labels_match_spec() {
+        for token in ["identity", "f32", "q8", "topk", "randk", "randk+ef"] {
+            let spec = CodecSpec::parse(token).unwrap();
+            assert_eq!(spec.build(7).unwrap().label(), token);
+        }
+        assert!(CodecSpec::parse("q40").unwrap().build(7).is_err());
+    }
+}

@@ -1,136 +1,14 @@
-//! Token compression (extension): quantized z-transmission.
+//! Legacy location of the token quantizer — superseded by
+//! [`crate::comm`].
 //!
-//! The paper's §I surveys quantized SGD/ADMM (QSGD [17], quantized
-//! ADMM [18]) as the orthogonal lever on communication cost: fewer
-//! *bits* per exchanged variable instead of fewer exchanges. This
-//! module implements the standard unbiased stochastic uniform quantizer
-//! and wires it into the coordinator as an optional token codec, with
-//! bit-level communication accounting — the `quantization` ablation
-//! bench sweeps bits ∈ {4, 8, 16} against the f64 baseline and shows
-//! the accuracy/bits trade-off ("accuracy is sacrificed to achieve
-//! lower communication costs" [21]).
+//! The stochastic uniform quantizer and its bit accounting moved into
+//! the first-class communication subsystem ([`crate::comm`]), where it
+//! is one codec of a zoo ([`crate::comm::CodecKind::Quantize`], token
+//! `q<bits>`) behind the [`crate::comm::TokenCodec`] trait, optionally
+//! wrapped in error feedback. Its rng stream is unchanged, so
+//! quantized traces are byte-identical across the move.
+//!
+//! This module re-exports the moved items so existing imports keep
+//! compiling; new code should use [`crate::comm`] directly.
 
-use crate::linalg::Matrix;
-use crate::rng::{Rng, Xoshiro256pp};
-
-/// Unbiased stochastic uniform quantizer with `bits` bits per entry.
-///
-/// Encodes `v` as `scale · round_stochastic(v/scale)` where the grid
-/// scale is `max|v| / (2^(bits−1) − 1)`; the stochastic rounding makes
-/// the quantizer unbiased: `E[Q(v)] = v` (the property the convergence
-/// analyses of [17]/[18] need).
-#[derive(Clone, Debug)]
-pub struct StochasticQuantizer {
-    bits: u32,
-    rng: Xoshiro256pp,
-}
-
-impl StochasticQuantizer {
-    /// New quantizer with `bits ∈ [2, 32]` bits per entry.
-    pub fn new(bits: u32, seed: u64) -> Self {
-        assert!((2..=32).contains(&bits), "bits {bits} out of [2,32]");
-        Self { bits, rng: Xoshiro256pp::seed_from_u64(seed ^ 0x9042) }
-    }
-
-    /// Bits per matrix entry on the wire.
-    pub fn bits(&self) -> u32 {
-        self.bits
-    }
-
-    /// Quantize in place (simulates transmit + dequantize at receiver).
-    /// Returns the number of wire bits used (entries·bits + 64 for the
-    /// scale).
-    pub fn quantize(&mut self, m: &mut Matrix) -> u64 {
-        let levels = (1u64 << (self.bits - 1)) - 1;
-        let maxabs = m.max_abs();
-        if maxabs > 0.0 {
-            let scale = maxabs / levels as f64;
-            for v in m.as_mut_slice() {
-                let x = *v / scale;
-                let lo = x.floor();
-                // Stochastic rounding: up with prob = frac(x).
-                let frac = x - lo;
-                let q = if self.rng.next_f64() < frac { lo + 1.0 } else { lo };
-                *v = q * scale;
-            }
-        }
-        m.len() as u64 * self.bits as u64 + 64
-    }
-}
-
-/// Wire cost of an *unquantized* f64 matrix (for comparable bit
-/// accounting in the ablation).
-pub fn raw_bits(m: &Matrix) -> u64 {
-    m.len() as u64 * 64
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::util::prop::property;
-
-    #[test]
-    fn quantizer_is_unbiased() {
-        // E[Q(v)] = v: average many quantizations of the same vector.
-        let mut q = StochasticQuantizer::new(4, 1);
-        let v = Matrix::from_rows(&[&[0.37, -1.42, 0.0, 2.0]]);
-        let trials = 20_000;
-        let mut mean = Matrix::zeros(1, 4);
-        for _ in 0..trials {
-            let mut c = v.clone();
-            q.quantize(&mut c);
-            mean.add_scaled(1.0 / trials as f64, &c);
-        }
-        assert!(
-            mean.max_abs_diff(&v) < 0.02,
-            "bias {} too large",
-            mean.max_abs_diff(&v)
-        );
-    }
-
-    #[test]
-    fn error_bounded_by_one_level() {
-        property("quantization error bound", 24, |rng| {
-            let bits = 2 + rng.below(7) as u32;
-            let n = 1 + rng.below(30) as usize;
-            let v = Matrix::from_vec(1, n, (0..n).map(|_| 3.0 * rng.normal()).collect()).unwrap();
-            let levels = (1u64 << (bits - 1)) - 1;
-            let scale = v.max_abs() / levels as f64;
-            let mut q = StochasticQuantizer::new(bits, rng.next_u64());
-            let mut c = v.clone();
-            q.quantize(&mut c);
-            assert!(
-                c.max_abs_diff(&v) <= scale + 1e-12,
-                "bits={bits}: err {} > scale {scale}",
-                c.max_abs_diff(&v)
-            );
-        });
-    }
-
-    #[test]
-    fn more_bits_less_error() {
-        let v = Matrix::from_vec(4, 4, (0..16).map(|i| (i as f64).sin()).collect()).unwrap();
-        let mut errs = vec![];
-        for bits in [3u32, 6, 12] {
-            let mut q = StochasticQuantizer::new(bits, 7);
-            let mut c = v.clone();
-            q.quantize(&mut c);
-            errs.push(c.max_abs_diff(&v));
-        }
-        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
-    }
-
-    #[test]
-    fn zero_matrix_costs_but_stays_zero() {
-        let mut q = StochasticQuantizer::new(8, 3);
-        let mut m = Matrix::zeros(3, 3);
-        let bits = q.quantize(&mut m);
-        assert_eq!(bits, 9 * 8 + 64);
-        assert_eq!(m.max_abs(), 0.0);
-    }
-
-    #[test]
-    fn raw_bits_accounting() {
-        assert_eq!(raw_bits(&Matrix::zeros(4, 2)), 512);
-    }
-}
+pub use crate::comm::{raw_bits, StochasticQuantizer};

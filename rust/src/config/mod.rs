@@ -23,6 +23,7 @@ mod parser;
 pub use parser::{ConfigDoc, Value};
 
 use crate::coding::SchemeKind;
+use crate::comm::{CodecKind, CodecSpec};
 use crate::coordinator::{Algorithm, RunConfig, TopologyKind};
 use crate::data::DatasetName;
 use crate::ecn::{BackendKind, ResponseModel};
@@ -103,6 +104,66 @@ pub fn apply_latency_params(kind: LatencyKind, doc: &ConfigDoc) -> LatencyKind {
         },
         LatencyKind::Uniform => LatencyKind::Uniform,
     }
+}
+
+/// Apply the optional `[comm]` parameter keys to a parsed codec spec
+/// (the codec selected by `[comm] codec = …`, `--compress` or a
+/// `[sweep] compress = …` axis):
+///
+/// ```text
+/// [comm]
+/// codec = topk          # identity|f32|q<bits>|topk|randk, optional +ef
+/// frac = 0.25           # topk/randk: kept fraction of entries (0,1]
+/// error_feedback = true # wrap the codec in residual memory (same as +ef)
+/// ```
+///
+/// Keys that don't apply to the kind are ignored, so one section can
+/// parameterize a whole `compress = identity, q8, topk, randk` sweep
+/// axis (mirroring [`apply_latency_params`]). Quantizer bits are *not*
+/// a section key — they are always spelled in the token itself (`q8`),
+/// so a `compress = q4, q8` axis can never be silently collapsed onto
+/// one bit width. `error_feedback = true` composes with the `+ef`
+/// token suffix (either enables it); anything other than a boolean
+/// (`true`/`false`/`1`/`0`) is a config error, not a silent false —
+/// a typo'd value must not quietly strand a biased sparsifier without
+/// its residual memory.
+pub fn apply_comm_params(spec: CodecSpec, doc: &ConfigDoc) -> Result<CodecSpec> {
+    let sec = "comm";
+    let kind = match spec.kind {
+        CodecKind::TopK { frac } => {
+            CodecKind::TopK { frac: doc.get_num(sec, "frac").unwrap_or(frac) }
+        }
+        CodecKind::RandK { frac } => {
+            CodecKind::RandK { frac: doc.get_num(sec, "frac").unwrap_or(frac) }
+        }
+        exact => exact,
+    };
+    let ef_key = match doc.get_str(sec, "error_feedback") {
+        None => false,
+        Some(v) => match v.as_str() {
+            "true" | "1" => true,
+            "false" | "0" => false,
+            other => {
+                return Err(Error::Config(format!(
+                    "comm.error_feedback: expected true/false, got '{other}'"
+                )))
+            }
+        },
+    };
+    Ok(CodecSpec { kind, error_feedback: spec.error_feedback || ef_key })
+}
+
+/// Parse the full `[comm]` table into the run's [`CodecSpec`] (see
+/// [`apply_comm_params`] for the keys). A missing table or a missing
+/// `codec` key keeps the exact-token identity default — the golden
+/// path.
+pub fn comm_spec_from_doc(doc: &ConfigDoc) -> Result<CodecSpec> {
+    let mut spec = CodecSpec::default();
+    if let Some(tok) = doc.get_str("comm", "codec") {
+        spec = CodecSpec::parse(&tok)
+            .ok_or_else(|| Error::Config(format!("unknown comm codec '{tok}'")))?;
+    }
+    apply_comm_params(spec, doc)
 }
 
 /// Parse the full `[latency]` scenario: the regime kind (see
@@ -265,6 +326,13 @@ pub fn run_config_from_doc(doc: &ConfigDoc) -> Result<(RunConfig, DatasetName)> 
     cfg.response = resp;
     // Latency scenario ([latency] table).
     cfg.latency = latency_spec_from_doc(doc)?;
+    // Token codec ([comm] table); the legacy [run] quantize_bits key
+    // keeps working as the q<bits> alias.
+    cfg.comm = comm_spec_from_doc(doc)?;
+    if let Some(v) = doc.get_num(sec, "quantize_bits") {
+        cfg.quantize_bits = Some(v as u32);
+    }
+    cfg.codec_spec()?.validate()?;
     Ok((cfg, dataset))
 }
 
@@ -350,6 +418,61 @@ delay = 0.01
         assert_eq!(cfg.backend, BackendKind::Sim);
         let bad = ConfigDoc::parse("[run]\nbackend = quantum\n").unwrap();
         assert!(run_config_from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn comm_table_round_trip() {
+        let doc = ConfigDoc::parse(
+            "[run]\nn_agents = 6\n\n[comm]\ncodec = topk\nfrac = 0.1\nerror_feedback = true\n",
+        )
+        .unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.comm.kind, CodecKind::TopK { frac: 0.1 });
+        assert!(cfg.comm.error_feedback);
+        // Quantizer bits live in the token itself — never overridden by
+        // a section key (a q4/q8 axis must stay two distinct codecs).
+        let doc = ConfigDoc::parse("[comm]\ncodec = q4\nfrac = 0.5\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.comm.kind, CodecKind::Quantize { bits: 4 });
+        assert!(!cfg.comm.error_feedback);
+        let doc = ConfigDoc::parse("[comm]\ncodec = randk+ef\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert!(cfg.comm.error_feedback);
+        // Missing table keeps the exact-token golden default.
+        let (cfg, _) = run_config_from_doc(&ConfigDoc::parse("").unwrap()).unwrap();
+        assert!(cfg.comm.is_plain_identity());
+        // Unknown codecs and out-of-range params are config errors.
+        assert!(run_config_from_doc(&ConfigDoc::parse("[comm]\ncodec = warp\n").unwrap())
+            .is_err());
+        assert!(run_config_from_doc(&ConfigDoc::parse("[comm]\ncodec = q99\n").unwrap())
+            .is_err());
+        assert!(run_config_from_doc(
+            &ConfigDoc::parse("[comm]\ncodec = topk\nfrac = 0\n").unwrap()
+        )
+        .is_err());
+        // error_feedback is a strict boolean: a typo'd value must fail
+        // loudly, not silently strand a biased codec without EF.
+        for bad in ["yes", "tru", "2"] {
+            let doc =
+                ConfigDoc::parse(&format!("[comm]\ncodec = topk\nerror_feedback = {bad}\n"))
+                    .unwrap();
+            assert!(run_config_from_doc(&doc).is_err(), "'{bad}' must be rejected");
+        }
+        let doc = ConfigDoc::parse("[comm]\ncodec = topk\nerror_feedback = 0\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert!(!cfg.comm.error_feedback);
+    }
+
+    #[test]
+    fn legacy_quantize_bits_key_still_parses() {
+        let doc = ConfigDoc::parse("[run]\nquantize_bits = 8\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.quantize_bits, Some(8));
+        assert_eq!(cfg.codec_spec().unwrap().kind, CodecKind::Quantize { bits: 8 });
+        // Conflicting with a non-identity [comm] codec is rejected.
+        let doc =
+            ConfigDoc::parse("[run]\nquantize_bits = 8\n\n[comm]\ncodec = f32\n").unwrap();
+        assert!(run_config_from_doc(&doc).is_err());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 use crate::admm::{iadmm_step, AdmmParams, ConsensusState};
 use crate::coding::SchemeKind;
+use crate::comm::{CodecKind, CodecSpec, TokenCodec};
 use crate::data::{shard_to_agents, Dataset};
 use crate::ecn::{
     BackendKind, CommModel, EcnPool, GradientBackend, ResponseModel, RoundOutcome, SimBackend,
@@ -93,15 +94,23 @@ pub struct RunConfig {
     /// backend additionally reports real wall-clock through
     /// [`Driver::backend_real_elapsed`].
     pub backend: BackendKind,
-    /// Agent-link communication-time model.
-    pub comm: CommModel,
+    /// Token codec on the agent-link wire (`[comm]` table /
+    /// `--compress`): which compressor of the [`crate::comm`] zoo
+    /// encodes the z-token on every hop, and whether it carries
+    /// error-feedback memory. The default (plain identity) is the
+    /// paper's exact-f64 setting and keeps the golden trace
+    /// byte-identical.
+    pub comm: CodecSpec,
+    /// Agent-link communication-time model (per-hop link latency).
+    pub comm_model: CommModel,
     pub max_iters: usize,
     pub eval_every: usize,
     pub seed: u64,
-    /// Optional token quantization (extension, see
-    /// [`crate::compression`]): the global variable z is stochastically
-    /// quantized to this many bits per entry before each token
-    /// transfer. `None` = exact f64 tokens (the paper's setting).
+    /// Legacy token-quantization knob, kept as a config alias: `Some(b)`
+    /// behaves exactly like `comm = q<b>` (same rng stream, so
+    /// pre-refactor quantized traces are reproduced byte-for-byte).
+    /// `None` defers to [`Self::comm`]. Setting both to conflicting
+    /// codecs is a config error (see [`Self::codec_spec`]).
     pub quantize_bits: Option<u32>,
 }
 
@@ -123,7 +132,8 @@ impl Default for RunConfig {
             response: ResponseModel::default(),
             latency: LatencySpec::default(),
             backend: BackendKind::Sim,
-            comm: CommModel::default(),
+            comm: CodecSpec::default(),
+            comm_model: CommModel::default(),
             max_iters: 2_000,
             eval_every: 20,
             seed: 1,
@@ -172,6 +182,30 @@ impl RunConfig {
         Ok(eff / self.k_ecn)
     }
 
+    /// The token codec this run actually uses: [`Self::comm`], unless
+    /// the legacy `quantize_bits` alias is set — `Some(b)` maps to the
+    /// `q<b>` codec (identical rng stream to the pre-refactor
+    /// quantizer). Setting `quantize_bits` *and* a non-identity
+    /// `comm` codec is ambiguous and rejected.
+    pub fn codec_spec(&self) -> Result<CodecSpec> {
+        match self.quantize_bits {
+            None => Ok(self.comm),
+            Some(bits) => {
+                if self.comm.kind != CodecKind::Identity {
+                    return Err(Error::Config(format!(
+                        "quantize_bits = {bits} conflicts with comm codec '{}'; set one or \
+                         the other (quantize_bits is the legacy alias for q{bits})",
+                        self.comm.as_str()
+                    )));
+                }
+                Ok(CodecSpec {
+                    kind: CodecKind::Quantize { bits },
+                    error_feedback: self.comm.error_feedback,
+                })
+            }
+        }
+    }
+
     /// Schedule parameters with Corollary-1 defaults.
     pub fn params(&self) -> AdmmParams {
         let mut p = AdmmParams::for_network(self.n_agents, self.rho);
@@ -202,6 +236,10 @@ pub struct Driver {
 impl Driver {
     /// Build the experiment from a config and dataset.
     pub fn new(cfg: RunConfig, ds: &Dataset) -> Result<Self> {
+        // Resolve + validate the token codec up front so a bad `[comm]`
+        // table (or a quantize_bits/codec conflict) fails before any
+        // work runs.
+        cfg.codec_spec()?.validate()?;
         let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
         let topo = match cfg.topology {
             TopologyKind::Random => {
@@ -345,22 +383,28 @@ impl Driver {
         let mut clock = SimClock::new();
         let mut comm = CommCost::new();
         let mut trace = Trace::new(&cfg.algo.label());
+        // The token codec: encodes z on every transfer, books exact
+        // wire bytes into the ledger. The plain-identity default keeps
+        // the historical (golden) trace shape; any other codec stamps
+        // its label onto the trace, which switches the JSON export to
+        // carry the byte columns too.
+        let codec_spec = cfg.codec_spec()?;
+        let mut codec = codec_spec.build(cfg.seed)?;
+        if !codec_spec.is_plain_identity() {
+            trace.codec = Some(codec_spec.as_str());
+        }
         let mut comm_rng = rng.split();
-        let mut quantizer = cfg
-            .quantize_bits
-            .map(|b| crate::compression::StochasticQuantizer::new(b, cfg.seed ^ 0x5154));
 
         for k in 1..=cfg.max_iters {
             let (i, hops) = traversal.next();
-            // Token transfer: one z-variable per hop (optionally
-            // quantized on the wire — extension).
+            // Token transfer: one z-variable per hop, encoded by the
+            // configured codec (each relay hop retransmits the encoded
+            // token, so bytes are charged per hop).
             if hops > 0 {
-                if let Some(q) = &mut quantizer {
-                    q.quantize(&mut state.z);
-                }
+                let cost = codec.transmit(&mut state.z);
+                comm.charge_transfer(hops, cost);
             }
-            comm.charge(hops);
-            clock.advance(cfg.comm.sample_hops(hops, &mut comm_rng));
+            clock.advance(cfg.comm_model.sample_hops(hops, &mut comm_rng));
 
             let cycle = (k - 1) / n;
             match cfg.algo {
@@ -407,6 +451,7 @@ impl Driver {
                 trace.push(TracePoint {
                     iter: k,
                     comm_units: comm.total(),
+                    comm_bytes: comm.bytes(),
                     sim_time: clock.now(),
                     accuracy: accuracy(&state.x, self.xstar.as_ref())?,
                     // Objective-routed test metric: MSE for the

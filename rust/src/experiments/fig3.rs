@@ -91,7 +91,7 @@ pub fn baselines(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>>
     let h = GossipHarness {
         topo,
         response: base.response.clone(),
-        comm: base.comm.clone(),
+        comm: base.comm_model.clone(),
         max_iters: gossip_iters,
         eval_every: 1,
         seed: base.seed,

@@ -1,0 +1,271 @@
+//! Fig. 7 (extension) — the communication frontier: accuracy vs
+//! cumulative wire bytes across the compressor zoo, coded vs uncoded.
+//!
+//! The paper's Fig. 3 counts abstract communication *units*; this
+//! experiment asks the §I question directly in **bytes**: how much
+//! accuracy does each token codec buy per byte actually on the wire?
+//! Both arms (uncoded sI-ADMM at M̄ and csI-ADMM at M = (S+1)·M̄, equal
+//! effective batch per Eq. 22) run the full zoo — exact f64 tokens,
+//! `f32`, stochastic quantization at 8 and 4 bits, and the biased
+//! sparsifiers `topk`/`randk` with and without error feedback — on the
+//! `[sweep] compress` axis, seed-averaged.
+//!
+//! Two headline shapes come out:
+//!
+//! * a **monotone bytes-vs-accuracy Pareto frontier**: ranking the
+//!   codecs by cumulative wire bytes, the undominated ones trade bytes
+//!   for accuracy monotonically ([`pareto_frontier`]);
+//! * **error feedback recovering convergence**: the consensus token z
+//!   is *persistent incremental state* (`z⁺ = z + Δ/N`), so a biased
+//!   sparsifier that zeroes most coordinates on every hop freezes the
+//!   dropped support and the run stalls — the `+ef` variants carry the
+//!   compression residual across transfers and converge again.
+
+use super::{load_dataset, write_traces, ROOT_SEED};
+use crate::coding::SchemeKind;
+use crate::comm::CodecSpec;
+use crate::coordinator::{Algorithm, RunConfig};
+use crate::data::DatasetName;
+use crate::error::{Error, Result};
+use crate::metrics::Trace;
+use crate::runtime::EngineFactory;
+use crate::sweep::{default_workers, mean_trace, run_sweep, SweepSpec};
+use crate::util::table::{fnum, Table};
+
+/// The codec tokens swept (the compressor zoo; parsed by
+/// [`CodecSpec::parse`]).
+pub const ZOO: [&str; 8] =
+    ["identity", "f32", "q8", "q4", "topk", "topk+ef", "randk", "randk+ef"];
+
+/// Tolerated stragglers of the coded arm.
+const S_DESIGN: usize = 1;
+/// Effective mini-batch M̄ shared by both arms.
+const M_BAR: usize = 8;
+
+fn base_cfg(quick: bool) -> RunConfig {
+    RunConfig {
+        n_agents: 6,
+        k_ecn: 2,
+        rho: 0.2,
+        // Quick keeps a larger share of the budget than the usual /8:
+        // the EF-recovery gap needs the exact/EF arms to pull clearly
+        // away from the biased sparsifiers' stall floor, and the runs
+        // are tiny (6 agents, K=2).
+        max_iters: if quick { 1_600 } else { 4_800 },
+        eval_every: 25,
+        seed: ROOT_SEED ^ 7,
+        ..Default::default()
+    }
+}
+
+/// One codec's paired result.
+#[derive(Clone, Debug)]
+pub struct CodecComparison {
+    /// Codec token (`"q8"`, `"topk+ef"`, …).
+    pub codec: String,
+    /// Final cumulative wire bytes of the coded arm (seed mean).
+    pub coded_bytes: f64,
+    /// Final Eq. 23 accuracy of the coded arm (seed mean).
+    pub coded_accuracy: f64,
+    /// Final cumulative wire bytes of the uncoded arm (seed mean).
+    pub uncoded_bytes: f64,
+    /// Final Eq. 23 accuracy of the uncoded arm (seed mean).
+    pub uncoded_accuracy: f64,
+}
+
+/// One arm of the comparison: sweep the compress axis for a fixed
+/// algorithm/minibatch and return one seed-averaged trace per codec,
+/// in [`ZOO`] order.
+fn zoo_arm(cfg: RunConfig, quick: bool, engines: &dyn EngineFactory) -> Result<Vec<Trace>> {
+    let ds = load_dataset(DatasetName::Synthetic, quick);
+    let runs = if quick { 2 } else { 5 };
+    let seeds: Vec<u64> = (0..runs).map(|r| ROOT_SEED ^ 7 ^ ((r as u64) << 8)).collect();
+    let zoo: Vec<CodecSpec> = ZOO
+        .iter()
+        .map(|t| CodecSpec::parse(t).expect("fig7 zoo tokens are valid"))
+        .collect();
+    let spec = SweepSpec::new(cfg).compress(zoo).seeds(seeds);
+    let result = run_sweep(&spec, &ds, default_workers(), engines)?;
+    let mut traces = vec![];
+    for cell in result.cells() {
+        let refs: Vec<&Trace> = cell.iter().map(|j| &j.trace).collect();
+        let mut avg = mean_trace(&refs)?;
+        avg.label = format!(
+            "{} cx={}",
+            cell[0].job.cfg.algo.label(),
+            cell[0].job.cfg.comm.as_str()
+        );
+        traces.push(avg);
+    }
+    Ok(traces)
+}
+
+/// The bytes-vs-accuracy Pareto frontier of a point set: undominated
+/// `(bytes, accuracy)` pairs, returned sorted by ascending bytes —
+/// along which accuracy is strictly decreasing (monotone by
+/// construction; lower accuracy = better, Eq. 23). Ties on bytes keep
+/// the more accurate point.
+pub fn pareto_frontier(points: &[(String, f64, f64)]) -> Vec<(String, f64, f64)> {
+    let mut sorted: Vec<&(String, f64, f64)> = points.iter().collect();
+    sorted.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.2.total_cmp(&b.2)));
+    let mut frontier: Vec<(String, f64, f64)> = vec![];
+    for p in sorted {
+        if frontier.last().is_none_or(|last| p.2 < last.2) {
+            frontier.push(p.clone());
+        }
+    }
+    frontier
+}
+
+/// Run Fig. 7: the compressor-zoo frontier, coded vs uncoded. Returns
+/// the per-codec comparisons (the experiment's headline numbers), in
+/// [`ZOO`] order.
+pub fn run(quick: bool, engines: &dyn EngineFactory) -> Result<Vec<CodecComparison>> {
+    let uncoded = zoo_arm(
+        RunConfig { algo: Algorithm::SIAdmm, minibatch: M_BAR, ..base_cfg(quick) },
+        quick,
+        engines,
+    )?;
+    let coded = zoo_arm(
+        RunConfig {
+            algo: Algorithm::CsIAdmm(SchemeKind::Cyclic),
+            s_tolerated: S_DESIGN,
+            minibatch: (S_DESIGN + 1) * M_BAR,
+            ..base_cfg(quick)
+        },
+        quick,
+        engines,
+    )?;
+
+    let missing = || Error::Runtime("fig7: arm trace ended empty".into());
+    let mut comparisons = vec![];
+    let mut t = Table::new(
+        "Fig. 7 — accuracy vs cumulative wire bytes per token codec (synthetic, S=1)",
+        &["codec", "wire kB (coded)", "acc coded", "acc uncoded"],
+    );
+    for ((token, unc), cod) in ZOO.iter().zip(&uncoded).zip(&coded) {
+        let c = CodecComparison {
+            codec: token.to_string(),
+            coded_bytes: cod.final_comm_bytes().ok_or_else(missing)?,
+            coded_accuracy: cod.final_accuracy(),
+            uncoded_bytes: unc.final_comm_bytes().ok_or_else(missing)?,
+            uncoded_accuracy: unc.final_accuracy(),
+        };
+        t.row(&[
+            c.codec.clone(),
+            fnum(c.coded_bytes / 1e3),
+            fnum(c.coded_accuracy),
+            fnum(c.uncoded_accuracy),
+        ]);
+        comparisons.push(c);
+    }
+    t.print();
+
+    // The Pareto frontier over the coded arm: which codecs actually
+    // buy accuracy per byte.
+    let points: Vec<(String, f64, f64)> = comparisons
+        .iter()
+        .map(|c| (c.codec.clone(), c.coded_bytes, c.coded_accuracy))
+        .collect();
+    let frontier = pareto_frontier(&points);
+    let mut ft = Table::new(
+        "Fig. 7 frontier — undominated codecs by ascending wire bytes",
+        &["codec", "wire kB", "accuracy"],
+    );
+    for (codec, bytes, acc) in &frontier {
+        ft.row(&[codec.clone(), fnum(bytes / 1e3), fnum(*acc)]);
+    }
+    ft.print();
+    println!(
+        "error feedback: topk {} -> topk+ef {}, randk {} -> randk+ef {}",
+        fnum(comparisons[4].coded_accuracy),
+        fnum(comparisons[5].coded_accuracy),
+        fnum(comparisons[6].coded_accuracy),
+        fnum(comparisons[7].coded_accuracy),
+    );
+
+    let mut traces: Vec<Trace> = uncoded.into_iter().chain(coded).collect();
+    print!(
+        "{}",
+        crate::util::chart::chart_traces(
+            "Fig. 7 accuracy vs cumulative wire bytes",
+            "wire bytes",
+            &traces,
+            |p| p.comm_bytes,
+        )
+    );
+    // Stamp codec labels so the JSON export carries the byte columns
+    // for every series (including the identity baselines, which would
+    // otherwise serialize in the legacy unit-only shape).
+    for trace in &mut traces {
+        if trace.codec.is_none() {
+            trace.codec = Some("identity".into());
+        }
+    }
+    write_traces("fig7_comm_frontier", &traces)?;
+    Ok(comparisons)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngineFactory;
+
+    /// The acceptance properties: the frontier spans ≥ 4 codecs and is
+    /// monotone, and error feedback recovers convergence for the
+    /// biased sparsifiers.
+    #[test]
+    fn frontier_is_monotone_and_error_feedback_recovers() {
+        let comparisons = run(true, &NativeEngineFactory).unwrap();
+        assert!(comparisons.len() >= 4, "zoo must span >= 4 codecs");
+
+        let points: Vec<(String, f64, f64)> = comparisons
+            .iter()
+            .map(|c| (c.codec.clone(), c.coded_bytes, c.coded_accuracy))
+            .collect();
+        let frontier = pareto_frontier(&points);
+        assert!(frontier.len() >= 2, "frontier collapsed: {frontier:?}");
+        for w in frontier.windows(2) {
+            assert!(w[0].1 < w[1].1, "frontier bytes not increasing: {frontier:?}");
+            assert!(w[1].2 < w[0].2, "frontier accuracy not decreasing: {frontier:?}");
+        }
+
+        // Error feedback rescues the biased sparsifiers decisively:
+        // the persistent z-state means plain topk/randk stall, while
+        // the +ef variants keep converging.
+        let by_name = |n: &str| comparisons.iter().find(|c| c.codec == n).unwrap();
+        for (plain, ef) in [("topk", "topk+ef"), ("randk", "randk+ef")] {
+            let (p, e) = (by_name(plain), by_name(ef));
+            assert!(
+                e.coded_accuracy < 0.75 * p.coded_accuracy,
+                "{ef} must recover convergence: {} !< 0.75 * {}",
+                e.coded_accuracy,
+                p.coded_accuracy
+            );
+            assert!(
+                e.uncoded_accuracy < 0.75 * p.uncoded_accuracy,
+                "{ef} (uncoded arm) must recover convergence: {} !< 0.75 * {}",
+                e.uncoded_accuracy,
+                p.uncoded_accuracy
+            );
+        }
+        // And the exact-token baseline converges in this budget (the
+        // frontier's high-byte anchor is meaningful).
+        assert!(by_name("identity").coded_accuracy < 0.8);
+    }
+
+    #[test]
+    fn pareto_frontier_drops_dominated_points() {
+        let pts = vec![
+            ("a".to_string(), 100.0, 0.5),
+            ("b".to_string(), 200.0, 0.1),  // frontier
+            ("c".to_string(), 150.0, 0.6),  // dominated by a
+            ("d".to_string(), 50.0, 0.9),   // frontier (cheapest)
+            ("e".to_string(), 300.0, 0.2),  // dominated by b
+            ("f".to_string(), 100.0, 0.45), // ties a on bytes, better acc
+        ];
+        let f = pareto_frontier(&pts);
+        let names: Vec<&str> = f.iter().map(|p| p.0.as_str()).collect();
+        assert_eq!(names, vec!["d", "f", "b"]);
+    }
+}

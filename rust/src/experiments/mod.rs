@@ -16,11 +16,13 @@
 //! | Fig. 5         | [`fig5::run`] |
 //! | Thm. 2 / Cor. 1| [`rate_check::run`] |
 //! | Fig. 6 (ext.)  | [`fig6::run`] — wall-clock time-to-ε per latency regime |
+//! | Fig. 7 (ext.)  | [`fig7::run`] — accuracy vs wire bytes across the compressor zoo |
 
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
+pub mod fig7;
 pub mod rate_check;
 pub mod table1;
 

@@ -25,6 +25,14 @@
 //!   `--backend`, byte-identical decoded gradients either way), [`admm`]
 //!   (I-ADMM / sI-ADMM / csI-ADMM), [`baselines`] (W-ADMM, D-ADMM, DGD,
 //!   EXTRA), [`coordinator`] (token-passing event loop).
+//! * Communication axis: [`comm`] — the token-channel subsystem. A
+//!   [`comm::TokenCodec`] compressor zoo (`identity`, `f32`, `q<bits>`
+//!   stochastic quantization, `topk`, `randk` — each optionally `+ef`
+//!   error feedback) encodes the exchanged z-token on every hop, with
+//!   byte-exact wire accounting in [`comm::WireLedger`]
+//!   ([`metrics::CommCost`] is a thin view over it). The `--compress`
+//!   CLI/config/sweep axis; `experiments::fig7` plots the
+//!   accuracy-vs-cumulative-bytes trade-off across the zoo.
 //! * Scenario axis: [`latency`] — heterogeneous straggler/latency
 //!   simulation. [`latency::LatencyKind`] selects the service-time
 //!   regime (`uniform` paper baseline, `shifted-exp`, heavy-tailed
@@ -91,6 +99,7 @@ pub mod admm;
 pub mod baselines;
 pub mod cli;
 pub mod coding;
+pub mod comm;
 pub mod compression;
 pub mod config;
 pub mod coordinator;

@@ -18,7 +18,11 @@
 
 use csadmm::cli::{Args, USAGE};
 use csadmm::coding::SchemeKind;
-use csadmm::config::{apply_latency_params, apply_objective_params, run_config_from_doc, ConfigDoc};
+use csadmm::comm::CodecSpec;
+use csadmm::config::{
+    apply_comm_params, apply_latency_params, apply_objective_params, run_config_from_doc,
+    ConfigDoc,
+};
 use csadmm::coordinator::{Algorithm, Driver, RunConfig};
 use csadmm::data::DatasetName;
 use csadmm::ecn::{BackendKind, ResponseModel};
@@ -72,6 +76,25 @@ fn parse_backend_list(list: &str) -> Result<Vec<BackendKind>> {
             let t = t.trim();
             BackendKind::parse(t)
                 .ok_or_else(|| Error::Config(format!("unknown backend '{t}' (see usage)")))
+        })
+        .collect()
+}
+
+/// Parse a comma-separated `--compress` list (`identity,q8,topk+ef`),
+/// applying the config's `[comm]` parameter keys (when a config is in
+/// play) just like the `[sweep] compress` axis does.
+fn parse_compress_list(list: &str, doc: Option<&ConfigDoc>) -> Result<Vec<CodecSpec>> {
+    list.split(',')
+        .map(|t| {
+            let t = t.trim();
+            let spec = CodecSpec::parse(t)
+                .ok_or_else(|| Error::Config(format!("unknown token codec '{t}' (see usage)")))?;
+            let spec = match doc {
+                Some(doc) => apply_comm_params(spec, doc)?,
+                None => spec,
+            };
+            spec.validate()?;
+            Ok(spec)
         })
         .collect()
 }
@@ -146,10 +169,21 @@ fn main() -> Result<()> {
                 }
                 cfg.backend = kinds[0];
             }
+            if let Some(tok) = args.get("compress") {
+                let specs = parse_compress_list(tok, Some(&doc))?;
+                if specs.len() != 1 {
+                    return Err(Error::Config(
+                        "run takes exactly one --compress (use `sweep` for an axis)".into(),
+                    ));
+                }
+                cfg.comm = specs[0];
+                // --compress supersedes a legacy quantize_bits key.
+                cfg.quantize_bits = None;
+            }
             let ds = load_dataset(dataset, quick);
             let mut engine = factory.create()?;
             println!(
-                "running {} [{}] on {} (N={}, K={}, M={}, lat={}, backend={}, engine={})",
+                "running {} [{}] on {} (N={}, K={}, M={}, lat={}, backend={}, cx={}, engine={})",
                 cfg.algo.label(),
                 cfg.objective.as_str(),
                 dataset.as_str(),
@@ -158,6 +192,7 @@ fn main() -> Result<()> {
                 cfg.minibatch,
                 cfg.latency.kind.as_str(),
                 cfg.backend.as_str(),
+                cfg.codec_spec()?.as_str(),
                 engine.name()
             );
             // Objective-specific column label (classification error for
@@ -205,6 +240,9 @@ fn main() -> Result<()> {
             if let Some(list) = args.get("backend") {
                 spec = spec.backends(parse_backend_list(list)?);
             }
+            if let Some(list) = args.get("compress") {
+                spec = spec.compress(parse_compress_list(list, doc.as_ref())?);
+            }
             println!(
                 "sweep: {} jobs ({} cells × {} seeds) on {workers} workers, engine={}",
                 spec.num_jobs(),
@@ -214,7 +252,7 @@ fn main() -> Result<()> {
             );
             let t0 = std::time::Instant::now();
             let result = run_sweep(&spec, &ds, workers, factory.as_ref())?;
-            let summary = SweepSummary::from_result(&result);
+            let summary = SweepSummary::from_result(&result)?;
             summary.print();
             let out = args.get("out").unwrap_or("results/sweep.json");
             write_json_file(std::path::Path::new(out), &summary.to_json())?;
@@ -251,6 +289,9 @@ fn main() -> Result<()> {
         Some("fig6-backend") => {
             experiments::fig6::backend_walltime(quick, factory.as_ref())?;
         }
+        Some("fig7") => {
+            experiments::fig7::run(quick, factory.as_ref())?;
+        }
         Some("rate-check") => {
             experiments::rate_check::run(quick, factory.as_ref())?;
         }
@@ -264,6 +305,7 @@ fn main() -> Result<()> {
             experiments::fig5::run(quick, factory.as_ref())?;
             experiments::fig6::run(quick, factory.as_ref())?;
             experiments::fig6::backend_walltime(quick, factory.as_ref())?;
+            experiments::fig7::run(quick, factory.as_ref())?;
             experiments::rate_check::run(quick, factory.as_ref())?;
         }
         other => {

@@ -4,8 +4,10 @@
 //!   `(1/N) Σ_i ‖x_i^k − x*‖ / ‖x_i^1 − x*‖` (with `x_i^1 = 0`).
 //! * [`test_mse`] — "test error … defined as the mean square error
 //!   loss" on the held-out split, evaluated at the consensus variable.
-//! * [`CommCost`] — unit counting: one unit per variable exchange over
-//!   one agent-pair link (unicast; relay hops each cost one unit).
+//! * [`CommCost`] — communication accounting: the paper's unit count
+//!   (one unit per variable exchange over one agent-pair link; relay
+//!   hops each cost one unit) plus byte-exact wire accounting, as a
+//!   thin view over [`crate::comm::WireLedger`].
 //! * [`Trace`] / [`TracePoint`] — per-iteration experiment records with
 //!   JSON export for the plots.
 
@@ -49,11 +51,17 @@ pub fn test_mse(x: &Matrix, test: &Split) -> f64 {
     resid.norm_sq() / test.len() as f64
 }
 
-/// Communication-cost counter (units; 1 unit = one variable over one
-/// link).
+/// Communication-cost counter — a thin view over the byte-exact
+/// [`WireLedger`](crate::comm::WireLedger).
+///
+/// The historical surface (unit counting: 1 unit = one variable over
+/// one link, relay hops each cost one unit) is unchanged; the ledger
+/// underneath additionally books the exact wire bytes of every encoded
+/// transfer ([`Self::charge_transfer`]), which the driver records as
+/// `TracePoint::comm_bytes`.
 #[derive(Clone, Debug, Default)]
 pub struct CommCost {
-    units: f64,
+    ledger: crate::comm::WireLedger,
 }
 
 impl CommCost {
@@ -62,14 +70,31 @@ impl CommCost {
         Self::default()
     }
 
-    /// Charge `units` link-transmissions.
+    /// Charge `units` link-transmissions (unit-only book-keeping, no
+    /// codec in play — the gossip baselines' path).
     pub fn charge(&mut self, units: usize) {
-        self.units += units as f64;
+        self.ledger.charge_units(units);
+    }
+
+    /// Charge one encoded token transfer across `hops` links (`hops`
+    /// units + `hops · cost.bytes()` wire bytes).
+    pub fn charge_transfer(&mut self, hops: usize, cost: crate::comm::WireCost) {
+        self.ledger.charge_transfer(hops, cost);
     }
 
     /// Total units so far.
     pub fn total(&self) -> f64 {
-        self.units
+        self.ledger.units()
+    }
+
+    /// Total wire bytes so far.
+    pub fn bytes(&self) -> f64 {
+        self.ledger.bytes()
+    }
+
+    /// The underlying ledger (inspection / tests).
+    pub fn ledger(&self) -> &crate::comm::WireLedger {
+        &self.ledger
     }
 }
 
@@ -122,5 +147,17 @@ mod tests {
         c.charge(3);
         c.charge(0);
         assert_eq!(c.total(), 4.0);
+        assert_eq!(c.bytes(), 0.0);
+    }
+
+    #[test]
+    fn comm_cost_books_transfer_bytes_through_the_ledger() {
+        let mut c = CommCost::new();
+        // One 3-entry f64 token over 2 hops: 2 units, 2·24 bytes.
+        let cost = crate::comm::WireCost { header_bits: 0, payload_bits: 3 * 64 };
+        c.charge_transfer(2, cost);
+        assert_eq!(c.total(), 2.0);
+        assert_eq!(c.bytes(), 48.0);
+        assert_eq!(c.ledger().transfers(), 1);
     }
 }

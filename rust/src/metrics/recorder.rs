@@ -9,6 +9,11 @@ pub struct TracePoint {
     pub iter: usize,
     /// Cumulative communication units.
     pub comm_units: f64,
+    /// Cumulative exact wire bytes (header + payload per encoded token
+    /// transfer, per hop) — the byte book of
+    /// [`crate::comm::WireLedger`]. Zero for harnesses that only count
+    /// units (the gossip baselines).
+    pub comm_bytes: f64,
     /// Cumulative simulated running time (s).
     pub sim_time: f64,
     /// Relative-error accuracy (Eq. 23).
@@ -22,13 +27,19 @@ pub struct TracePoint {
 pub struct Trace {
     /// Algorithm / configuration label ("sI-ADMM M=32", …).
     pub label: String,
+    /// Token-codec label (`"q8"`, `"topk+ef"`, …) when the run used a
+    /// non-default codec; `None` on the plain-identity path. Gates the
+    /// JSON export of the byte columns: the default path serializes
+    /// exactly the historical shape, so the blessed golden trace (and
+    /// every pre-refactor consumer) sees byte-identical output.
+    pub codec: Option<String>,
     pub points: Vec<TracePoint>,
 }
 
 impl Trace {
     /// New empty trace.
     pub fn new(label: &str) -> Self {
-        Self { label: label.to_string(), points: vec![] }
+        Self { label: label.to_string(), codec: None, points: vec![] }
     }
 
     /// Append a point.
@@ -51,10 +62,20 @@ impl Trace {
         self.points.last().map(|p| p.sim_time).unwrap_or(f64::NAN)
     }
 
-    /// Final cumulative communication units (NaN if empty) — sweep
-    /// summaries.
-    pub fn final_comm_units(&self) -> f64 {
-        self.points.last().map(|p| p.comm_units).unwrap_or(f64::NAN)
+    /// Final cumulative communication units, `None` on an empty trace —
+    /// sweep summaries. (Previously returned NaN, which silently
+    /// poisoned every aggregate it touched; mirroring the `mean_trace`
+    /// hardening, the absence of a final point is now explicit and
+    /// [`crate::sweep::SweepSummary::from_result`] surfaces it as a
+    /// config error.)
+    pub fn final_comm_units(&self) -> Option<f64> {
+        self.points.last().map(|p| p.comm_units)
+    }
+
+    /// Final cumulative wire bytes, `None` on an empty trace — sweep
+    /// summaries and the fig7 frontier.
+    pub fn final_comm_bytes(&self) -> Option<f64> {
+        self.points.last().map(|p| p.comm_bytes)
     }
 
     /// First iteration at which accuracy drops below `threshold`
@@ -68,21 +89,38 @@ impl Trace {
         self.points.iter().find(|p| p.accuracy <= threshold).map(|p| p.comm_units)
     }
 
+    /// Wire bytes spent to reach `threshold` accuracy (the fig7 /
+    /// bytes-to-ε comparisons).
+    pub fn bytes_to_accuracy(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.accuracy <= threshold).map(|p| p.comm_bytes)
+    }
+
     /// Simulated time to reach `threshold` accuracy.
     pub fn time_to_accuracy(&self, threshold: f64) -> Option<f64> {
         self.points.iter().find(|p| p.accuracy <= threshold).map(|p| p.sim_time)
     }
 
     /// Export as a JSON object with parallel arrays (plot-friendly).
+    ///
+    /// Back-compat contract: on the default identity path
+    /// (`codec == None`) the shape — and every byte — of the output is
+    /// the historical one (`label` + `iter`/`comm_units`/`sim_time`/
+    /// `accuracy`/`test_mse` arrays). Runs under a non-default codec
+    /// additionally carry the `codec` label and the `comm_bytes` array.
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut b = Json::obj()
             .str("label", &self.label)
             .field("iter", Json::arr_f64(self.points.iter().map(|p| p.iter as f64)))
             .field("comm_units", Json::arr_f64(self.points.iter().map(|p| p.comm_units)))
             .field("sim_time", Json::arr_f64(self.points.iter().map(|p| p.sim_time)))
             .field("accuracy", Json::arr_f64(self.points.iter().map(|p| p.accuracy)))
-            .field("test_mse", Json::arr_f64(self.points.iter().map(|p| p.test_mse)))
-            .build()
+            .field("test_mse", Json::arr_f64(self.points.iter().map(|p| p.test_mse)));
+        if let Some(codec) = &self.codec {
+            b = b
+                .str("codec", codec)
+                .field("comm_bytes", Json::arr_f64(self.points.iter().map(|p| p.comm_bytes)));
+        }
+        b.build()
     }
 }
 
@@ -91,7 +129,14 @@ mod tests {
     use super::*;
 
     fn pt(iter: usize, acc: f64) -> TracePoint {
-        TracePoint { iter, comm_units: iter as f64, sim_time: iter as f64 * 0.1, accuracy: acc, test_mse: acc * 2.0 }
+        TracePoint {
+            iter,
+            comm_units: iter as f64,
+            comm_bytes: iter as f64 * 24.0,
+            sim_time: iter as f64 * 0.1,
+            accuracy: acc,
+            test_mse: acc * 2.0,
+        }
     }
 
     #[test]
@@ -102,8 +147,20 @@ mod tests {
         t.push(pt(100, 0.01));
         assert_eq!(t.iters_to_accuracy(0.5), Some(10));
         assert_eq!(t.comm_to_accuracy(0.05), Some(100.0));
+        assert_eq!(t.bytes_to_accuracy(0.05), Some(2400.0));
         assert_eq!(t.iters_to_accuracy(0.001), None);
         assert!((t.final_accuracy() - 0.01).abs() < 1e-15);
+        assert_eq!(t.final_comm_units(), Some(100.0));
+        assert_eq!(t.final_comm_bytes(), Some(2400.0));
+    }
+
+    /// Regression (PR 5 satellite): the empty trace reports `None`, not
+    /// a NaN that poisons sweep aggregates downstream.
+    #[test]
+    fn empty_trace_has_no_final_comm_units() {
+        let t = Trace::new("empty");
+        assert_eq!(t.final_comm_units(), None);
+        assert_eq!(t.final_comm_bytes(), None);
     }
 
     #[test]
@@ -113,5 +170,18 @@ mod tests {
         let s = t.to_json().to_string();
         assert!(s.contains("\"label\":\"sI-ADMM\""));
         assert!(s.contains("\"accuracy\":[0.9]"));
+        // Default path: historical shape, no byte columns.
+        assert!(!s.contains("comm_bytes"));
+        assert!(!s.contains("codec"));
+    }
+
+    #[test]
+    fn json_gains_byte_columns_only_under_a_codec() {
+        let mut t = Trace::new("sI-ADMM");
+        t.codec = Some("q8".into());
+        t.push(pt(1, 0.9));
+        let s = t.to_json().to_string();
+        assert!(s.contains("\"codec\":\"q8\""));
+        assert!(s.contains("\"comm_bytes\":[24]"));
     }
 }

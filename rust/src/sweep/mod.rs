@@ -7,7 +7,7 @@
 //!
 //! * [`SweepSpec`] — the grid: a template [`RunConfig`] plus one value
 //!   list per axis (objective, algorithm, S, ε, latency regime,
-//!   execution backend, M, ρ, quantize-bits, seeds).
+//!   execution backend, M, ρ, quantize-bits, token codec, seeds).
 //!   [`SweepSpec::expand`] produces the ordered job list;
 //!   [`SweepSpec::from_doc`] parses a grid from a config file's
 //!   `[sweep]` section (the full grid syntax lives on that method's
@@ -45,7 +45,7 @@
 //!     .minibatches(vec![8, 16, 32])
 //!     .seeds(vec![1, 2, 3]);
 //! let result = run_sweep(&spec, &ds, 4, &NativeEngineFactory).unwrap();
-//! SweepSummary::from_result(&result).print();
+//! SweepSummary::from_result(&result).unwrap().print();
 //! ```
 //!
 //! [`RunConfig`]: crate::coordinator::RunConfig

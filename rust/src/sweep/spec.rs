@@ -3,6 +3,7 @@
 //! job list.
 
 use crate::coding::SchemeKind;
+use crate::comm::{CodecKind, CodecSpec};
 use crate::config::ConfigDoc;
 use crate::coordinator::{Algorithm, RunConfig};
 use crate::data::DatasetName;
@@ -19,9 +20,9 @@ use crate::problem::ObjectiveKind;
 /// same *cell* and are aggregated by [`crate::sweep::SweepSummary`].
 ///
 /// Expansion order is fixed (objective → algo → S → ε → latency →
-/// backend → M → ρ → quantize-bits → seed, seeds innermost), so job
-/// and cell ids are stable across processes and independent of how
-/// many workers execute the grid.
+/// backend → M → ρ → quantize-bits → compress → seed, seeds
+/// innermost), so job and cell ids are stable across processes and
+/// independent of how many workers execute the grid.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
     /// Template config; axis values override its fields per job.
@@ -46,8 +47,13 @@ pub struct SweepSpec {
     pub minibatches: Vec<usize>,
     /// Penalty axis ρ.
     pub rhos: Vec<f64>,
-    /// Token-quantization axis (None = exact f64 tokens).
+    /// Token-quantization axis (None = exact f64 tokens). Legacy alias
+    /// of the richer `compress` axis; kept for old grids.
     pub quantize_bits: Vec<Option<u32>>,
+    /// Token-codec axis (the compressor zoo: `identity`, `f32`,
+    /// `q<bits>`, `topk`, `randk`, each optionally `+ef`); `cx=` cell
+    /// labels. Expands innermost of the non-seed axes.
+    pub compress: Vec<CodecSpec>,
     /// Seed axis — runs per cell, aggregated in summaries.
     pub seeds: Vec<u64>,
 }
@@ -65,6 +71,7 @@ impl SweepSpec {
             minibatches: vec![base.minibatch],
             rhos: vec![base.rho],
             quantize_bits: vec![base.quantize_bits],
+            compress: vec![base.comm],
             seeds: vec![base.seed],
             base,
         }
@@ -124,6 +131,12 @@ impl SweepSpec {
         self
     }
 
+    /// Set the token-codec axis (the compressor zoo).
+    pub fn compress(mut self, v: Vec<CodecSpec>) -> Self {
+        self.compress = v;
+        self
+    }
+
     /// Set the seed axis.
     pub fn seeds(mut self, v: Vec<u64>) -> Self {
         self.seeds = v;
@@ -141,6 +154,7 @@ impl SweepSpec {
             * self.minibatches.len()
             * self.rhos.len()
             * self.quantize_bits.len()
+            * self.compress.len()
     }
 
     /// Total jobs (cells × seeds).
@@ -148,10 +162,31 @@ impl SweepSpec {
         self.num_cells() * self.seeds.len()
     }
 
-    /// Expand into the ordered job list. Errors if any axis is empty.
+    /// Expand into the ordered job list. Errors if any axis is empty,
+    /// or if the legacy quantize-bits axis and the compress axis would
+    /// cross into self-conflicting jobs (a `Some(bits)` cell with a
+    /// non-identity codec) — the cartesian product would otherwise
+    /// launch, burn the earlier jobs' compute, and only then die on the
+    /// first conflicting `Driver::new`.
     pub fn expand(&self) -> Result<Vec<SweepJob>> {
         if self.num_jobs() == 0 {
             return Err(Error::Config("sweep grid has an empty axis (zero jobs)".into()));
+        }
+        if self.quantize_bits.iter().any(Option::is_some)
+            && self.compress.iter().any(|c| c.kind != CodecKind::Identity)
+        {
+            return Err(Error::Config(
+                "sweep grid crosses quantize_bits (legacy q<bits> alias) with a \
+                 non-identity compress codec; every such cell is self-conflicting — \
+                 drop the quantize_bits axis and put q<bits> tokens on the compress axis"
+                    .into(),
+            ));
+        }
+        // Out-of-range codec parameters (q1, frac = 1.5, …) fail here,
+        // not in `Driver::new` of whichever mid-sweep job first uses
+        // them after the earlier jobs' compute is already spent.
+        for c in &self.compress {
+            c.validate()?;
         }
         // Cartesian product over the non-seed axes first (one entry per
         // cell, in cell order), then the seed axis innermost.
@@ -165,17 +200,20 @@ impl SweepSpec {
                                 for &m in &self.minibatches {
                                     for &rho in &self.rhos {
                                         for &bits in &self.quantize_bits {
-                                            let mut cfg = self.base.clone();
-                                            cfg.objective = objective;
-                                            cfg.algo = algo;
-                                            cfg.s_tolerated = s;
-                                            cfg.response.straggler_delay = eps;
-                                            cfg.latency.kind = lat;
-                                            cfg.backend = backend;
-                                            cfg.minibatch = m;
-                                            cfg.rho = rho;
-                                            cfg.quantize_bits = bits;
-                                            cells.push(cfg);
+                                            for &cx in &self.compress {
+                                                let mut cfg = self.base.clone();
+                                                cfg.objective = objective;
+                                                cfg.algo = algo;
+                                                cfg.s_tolerated = s;
+                                                cfg.response.straggler_delay = eps;
+                                                cfg.latency.kind = lat;
+                                                cfg.backend = backend;
+                                                cfg.minibatch = m;
+                                                cfg.rho = rho;
+                                                cfg.quantize_bits = bits;
+                                                cfg.comm = cx;
+                                                cells.push(cfg);
+                                            }
                                         }
                                     }
                                 }
@@ -235,6 +273,9 @@ impl SweepSpec {
                 None => label.push_str(" q=exact"),
             }
         }
+        if self.compress.len() > 1 {
+            label.push_str(&format!(" cx={}", cfg.comm.as_str()));
+        }
         label
     }
 
@@ -258,7 +299,10 @@ impl SweepSpec {
     /// backend = sim, threaded          # execution-backend axis
     /// minibatch = 16, 32
     /// rho = 0.08
-    /// quantize_bits = none, 16         # token quantization ('none' = exact)
+    /// compress = identity, q8, topk+ef # token-codec axis (the compressor zoo)
+    /// # quantize_bits = none, 16       # legacy alias of compress (q<bits>);
+    /// #                                  crossing it with a non-identity
+    /// #                                  compress axis is rejected by expand()
     /// seeds = 1, 2, 3                  # or: num_seeds = 3 (derived from base seed)
     /// ```
     ///
@@ -267,7 +311,10 @@ impl SweepSpec {
     /// every entry of the objective axis; latency-regime parameters,
     /// clocks, faults and the decode deadline come from the `[latency]`
     /// section (see [`crate::config::latency_spec_from_doc`]) and apply
-    /// to every entry of the latency axis.
+    /// to every entry of the latency axis; codec parameters (`frac`,
+    /// `error_feedback`) come from the `[comm]` section (see
+    /// [`crate::config::apply_comm_params`]) and apply to every entry
+    /// of the compress axis (quantizer bits live in the token itself).
     pub fn from_doc(doc: &ConfigDoc) -> Result<(SweepSpec, DatasetName)> {
         let (base, dataset) = crate::config::run_config_from_doc(doc)?;
         let mut spec = SweepSpec::new(base);
@@ -330,6 +377,17 @@ impl SweepSpec {
                     other => other.parse::<u32>().map(Some).map_err(|_| {
                         Error::Config(format!("sweep.quantize_bits: bad entry '{other}'"))
                     }),
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(tokens) = doc.get_list(sec, "compress") {
+            spec.compress = tokens
+                .iter()
+                .map(|t| {
+                    let parsed = CodecSpec::parse(t).ok_or_else(|| {
+                        Error::Config(format!("sweep.compress: unknown codec '{t}'"))
+                    })?;
+                    crate::config::apply_comm_params(parsed, doc)
                 })
                 .collect::<Result<Vec<_>>>()?;
         }
@@ -530,6 +588,86 @@ mod tests {
         // Single-value backend axis stays out of labels entirely.
         let jobs = SweepSpec::new(RunConfig::default()).minibatches(vec![8, 16]).expand().unwrap();
         assert_eq!(jobs[0].label, "sI-ADMM M=8");
+    }
+
+    #[test]
+    fn compress_axis_expands_innermost_with_labels() {
+        let spec = SweepSpec::new(RunConfig::default())
+            .minibatches(vec![8, 16])
+            .compress(vec![
+                CodecSpec::parse("identity").unwrap(),
+                CodecSpec::parse("q8").unwrap(),
+                CodecSpec::parse("topk+ef").unwrap(),
+            ]);
+        assert_eq!(spec.num_cells(), 6);
+        let jobs = spec.expand().unwrap();
+        // Compress is the innermost non-seed axis: codecs cycle fastest
+        // (jobs 0..3 are M=8 across the three codecs, then M=16).
+        assert!(jobs[0].cfg.comm.is_plain_identity());
+        assert_eq!(jobs[1].cfg.comm, CodecSpec::parse("q8").unwrap());
+        assert_eq!(jobs[2].cfg.comm, CodecSpec::parse("topk+ef").unwrap());
+        assert_eq!(jobs[2].cfg.minibatch, 8);
+        assert_eq!(jobs[3].cfg.minibatch, 16);
+        assert!(jobs[3].cfg.comm.is_plain_identity());
+        assert_eq!(jobs[0].label, "sI-ADMM M=8 cx=identity");
+        assert_eq!(jobs[2].label, "sI-ADMM M=8 cx=topk+ef");
+        assert_eq!(jobs[5].label, "sI-ADMM M=16 cx=topk+ef");
+        // Single-value compress axis stays out of labels entirely.
+        let jobs = SweepSpec::new(RunConfig::default()).minibatches(vec![8, 16]).expand().unwrap();
+        assert_eq!(jobs[0].label, "sI-ADMM M=8");
+    }
+
+    #[test]
+    fn quantize_bits_crossed_with_compress_axis_rejected_up_front() {
+        // Every (Some(bits), non-identity codec) cell would die in
+        // Driver::new mid-sweep; expand() rejects the grid instead.
+        let spec = SweepSpec::new(RunConfig::default())
+            .quantize_bits(vec![None, Some(16)])
+            .compress(vec![
+                CodecSpec::parse("identity").unwrap(),
+                CodecSpec::parse("q8").unwrap(),
+            ]);
+        match spec.expand() {
+            Err(Error::Config(msg)) => assert!(msg.contains("self-conflicting"), "{msg}"),
+            other => panic!("expected Error::Config, got {other:?}"),
+        }
+        // identity+ef on the compress axis composes with the legacy
+        // alias (it still resolves to q<bits>, just with EF) — allowed.
+        let ok = SweepSpec::new(RunConfig::default())
+            .quantize_bits(vec![None, Some(16)])
+            .compress(vec![CodecSpec::parse("identity+ef").unwrap()]);
+        assert_eq!(ok.expand().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn out_of_range_codec_params_rejected_at_expand_time() {
+        // A frac/bits outside the valid range must not launch a sweep
+        // that dies mid-run on its first affected job.
+        let bad_frac = SweepSpec::new(RunConfig::default()).compress(vec![CodecSpec {
+            kind: CodecKind::TopK { frac: 1.5 },
+            error_feedback: false,
+        }]);
+        assert!(bad_frac.expand().is_err());
+        let bad_bits = SweepSpec::new(RunConfig::default())
+            .compress(vec![CodecSpec::parse("q1").unwrap()]);
+        assert!(bad_bits.expand().is_err());
+    }
+
+    #[test]
+    fn from_doc_reads_compress_axis_with_params() {
+        let doc = ConfigDoc::parse(
+            "[run]\nk_ecn = 2\n\n[sweep]\ncompress = identity, q8, topk, randk+ef\n\n\
+             [comm]\nfrac = 0.1\n",
+        )
+        .unwrap();
+        let (spec, _) = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.compress.len(), 4);
+        assert_eq!(spec.compress[1].kind, crate::comm::CodecKind::Quantize { bits: 8 });
+        assert_eq!(spec.compress[2].kind, crate::comm::CodecKind::TopK { frac: 0.1 });
+        assert_eq!(spec.compress[3].kind, crate::comm::CodecKind::RandK { frac: 0.1 });
+        assert!(spec.compress[3].error_feedback);
+        let bad = ConfigDoc::parse("[sweep]\ncompress = nope\n").unwrap();
+        assert!(SweepSpec::from_doc(&bad).is_err());
     }
 
     #[test]

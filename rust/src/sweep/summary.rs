@@ -42,6 +42,8 @@ pub struct CellSummary {
     pub final_test_mse: AxisStat,
     pub final_sim_time: AxisStat,
     pub final_comm_units: AxisStat,
+    /// Final exact wire bytes (the [`crate::comm::WireLedger`] book).
+    pub final_comm_bytes: AxisStat,
 }
 
 /// Whole-sweep summary: one entry per cell, in cell order.
@@ -54,12 +56,30 @@ pub struct SweepSummary {
 impl SweepSummary {
     /// Aggregate a sweep result (jobs are already cell-grouped and
     /// seed-ordered, so this is deterministic).
-    pub fn from_result(result: &SweepResult) -> SweepSummary {
+    ///
+    /// Returns [`Error::Config`] when a cell contains an empty trace:
+    /// such a run has no final point, and (mirroring the [`mean_trace`]
+    /// hardening) the summary surfaces that explicitly instead of
+    /// letting a silent NaN poison the whole cell's aggregates.
+    pub fn from_result(result: &SweepResult) -> Result<SweepSummary> {
         let mut cells = Vec::new();
         for chunk in result.cells() {
+            if let Some(bad) = chunk.iter().find(|j| j.trace.points.is_empty()) {
+                return Err(Error::Config(format!(
+                    "cell '{}' (job {}) produced an empty trace — no final point to \
+                     summarize; check max_iters/eval_every",
+                    bad.job.label, bad.job.job_id
+                )));
+            }
             let collect = |f: fn(&Trace) -> f64| -> Vec<f64> {
                 chunk.iter().map(|j| f(&j.trace)).collect()
             };
+            // Traces are verified non-empty above, so the Option-typed
+            // finals always carry a value here.
+            let comm_units: Vec<f64> =
+                chunk.iter().filter_map(|j| j.trace.final_comm_units()).collect();
+            let comm_bytes: Vec<f64> =
+                chunk.iter().filter_map(|j| j.trace.final_comm_bytes()).collect();
             cells.push(CellSummary {
                 cell_id: chunk[0].job.cell_id,
                 label: chunk[0].job.label.clone(),
@@ -67,10 +87,11 @@ impl SweepSummary {
                 final_accuracy: AxisStat::of(&collect(Trace::final_accuracy)),
                 final_test_mse: AxisStat::of(&collect(Trace::final_test_mse)),
                 final_sim_time: AxisStat::of(&collect(Trace::final_sim_time)),
-                final_comm_units: AxisStat::of(&collect(Trace::final_comm_units)),
+                final_comm_units: AxisStat::of(&comm_units),
+                final_comm_bytes: AxisStat::of(&comm_bytes),
             });
         }
-        SweepSummary { cells, total_jobs: result.jobs.len() }
+        Ok(SweepSummary { cells, total_jobs: result.jobs.len() })
     }
 
     /// Deterministic JSON: cells in cell order, stats as
@@ -93,6 +114,7 @@ impl SweepSummary {
                                 .field("test_mse", c.final_test_mse.to_json())
                                 .field("sim_time", c.final_sim_time.to_json())
                                 .field("comm_units", c.final_comm_units.to_json())
+                                .field("comm_bytes", c.final_comm_bytes.to_json())
                                 .build()
                         })
                         .collect(),
@@ -105,7 +127,15 @@ impl SweepSummary {
     pub fn print(&self) {
         let mut t = Table::new(
             "sweep summary (mean over seeds; final-point metrics)",
-            &["cell", "runs", "accuracy", "test metric", "sim time (s)", "comm units"],
+            &[
+                "cell",
+                "runs",
+                "accuracy",
+                "test metric",
+                "sim time (s)",
+                "comm units",
+                "wire bytes",
+            ],
         );
         for c in &self.cells {
             t.row(&[
@@ -115,6 +145,7 @@ impl SweepSummary {
                 fnum(c.final_test_mse.mean),
                 fnum(c.final_sim_time.mean),
                 fnum(c.final_comm_units.mean),
+                fnum(c.final_comm_bytes.mean),
             ]);
         }
         t.print();
@@ -151,6 +182,7 @@ pub fn mean_trace(traces: &[&Trace]) -> Result<Trace> {
     let inv = 1.0 / traces.len() as f64;
     for (i, pt) in out.points.iter_mut().enumerate() {
         pt.comm_units = traces.iter().map(|t| t.points[i].comm_units).sum::<f64>() * inv;
+        pt.comm_bytes = traces.iter().map(|t| t.points[i].comm_bytes).sum::<f64>() * inv;
         pt.sim_time = traces.iter().map(|t| t.points[i].sim_time).sum::<f64>() * inv;
         pt.accuracy = traces.iter().map(|t| t.points[i].accuracy).sum::<f64>() * inv;
         pt.test_mse = traces.iter().map(|t| t.points[i].test_mse).sum::<f64>() * inv;
@@ -169,6 +201,7 @@ mod tests {
             t.push(TracePoint {
                 iter: i + 1,
                 comm_units: i as f64,
+                comm_bytes: 8.0 * i as f64,
                 sim_time: 0.1 * i as f64,
                 accuracy: a,
                 test_mse: 2.0 * a,
@@ -194,6 +227,7 @@ mod tests {
         assert!((m.points[0].accuracy - 2.0).abs() < 1e-12);
         assert!((m.points[1].accuracy - 1.0).abs() < 1e-12);
         assert!((m.points[1].test_mse - 2.0).abs() < 1e-12);
+        assert!((m.points[1].comm_bytes - 8.0).abs() < 1e-12);
     }
 
     /// Regression: empty and ragged trace sets are config errors, not

@@ -166,8 +166,8 @@ fn latency_axis_sweep_is_worker_count_invariant() {
     .seeds(vec![1, 2]);
     let a = run_sweep(&spec, &ds, 1, &NativeEngineFactory).unwrap();
     let b = run_sweep(&spec, &ds, 3, &NativeEngineFactory).unwrap();
-    let ja = SweepSummary::from_result(&a).to_json().to_string();
-    let jb = SweepSummary::from_result(&b).to_json().to_string();
+    let ja = SweepSummary::from_result(&a).unwrap().to_json().to_string();
+    let jb = SweepSummary::from_result(&b).unwrap().to_json().to_string();
     assert_eq!(ja, jb, "latency-axis sweep JSON must not depend on worker count");
     assert!(ja.contains("lat=pareto") && ja.contains("lat=slownode"), "{ja}");
 }

@@ -48,9 +48,9 @@ fn one_worker_equals_many_workers() {
         assert_eq!(a.trace.points, b.trace.points, "job {}: 1 vs 4 workers", a.job.job_id);
         assert_eq!(a.trace.points, c.trace.points, "job {}: 1 vs 9 workers", a.job.job_id);
     }
-    let j1 = SweepSummary::from_result(&r1).to_json().to_pretty();
-    let j4 = SweepSummary::from_result(&r4).to_json().to_pretty();
-    let j9 = SweepSummary::from_result(&r9).to_json().to_pretty();
+    let j1 = SweepSummary::from_result(&r1).unwrap().to_json().to_pretty();
+    let j4 = SweepSummary::from_result(&r4).unwrap().to_json().to_pretty();
+    let j9 = SweepSummary::from_result(&r9).unwrap().to_json().to_pretty();
     assert_eq!(j1, j4, "summary JSON must be byte-identical (1 vs 4 workers)");
     assert_eq!(j1, j9, "summary JSON must be byte-identical (1 vs 9 workers)");
 }
@@ -77,7 +77,7 @@ fn summary_cells_cover_grid() {
     let ds = synthetic_small(600, 60, 0.1, 79);
     let spec = SweepSpec::new(base_cfg()).minibatches(vec![8, 16]).seeds(vec![1, 2, 3]);
     let result = run_sweep(&spec, &ds, 4, &NativeEngineFactory).unwrap();
-    let summary = SweepSummary::from_result(&result);
+    let summary = SweepSummary::from_result(&result).unwrap();
     assert_eq!(summary.cells.len(), 2);
     assert_eq!(summary.total_jobs, 6);
     for (cell, chunk) in summary.cells.iter().zip(result.cells()) {
