@@ -17,7 +17,7 @@ usage: csadmm <command> [--quick] [--pjrt] [--artifacts <dir>]
 
 commands:
   run [--config <file>] [--seed N] [--objective <obj>] [--latency <lat>]
-      [--backend <be>] [--compress <cx>]
+      [--backend <be>] [--compress <cx>] [--topology <topo>]
                                    one experiment from a config file
                                    (default: examples/configs/quickstart.toml,
                                    resolved relative to the working dir)
@@ -35,9 +35,15 @@ commands:
                                    cumulative wire bytes across the
                                    compressor zoo, coded vs uncoded
                                    (error feedback rescuing topk/randk)
+  fig8                             convergence through a partition-and-
+                                   repair event: the dynamic walk
+                                   re-plans around the cut and recovers,
+                                   coded vs uncoded (epoch markers in
+                                   the trace shade the disruption)
   sweep [--config <file>] [--workers N] [--out <file>]
         [--objective <obj>[,<obj>...]] [--latency <lat>[,<lat>...]]
         [--backend <be>[,<be>...]] [--compress <cx>[,<cx>...]]
+        [--topology <topo>[,<topo>...]]
                                    parallel parameter grid: expands the
                                    [sweep] section of the config (or a
                                    built-in 24-job demo grid) and runs it
@@ -52,7 +58,9 @@ commands:
                                    --backend overrides the backend axis,
                                    e.g. --backend sim,threaded;
                                    --compress overrides the token-codec
-                                   axis, e.g. --compress identity,q8,topk+ef
+                                   axis, e.g. --compress identity,q8,topk+ef;
+                                   --topology overrides the membership
+                                   axis, e.g. --topology static,churn
   all                              every experiment above
 
 objectives (<obj>): ls (least squares, Eq. 24) | logistic | huber | enet
@@ -62,7 +70,10 @@ backends (<be>): sim (simulated clock, default) | threaded (one real OS
                  thread per ECN; same decoded bytes, real wall-clock)
 token codecs (<cx>): identity (exact f64, default) | f32 | q<bits>
                      (stochastic quantizer, e.g. q8) | topk | randk
-                     — append +ef for error feedback; params via [comm]";
+                     — append +ef for error feedback; params via [comm]
+topologies (<topo>): static (fixed membership, default) | churn
+                     | partition | flaky-links  (params and explicit
+                     leave/join event lists via [topology])";
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]

@@ -31,6 +31,7 @@ use crate::error::{Error, Result};
 use crate::graph::TraversalKind;
 use crate::latency::{ClockSpec, FaultSpec, LatencyKind, LatencySpec};
 use crate::problem::ObjectiveKind;
+use crate::topology::{parse_join_event, MemberEvent, ScenarioKind, TopologySpec};
 
 /// Apply the optional `[objective]` hyper-parameter section to a parsed
 /// objective kind:
@@ -225,6 +226,85 @@ pub fn latency_spec_from_doc(doc: &ConfigDoc) -> Result<LatencySpec> {
     Ok(spec)
 }
 
+/// Apply the optional `[topology]` numeric parameter keys to a parsed
+/// scenario kind's spec (the scenario selected by
+/// `[topology] scenario = …`, `--topology` or a `[sweep] topo = …`
+/// axis):
+///
+/// ```text
+/// [topology]
+/// scenario = partition   # static|churn|partition|flaky-links
+/// churn_period = 200     # churn: iterations between leave waves
+/// churn_span = 80        # churn: how long each agent stays away
+/// churn_agents = 2       # churn: how many (seed-chosen) agents churn
+/// partition_at = 300     # partition: iteration the cut lands
+/// partition_repair = 600 # partition: iteration the cut heals
+/// partition_frac = 0.3   # partition: minority-side agent fraction
+/// link_period = 150      # flaky-links: iterations between failures
+/// link_span = 50         # flaky-links: how long each link is down
+/// link_count = 2         # flaky-links: how many links flap
+/// ```
+///
+/// Keys that don't apply to the scenario are ignored, so one section
+/// can parameterize a whole `topo = static, churn, partition` sweep
+/// axis (mirroring [`apply_latency_params`]).
+pub fn apply_topology_params(mut spec: TopologySpec, doc: &ConfigDoc) -> TopologySpec {
+    let sec = "topology";
+    macro_rules! set_usize {
+        ($field:ident, $key:literal) => {
+            if let Some(v) = doc.get_num(sec, $key) {
+                spec.$field = v as usize;
+            }
+        };
+    }
+    set_usize!(churn_period, "churn_period");
+    set_usize!(churn_span, "churn_span");
+    set_usize!(churn_agents, "churn_agents");
+    set_usize!(partition_at, "partition_at");
+    set_usize!(partition_repair, "partition_repair");
+    set_usize!(link_period, "link_period");
+    set_usize!(link_span, "link_span");
+    set_usize!(link_count, "link_count");
+    if let Some(v) = doc.get_num(sec, "partition_frac") {
+        spec.partition_frac = v;
+    }
+    spec
+}
+
+/// Parse the full `[topology]` dynamics table: the scenario preset (see
+/// [`apply_topology_params`] for the per-scenario keys) plus explicit
+/// membership events:
+///
+/// ```text
+/// [topology]
+/// scenario = static      # plus explicit events on top:
+/// leave = 3@200:400, 5@600   # agent@from[:until] — away windows
+/// join = 7@250               # agent@iter — not a member before iter
+/// ```
+///
+/// A missing table (or `scenario = static` with no events) keeps the
+/// static default — the golden path, byte-identical to the
+/// pre-subsystem runs.
+pub fn topology_spec_from_doc(doc: &ConfigDoc) -> Result<TopologySpec> {
+    let sec = "topology";
+    let mut spec = TopologySpec::default();
+    if let Some(tok) = doc.get_str(sec, "scenario") {
+        spec.scenario = ScenarioKind::parse(&tok)
+            .ok_or_else(|| Error::Config(format!("unknown topology scenario '{tok}'")))?;
+    }
+    spec = apply_topology_params(spec, doc);
+    if let Some(tokens) = doc.get_list(sec, "leave") {
+        spec.leaves =
+            tokens.iter().map(|t| MemberEvent::parse(t)).collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(tokens) = doc.get_list(sec, "join") {
+        spec.joins =
+            tokens.iter().map(|t| parse_join_event(t)).collect::<Result<Vec<_>>>()?;
+    }
+    spec.validate()?;
+    Ok(spec)
+}
+
 /// Parse an optional comma-separated f64 list from a config key.
 fn parse_f64_list(doc: &ConfigDoc, sec: &str, key: &str) -> Result<Vec<f64>> {
     match doc.get_list(sec, key) {
@@ -326,6 +406,9 @@ pub fn run_config_from_doc(doc: &ConfigDoc) -> Result<(RunConfig, DatasetName)> 
     cfg.response = resp;
     // Latency scenario ([latency] table).
     cfg.latency = latency_spec_from_doc(doc)?;
+    // Membership dynamics ([topology] table; distinct from the [run]
+    // `topology` key above, which picks the graph *shape*).
+    cfg.dynamics = topology_spec_from_doc(doc)?;
     // Token codec ([comm] table); the legacy [run] quantize_bits key
     // keeps working as the q<bits> alias.
     cfg.comm = comm_spec_from_doc(doc)?;
@@ -505,6 +588,61 @@ recover_at = 0.05
             cfg.latency.faults,
             vec![FaultSpec { agent: None, ecn: 1, fail_at: 0.01, recover_at: Some(0.05) }]
         );
+    }
+
+    #[test]
+    fn topology_table_round_trip() {
+        let text = r#"
+[run]
+n_agents = 8
+
+[topology]
+scenario = partition
+partition_at = 400
+partition_repair = 900
+partition_frac = 0.25
+leave = 3@200:400, 5@600
+join = 7@250
+"#;
+        let doc = ConfigDoc::parse(text).unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.dynamics.scenario, ScenarioKind::Partition);
+        assert_eq!(cfg.dynamics.partition_at, 400);
+        assert_eq!(cfg.dynamics.partition_repair, 900);
+        assert!((cfg.dynamics.partition_frac - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.dynamics.leaves.len(), 2);
+        assert_eq!(cfg.dynamics.leaves[1], MemberEvent::parse("5@600").unwrap());
+        assert_eq!(cfg.dynamics.joins, vec![(7, 250)]);
+        // Missing table keeps the static golden default.
+        let (cfg, _) = run_config_from_doc(&ConfigDoc::parse("").unwrap()).unwrap();
+        assert!(cfg.dynamics.is_static());
+        // Unknown scenarios, malformed events and degenerate presets
+        // are config errors.
+        assert!(run_config_from_doc(
+            &ConfigDoc::parse("[topology]\nscenario = mesh\n").unwrap()
+        )
+        .is_err());
+        assert!(run_config_from_doc(
+            &ConfigDoc::parse("[topology]\nleave = 3@400:200\n").unwrap()
+        )
+        .is_err());
+        assert!(run_config_from_doc(
+            &ConfigDoc::parse(
+                "[topology]\nscenario = partition\npartition_at = 500\npartition_repair = 100\n"
+            )
+            .unwrap()
+        )
+        .is_err());
+        // The [run] topology key (graph shape) stays independent of the
+        // [topology] table (membership dynamics).
+        let doc = ConfigDoc::parse(
+            "[run]\ntopology = spider\n\n[topology]\nscenario = churn\nchurn_agents = 1\n",
+        )
+        .unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.topology, TopologyKind::Spider);
+        assert_eq!(cfg.dynamics.scenario, ScenarioKind::Churn);
+        assert_eq!(cfg.dynamics.churn_agents, 1);
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::ecn::{
     SimClock, ThreadedBackend,
 };
 use crate::error::{Error, Result};
-use crate::graph::{Topology, Traversal, TraversalKind};
+use crate::graph::{Topology, TraversalKind};
 use crate::latency::LatencySpec;
 use crate::metrics::{accuracy, CommCost, Trace, TracePoint};
 use crate::problem::{
@@ -19,6 +19,7 @@ use crate::problem::{
 };
 use crate::rng::Xoshiro256pp;
 use crate::runtime::Engine;
+use crate::topology::{MembershipSchedule, TopologySpec, WalkPlanner};
 use std::rc::Rc;
 
 /// Which algorithm the driver runs.
@@ -103,6 +104,12 @@ pub struct RunConfig {
     pub comm: CodecSpec,
     /// Agent-link communication-time model (per-hop link latency).
     pub comm_model: CommModel,
+    /// Membership dynamics (`[topology]` table / `--topology`): churn,
+    /// partition, flaky-link scenarios or explicit leave/join events,
+    /// compiled deterministically from the run seed. The static default
+    /// compiles to an empty schedule and keeps the run byte-identical
+    /// to the fixed-agent-set code (the golden-trace contract).
+    pub dynamics: TopologySpec,
     pub max_iters: usize,
     pub eval_every: usize,
     pub seed: u64,
@@ -134,6 +141,7 @@ impl Default for RunConfig {
             backend: BackendKind::Sim,
             comm: CodecSpec::default(),
             comm_model: CommModel::default(),
+            dynamics: TopologySpec::default(),
             max_iters: 2_000,
             eval_every: 20,
             seed: 1,
@@ -378,7 +386,13 @@ impl Driver {
             Algorithm::WAdmm => TraversalKind::RandomWalk,
             _ => cfg.traversal,
         };
-        let mut traversal = Traversal::new(&self.topo, traversal_kind, &mut rng)?;
+        // Membership dynamics: the spec compiles against the concrete
+        // graph + seed (its randomness lives on a stream derived from
+        // the seed, not on `rng`, so a static schedule perturbs no
+        // draw below). The planner's static path delegates to the
+        // legacy one-shot traversal bit-for-bit.
+        let schedule = MembershipSchedule::compile(&cfg.dynamics, &self.topo, cfg.seed)?;
+        let mut planner = WalkPlanner::new(&self.topo, traversal_kind, schedule, &mut rng)?;
         let mut state = ConsensusState::zeros(n, p, d);
         let mut clock = SimClock::new();
         let mut comm = CommCost::new();
@@ -396,7 +410,8 @@ impl Driver {
         let mut comm_rng = rng.split();
 
         for k in 1..=cfg.max_iters {
-            let (i, hops) = traversal.next();
+            let step = planner.next(k)?;
+            let (i, hops) = (step.agent, step.hops);
             // Token transfer: one z-variable per hop, encoded by the
             // configured codec (each relay hop retransmits the encoded
             // token, so bytes are charged per hop).
@@ -406,7 +421,10 @@ impl Driver {
             }
             clock.advance(cfg.comm_model.sample_hops(hops, &mut comm_rng));
 
-            let cycle = (k - 1) / n;
+            // Lap counter of the current walk: equals the legacy
+            // `(k - 1) / n` on the static path, and never rewinds
+            // across re-plans (so minibatch cursors always advance).
+            let cycle = step.cycle;
             match cfg.algo {
                 Algorithm::IAdmmExact => {
                     // Exact local solve at the agent itself: charge its
@@ -461,6 +479,9 @@ impl Driver {
                 });
             }
         }
+        // Membership change points (empty on the static path, which
+        // keeps the exported JSON — and the golden trace — unchanged).
+        trace.epochs = planner.epochs().to_vec();
         Ok(trace)
     }
 }
@@ -627,6 +648,60 @@ mod tests {
             ..base_cfg()
         };
         assert_eq!(ok.per_partition_rows().unwrap(), 3);
+    }
+
+    /// A churn schedule disrupts but does not derail the run: the trace
+    /// carries the epoch markers and accuracy still trends toward x*.
+    #[test]
+    fn churn_schedule_converges_and_stamps_epochs() {
+        use crate::topology::{ScenarioKind, TopologySpec};
+        let cfg = RunConfig {
+            dynamics: TopologySpec {
+                scenario: ScenarioKind::Churn,
+                churn_period: 300,
+                churn_span: 120,
+                churn_agents: 2,
+                ..Default::default()
+            },
+            ..base_cfg()
+        };
+        let trace = Driver::new(cfg, &ds()).unwrap().run(&mut NativeEngine::new()).unwrap();
+        // Two churn waves, each a leave + a rejoin boundary.
+        assert_eq!(trace.epochs.len(), 4);
+        assert!(trace.epochs.iter().all(|e| e.walk <= e.live && e.live <= 5));
+        assert!(trace.final_accuracy() < 0.5, "{}", trace.final_accuracy());
+    }
+
+    /// Static dynamics leave the trace bit-identical to a config that
+    /// never heard of the topology subsystem (the golden contract,
+    /// checked in-process; the byte-level file check lives in
+    /// `tests/golden_trace.rs` and `tests/dynamic_topology.rs`).
+    #[test]
+    fn static_dynamics_do_not_perturb_the_trace() {
+        let ds = ds();
+        let plain = Driver::new(base_cfg(), &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+        let cfg = RunConfig { dynamics: crate::topology::TopologySpec::default(), ..base_cfg() };
+        let with_static = Driver::new(cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+        assert_eq!(plain.points, with_static.points);
+        assert!(with_static.epochs.is_empty());
+    }
+
+    /// W-ADMM's random walk has no cycle to re-plan: combining it with
+    /// a dynamic schedule is a config error, not a silent fallback.
+    #[test]
+    fn wadmm_with_dynamic_schedule_rejected() {
+        use crate::topology::{MemberEvent, TopologySpec};
+        let cfg = RunConfig {
+            algo: Algorithm::WAdmm,
+            dynamics: TopologySpec {
+                leaves: vec![MemberEvent::parse("1@100:200").unwrap()],
+                ..Default::default()
+            },
+            max_iters: 300,
+            ..base_cfg()
+        };
+        let mut driver = Driver::new(cfg, &ds()).unwrap();
+        assert!(driver.run(&mut NativeEngine::new()).is_err());
     }
 
     #[test]

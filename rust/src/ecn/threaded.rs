@@ -35,6 +35,17 @@
 //! inside rounds is reported through
 //! [`GradientBackend::real_elapsed`] — that is the number the
 //! `fig6-backend` experiment and `benches/backend_parity.rs` measure.
+//!
+//! **Dynamic topology / departed agents.** Under a membership schedule
+//! ([`crate::topology::MembershipSchedule`]) an agent that leaves the
+//! network simply stops being activated by the walk planner, so its
+//! pool's worker threads *park* on their blocking `req_rx.recv()` —
+//! no dispatch means no work, no CPU, no rng consumption — and resume
+//! untouched when the agent rejoins and its next round is dispatched.
+//! Departure needs no backend-side teardown, and per-agent rng streams
+//! stay independent of the schedule (worker draws happen only inside
+//! dispatched rounds), which is what makes sim-vs-threaded byte parity
+//! hold under churn too.
 
 use super::backend::GradientBackend;
 use super::pool::{ArrivalDraw, EcnPool, ResponseModel, RoundOutcome, RoundResult};

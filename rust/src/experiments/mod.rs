@@ -17,12 +17,14 @@
 //! | Thm. 2 / Cor. 1| [`rate_check::run`] |
 //! | Fig. 6 (ext.)  | [`fig6::run`] — wall-clock time-to-ε per latency regime |
 //! | Fig. 7 (ext.)  | [`fig7::run`] — accuracy vs wire bytes across the compressor zoo |
+//! | Fig. 8 (ext.)  | [`fig8::run`] — convergence through a partition-and-repair event |
 
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod fig8;
 pub mod rate_check;
 pub mod table1;
 

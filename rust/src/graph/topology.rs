@@ -83,7 +83,20 @@ impl Topology {
                 None => break,
             }
         }
-        Self::from_edges(n, &edges)
+        let t = Self::from_edges(n, &edges)?;
+        // The planted ring already guarantees connectivity for every
+        // eta (at eta = 0 the target clamps to exactly the ring), so
+        // this generator never rejection-samples and terminates on the
+        // first draw. The check is defensive: a future generator change
+        // must fail loudly instead of shipping a disconnected
+        // "connected" graph into a run.
+        if !t.is_connected() {
+            return Err(Error::Graph(format!(
+                "random_connected produced a disconnected graph (n={n}, eta={eta}); \
+                 the generator invariant is broken"
+            )));
+        }
+        Ok(t)
     }
 
     /// A deliberately non-Hamiltonian connected graph for the Fig. 1(b)/
@@ -156,6 +169,35 @@ impl Topology {
             }
         }
         count == self.n
+    }
+
+    /// Induced subgraph over `nodes` (ids into `self`, in any order,
+    /// duplicates rejected): the subgraph re-indexed to local ids
+    /// `0..nodes.len()`, plus the sorted local→global map.
+    ///
+    /// Used by the dynamic-topology subsystem to carve the live agent
+    /// set (and the token holder's component under a partition) out of
+    /// the full network.
+    pub fn induced(&self, nodes: &[usize]) -> Result<(Topology, Vec<usize>)> {
+        let mut map: Vec<usize> = nodes.to_vec();
+        map.sort_unstable();
+        map.dedup();
+        if map.len() != nodes.len() {
+            return Err(Error::Graph("induced: duplicate node id".into()));
+        }
+        if map.last().is_some_and(|&max| max >= self.n) {
+            return Err(Error::Graph(format!(
+                "induced: node id out of range for n={}",
+                self.n
+            )));
+        }
+        let mut edges = vec![];
+        for &(u, v) in &self.edges {
+            if let (Ok(lu), Ok(lv)) = (map.binary_search(&u), map.binary_search(&v)) {
+                edges.push((lu, lv));
+            }
+        }
+        Ok((Topology::from_edges(map.len(), &edges)?, map))
     }
 
     /// Metropolis–Hastings doubly-stochastic mixing matrix `W` used by
@@ -243,5 +285,44 @@ mod tests {
     fn disconnected_graph_detected() {
         let t = Topology::from_edges(4, &[(0, 1), (2, 3)]).unwrap();
         assert!(!t.is_connected());
+    }
+
+    /// Regression: `random_connected` must terminate (and stay
+    /// connected) at the low-eta extreme — the target edge count clamps
+    /// to the planted ring instead of chasing an unreachable density.
+    #[test]
+    fn random_connected_terminates_and_connects_at_low_eta() {
+        for eta in [0.0, 0.01, 0.05] {
+            let mut rng = Xoshiro256pp::seed_from_u64(41);
+            let t = Topology::random_connected(12, eta, &mut rng).unwrap();
+            assert!(t.is_connected(), "eta={eta}");
+            // eta small enough that the clamp floors at the ring.
+            assert_eq!(t.num_edges(), 12, "eta={eta}");
+        }
+        // Out-of-range eta is still rejected, not looped on.
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        assert!(Topology::random_connected(12, 1.5, &mut rng).is_err());
+    }
+
+    #[test]
+    fn induced_subgraph_reindexes_and_maps_back() {
+        // Path 0-1-2-3 plus chord (0,3).
+        let t = Topology::from_edges(4, &[(0, 1), (1, 2), (2, 3), (0, 3)]).unwrap();
+        let (sub, map) = t.induced(&[3, 0, 1]).unwrap();
+        assert_eq!(map, vec![0, 1, 3]);
+        assert_eq!(sub.n(), 3);
+        // Surviving edges: (0,1) and (0,3) -> local (0,1), (0,2).
+        assert_eq!(sub.edges(), &[(0, 1), (0, 2)]);
+        assert!(sub.is_connected());
+        // Dropping the middle of the path disconnects the rest.
+        let t = Topology::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        let (sub, _) = t.induced(&[0, 2, 3]).unwrap();
+        assert!(!sub.is_connected());
+        // Degenerate and invalid inputs.
+        let (empty, map) = t.induced(&[]).unwrap();
+        assert_eq!(empty.n(), 0);
+        assert!(map.is_empty());
+        assert!(t.induced(&[0, 0]).is_err());
+        assert!(t.induced(&[9]).is_err());
     }
 }

@@ -21,7 +21,11 @@
 //!   drift in parts-per-million, constant skew. Nominal specs are exact
 //!   identities so the default path stays bitwise reproducible.
 //! * [`FaultSpec`] — fail-stop fault injection with optional
-//!   recovery-after-t: a down ECN simply never responds.
+//!   recovery-after-t: a down ECN simply never responds. Faults resolve
+//!   to the same [`crate::topology::Outage`] window type the
+//!   dynamic-topology subsystem uses for agent leave / partition events
+//!   — fail-stop and membership loss share one algebra, on their
+//!   respective clocks (simulated seconds here, iteration index there).
 //! * [`LatencySpec`] — the whole scenario (kind + clocks + faults +
 //!   decode deadline) as carried by
 //!   [`RunConfig`](crate::coordinator::RunConfig) and parsed from the
@@ -198,7 +202,7 @@ impl LatencySpec {
                     .faults
                     .iter()
                     .find(|f| f.applies_to(agent, j))
-                    .map(|f| (f.fail_at, f.recover_at));
+                    .map(FaultSpec::outage);
                 NodeLatency { model: self.kind.build_model(j, response), clock, fault }
             })
             .collect()
@@ -255,7 +259,7 @@ mod tests {
         assert!(nodes[0].clock.is_nominal());
         assert_eq!(nodes[1].clock.rate, 2.0);
         assert!(nodes[2].clock.is_nominal());
-        assert_eq!(nodes[0].fault, Some((0.5, None)));
+        assert_eq!(nodes[0].fault, Some(crate::topology::Outage::permanent(0.5)));
         assert!(nodes[1].fault.is_none());
         // Different agent: the fault does not apply.
         let other = spec.build_nodes(0, 4, &resp);

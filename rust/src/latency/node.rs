@@ -2,6 +2,7 @@
 
 use super::models::LatencyModel;
 use crate::rng::Xoshiro256pp;
+use crate::topology::Outage;
 
 /// Per-ECN clock specification: a service-rate factor, drift in
 /// parts-per-million and a constant skew (cf. the simulated-clock specs
@@ -69,6 +70,13 @@ impl FaultSpec {
     pub fn applies_to(&self, agent: usize, ecn: usize) -> bool {
         self.ecn == ecn && self.agent.is_none_or(|a| a == agent)
     }
+
+    /// The fault as an unavailability window on the simulated clock —
+    /// the same [`Outage`] algebra the dynamic-topology subsystem uses
+    /// for agent leave/partition windows on the iteration clock.
+    pub fn outage(&self) -> Outage {
+        Outage::new(self.fail_at, self.recover_at)
+    }
 }
 
 /// One ECN's assembled latency state inside a pool: its service-time
@@ -79,20 +87,16 @@ pub struct NodeLatency {
     pub model: Box<dyn LatencyModel>,
     /// Clock heterogeneity applied to every sample.
     pub clock: ClockSpec,
-    /// Resolved fail-stop window `(fail_at, recover_at)`, if any.
-    pub fault: Option<(f64, Option<f64>)>,
+    /// Resolved fail-stop window, if any — the shared [`Outage`] type
+    /// (here on the simulated-seconds clock).
+    pub fault: Option<Outage>,
 }
 
 impl NodeLatency {
     /// Whether the node is down (fail-stopped, not yet recovered) at
     /// simulated time `now`.
     pub fn is_down(&self, now: f64) -> bool {
-        match self.fault {
-            Some((fail_at, recover_at)) => {
-                now >= fail_at && recover_at.is_none_or(|r| now < r)
-            }
-            None => false,
-        }
+        self.fault.is_some_and(|o| o.contains(now))
     }
 
     /// Sample this node's response time for `rows` rows at simulated
@@ -136,7 +140,7 @@ mod tests {
         let n = NodeLatency {
             model: Box::new(UniformBaseline { base: 1.0, per_row: 0.0, jitter_mean: 0.0 }),
             clock: ClockSpec::default(),
-            fault: Some((2.0, Some(5.0))),
+            fault: Some(Outage::new(2.0, Some(5.0))),
         };
         let mut rng = Xoshiro256pp::seed_from_u64(3);
         assert!(!n.is_down(0.0));
@@ -150,7 +154,7 @@ mod tests {
         let p = NodeLatency {
             model: Box::new(UniformBaseline { base: 1.0, per_row: 0.0, jitter_mean: 0.0 }),
             clock: ClockSpec::default(),
-            fault: Some((1.0, None)),
+            fault: Some(Outage::permanent(1.0)),
         };
         assert!(p.is_down(1e9));
     }

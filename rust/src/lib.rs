@@ -41,7 +41,13 @@
 //!   (rate / drift-ppm / skew), fail-stop faults with optional
 //!   recovery, and the decode-deadline policy. The `--latency`
 //!   CLI/config/sweep axis; `experiments::fig6` measures wall-clock
-//!   time-to-ε across regimes.
+//!   time-to-ε across regimes. [`topology`] lifts the static-agent-set
+//!   assumption: a seed-deterministic [`topology::MembershipSchedule`]
+//!   (churn, partitions, flaky links, explicit leave/join events) and an
+//!   epoch-based [`topology::WalkPlanner`] that re-plans the token walk
+//!   at every membership change, carrying consensus state through the
+//!   disruption. The `--topology` CLI/config/sweep axis;
+//!   `experiments::fig8` plots convergence through partition-and-repair.
 //! * Runtime: [`runtime`] loads AOT-compiled HLO artifacts (lowered from
 //!   JAX/Pallas by `python/compile/aot.py`) via the PJRT CPU client and
 //!   executes them from the Rust hot path; a native [`linalg`] fallback
@@ -115,6 +121,7 @@ pub mod problem;
 pub mod rng;
 pub mod runtime;
 pub mod sweep;
+pub mod topology;
 pub mod util;
 
 pub use error::{Error, Result};

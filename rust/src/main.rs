@@ -20,8 +20,8 @@ use csadmm::cli::{Args, USAGE};
 use csadmm::coding::SchemeKind;
 use csadmm::comm::CodecSpec;
 use csadmm::config::{
-    apply_comm_params, apply_latency_params, apply_objective_params, run_config_from_doc,
-    ConfigDoc,
+    apply_comm_params, apply_latency_params, apply_objective_params, apply_topology_params,
+    run_config_from_doc, ConfigDoc,
 };
 use csadmm::coordinator::{Algorithm, Driver, RunConfig};
 use csadmm::data::DatasetName;
@@ -31,6 +31,7 @@ use csadmm::latency::LatencyKind;
 use csadmm::problem::ObjectiveKind;
 use csadmm::runtime::{EngineFactory, NativeEngineFactory, PjrtEngineFactory};
 use csadmm::sweep::{default_workers, run_sweep, SweepSpec, SweepSummary};
+use csadmm::topology::{ScenarioKind, TopologySpec};
 use csadmm::util::json::write_json_file;
 use csadmm::util::table::{fnum, Table};
 use csadmm::{Error, Result};
@@ -92,6 +93,27 @@ fn parse_compress_list(list: &str, doc: Option<&ConfigDoc>) -> Result<Vec<CodecS
             let spec = match doc {
                 Some(doc) => apply_comm_params(spec, doc)?,
                 None => spec,
+            };
+            spec.validate()?;
+            Ok(spec)
+        })
+        .collect()
+}
+
+/// Parse a comma-separated `--topology` list (`static,churn,partition`),
+/// applying the config's `[topology]` parameter keys (when a config is
+/// in play) just like the `[sweep] topo` axis does. Explicit
+/// `leave`/`join` event lists stay config-only — a scenario token is a
+/// preset, not an event trace.
+fn parse_topology_list(list: &str, doc: Option<&ConfigDoc>) -> Result<Vec<TopologySpec>> {
+    list.split(',')
+        .map(|t| {
+            let t = t.trim();
+            let kind = ScenarioKind::parse(t)
+                .ok_or_else(|| Error::Config(format!("unknown topology scenario '{t}' (see usage)")))?;
+            let spec = match doc {
+                Some(doc) => apply_topology_params(TopologySpec::scenario(kind), doc),
+                None => TopologySpec::scenario(kind),
             };
             spec.validate()?;
             Ok(spec)
@@ -180,10 +202,19 @@ fn main() -> Result<()> {
                 // --compress supersedes a legacy quantize_bits key.
                 cfg.quantize_bits = None;
             }
+            if let Some(tok) = args.get("topology") {
+                let specs = parse_topology_list(tok, Some(&doc))?;
+                if specs.len() != 1 {
+                    return Err(Error::Config(
+                        "run takes exactly one --topology (use `sweep` for an axis)".into(),
+                    ));
+                }
+                cfg.dynamics = specs.into_iter().next().unwrap();
+            }
             let ds = load_dataset(dataset, quick);
             let mut engine = factory.create()?;
             println!(
-                "running {} [{}] on {} (N={}, K={}, M={}, lat={}, backend={}, cx={}, engine={})",
+                "running {} [{}] on {} (N={}, K={}, M={}, lat={}, backend={}, cx={}, topo={}, engine={})",
                 cfg.algo.label(),
                 cfg.objective.as_str(),
                 dataset.as_str(),
@@ -193,6 +224,7 @@ fn main() -> Result<()> {
                 cfg.latency.kind.as_str(),
                 cfg.backend.as_str(),
                 cfg.codec_spec()?.as_str(),
+                cfg.dynamics.as_str(),
                 engine.name()
             );
             // Objective-specific column label (classification error for
@@ -243,6 +275,9 @@ fn main() -> Result<()> {
             if let Some(list) = args.get("compress") {
                 spec = spec.compress(parse_compress_list(list, doc.as_ref())?);
             }
+            if let Some(list) = args.get("topology") {
+                spec = spec.topos(parse_topology_list(list, doc.as_ref())?);
+            }
             println!(
                 "sweep: {} jobs ({} cells × {} seeds) on {workers} workers, engine={}",
                 spec.num_jobs(),
@@ -292,6 +327,9 @@ fn main() -> Result<()> {
         Some("fig7") => {
             experiments::fig7::run(quick, factory.as_ref())?;
         }
+        Some("fig8") => {
+            experiments::fig8::run(quick, factory.as_ref())?;
+        }
         Some("rate-check") => {
             experiments::rate_check::run(quick, factory.as_ref())?;
         }
@@ -306,6 +344,7 @@ fn main() -> Result<()> {
             experiments::fig6::run(quick, factory.as_ref())?;
             experiments::fig6::backend_walltime(quick, factory.as_ref())?;
             experiments::fig7::run(quick, factory.as_ref())?;
+            experiments::fig8::run(quick, factory.as_ref())?;
             experiments::rate_check::run(quick, factory.as_ref())?;
         }
         other => {

@@ -33,13 +33,18 @@ pub struct Trace {
     /// exactly the historical shape, so the blessed golden trace (and
     /// every pre-refactor consumer) sees byte-identical output.
     pub codec: Option<String>,
+    /// Membership change points stamped by the dynamic-topology walk
+    /// planner (disruption-window shading in figure plots). Empty on a
+    /// static schedule — and, like `codec`, gating the JSON export: the
+    /// static path serializes exactly the historical shape.
+    pub epochs: Vec<crate::topology::EpochMarker>,
     pub points: Vec<TracePoint>,
 }
 
 impl Trace {
     /// New empty trace.
     pub fn new(label: &str) -> Self {
-        Self { label: label.to_string(), codec: None, points: vec![] }
+        Self { label: label.to_string(), codec: None, epochs: vec![], points: vec![] }
     }
 
     /// Append a point.
@@ -120,6 +125,24 @@ impl Trace {
                 .str("codec", codec)
                 .field("comm_bytes", Json::arr_f64(self.points.iter().map(|p| p.comm_bytes)));
         }
+        if !self.epochs.is_empty() {
+            b = b.field(
+                "epochs",
+                Json::Arr(
+                    self.epochs
+                        .iter()
+                        .map(|e| {
+                            Json::obj()
+                                .num("iter", e.iter as f64)
+                                .num("live", e.live as f64)
+                                .num("walk", e.walk as f64)
+                                .str("label", &e.label)
+                                .build()
+                        })
+                        .collect(),
+                ),
+            );
+        }
         b.build()
     }
 }
@@ -170,9 +193,24 @@ mod tests {
         let s = t.to_json().to_string();
         assert!(s.contains("\"label\":\"sI-ADMM\""));
         assert!(s.contains("\"accuracy\":[0.9]"));
-        // Default path: historical shape, no byte columns.
+        // Default path: historical shape, no byte columns, no epochs.
         assert!(!s.contains("comm_bytes"));
         assert!(!s.contains("codec"));
+        assert!(!s.contains("epochs"));
+    }
+
+    #[test]
+    fn json_gains_epoch_markers_only_under_dynamics() {
+        let mut t = Trace::new("sI-ADMM");
+        t.push(pt(1, 0.9));
+        t.epochs.push(crate::topology::EpochMarker {
+            iter: 300,
+            live: 4,
+            walk: 3,
+            label: "-2".into(),
+        });
+        let s = t.to_json().to_string();
+        assert!(s.contains("\"epochs\":[{\"iter\":300,\"label\":\"-2\",\"live\":4,\"walk\":3}]"));
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::ecn::BackendKind;
 use crate::error::{Error, Result};
 use crate::latency::LatencyKind;
 use crate::problem::ObjectiveKind;
+use crate::topology::{ScenarioKind, TopologySpec};
 
 /// A cartesian grid over experiment axes.
 ///
@@ -20,7 +21,7 @@ use crate::problem::ObjectiveKind;
 /// same *cell* and are aggregated by [`crate::sweep::SweepSummary`].
 ///
 /// Expansion order is fixed (objective → algo → S → ε → latency →
-/// backend → M → ρ → quantize-bits → compress → seed, seeds
+/// backend → topo → M → ρ → quantize-bits → compress → seed, seeds
 /// innermost), so job and cell ids are stable across processes and
 /// independent of how many workers execute the grid.
 #[derive(Clone, Debug)]
@@ -43,6 +44,11 @@ pub struct SweepSpec {
     /// different runtimes — sweeping it cross-checks the backend parity
     /// across whole grids.
     pub backends: Vec<BackendKind>,
+    /// Membership-dynamics axis (`topo=` cell labels): each entry a full
+    /// [`TopologySpec`] (scenario + parameters + explicit events), so a
+    /// grid can pit `static` against `churn` and `partition` runs of the
+    /// same config.
+    pub topos: Vec<TopologySpec>,
     /// Mini-batch axis M.
     pub minibatches: Vec<usize>,
     /// Penalty axis ρ.
@@ -68,6 +74,7 @@ impl SweepSpec {
             epsilons: vec![base.response.straggler_delay],
             latencies: vec![base.latency.kind],
             backends: vec![base.backend],
+            topos: vec![base.dynamics.clone()],
             minibatches: vec![base.minibatch],
             rhos: vec![base.rho],
             quantize_bits: vec![base.quantize_bits],
@@ -113,6 +120,12 @@ impl SweepSpec {
         self
     }
 
+    /// Set the membership-dynamics axis.
+    pub fn topos(mut self, v: Vec<TopologySpec>) -> Self {
+        self.topos = v;
+        self
+    }
+
     /// Set the mini-batch axis M.
     pub fn minibatches(mut self, v: Vec<usize>) -> Self {
         self.minibatches = v;
@@ -151,6 +164,7 @@ impl SweepSpec {
             * self.epsilons.len()
             * self.latencies.len()
             * self.backends.len()
+            * self.topos.len()
             * self.minibatches.len()
             * self.rhos.len()
             * self.quantize_bits.len()
@@ -197,22 +211,25 @@ impl SweepSpec {
                     for &eps in &self.epsilons {
                         for &lat in &self.latencies {
                             for &backend in &self.backends {
-                                for &m in &self.minibatches {
-                                    for &rho in &self.rhos {
-                                        for &bits in &self.quantize_bits {
-                                            for &cx in &self.compress {
-                                                let mut cfg = self.base.clone();
-                                                cfg.objective = objective;
-                                                cfg.algo = algo;
-                                                cfg.s_tolerated = s;
-                                                cfg.response.straggler_delay = eps;
-                                                cfg.latency.kind = lat;
-                                                cfg.backend = backend;
-                                                cfg.minibatch = m;
-                                                cfg.rho = rho;
-                                                cfg.quantize_bits = bits;
-                                                cfg.comm = cx;
-                                                cells.push(cfg);
+                                for topo in &self.topos {
+                                    for &m in &self.minibatches {
+                                        for &rho in &self.rhos {
+                                            for &bits in &self.quantize_bits {
+                                                for &cx in &self.compress {
+                                                    let mut cfg = self.base.clone();
+                                                    cfg.objective = objective;
+                                                    cfg.algo = algo;
+                                                    cfg.s_tolerated = s;
+                                                    cfg.response.straggler_delay = eps;
+                                                    cfg.latency.kind = lat;
+                                                    cfg.backend = backend;
+                                                    cfg.dynamics = topo.clone();
+                                                    cfg.minibatch = m;
+                                                    cfg.rho = rho;
+                                                    cfg.quantize_bits = bits;
+                                                    cfg.comm = cx;
+                                                    cells.push(cfg);
+                                                }
                                             }
                                         }
                                     }
@@ -261,6 +278,9 @@ impl SweepSpec {
         if self.backends.len() > 1 {
             label.push_str(&format!(" be={}", cfg.backend.as_str()));
         }
+        if self.topos.len() > 1 {
+            label.push_str(&format!(" topo={}", cfg.dynamics.as_str()));
+        }
         if self.minibatches.len() > 1 {
             label.push_str(&format!(" M={}", cfg.minibatch));
         }
@@ -297,6 +317,7 @@ impl SweepSpec {
     /// eps = 1e-3, 5e-3                 # straggler delay ε
     /// latency = uniform, pareto        # straggler-zoo regime axis
     /// backend = sim, threaded          # execution-backend axis
+    /// topo = static, churn, partition  # membership-dynamics axis
     /// minibatch = 16, 32
     /// rho = 0.08
     /// compress = identity, q8, topk+ef # token-codec axis (the compressor zoo)
@@ -314,7 +335,10 @@ impl SweepSpec {
     /// to every entry of the latency axis; codec parameters (`frac`,
     /// `error_feedback`) come from the `[comm]` section (see
     /// [`crate::config::apply_comm_params`]) and apply to every entry
-    /// of the compress axis (quantizer bits live in the token itself).
+    /// of the compress axis (quantizer bits live in the token itself);
+    /// membership-dynamics parameters come from the `[topology]` section
+    /// (see [`crate::config::apply_topology_params`]) and apply to every
+    /// entry of the topo axis.
     pub fn from_doc(doc: &ConfigDoc) -> Result<(SweepSpec, DatasetName)> {
         let (base, dataset) = crate::config::run_config_from_doc(doc)?;
         let mut spec = SweepSpec::new(base);
@@ -360,6 +384,22 @@ impl SweepSpec {
                     BackendKind::parse(t).ok_or_else(|| {
                         Error::Config(format!("sweep.backend: unknown backend '{t}'"))
                     })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(tokens) = doc.get_list(sec, "topo") {
+            spec.topos = tokens
+                .iter()
+                .map(|t| {
+                    let kind = ScenarioKind::parse(t).ok_or_else(|| {
+                        Error::Config(format!("sweep.topo: unknown topology scenario '{t}'"))
+                    })?;
+                    let entry = crate::config::apply_topology_params(
+                        TopologySpec::scenario(kind),
+                        doc,
+                    );
+                    entry.validate()?;
+                    Ok(entry)
                 })
                 .collect::<Result<Vec<_>>>()?;
         }
@@ -588,6 +628,52 @@ mod tests {
         // Single-value backend axis stays out of labels entirely.
         let jobs = SweepSpec::new(RunConfig::default()).minibatches(vec![8, 16]).expand().unwrap();
         assert_eq!(jobs[0].label, "sI-ADMM M=8");
+    }
+
+    #[test]
+    fn topo_axis_expands_between_backend_and_minibatch() {
+        let spec = SweepSpec::new(RunConfig::default())
+            .topos(vec![
+                TopologySpec::default(),
+                TopologySpec::scenario(ScenarioKind::Churn),
+            ])
+            .minibatches(vec![8, 16]);
+        assert_eq!(spec.num_cells(), 4);
+        let jobs = spec.expand().unwrap();
+        // Topo expands outside the minibatch axis.
+        assert!(jobs[0].cfg.dynamics.is_static());
+        assert!(jobs[1].cfg.dynamics.is_static());
+        assert_eq!(jobs[2].cfg.dynamics.scenario, ScenarioKind::Churn);
+        assert_eq!(jobs[0].label, "sI-ADMM topo=static M=8");
+        assert_eq!(jobs[3].label, "sI-ADMM topo=churn M=16");
+        // Single-value topo axis stays out of labels entirely.
+        let jobs = SweepSpec::new(RunConfig::default()).minibatches(vec![8, 16]).expand().unwrap();
+        assert_eq!(jobs[0].label, "sI-ADMM M=8");
+    }
+
+    #[test]
+    fn from_doc_reads_topo_axis_with_params() {
+        let doc = ConfigDoc::parse(
+            "[run]\nk_ecn = 2\n\n[sweep]\ntopo = static, churn, partition\n\n\
+             [topology]\nchurn_agents = 3\npartition_at = 250\npartition_repair = 750\n",
+        )
+        .unwrap();
+        let (spec, _) = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.topos.len(), 3);
+        assert!(spec.topos[0].is_static());
+        assert_eq!(spec.topos[1].scenario, ScenarioKind::Churn);
+        assert_eq!(spec.topos[1].churn_agents, 3);
+        assert_eq!(spec.topos[2].scenario, ScenarioKind::Partition);
+        assert_eq!(spec.topos[2].partition_at, 250);
+        assert_eq!(spec.topos[2].partition_repair, 750);
+        let bad = ConfigDoc::parse("[sweep]\ntopo = mesh\n").unwrap();
+        assert!(SweepSpec::from_doc(&bad).is_err());
+        // Degenerate preset parameters fail at parse time, not mid-grid.
+        let bad = ConfigDoc::parse(
+            "[sweep]\ntopo = partition\n\n[topology]\npartition_at = 900\npartition_repair = 100\n",
+        )
+        .unwrap();
+        assert!(SweepSpec::from_doc(&bad).is_err());
     }
 
     #[test]

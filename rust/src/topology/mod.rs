@@ -1,0 +1,112 @@
+//! Dynamic network topology: membership churn, partitions and the
+//! self-healing incremental walk.
+//!
+//! The paper's incremental ADMM walks a *fixed* Hamiltonian cycle over a
+//! *static* agent set. The edge deployments it targets (mobiles, drones,
+//! vehicles) have agents joining, leaving and partitioning mid-training,
+//! so this subsystem lifts the static-agent-set assumption out of the
+//! coordinator and makes membership a first-class, time-varying object:
+//!
+//! * [`Outage`] — one half-open unavailability window `[from, until)`.
+//!   The *same* window type covers both clocks of the system: ECN
+//!   fail-stop faults (simulated seconds, see
+//!   [`crate::latency::FaultSpec::outage`]) and agent/link membership
+//!   events (iteration index). Fail-stop and leave/partition are no
+//!   longer parallel mechanisms — they share the window algebra.
+//! * [`TopologySpec`] — the `[topology]` config table / `--topology`
+//!   CLI axis: a scenario preset (`static`, `churn`, `partition`,
+//!   `flaky-links`) with its parameters, plus explicit per-agent
+//!   `leave`/`join` event lists.
+//! * [`MembershipSchedule`] — the spec *compiled* against a concrete
+//!   [`crate::graph::Topology`] and run seed: every random choice (which
+//!   agents churn, where the partition cut falls, which links flap) is
+//!   drawn from a stream derived from the run seed — never from the
+//!   driver's main stream, so an empty schedule leaves every existing
+//!   draw untouched and the golden trace byte-identical.
+//! * [`WalkPlanner`] — the epoch-based walk. On a static schedule it
+//!   delegates to the one-shot [`crate::graph::Traversal`] (bit-exact
+//!   legacy behavior); under a dynamic schedule it re-plans the
+//!   Hamiltonian (or shortest-path-cycle fallback) walk at every
+//!   membership change point, carrying the token — and therefore the
+//!   z/dual state living in [`crate::admm::ConsensusState`] — across
+//!   re-plans so convergence is tracked *through* the disruption.
+//!
+//! The consensus math survives re-planning without modification: the
+//! z-update `z⁺ = z + (Δx + Δy/ρ)/N` is a running average over all `N`
+//! agents regardless of activation order, so frozen (departed) agents
+//! simply stop contributing increments while their x/y state persists
+//! for re-entry. Epoch markers ([`EpochMarker`]) are stamped into the
+//! run trace so figure plots can shade disruption windows
+//! (`experiments::fig8`).
+
+mod planner;
+mod schedule;
+mod spec;
+
+pub use planner::{Activation, WalkPlanner};
+pub use schedule::MembershipSchedule;
+pub use spec::{parse_join_event, MemberEvent, ScenarioKind, TopologySpec};
+
+/// One half-open unavailability window `[from, until)` on whatever clock
+/// the owning subsystem uses: simulated seconds for ECN fail-stop
+/// faults, iteration index (as f64) for membership events. `until =
+/// None` means the outage is permanent.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Outage {
+    /// Window start (inclusive).
+    pub from: f64,
+    /// Window end (exclusive); `None` = never recovers.
+    pub until: Option<f64>,
+}
+
+impl Outage {
+    /// A window `[from, until)`.
+    pub fn new(from: f64, until: Option<f64>) -> Self {
+        Self { from, until }
+    }
+
+    /// A permanent outage starting at `from`.
+    pub fn permanent(from: f64) -> Self {
+        Self { from, until: None }
+    }
+
+    /// Whether instant `t` falls inside the window.
+    pub fn contains(&self, t: f64) -> bool {
+        t >= self.from && self.until.is_none_or(|u| t < u)
+    }
+}
+
+/// A membership change point stamped into the run trace: which iteration
+/// the walk re-planned at, how many agents were live, how many the new
+/// walk actually covers (under a partition the walk is confined to the
+/// token holder's component), and a short label of what changed
+/// (`"-3"` = agent 3 left, `"+3"` = returned/joined, `"cut:2"` /
+/// `"heal:2"` = links went down/up).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochMarker {
+    /// Iteration at which the new epoch begins.
+    pub iter: usize,
+    /// Live agents at that iteration (all components).
+    pub live: usize,
+    /// Agents covered by the re-planned walk.
+    pub walk: usize,
+    /// What changed, e.g. `"-3"`, `"+5"`, `"cut:2"`.
+    pub label: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outage_window_semantics() {
+        let w = Outage::new(200.0, Some(400.0));
+        assert!(!w.contains(199.0));
+        assert!(w.contains(200.0));
+        assert!(w.contains(399.0));
+        assert!(!w.contains(400.0));
+        let p = Outage::permanent(10.0);
+        assert!(!p.contains(9.0));
+        assert!(p.contains(1e12));
+    }
+}

@@ -1,0 +1,467 @@
+//! [`WalkPlanner`]: the epoch-based, self-healing token walk.
+//!
+//! On a static schedule the planner is a transparent wrapper over the
+//! one-shot [`Traversal`] — same rng consumption, same activation
+//! sequence, byte-identical traces. Under a dynamic schedule it re-plans
+//! the cycle at every membership change point, keeping the token (and
+//! therefore the consensus z/dual state) alive across re-plans.
+
+use super::{EpochMarker, MembershipSchedule};
+use crate::error::{Error, Result};
+use crate::graph::{bfs_shortest_path, find_hamiltonian_cycle, Topology, Traversal, TraversalKind};
+use crate::rng::Xoshiro256pp;
+
+/// One planner step: which agent activates at this iteration, how many
+/// single-link transmissions the token paid to reach it, and which lap
+/// of the current walk the activation belongs to (drives the agent's
+/// minibatch cursor, generalizing the static `(k-1)/n` arithmetic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Activation {
+    /// Global id of the agent that activates.
+    pub agent: usize,
+    /// Comm hops paid to deliver the token to it.
+    pub hops: usize,
+    /// Completed-lap counter at activation time.
+    pub cycle: usize,
+}
+
+/// Epoch-based walk planner over a [`MembershipSchedule`].
+///
+/// The token-continuity rule at a re-plan: if the previous holder is
+/// still live, the new cycle is rotated to start there and the token
+/// immediately moves one leg to its successor (paying that leg's hop
+/// cost) — the previous holder is not activated twice in a row. If the
+/// previous holder departed, the token is re-homed to the lowest-id
+/// live agent in one nominal hop. Under a partition the walk is
+/// confined to the token holder's connected component; the other side's
+/// agents keep their x/y state frozen and rejoin the average when the
+/// cut heals.
+#[derive(Clone, Debug)]
+pub struct WalkPlanner {
+    schedule: MembershipSchedule,
+    topo: Topology,
+    kind: TraversalKind,
+    /// Static fast path: the legacy one-shot traversal, bit-exact.
+    fixed: Option<Traversal>,
+    /// Full-network agent count (the `N` of the z-update).
+    n_universe: usize,
+    /// Current cycle in *global* agent ids.
+    order: Vec<usize>,
+    /// Hop cost from `order[i]` to `order[(i+1) % len]`.
+    hop_cost: Vec<usize>,
+    pos: usize,
+    /// Completed laps (partial laps at re-plan points count as one —
+    /// batch cursors advance, never rewind).
+    laps: usize,
+    /// Activations taken in the current (possibly partial) lap.
+    in_lap: usize,
+    /// First activation after a (re-)plan pays `pending_hops` instead
+    /// of a cycle-leg cost.
+    fresh_epoch: bool,
+    pending_hops: usize,
+    /// Previous token holder (global id).
+    prev: Option<usize>,
+    epochs: Vec<EpochMarker>,
+}
+
+impl WalkPlanner {
+    /// Build the planner. With a static schedule this calls
+    /// [`Traversal::new`] exactly as the legacy driver did (consuming
+    /// the same rng draws); with a dynamic one it plans the first epoch
+    /// — which consumes no rng at all, so the main stream and the
+    /// comm-rng split downstream of it are unperturbed either way.
+    pub fn new(
+        topo: &Topology,
+        kind: TraversalKind,
+        schedule: MembershipSchedule,
+        rng: &mut Xoshiro256pp,
+    ) -> Result<Self> {
+        let n_universe = topo.n();
+        if schedule.is_static() {
+            let fixed = Some(Traversal::new(topo, kind, rng)?);
+            return Ok(Self {
+                schedule,
+                topo: topo.clone(),
+                kind,
+                fixed,
+                n_universe,
+                order: vec![],
+                hop_cost: vec![],
+                pos: 0,
+                laps: 0,
+                in_lap: 0,
+                fresh_epoch: false,
+                pending_hops: 0,
+                prev: None,
+                epochs: vec![],
+            });
+        }
+        if kind == TraversalKind::RandomWalk {
+            return Err(Error::Config(
+                "dynamic topology schedules require a cyclic traversal (hamiltonian or \
+                 shortest-path-cycle); the W-ADMM random walk has no epoch to re-plan"
+                    .into(),
+            ));
+        }
+        let mut planner = Self {
+            schedule,
+            topo: topo.clone(),
+            kind,
+            fixed: None,
+            n_universe,
+            order: vec![],
+            hop_cost: vec![],
+            pos: 0,
+            laps: 0,
+            in_lap: 0,
+            fresh_epoch: false,
+            pending_hops: 0,
+            prev: None,
+            epochs: vec![],
+        };
+        planner.plan(1)?;
+        Ok(planner)
+    }
+
+    /// Re-plan the cycle for the membership at iteration `k`.
+    fn plan(&mut self, k: usize) -> Result<()> {
+        let (live_g, map) = self.schedule.live_view(&self.topo, k)?;
+        // Anchor: the previous holder if it survived, else the lowest-id
+        // live agent.
+        let anchor_local = self
+            .prev
+            .and_then(|p| map.binary_search(&p).ok())
+            .unwrap_or(0);
+        // The walk can only cover the anchor's connected component.
+        let comp = component_of(&live_g, anchor_local);
+        let (g, comp_map) = live_g.induced(&comp)?;
+        let (order_local, hop_cost) = plan_cycle(&g, self.kind)?;
+        let mut order: Vec<usize> =
+            order_local.iter().map(|&l| map[comp_map[l]]).collect();
+        let mut hop_cost = hop_cost;
+
+        let prev_live = self.prev.is_some_and(|p| order.contains(&p));
+        if let Some(p) = self.prev.filter(|_| prev_live) {
+            // Rotate the cycle (order and costs together) so it starts
+            // at the surviving token holder.
+            let r = order.iter().position(|&a| a == p).expect("anchor in order");
+            order.rotate_left(r);
+            hop_cost.rotate_left(r);
+        }
+        let len = order.len();
+        match self.prev {
+            // Initial plan: token materializes at the first agent, free.
+            None => {
+                self.pos = 0;
+                self.pending_hops = 0;
+            }
+            Some(p) if len == 1 => {
+                // Singleton walk: the token stays (or re-homes in one
+                // nominal hop if its holder departed).
+                self.pos = 0;
+                self.pending_hops = usize::from(order[0] != p);
+            }
+            Some(_) if prev_live => {
+                // Holder survived: it just activated, so the token moves
+                // one leg to its successor, paying that leg's cost.
+                self.pos = 1;
+                self.pending_hops = hop_cost[0];
+            }
+            Some(_) => {
+                // Holder departed: re-home in one nominal hop.
+                self.pos = 0;
+                self.pending_hops = 1;
+            }
+        }
+        self.order = order;
+        self.hop_cost = hop_cost;
+        self.fresh_epoch = true;
+        Ok(())
+    }
+
+    /// Next activation, for iteration `k` (1-based, strictly
+    /// increasing).
+    pub fn next(&mut self, k: usize) -> Result<Activation> {
+        if let Some(t) = &mut self.fixed {
+            let (agent, hops) = t.next();
+            return Ok(Activation { agent, hops, cycle: (k - 1) / self.n_universe });
+        }
+        if k > 1 && self.schedule.is_change_point(k) {
+            // Close the partial lap so batch cursors never rewind.
+            if self.in_lap > 0 {
+                self.laps += 1;
+                self.in_lap = 0;
+            }
+            self.plan(k)?;
+            self.epochs.push(EpochMarker {
+                iter: k,
+                live: self.schedule.live_count(k),
+                walk: self.order.len(),
+                label: self.schedule.label_at(k),
+            });
+        }
+        let len = self.order.len();
+        let agent = self.order[self.pos];
+        let hops = if self.fresh_epoch {
+            self.pending_hops
+        } else if self.pos == 0 {
+            self.hop_cost[len - 1]
+        } else {
+            self.hop_cost[self.pos - 1]
+        };
+        self.fresh_epoch = false;
+        let cycle = self.laps;
+        self.prev = Some(agent);
+        self.in_lap += 1;
+        self.pos += 1;
+        if self.pos == len {
+            self.pos = 0;
+            self.laps += 1;
+            self.in_lap = 0;
+        }
+        Ok(Activation { agent, hops, cycle })
+    }
+
+    /// Epoch markers stamped so far (empty on the static path).
+    pub fn epochs(&self) -> &[EpochMarker] {
+        &self.epochs
+    }
+
+    /// Current cycle in global ids (static path: the fixed traversal's).
+    pub fn order(&self) -> &[usize] {
+        match &self.fixed {
+            Some(t) => t.order(),
+            None => &self.order,
+        }
+    }
+}
+
+/// Sorted node ids of the connected component of `start` in `g`.
+fn component_of(g: &Topology, start: usize) -> Vec<usize> {
+    if g.n() == 0 {
+        return vec![];
+    }
+    let mut seen = vec![false; g.n()];
+    let mut queue = std::collections::VecDeque::from([start]);
+    seen[start] = true;
+    while let Some(u) = queue.pop_front() {
+        for &v in g.neighbors(u) {
+            if !seen[v] {
+                seen[v] = true;
+                queue.push_back(v);
+            }
+        }
+    }
+    (0..g.n()).filter(|&v| seen[v]).collect()
+}
+
+/// Plan one cycle over connected graph `g`: activation order + per-leg
+/// hop costs. `Hamiltonian` falls back to the shortest-path cycle when
+/// the live subgraph lost its Hamiltonian cycle — the walk heals itself
+/// instead of aborting the run.
+fn plan_cycle(g: &Topology, kind: TraversalKind) -> Result<(Vec<usize>, Vec<usize>)> {
+    let m = g.n();
+    match m {
+        0 => Err(Error::Graph("cannot plan a walk over zero agents".into())),
+        1 => Ok((vec![0], vec![0])),
+        2 => Ok((vec![0, 1], vec![1, 1])),
+        _ => {
+            if kind == TraversalKind::Hamiltonian {
+                if let Some(order) = find_hamiltonian_cycle(g) {
+                    let costs = vec![1; order.len()];
+                    return Ok((order, costs));
+                }
+            }
+            let order: Vec<usize> = (0..m).collect();
+            let mut costs = Vec::with_capacity(m);
+            for i in 0..m {
+                let path = bfs_shortest_path(g, order[i], order[(i + 1) % m])
+                    .ok_or_else(|| Error::Graph("walk component disconnected".into()))?;
+                costs.push(path.len() - 1);
+            }
+            Ok((order, costs))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::topology::{MemberEvent, ScenarioKind, TopologySpec};
+
+    fn ring(n: usize) -> Topology {
+        Topology::from_edges(n, &(0..n).map(|i| (i, (i + 1) % n)).collect::<Vec<_>>()).unwrap()
+    }
+
+    fn compile(spec: &TopologySpec, topo: &Topology, seed: u64) -> MembershipSchedule {
+        MembershipSchedule::compile(spec, topo, seed).unwrap()
+    }
+
+    #[test]
+    fn static_schedule_matches_raw_traversal_exactly() {
+        let g = ring(5);
+        let sched = compile(&TopologySpec::default(), &g, 31);
+        let mut rng_a = Xoshiro256pp::seed_from_u64(31);
+        let mut rng_b = Xoshiro256pp::seed_from_u64(31);
+        let mut planner =
+            WalkPlanner::new(&g, TraversalKind::Hamiltonian, sched, &mut rng_a).unwrap();
+        let mut legacy = Traversal::new(&g, TraversalKind::Hamiltonian, &mut rng_b).unwrap();
+        for k in 1..=17 {
+            let a = planner.next(k).unwrap();
+            let (agent, hops) = legacy.next();
+            assert_eq!((a.agent, a.hops), (agent, hops), "k={k}");
+            assert_eq!(a.cycle, (k - 1) / 5, "k={k}");
+        }
+        // Same rng consumption on both paths.
+        assert_eq!(rng_a.below(1 << 30), rng_b.below(1 << 30));
+        assert!(planner.epochs().is_empty());
+    }
+
+    #[test]
+    fn dynamic_random_walk_rejected() {
+        let g = ring(5);
+        let spec = TopologySpec {
+            leaves: vec![MemberEvent::parse("1@10:20").unwrap()],
+            ..Default::default()
+        };
+        let sched = compile(&spec, &g, 31);
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        assert!(WalkPlanner::new(&g, TraversalKind::RandomWalk, sched, &mut rng).is_err());
+    }
+
+    #[test]
+    fn leave_and_rejoin_heals_the_walk() {
+        let g = ring(5);
+        // Agent 2 away for [6, 11): the ring degrades to a path (no
+        // Hamiltonian cycle), forcing the SPC fallback mid-run.
+        let spec = TopologySpec {
+            leaves: vec![MemberEvent::parse("2@6:11").unwrap()],
+            ..Default::default()
+        };
+        let sched = compile(&spec, &g, 31);
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let mut planner =
+            WalkPlanner::new(&g, TraversalKind::Hamiltonian, sched, &mut rng).unwrap();
+        let mut acts = vec![];
+        for k in 1..=25 {
+            acts.push((k, planner.next(k).unwrap()));
+        }
+        // The departed agent never activates inside its window.
+        for &(k, a) in &acts {
+            if (6..11).contains(&k) {
+                assert_ne!(a.agent, 2, "departed agent activated at k={k}");
+            }
+        }
+        // It does activate both before and after.
+        assert!(acts.iter().any(|&(k, a)| k < 6 && a.agent == 2));
+        assert!(acts.iter().any(|&(k, a)| k >= 11 && a.agent == 2));
+        // Two epochs: the leave and the rejoin, with walk sizes 4 and 5.
+        let epochs = planner.epochs();
+        assert_eq!(epochs.len(), 2);
+        assert_eq!((epochs[0].iter, epochs[0].live, epochs[0].walk), (6, 4, 4));
+        assert_eq!(epochs[0].label, "-2");
+        assert_eq!((epochs[1].iter, epochs[1].live, epochs[1].walk), (11, 5, 5));
+        assert_eq!(epochs[1].label, "+2");
+        // Token continuity: no agent activates twice in a row across
+        // the re-plans (walk length > 1 throughout).
+        for w in acts.windows(2) {
+            assert_ne!(w[0].1.agent, w[1].1.agent, "double activation at k={}", w[1].0);
+        }
+        // Laps never rewind.
+        for w in acts.windows(2) {
+            assert!(w[1].1.cycle >= w[0].1.cycle);
+        }
+    }
+
+    #[test]
+    fn partition_confines_walk_to_token_component() {
+        // Two triangles joined by one bridge; cutting the bridge
+        // partitions 0-1-2 from 3-4-5.
+        let g = Topology::from_edges(
+            6,
+            &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5), (2, 3)],
+        )
+        .unwrap();
+        let spec = TopologySpec {
+            scenario: ScenarioKind::Partition,
+            partition_at: 7,
+            partition_repair: 19,
+            partition_frac: 0.5,
+            ..Default::default()
+        };
+        let sched = compile(&spec, &g, 31);
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let mut planner =
+            WalkPlanner::new(&g, TraversalKind::ShortestPathCycle, sched, &mut rng).unwrap();
+        let mut mid_agents = std::collections::BTreeSet::new();
+        let mut post_agents = std::collections::BTreeSet::new();
+        for k in 1..=40 {
+            let a = planner.next(k).unwrap();
+            if (7..19).contains(&k) {
+                mid_agents.insert(a.agent);
+            }
+            if k >= 19 {
+                post_agents.insert(a.agent);
+            }
+        }
+        let epochs = planner.epochs();
+        assert_eq!(epochs.len(), 2);
+        // All six agents stay "live" — only links die — but the walk is
+        // confined to the token holder's side of the cut.
+        assert_eq!(epochs[0].live, 6);
+        assert_eq!(epochs[0].walk, 3);
+        assert!(epochs[0].label.starts_with("cut:"));
+        assert!(mid_agents.len() == 3, "walk escaped its component: {mid_agents:?}");
+        // After repair the walk covers everyone again.
+        assert_eq!(epochs[1].walk, 6);
+        assert_eq!(post_agents.len(), 6);
+    }
+
+    #[test]
+    fn dynamic_prefix_before_first_event_matches_static() {
+        let g = ring(6);
+        let spec = TopologySpec {
+            leaves: vec![MemberEvent::parse("4@50:60").unwrap()],
+            ..Default::default()
+        };
+        let sched = compile(&spec, &g, 9);
+        let mut rng_a = Xoshiro256pp::seed_from_u64(9);
+        let mut rng_b = Xoshiro256pp::seed_from_u64(9);
+        let mut dynamic =
+            WalkPlanner::new(&g, TraversalKind::Hamiltonian, sched, &mut rng_a).unwrap();
+        let mut legacy = Traversal::new(&g, TraversalKind::Hamiltonian, &mut rng_b).unwrap();
+        for k in 1..50 {
+            let a = dynamic.next(k).unwrap();
+            let (agent, hops) = legacy.next();
+            assert_eq!((a.agent, a.hops, a.cycle), (agent, hops, (k - 1) / 6), "k={k}");
+        }
+    }
+
+    #[test]
+    fn singleton_walk_holds_the_token() {
+        // Triangle where agents 1 and 2 both leave: only agent 0 runs.
+        let g = ring(3);
+        let spec = TopologySpec {
+            leaves: vec![
+                MemberEvent::parse("1@4:9").unwrap(),
+                MemberEvent::parse("2@4:9").unwrap(),
+            ],
+            ..Default::default()
+        };
+        let sched = compile(&spec, &g, 5);
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let mut planner =
+            WalkPlanner::new(&g, TraversalKind::Hamiltonian, sched, &mut rng).unwrap();
+        for k in 1..=12 {
+            let a = planner.next(k).unwrap();
+            if (4..9).contains(&k) {
+                assert_eq!(a.agent, 0, "k={k}");
+            }
+        }
+        let epochs = planner.epochs();
+        assert_eq!(epochs.len(), 2);
+        assert_eq!(epochs[0].walk, 1);
+        assert_eq!(epochs[1].walk, 3);
+    }
+}

@@ -1,0 +1,467 @@
+//! [`MembershipSchedule`]: a [`TopologySpec`] compiled against a
+//! concrete graph and run seed into explicit agent/link outage windows.
+
+use super::{Outage, TopologySpec};
+use crate::error::{Error, Result};
+use crate::graph::Topology;
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::topology::ScenarioKind;
+
+/// Domain-separation constant for the schedule's rng stream: every
+/// random choice the dynamics make (which agents churn, where the
+/// partition cut falls, which links flap) is drawn from
+/// `seed ^ SCHEDULE_STREAM`, never from the driver's main stream — so
+/// an empty schedule perturbs no existing draw and the golden trace
+/// stays byte-identical.
+const SCHEDULE_STREAM: u64 = 0x70D0_57A7;
+
+/// Attempt cap for the partition-cut rejection sampler: sampling stops
+/// with [`Error::Config`] instead of looping forever on graphs where no
+/// balanced cut keeps both sides internally connected.
+const MAX_CUT_ATTEMPTS: usize = 64;
+
+/// The compiled membership dynamics of one run: per-agent and per-link
+/// outage windows on the iteration clock, plus the precomputed change
+/// points where the live view actually differs from the previous
+/// iteration.
+#[derive(Clone, Debug)]
+pub struct MembershipSchedule {
+    n: usize,
+    /// Agent unavailability windows (an agent may carry several).
+    agent_outages: Vec<(usize, Outage)>,
+    /// Link unavailability windows, canonical `(lo, hi)` endpoints.
+    link_outages: Vec<((usize, usize), Outage)>,
+    /// Iterations (>= 2, sorted, deduped) at which the live view
+    /// genuinely changes relative to the previous iteration.
+    change_points: Vec<usize>,
+}
+
+impl MembershipSchedule {
+    /// Compile `spec` against the run's graph and seed.
+    pub fn compile(spec: &TopologySpec, topo: &Topology, seed: u64) -> Result<Self> {
+        spec.validate()?;
+        let n = topo.n();
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ SCHEDULE_STREAM);
+        let mut agent_outages: Vec<(usize, Outage)> = vec![];
+        let mut link_outages: Vec<((usize, usize), Outage)> = vec![];
+
+        match spec.scenario {
+            ScenarioKind::Static => {}
+            ScenarioKind::Churn => {
+                if spec.churn_agents >= n {
+                    return Err(Error::Config(format!(
+                        "topology: churn_agents {} must leave at least one of the {n} \
+                         agents in place",
+                        spec.churn_agents
+                    )));
+                }
+                let mut churners = rng.sample_indices(n, spec.churn_agents);
+                churners.sort_unstable();
+                for (wave, &agent) in churners.iter().enumerate() {
+                    let from = spec.churn_period * (wave + 1);
+                    agent_outages.push((
+                        agent,
+                        Outage::new(from as f64, Some((from + spec.churn_span) as f64)),
+                    ));
+                }
+            }
+            ScenarioKind::Partition => {
+                let cut = partition_cut(topo, spec.partition_frac, &mut rng)?;
+                let window =
+                    Outage::new(spec.partition_at as f64, Some(spec.partition_repair as f64));
+                for edge in cut {
+                    link_outages.push((edge, window));
+                }
+            }
+            ScenarioKind::FlakyLinks => {
+                if spec.link_count > topo.num_edges() {
+                    return Err(Error::Config(format!(
+                        "topology: link_count {} exceeds the graph's {} links",
+                        spec.link_count,
+                        topo.num_edges()
+                    )));
+                }
+                let mut picks = rng.sample_indices(topo.num_edges(), spec.link_count);
+                picks.sort_unstable();
+                for (wave, &e) in picks.iter().enumerate() {
+                    let from = spec.link_period * (wave + 1);
+                    link_outages.push((
+                        topo.edges()[e],
+                        Outage::new(from as f64, Some((from + spec.link_span) as f64)),
+                    ));
+                }
+            }
+        }
+
+        for ev in &spec.leaves {
+            if ev.agent >= n {
+                return Err(Error::Config(format!(
+                    "topology.leave: agent {} out of range (n={n})",
+                    ev.agent
+                )));
+            }
+            agent_outages.push((ev.agent, ev.outage));
+        }
+        for &(agent, at) in &spec.joins {
+            if agent >= n {
+                return Err(Error::Config(format!(
+                    "topology.join: agent {agent} out of range (n={n})"
+                )));
+            }
+            // A late joiner is "away" from the start until its join
+            // iteration — one window type covers both directions.
+            agent_outages.push((agent, Outage::new(0.0, Some(at as f64))));
+        }
+
+        let mut sched = Self { n, agent_outages, link_outages, change_points: vec![] };
+        sched.change_points = sched.find_change_points();
+        // The walk needs somebody to hand the token to at every change
+        // point (and at the start).
+        for &k in std::iter::once(&1).chain(&sched.change_points) {
+            if sched.live_count(k) == 0 {
+                return Err(Error::Config(format!(
+                    "topology: no live agents at iteration {k}"
+                )));
+            }
+        }
+        Ok(sched)
+    }
+
+    /// Candidate boundaries are every window edge; keep only those
+    /// where the live view (agents + links) genuinely differs from the
+    /// iteration before — overlapping windows can make a boundary a
+    /// no-op, and re-planning there would stamp a misleading marker.
+    fn find_change_points(&self) -> Vec<usize> {
+        let mut candidates: Vec<usize> = self
+            .agent_outages
+            .iter()
+            .map(|(_, o)| o)
+            .chain(self.link_outages.iter().map(|(_, o)| o))
+            .flat_map(|o| {
+                [Some(o.from), o.until].into_iter().flatten().map(|t| t as usize)
+            })
+            .filter(|&k| k >= 2)
+            .collect();
+        candidates.sort_unstable();
+        candidates.dedup();
+        candidates.retain(|&k| self.fingerprint(k) != self.fingerprint(k - 1));
+        candidates
+    }
+
+    /// The live view at iteration `k`: which agents are up, which links
+    /// are up.
+    fn fingerprint(&self, k: usize) -> (Vec<bool>, Vec<bool>) {
+        let agents = (0..self.n).map(|a| self.agent_live(a, k)).collect();
+        let links = self
+            .link_outages
+            .iter()
+            .map(|(_, o)| !o.contains(k as f64))
+            .collect();
+        (agents, links)
+    }
+
+    /// Number of agents in the underlying (full) network.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Whether the schedule carries no dynamics (the golden path).
+    pub fn is_static(&self) -> bool {
+        self.agent_outages.is_empty() && self.link_outages.is_empty()
+    }
+
+    /// The sorted iterations at which the live view changes.
+    pub fn change_points(&self) -> &[usize] {
+        &self.change_points
+    }
+
+    /// Whether iteration `k` starts a new membership epoch.
+    pub fn is_change_point(&self, k: usize) -> bool {
+        self.change_points.binary_search(&k).is_ok()
+    }
+
+    /// Whether `agent` is a live member at iteration `k`.
+    pub fn agent_live(&self, agent: usize, k: usize) -> bool {
+        !self
+            .agent_outages
+            .iter()
+            .any(|&(a, o)| a == agent && o.contains(k as f64))
+    }
+
+    /// The live agents at iteration `k`, ascending.
+    pub fn live_agents(&self, k: usize) -> Vec<usize> {
+        (0..self.n).filter(|&a| self.agent_live(a, k)).collect()
+    }
+
+    /// Number of live agents at iteration `k`.
+    pub fn live_count(&self, k: usize) -> usize {
+        (0..self.n).filter(|&a| self.agent_live(a, k)).count()
+    }
+
+    /// Whether the (canonical) link `a—b` is up at iteration `k`.
+    pub fn link_up(&self, a: usize, b: usize, k: usize) -> bool {
+        let e = (a.min(b), a.max(b));
+        !self
+            .link_outages
+            .iter()
+            .any(|&(edge, o)| edge == e && o.contains(k as f64))
+    }
+
+    /// The live network at iteration `k`: the subgraph induced by the
+    /// live agents, minus any down links, re-indexed to local ids —
+    /// plus the sorted local→global agent map.
+    pub fn live_view(&self, topo: &Topology, k: usize) -> Result<(Topology, Vec<usize>)> {
+        let map = self.live_agents(k);
+        let mut edges = vec![];
+        for &(u, v) in topo.edges() {
+            if let (Ok(lu), Ok(lv)) = (map.binary_search(&u), map.binary_search(&v)) {
+                if self.link_up(u, v, k) {
+                    edges.push((lu, lv));
+                }
+            }
+        }
+        Ok((Topology::from_edges(map.len(), &edges)?, map))
+    }
+
+    /// Short human label of what changed at iteration `k` relative to
+    /// `k - 1`: `-a` (agent left), `+a` (agent returned/joined),
+    /// `cut:c` / `heal:c` (c links went down / came back).
+    pub fn label_at(&self, k: usize) -> String {
+        let (prev_agents, prev_links) = self.fingerprint(k.saturating_sub(1));
+        let (now_agents, now_links) = self.fingerprint(k);
+        let mut parts: Vec<String> = vec![];
+        for a in 0..self.n {
+            match (prev_agents[a], now_agents[a]) {
+                (true, false) => parts.push(format!("-{a}")),
+                (false, true) => parts.push(format!("+{a}")),
+                _ => {}
+            }
+        }
+        let cut = prev_links.iter().zip(&now_links).filter(|(p, n)| **p && !**n).count();
+        let heal = prev_links.iter().zip(&now_links).filter(|(p, n)| !**p && **n).count();
+        if cut > 0 {
+            parts.push(format!("cut:{cut}"));
+        }
+        if heal > 0 {
+            parts.push(format!("heal:{heal}"));
+        }
+        parts.join(" ")
+    }
+}
+
+/// Rejection-sample a partition cut: a minority side of
+/// `round(frac · n)` agents (clamped to `1..n-1`) such that *both*
+/// sides stay internally connected — each side must still be able to
+/// plan a walk. Capped at [`MAX_CUT_ATTEMPTS`] attempts; returns the
+/// cut's edge set.
+fn partition_cut(
+    topo: &Topology,
+    frac: f64,
+    rng: &mut Xoshiro256pp,
+) -> Result<Vec<(usize, usize)>> {
+    let n = topo.n();
+    let side = ((frac * n as f64).round() as usize).clamp(1, n - 1);
+    for _ in 0..MAX_CUT_ATTEMPTS {
+        let minority = rng.sample_indices(n, side);
+        let mut in_minority = vec![false; n];
+        for &a in &minority {
+            in_minority[a] = true;
+        }
+        let majority: Vec<usize> = (0..n).filter(|&a| !in_minority[a]).collect();
+        let (ga, _) = topo.induced(&minority)?;
+        let (gb, _) = topo.induced(&majority)?;
+        if ga.is_connected() && gb.is_connected() {
+            return Ok(topo
+                .edges()
+                .iter()
+                .copied()
+                .filter(|&(u, v)| in_minority[u] != in_minority[v])
+                .collect());
+        }
+    }
+    Err(Error::Config(format!(
+        "topology: no partition cut with both sides internally connected found in \
+         {MAX_CUT_ATTEMPTS} attempts (n={n}, minority side {side}); raise eta, change \
+         partition_frac, or pick a denser graph"
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::MemberEvent;
+
+    fn ring(n: usize) -> Topology {
+        Topology::from_edges(n, &(0..n).map(|i| (i, (i + 1) % n)).collect::<Vec<_>>()).unwrap()
+    }
+
+    fn dense(n: usize, seed: u64) -> Topology {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Topology::random_connected(n, 0.6, &mut rng).unwrap()
+    }
+
+    #[test]
+    fn static_spec_compiles_empty() {
+        let sched =
+            MembershipSchedule::compile(&TopologySpec::default(), &ring(6), 7).unwrap();
+        assert!(sched.is_static());
+        assert!(sched.change_points().is_empty());
+        assert_eq!(sched.live_agents(1), vec![0, 1, 2, 3, 4, 5]);
+        let (g, map) = sched.live_view(&ring(6), 500).unwrap();
+        assert_eq!(g.num_edges(), 6);
+        assert_eq!(map, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn explicit_leave_and_join_windows() {
+        let spec = TopologySpec {
+            leaves: vec![MemberEvent::parse("2@100:200").unwrap()],
+            joins: vec![(4, 50)],
+            ..Default::default()
+        };
+        let sched = MembershipSchedule::compile(&spec, &ring(6), 7).unwrap();
+        assert!(!sched.is_static());
+        assert_eq!(sched.change_points(), &[50, 100, 200]);
+        // Join: agent 4 absent at the start, present from 50 on.
+        assert!(!sched.agent_live(4, 1));
+        assert!(sched.agent_live(4, 50));
+        // Leave: agent 2 away for [100, 200).
+        assert!(sched.agent_live(2, 99));
+        assert!(!sched.agent_live(2, 100));
+        assert!(!sched.agent_live(2, 199));
+        assert!(sched.agent_live(2, 200));
+        assert_eq!(sched.live_count(150), 5);
+        assert_eq!(sched.label_at(100), "-2");
+        assert_eq!(sched.label_at(200), "+2");
+        assert_eq!(sched.label_at(50), "+4");
+        // Live view at 150 drops agent 2 and its ring links; the ring
+        // minus one node is a path — still connected, no longer
+        // Hamiltonian.
+        let (g, map) = sched.live_view(&ring(6), 150).unwrap();
+        assert_eq!(map, vec![0, 1, 3, 4, 5]);
+        assert_eq!(g.num_edges(), 4);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn churn_compiles_deterministic_staggered_waves() {
+        let spec = TopologySpec {
+            scenario: ScenarioKind::Churn,
+            churn_period: 100,
+            churn_span: 40,
+            churn_agents: 2,
+            ..Default::default()
+        };
+        let a = MembershipSchedule::compile(&spec, &ring(8), 11).unwrap();
+        let b = MembershipSchedule::compile(&spec, &ring(8), 11).unwrap();
+        assert_eq!(a.change_points(), b.change_points(), "same seed, same schedule");
+        assert_eq!(a.change_points(), &[100, 140, 200, 240]);
+        assert_eq!(a.live_count(120), 7);
+        assert_eq!(a.live_count(170), 8);
+        // A different seed picks (almost surely) different churners,
+        // but the wave timing is fixed by the spec.
+        let c = MembershipSchedule::compile(&spec, &ring(8), 12).unwrap();
+        assert_eq!(c.change_points(), &[100, 140, 200, 240]);
+    }
+
+    #[test]
+    fn churn_cannot_empty_the_network() {
+        let spec = TopologySpec {
+            scenario: ScenarioKind::Churn,
+            churn_agents: 6,
+            ..Default::default()
+        };
+        assert!(MembershipSchedule::compile(&spec, &ring(6), 7).is_err());
+    }
+
+    #[test]
+    fn partition_cuts_the_graph_into_two_connected_sides() {
+        let topo = dense(8, 5);
+        let spec = TopologySpec {
+            scenario: ScenarioKind::Partition,
+            partition_at: 300,
+            partition_repair: 600,
+            partition_frac: 0.25,
+            ..Default::default()
+        };
+        let sched = MembershipSchedule::compile(&spec, &topo, 7).unwrap();
+        assert_eq!(sched.change_points(), &[300, 600]);
+        // No agents leave — only links.
+        assert_eq!(sched.live_count(400), 8);
+        // Mid-partition the live view splits into exactly two
+        // components, each internally connected.
+        let (g, _) = sched.live_view(&topo, 400).unwrap();
+        assert!(!g.is_connected());
+        // After repair, everything is back.
+        let (g, _) = sched.live_view(&topo, 600).unwrap();
+        assert!(g.is_connected());
+        assert!(sched.label_at(300).starts_with("cut:"));
+        assert!(sched.label_at(600).starts_with("heal:"));
+    }
+
+    /// The attempt cap: on a star every 2-agent minority side needs the
+    /// hub to be internally connected, which disconnects the remaining
+    /// leaves — no valid cut exists, and the sampler must return
+    /// `Error::Config` instead of looping forever.
+    #[test]
+    fn impossible_partition_hits_the_attempt_cap() {
+        let star = Topology::spider(3, 1).unwrap(); // hub + 3 leaves
+        let spec = TopologySpec {
+            scenario: ScenarioKind::Partition,
+            partition_frac: 0.5,
+            ..Default::default()
+        };
+        match MembershipSchedule::compile(&spec, &star, 7) {
+            Err(Error::Config(msg)) => assert!(msg.contains("attempts"), "{msg}"),
+            other => panic!("expected Error::Config, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn flaky_links_take_down_chosen_edges() {
+        let topo = dense(8, 5);
+        let spec = TopologySpec {
+            scenario: ScenarioKind::FlakyLinks,
+            link_period: 50,
+            link_span: 20,
+            link_count: 2,
+            ..Default::default()
+        };
+        let sched = MembershipSchedule::compile(&spec, &topo, 7).unwrap();
+        assert_eq!(sched.change_points(), &[50, 70, 100, 120]);
+        let (down, _) = sched.link_outages[0];
+        assert!(!sched.link_up(down.0, down.1, 60));
+        assert!(sched.link_up(down.0, down.1, 70));
+        let (g_mid, _) = sched.live_view(&topo, 60).unwrap();
+        assert_eq!(g_mid.num_edges(), topo.num_edges() - 1);
+        // Asking for more flaky links than the graph has is an error.
+        let bad = TopologySpec { link_count: 99, ..spec };
+        assert!(MembershipSchedule::compile(&bad, &topo, 7).is_err());
+    }
+
+    #[test]
+    fn overlapping_windows_collapse_noop_boundaries() {
+        // Agent 1 is away [10, 30) and [20, 40): the boundaries at 20
+        // and 30 change nothing and must not become change points.
+        let spec = TopologySpec {
+            leaves: vec![
+                MemberEvent::parse("1@10:30").unwrap(),
+                MemberEvent::parse("1@20:40").unwrap(),
+            ],
+            ..Default::default()
+        };
+        let sched = MembershipSchedule::compile(&spec, &ring(5), 7).unwrap();
+        assert_eq!(sched.change_points(), &[10, 40]);
+    }
+
+    #[test]
+    fn out_of_range_events_rejected() {
+        let spec = TopologySpec {
+            leaves: vec![MemberEvent::parse("9@10:20").unwrap()],
+            ..Default::default()
+        };
+        assert!(MembershipSchedule::compile(&spec, &ring(5), 7).is_err());
+        let spec = TopologySpec { joins: vec![(9, 50)], ..Default::default() };
+        assert!(MembershipSchedule::compile(&spec, &ring(5), 7).is_err());
+    }
+}

@@ -1,0 +1,288 @@
+//! The `[topology]` dynamics spec: scenario presets + explicit events.
+
+use super::Outage;
+use crate::error::{Error, Result};
+
+/// Scenario preset selected by `[topology] scenario = …` /
+/// `--topology`: a named family of membership dynamics whose concrete
+/// events are compiled against the run's graph and seed by
+/// [`super::MembershipSchedule::compile`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// No dynamics — the legacy static agent set (golden path).
+    Static,
+    /// Staggered leave-and-rejoin waves: `churn_agents` seed-chosen
+    /// agents each drop out for `churn_span` iterations, one wave every
+    /// `churn_period` iterations.
+    Churn,
+    /// One network partition at `partition_at`, healed at
+    /// `partition_repair`: a seed-chosen cut splits the graph into two
+    /// internally-connected sides; every cut link is down in between.
+    Partition,
+    /// Flaky links: `link_count` seed-chosen links each go down for
+    /// `link_span` iterations, staggered every `link_period` iterations.
+    FlakyLinks,
+}
+
+impl ScenarioKind {
+    /// Parse a CLI/config token.
+    pub fn parse(token: &str) -> Option<ScenarioKind> {
+        match token {
+            "static" => Some(ScenarioKind::Static),
+            "churn" => Some(ScenarioKind::Churn),
+            "partition" => Some(ScenarioKind::Partition),
+            "flaky-links" | "flakylinks" => Some(ScenarioKind::FlakyLinks),
+            _ => None,
+        }
+    }
+
+    /// Short token used in sweep cell labels (`topo=`) and tables.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScenarioKind::Static => "static",
+            ScenarioKind::Churn => "churn",
+            ScenarioKind::Partition => "partition",
+            ScenarioKind::FlakyLinks => "flaky-links",
+        }
+    }
+}
+
+/// One explicit membership event: agent `agent` is away for the
+/// iteration window `outage` (leave at `from`, rejoin at `until`; a
+/// missing `until` means it never returns).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemberEvent {
+    /// The affected agent.
+    pub agent: usize,
+    /// Away window in iteration index.
+    pub outage: Outage,
+}
+
+impl MemberEvent {
+    /// Parse one `leave` token: `agent@from[:until]`, e.g. `3@200:400`
+    /// (agent 3 away for iterations 200..400) or `5@600` (agent 5
+    /// leaves at 600 for good).
+    pub fn parse(token: &str) -> Result<MemberEvent> {
+        let bad = || {
+            Error::Config(format!(
+                "topology.leave: bad event '{token}' (expected agent@from[:until], \
+                 e.g. 3@200:400)"
+            ))
+        };
+        let (agent, window) = token.split_once('@').ok_or_else(bad)?;
+        let agent = agent.trim().parse::<usize>().map_err(|_| bad())?;
+        let (from, until) = match window.split_once(':') {
+            Some((f, u)) => (
+                f.trim().parse::<usize>().map_err(|_| bad())?,
+                Some(u.trim().parse::<usize>().map_err(|_| bad())?),
+            ),
+            None => (window.trim().parse::<usize>().map_err(|_| bad())?, None),
+        };
+        if let Some(u) = until {
+            if u <= from {
+                return Err(Error::Config(format!(
+                    "topology.leave: event '{token}' has until <= from"
+                )));
+            }
+        }
+        Ok(MemberEvent { agent, outage: Outage::new(from as f64, until.map(|u| u as f64)) })
+    }
+}
+
+/// Parse one `join` token: `agent@iter`, e.g. `7@250` (agent 7 is not a
+/// member until iteration 250).
+pub fn parse_join_event(token: &str) -> Result<(usize, usize)> {
+    let bad = || {
+        Error::Config(format!(
+            "topology.join: bad event '{token}' (expected agent@iter, e.g. 7@250)"
+        ))
+    };
+    let (agent, at) = token.split_once('@').ok_or_else(bad)?;
+    let agent = agent.trim().parse::<usize>().map_err(|_| bad())?;
+    let at = at.trim().parse::<usize>().map_err(|_| bad())?;
+    if at < 2 {
+        return Err(Error::Config(format!(
+            "topology.join: event '{token}' joins before iteration 2 — a member from \
+             the start needs no join event"
+        )));
+    }
+    Ok((agent, at))
+}
+
+/// The full `[topology]` dynamics specification carried by
+/// [`crate::coordinator::RunConfig::dynamics`]. The default (static
+/// scenario, no events) compiles to an empty schedule and leaves the
+/// run byte-identical to the pre-subsystem code.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopologySpec {
+    /// Scenario preset.
+    pub scenario: ScenarioKind,
+    /// Churn: iterations between successive leave waves.
+    pub churn_period: usize,
+    /// Churn: how long each churned agent stays away.
+    pub churn_span: usize,
+    /// Churn: how many (seed-chosen) agents churn.
+    pub churn_agents: usize,
+    /// Partition: iteration the cut lands.
+    pub partition_at: usize,
+    /// Partition: iteration the cut heals.
+    pub partition_repair: usize,
+    /// Partition: fraction of agents on the minority side.
+    pub partition_frac: f64,
+    /// Flaky links: iterations between successive link failures.
+    pub link_period: usize,
+    /// Flaky links: how long each failed link stays down.
+    pub link_span: usize,
+    /// Flaky links: how many (seed-chosen) links flap.
+    pub link_count: usize,
+    /// Explicit leave events (`leave = 3@200:400, 5@600`), applied on
+    /// top of whatever the scenario compiles to.
+    pub leaves: Vec<MemberEvent>,
+    /// Explicit late joiners (`join = 7@250`): `(agent, join_iter)` —
+    /// the agent is not a member before `join_iter`.
+    pub joins: Vec<(usize, usize)>,
+}
+
+impl Default for TopologySpec {
+    fn default() -> Self {
+        Self {
+            scenario: ScenarioKind::Static,
+            churn_period: 200,
+            churn_span: 80,
+            churn_agents: 2,
+            partition_at: 300,
+            partition_repair: 600,
+            partition_frac: 0.3,
+            link_period: 150,
+            link_span: 50,
+            link_count: 2,
+            leaves: vec![],
+            joins: vec![],
+        }
+    }
+}
+
+impl TopologySpec {
+    /// A bare scenario preset with default parameters.
+    pub fn scenario(kind: ScenarioKind) -> Self {
+        Self { scenario: kind, ..Default::default() }
+    }
+
+    /// Whether this spec carries no dynamics at all — the golden path.
+    pub fn is_static(&self) -> bool {
+        self.scenario == ScenarioKind::Static && self.leaves.is_empty() && self.joins.is_empty()
+    }
+
+    /// Label token for sweep cells (`topo=…`). Explicit events on top
+    /// of a static scenario read as `events`.
+    pub fn as_str(&self) -> &'static str {
+        if self.scenario == ScenarioKind::Static && !self.is_static() {
+            "events"
+        } else {
+            self.scenario.as_str()
+        }
+    }
+
+    /// Structural validation that doesn't need the graph (the rest —
+    /// agent ids, cut feasibility — happens at
+    /// [`super::MembershipSchedule::compile`] time).
+    pub fn validate(&self) -> Result<()> {
+        match self.scenario {
+            ScenarioKind::Churn if self.churn_period == 0 || self.churn_span == 0 => {
+                Err(Error::Config("topology: churn_period/churn_span must be positive".into()))
+            }
+            ScenarioKind::Partition if self.partition_repair <= self.partition_at => {
+                Err(Error::Config(format!(
+                    "topology: partition_repair {} must come after partition_at {}",
+                    self.partition_repair, self.partition_at
+                )))
+            }
+            ScenarioKind::Partition if !(0.0..1.0).contains(&self.partition_frac) => {
+                Err(Error::Config(format!(
+                    "topology: partition_frac {} not in [0,1)",
+                    self.partition_frac
+                )))
+            }
+            ScenarioKind::FlakyLinks if self.link_period == 0 || self.link_span == 0 => {
+                Err(Error::Config("topology: link_period/link_span must be positive".into()))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_tokens_round_trip() {
+        for token in ["static", "churn", "partition", "flaky-links"] {
+            assert_eq!(ScenarioKind::parse(token).unwrap().as_str(), token);
+        }
+        assert_eq!(ScenarioKind::parse("flakylinks"), Some(ScenarioKind::FlakyLinks));
+        assert!(ScenarioKind::parse("mesh").is_none());
+    }
+
+    #[test]
+    fn default_spec_is_static() {
+        let spec = TopologySpec::default();
+        assert!(spec.is_static());
+        assert_eq!(spec.as_str(), "static");
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn member_event_parsing() {
+        let e = MemberEvent::parse("3@200:400").unwrap();
+        assert_eq!(e.agent, 3);
+        assert_eq!(e.outage, Outage::new(200.0, Some(400.0)));
+        let e = MemberEvent::parse(" 5@600 ".trim()).unwrap();
+        assert_eq!(e.agent, 5);
+        assert_eq!(e.outage, Outage::permanent(600.0));
+        for bad in ["3", "3@", "@200", "3@x", "3@400:200", "3@200:200"] {
+            assert!(MemberEvent::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn join_event_parsing() {
+        assert_eq!(parse_join_event("7@250").unwrap(), (7, 250));
+        for bad in ["7", "@250", "7@1", "7@x"] {
+            assert!(parse_join_event(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn explicit_events_make_a_static_scenario_dynamic() {
+        let spec = TopologySpec {
+            leaves: vec![MemberEvent::parse("1@10:20").unwrap()],
+            ..Default::default()
+        };
+        assert!(!spec.is_static());
+        assert_eq!(spec.as_str(), "events");
+    }
+
+    #[test]
+    fn validation_catches_degenerate_presets() {
+        let bad = TopologySpec {
+            scenario: ScenarioKind::Partition,
+            partition_at: 500,
+            partition_repair: 400,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = TopologySpec {
+            scenario: ScenarioKind::Churn,
+            churn_period: 0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = TopologySpec {
+            scenario: ScenarioKind::Partition,
+            partition_frac: 1.0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Dynamic-topology integration: the golden-identity contract of an
+//! empty schedule, bitwise reproducibility of dynamic runs across
+//! repeats / worker counts / backends, and the cross-layer rejection of
+//! schedules the walk cannot re-plan.
+
+use csadmm::config::{topology_spec_from_doc, ConfigDoc};
+use csadmm::coordinator::{Algorithm, Driver, RunConfig};
+use csadmm::data::synthetic_small;
+use csadmm::ecn::BackendKind;
+use csadmm::runtime::{NativeEngine, NativeEngineFactory};
+use csadmm::sweep::{run_sweep, SweepSpec, SweepSummary};
+use csadmm::topology::{ScenarioKind, TopologySpec};
+use std::path::Path;
+
+const GOLDEN_PATH: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/least_squares_trace.json");
+
+/// The blessed golden config (see `tests/golden_trace.rs`), with the
+/// membership dynamics taken from a parsed config document.
+fn golden_cfg(dynamics: TopologySpec) -> RunConfig {
+    RunConfig {
+        n_agents: 4,
+        k_ecn: 2,
+        minibatch: 8,
+        rho: 0.3,
+        max_iters: 240,
+        eval_every: 40,
+        seed: 7,
+        dynamics,
+        ..Default::default()
+    }
+}
+
+fn render(cfg: RunConfig) -> String {
+    let ds = synthetic_small(400, 40, 0.1, 77);
+    let mut driver = Driver::new(cfg, &ds).expect("driver builds");
+    let trace = driver.run(&mut NativeEngine::new()).expect("run succeeds");
+    trace.to_json().to_string()
+}
+
+fn churn_spec() -> TopologySpec {
+    TopologySpec {
+        scenario: ScenarioKind::Churn,
+        churn_period: 80,
+        churn_span: 40,
+        churn_agents: 1,
+        ..Default::default()
+    }
+}
+
+fn partition_spec() -> TopologySpec {
+    TopologySpec {
+        scenario: ScenarioKind::Partition,
+        partition_at: 60,
+        partition_repair: 160,
+        partition_frac: 0.3,
+        ..Default::default()
+    }
+}
+
+/// The acceptance contract of the subsystem: a config whose
+/// `[topology]` table spells out the static scenario compiles to an
+/// empty schedule, and the run's JSON is **byte-identical** to the
+/// blessed golden trace — the planner's static path consumes no
+/// randomness and adds no fields.
+#[test]
+fn explicit_static_topology_is_byte_identical_to_golden() {
+    let doc = ConfigDoc::parse("[topology]\nscenario = static\n").unwrap();
+    let spec = topology_spec_from_doc(&doc).unwrap();
+    assert!(spec.is_static());
+    let rendered = render(golden_cfg(spec));
+    let want = std::fs::read_to_string(Path::new(GOLDEN_PATH))
+        .expect("blessed golden trace must be committed");
+    assert_eq!(
+        rendered,
+        want.trim_end(),
+        "an empty membership schedule must leave the run byte-identical to the golden trace"
+    );
+    assert!(
+        !rendered.contains("epochs"),
+        "static runs must not grow an epochs field in the JSON export"
+    );
+}
+
+/// Same seed + same schedule ⇒ bitwise-identical trace *and* epoch
+/// markers on repeat runs.
+#[test]
+fn churn_runs_are_bitwise_reproducible() {
+    let ds = synthetic_small(400, 40, 0.1, 77);
+    let run = || {
+        Driver::new(golden_cfg(churn_spec()), &ds)
+            .unwrap()
+            .run(&mut NativeEngine::new())
+            .unwrap()
+    };
+    let (a, b) = (run(), run());
+    assert!(!a.epochs.is_empty(), "churn schedule must stamp epoch markers");
+    assert_eq!(a.points, b.points);
+    assert_eq!(a.epochs, b.epochs);
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+}
+
+/// The membership schedule lives above the backend: the simulated and
+/// the real-thread ECN pools must produce the same trace under a
+/// partition-and-repair schedule (departed agents park, their worker
+/// threads consume nothing).
+#[test]
+fn sim_and_threaded_agree_under_partition() {
+    let ds = synthetic_small(400, 40, 0.1, 77);
+    let sim_cfg = golden_cfg(partition_spec());
+    let thr_cfg = RunConfig { backend: BackendKind::Threaded, ..sim_cfg.clone() };
+    let sim = Driver::new(sim_cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+    let thr = Driver::new(thr_cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+    assert_eq!(sim.epochs, thr.epochs, "cut/heal markers must not depend on the backend");
+    assert_eq!(sim.points, thr.points, "decoded bytes must not depend on the backend");
+}
+
+/// The `topo` sweep axis keeps the sweep contract: bit-identical traces
+/// and byte-identical summary JSON for any worker count.
+#[test]
+fn sweep_topo_axis_is_worker_count_independent() {
+    let ds = synthetic_small(400, 40, 0.1, 77);
+    let spec = SweepSpec::new(golden_cfg(TopologySpec::default()))
+        .topos(vec![TopologySpec::default(), churn_spec()])
+        .seeds(vec![1, 2]);
+    assert_eq!(spec.num_jobs(), 4);
+    let r1 = run_sweep(&spec, &ds, 1, &NativeEngineFactory).unwrap();
+    let r4 = run_sweep(&spec, &ds, 4, &NativeEngineFactory).unwrap();
+    for (a, b) in r1.jobs.iter().zip(&r4.jobs) {
+        assert_eq!(a.job.job_id, b.job.job_id);
+        assert_eq!(a.trace.points, b.trace.points, "job {}", a.job.job_id);
+        assert_eq!(a.trace.epochs, b.trace.epochs, "job {}", a.job.job_id);
+    }
+    // The dynamic cells carry epochs, the static cells stay clean.
+    let labels: Vec<&str> = r1.jobs.iter().map(|j| j.job.label.as_str()).collect();
+    for j in &r1.jobs {
+        let dynamic = j.job.label.contains("topo=churn");
+        assert_eq!(!j.trace.epochs.is_empty(), dynamic, "labels: {labels:?}");
+    }
+    let j1 = SweepSummary::from_result(&r1).unwrap().to_json().to_pretty();
+    let j4 = SweepSummary::from_result(&r4).unwrap().to_json().to_pretty();
+    assert_eq!(j1, j4, "summary JSON must be byte-identical (1 vs 4 workers)");
+}
+
+/// W-ADMM's random walk has no cyclic epoch to re-plan; combining it
+/// with a dynamic schedule is a config error surfaced through the
+/// sweep, not a silent fallback.
+#[test]
+fn random_walk_with_dynamic_schedule_is_rejected_through_the_sweep() {
+    let ds = synthetic_small(400, 40, 0.1, 77);
+    let cfg = RunConfig { algo: Algorithm::WAdmm, ..golden_cfg(churn_spec()) };
+    let err = run_sweep(&SweepSpec::new(cfg), &ds, 2, &NativeEngineFactory).unwrap_err();
+    assert!(err.to_string().contains("random walk"), "{err}");
+}
