@@ -5,6 +5,18 @@
 //! Expected shape: near-linear speedup up to the core count (jobs are
 //! independent, compute-bound, allocation-light), with `--workers 1`
 //! matching the serial loop.
+//!
+//! Emits `BENCH_pr7.json`:
+//!
+//! ```text
+//! {
+//!   "bench": "sweep_throughput",
+//!   "jobs": 24, "iters_per_job": 2000, "profile": "full",
+//!   "serial_s": …,
+//!   "pool": [{"workers": 1, "wall_s": …, "speedup_vs_serial": …}, …],
+//!   "json_identity_w1_w4": true
+//! }
+//! ```
 
 use csadmm::coding::SchemeKind;
 use csadmm::coordinator::{Algorithm, Driver, RunConfig};
@@ -12,6 +24,7 @@ use csadmm::data::synthetic_small;
 use csadmm::ecn::ResponseModel;
 use csadmm::runtime::{Engine, NativeEngine, NativeEngineFactory};
 use csadmm::sweep::{run_sweep, SweepSpec, SweepSummary};
+use csadmm::util::json::{write_json_file, Json};
 use csadmm::util::table::Table;
 use std::time::Instant;
 
@@ -62,6 +75,7 @@ fn main() {
 
     let mut json_w1: Option<String> = None;
     let mut json_w4: Option<String> = None;
+    let mut pool_entries = vec![];
     for workers in [1usize, 2, 4] {
         let t0 = Instant::now();
         let result =
@@ -82,6 +96,13 @@ fn main() {
             format!("{wall:.2?}"),
             format!("{:.2}x", t_serial.as_secs_f64() / wall.as_secs_f64()),
         ]);
+        pool_entries.push(
+            Json::obj()
+                .num("workers", workers as f64)
+                .num("wall_s", wall.as_secs_f64())
+                .num("speedup_vs_serial", t_serial.as_secs_f64() / wall.as_secs_f64())
+                .build(),
+        );
     }
     assert_eq!(
         json_w1, json_w4,
@@ -89,4 +110,17 @@ fn main() {
     );
     table.print();
     println!("JSON byte-identity across --workers 1/4: OK");
+
+    let out = Json::obj()
+        .str("bench", "sweep_throughput")
+        .num("jobs", jobs as f64)
+        .num("iters_per_job", iters as f64)
+        .str("profile", if quick { "quick" } else { "full" })
+        .num("serial_s", t_serial.as_secs_f64())
+        .field("pool", Json::Arr(pool_entries))
+        .field("json_identity_w1_w4", Json::Bool(true))
+        .build();
+    write_json_file(std::path::Path::new("BENCH_pr7.json"), &out)
+        .expect("write BENCH_pr7.json");
+    println!("wrote BENCH_pr7.json");
 }

@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Diff freshly-emitted BENCH_*.json artifacts against the committed
+baselines and warn on perf regressions.
+
+Usage:
+    python3 python/tools/bench_diff.py BENCH_pr4.json BENCH_pr5.json ...
+        [--threshold 0.20] [--ref HEAD] [--strict]
+
+For each file the committed baseline is read from git (`<ref>:<path>`,
+default HEAD) and every numeric leaf present in both documents is
+compared. Leaves whose key marks them as wall-clock measurements
+(``*_s``, ``*_per_sec``, ``*ns*``, ``speedup*``) are *timing* leaves:
+a relative change beyond the threshold (default 20%) prints a WARN
+line. All other numeric leaves are *deterministic* (byte counts,
+accuracies, parity booleans): ANY change prints a DIFF line, because
+those only move when the code's behavior moved.
+
+Baselines whose ``provenance`` field marks them as bootstrap
+placeholders (committed before a toolchain-bearing environment ever ran
+the bench — see benches/BASELINE.md) skip the timing comparison and
+only check structure.
+
+Exit code is 0 unless --strict is given and a WARN/DIFF fired: the CI
+stress lane treats regressions as signal for investigation, not merge
+blockers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+TIMING_MARKERS = ("_s", "_per_sec", "ns", "speedup", "wall", "rounds_per")
+
+
+def is_timing_key(key: str) -> bool:
+    k = key.lower()
+    # The simulated clock is deterministic even though it is in seconds:
+    # any drift there is a behavior change, not measurement noise.
+    if "modeled" in k or "sim_time" in k:
+        return False
+    return any(m in k for m in TIMING_MARKERS)
+
+
+def leaves(doc, prefix="", keep=None):
+    """Flatten a JSON document to {path: value} over its leaves.
+
+    Array elements are keyed by a stable identity field when present
+    (regime/codec/workers) so reordering does not misalign entries.
+    `keep` filters leaf values (default: numbers and booleans only).
+    """
+    if keep is None:
+        keep = lambda v: isinstance(v, (bool, int, float))  # noqa: E731
+    out = {}
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            out.update(leaves(v, f"{prefix}.{k}" if prefix else k, keep))
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            tag = str(i)
+            if isinstance(v, dict):
+                for ident in ("regime", "codec", "workers", "name"):
+                    if ident in v:
+                        tag = f"{ident}={v[ident]}"
+                        break
+            out.update(leaves(v, f"{prefix}[{tag}]", keep))
+    elif keep(doc):
+        out[prefix] = float(doc) if isinstance(doc, (bool, int, float)) else doc
+    return out
+
+
+def numeric_leaves(doc, prefix=""):
+    return leaves(doc, prefix)
+
+
+def baseline_bytes(path: str, ref: str) -> bytes | None:
+    try:
+        return subprocess.check_output(
+            ["git", "show", f"{ref}:{path}"], stderr=subprocess.DEVNULL
+        )
+    except (subprocess.CalledProcessError, OSError):
+        return None
+
+
+def diff_file(path: str, ref: str, threshold: float) -> list[str]:
+    msgs = []
+    try:
+        with open(path) as f:
+            fresh = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"WARN {path}: cannot read fresh artifact ({e})"]
+    base_raw = baseline_bytes(path, ref)
+    if base_raw is None:
+        return [f"note {path}: no committed baseline at {ref} — nothing to diff"]
+    base = json.loads(base_raw)
+
+    if str(base.get("provenance", "")).startswith("bootstrap"):
+        # The placeholder mirrors the emitter's shape with null values;
+        # check the fresh artifact covers that structure, nothing more.
+        everything = lambda v: not isinstance(v, (dict, list))  # noqa: E731
+        base_keys = {
+            k for k in leaves(base, keep=everything)
+            if k.split(".")[0] not in ("provenance", "note")
+        }
+        missing = base_keys - set(leaves(fresh, keep=everything))
+        if missing:
+            msgs.append(f"WARN {path}: fresh artifact lacks baseline schema keys: {sorted(missing)}")
+        msgs.append(
+            f"note {path}: baseline is a bootstrap placeholder — commit these "
+            f"freshly measured numbers to arm the perf floor (see benches/BASELINE.md)"
+        )
+        return msgs
+
+    b, f = numeric_leaves(base), numeric_leaves(fresh)
+    for key in sorted(set(b) & set(f)):
+        old, new = b[key], f[key]
+        if is_timing_key(key):
+            if old == 0.0:
+                continue
+            rel = (new - old) / abs(old)
+            if abs(rel) > threshold:
+                word = "slower" if rel > 0 else "faster"
+                msgs.append(
+                    f"WARN {path}: {key} {old:g} -> {new:g} ({abs(rel) * 100:.1f}% {word})"
+                )
+        elif old != new:
+            msgs.append(f"DIFF {path}: deterministic leaf {key} {old:g} -> {new:g}")
+    for key in sorted(set(b) - set(f)):
+        msgs.append(f"DIFF {path}: baseline leaf {key} missing from fresh artifact")
+    return msgs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="+", help="freshly-emitted BENCH_*.json paths")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="relative timing-regression threshold (default 0.20)")
+    ap.add_argument("--ref", default="HEAD", help="git ref holding the baselines")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when a WARN/DIFF fires")
+    args = ap.parse_args()
+
+    fired = False
+    for path in args.files:
+        for msg in diff_file(path, args.ref, args.threshold):
+            print(msg)
+            fired = fired or msg.startswith(("WARN", "DIFF"))
+    if not fired:
+        print(f"bench_diff: {len(args.files)} artifact(s) within ±{args.threshold * 100:.0f}% of {args.ref} baselines")
+    return 1 if (fired and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

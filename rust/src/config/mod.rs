@@ -416,6 +416,10 @@ pub fn run_config_from_doc(doc: &ConfigDoc) -> Result<(RunConfig, DatasetName)> 
         cfg.quantize_bits = Some(v as u32);
     }
     cfg.codec_spec()?.validate()?;
+    // Degenerate shapes (zero agents/ECNs/batch/iterations, a partition
+    // scenario without enough agents to cut) are config errors at load
+    // time, not panics at the first modulo deeper in the run.
+    cfg.validate()?;
     Ok((cfg, dataset))
 }
 
@@ -489,6 +493,28 @@ delay = 0.01
         assert_eq!(ds, DatasetName::Synthetic);
         assert_eq!(cfg.latency, LatencySpec::default());
         assert_eq!(cfg.backend, BackendKind::Sim);
+    }
+
+    /// Degenerate `[run]` values that once panicked deeper in the run
+    /// (modulo by zero at the eval gate, `eff % k_ecn`, the spider
+    /// `n - 1`, the partition cut's `1..n-1` clamp) must surface as
+    /// config errors at load time.
+    #[test]
+    fn degenerate_run_keys_are_config_errors() {
+        for toml in [
+            "[run]\neval_every = 0\n",
+            "[run]\nk_ecn = 0\n",
+            "[run]\nn_agents = 0\n",
+            "[run]\nminibatch = 0\n",
+            "[run]\nmax_iters = 0\n",
+            "[run]\nn_agents = 1\n\n[topology]\nscenario = partition\n",
+        ] {
+            let doc = ConfigDoc::parse(toml).unwrap();
+            assert!(
+                run_config_from_doc(&doc).is_err(),
+                "{toml:?} must be rejected as a config error"
+            );
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::problem::{
 };
 use crate::rng::Xoshiro256pp;
 use crate::runtime::Engine;
-use crate::topology::{MembershipSchedule, TopologySpec, WalkPlanner};
+use crate::topology::{MembershipSchedule, ScenarioKind, TopologySpec, WalkPlanner};
 use std::rc::Rc;
 
 /// Which algorithm the driver runs.
@@ -214,6 +214,44 @@ impl RunConfig {
         }
     }
 
+    /// Reject degenerate shapes before any of them can reach a panic
+    /// site: every check here guards a concrete divide/underflow deeper
+    /// in the pipeline (`k % eval_every`, `eff % k_ecn`, `n_agents - 1`
+    /// for the spider graph, the partition cut's `1..n-1` clamp), all of
+    /// which are reachable from a user-supplied TOML `[run]` table.
+    /// Called by [`Driver::new`] and by the config loader, so both the
+    /// API and the CLI surface a [`Error::Config`] instead of panicking.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_agents == 0 {
+            return Err(Error::Config("n_agents must be at least 1".into()));
+        }
+        if self.k_ecn == 0 {
+            return Err(Error::Config(
+                "k_ecn must be at least 1 (the effective minibatch is split across K ECNs)"
+                    .into(),
+            ));
+        }
+        if self.minibatch == 0 {
+            return Err(Error::Config("minibatch must be at least 1".into()));
+        }
+        if self.max_iters == 0 {
+            return Err(Error::Config("max_iters must be at least 1".into()));
+        }
+        if self.eval_every == 0 {
+            return Err(Error::Config(
+                "eval_every must be at least 1 (the trace records every eval_every-th iterate)"
+                    .into(),
+            ));
+        }
+        if self.dynamics.scenario == ScenarioKind::Partition && self.n_agents < 2 {
+            return Err(Error::Config(format!(
+                "a partition scenario needs at least 2 agents, got n_agents = {}",
+                self.n_agents
+            )));
+        }
+        Ok(())
+    }
+
     /// Schedule parameters with Corollary-1 defaults.
     pub fn params(&self) -> AdmmParams {
         let mut p = AdmmParams::for_network(self.n_agents, self.rho);
@@ -244,9 +282,12 @@ pub struct Driver {
 impl Driver {
     /// Build the experiment from a config and dataset.
     pub fn new(cfg: RunConfig, ds: &Dataset) -> Result<Self> {
-        // Resolve + validate the token codec up front so a bad `[comm]`
-        // table (or a quantize_bits/codec conflict) fails before any
-        // work runs.
+        // Reject degenerate shapes (zero agents/ECNs/batch/iterations)
+        // and resolve + validate the token codec up front, so a bad
+        // `[run]` or `[comm]` table fails before any work runs — and
+        // before any of the divide/underflow sites deeper in the
+        // pipeline can panic.
+        cfg.validate()?;
         cfg.codec_spec()?.validate()?;
         let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
         let topo = match cfg.topology {
@@ -507,6 +548,35 @@ mod tests {
 
     fn ds() -> crate::data::Dataset {
         synthetic_small(1_000, 100, 0.05, 77)
+    }
+
+    /// Every degenerate shape that used to reach a panic site (modulo
+    /// by zero at the eval gate, `eff % k_ecn`, the spider `n - 1`,
+    /// the partition cut's `1..n-1` clamp) is a config error now.
+    #[test]
+    fn degenerate_shapes_are_config_errors_not_panics() {
+        let ds = ds();
+        let cases: Vec<(&str, RunConfig)> = vec![
+            ("eval_every = 0", RunConfig { eval_every: 0, ..base_cfg() }),
+            ("k_ecn = 0", RunConfig { k_ecn: 0, ..base_cfg() }),
+            ("n_agents = 0", RunConfig { n_agents: 0, ..base_cfg() }),
+            ("minibatch = 0", RunConfig { minibatch: 0, ..base_cfg() }),
+            ("max_iters = 0", RunConfig { max_iters: 0, ..base_cfg() }),
+            (
+                "partition with 1 agent",
+                RunConfig {
+                    n_agents: 1,
+                    dynamics: TopologySpec::scenario(ScenarioKind::Partition),
+                    ..base_cfg()
+                },
+            ),
+        ];
+        for (what, cfg) in cases {
+            match Driver::new(cfg, &ds).err() {
+                Some(Error::Config(_)) => {}
+                other => panic!("{what}: expected Error::Config, got {other:?}"),
+            }
+        }
     }
 
     #[test]

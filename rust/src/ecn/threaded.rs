@@ -432,8 +432,14 @@ fn worker_loop(
             bufs = (0..req.ranges.len()).map(|_| Matrix::zeros(p, d)).collect();
         }
         for (buf, &(lo, hi)) in bufs.iter_mut().zip(&req.ranges) {
-            obj.grad_rows_engine(&mut engine, &req.x, lo, hi, buf)
-                .expect("ECN worker gradient");
+            // A gradient failure has no error channel back to the
+            // coordinator; exit the thread cleanly instead of
+            // panicking — the coordinator's `recv_timeout` watchdog
+            // detects the finished handle and surfaces
+            // `Error::Runtime` through the normal round path.
+            if obj.grad_rows_engine(&mut engine, &req.x, lo, hi, buf).is_err() {
+                return;
+            }
         }
         let refs: Vec<&Matrix> = bufs.iter().collect();
         let coded = code.encode(ecn, &refs);

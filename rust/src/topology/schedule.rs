@@ -260,6 +260,13 @@ fn partition_cut(
     rng: &mut Xoshiro256pp,
 ) -> Result<Vec<(usize, usize)>> {
     let n = topo.n();
+    // The clamp below needs a non-empty `1..n-1` range; with fewer than
+    // 2 agents there is no cut to make (and `n - 1` would underflow).
+    if n < 2 {
+        return Err(Error::Config(format!(
+            "topology: a partition needs at least 2 agents, got n = {n}"
+        )));
+    }
     let side = ((frac * n as f64).round() as usize).clamp(1, n - 1);
     for _ in 0..MAX_CUT_ATTEMPTS {
         let minority = rng.sample_indices(n, side);
@@ -403,6 +410,22 @@ mod tests {
     /// hub to be internally connected, which disconnects the remaining
     /// leaves — no valid cut exists, and the sampler must return
     /// `Error::Config` instead of looping forever.
+    /// A partition of fewer than 2 agents has no `1..n-1` minority
+    /// range — this used to panic in the clamp (`min > max`, and
+    /// `n - 1` underflow at n = 0) instead of erroring.
+    #[test]
+    fn tiny_network_partition_is_a_config_error() {
+        let spec = TopologySpec {
+            scenario: ScenarioKind::Partition,
+            ..Default::default()
+        };
+        let one = Topology::from_edges(1, &[]).unwrap();
+        match MembershipSchedule::compile(&spec, &one, 7) {
+            Err(Error::Config(msg)) => assert!(msg.contains("at least 2"), "{msg}"),
+            other => panic!("expected Error::Config, got {other:?}"),
+        }
+    }
+
     #[test]
     fn impossible_partition_hits_the_attempt_cap() {
         let star = Topology::spider(3, 1).unwrap(); // hub + 3 leaves

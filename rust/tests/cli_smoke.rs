@@ -1,0 +1,101 @@
+//! CLI smoke: drives the actual `csadmm` binary through every flag
+//! parse path (`--backend/--latency/--compress/--topology`), the `run`
+//! command, and a 2-worker `sweep`, all on the tiny
+//! `examples/configs/cli_smoke.toml` grid. A wiring regression between
+//! `cli.rs`, `main.rs`, and the config loader fails here, in tier-1,
+//! instead of only in the CI smoke scripts.
+
+use std::path::Path;
+use std::process::{Command, Output};
+
+const CONFIG: &str = "examples/configs/cli_smoke.toml";
+
+/// Run the binary from the workspace root (relative config and
+/// `results/` paths resolve exactly as in the documented invocations).
+fn csadmm(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_csadmm"))
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args(args)
+        .output()
+        .expect("spawn csadmm binary")
+}
+
+fn assert_ok(args: &[&str]) {
+    let out = csadmm(args);
+    assert!(
+        out.status.success(),
+        "csadmm {args:?} failed (status {:?})\nstdout:\n{}\nstderr:\n{}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+}
+
+fn assert_config_error(args: &[&str]) {
+    let out = csadmm(args);
+    assert!(
+        !out.status.success(),
+        "csadmm {args:?} must fail on a bad flag value\nstdout:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+    );
+}
+
+/// Every documented happy path, one process per invocation. A single
+/// test fn: the `run` invocations all write `results/cli_run.json`, so
+/// they must not race each other across parallel test threads.
+#[test]
+fn run_sweep_and_every_flag_parse_path() {
+    // Plain run + trace artifact.
+    assert_ok(&["run", "--quick", "--config", CONFIG]);
+    let trace = Path::new(env!("CARGO_MANIFEST_DIR")).join("results/cli_run.json");
+    assert!(trace.is_file(), "run must write results/cli_run.json");
+
+    // Both gradient backends.
+    for backend in ["sim", "threaded"] {
+        assert_ok(&["run", "--quick", "--config", CONFIG, "--backend", backend]);
+    }
+    // The whole latency zoo.
+    for latency in ["uniform", "shifted-exp", "pareto", "slownode", "bimodal"] {
+        assert_ok(&["run", "--quick", "--config", CONFIG, "--latency", latency]);
+    }
+    // The whole codec zoo (fig7's token list).
+    for codec in ["identity", "f32", "q8", "q4", "topk", "topk+ef", "randk", "randk+ef"] {
+        assert_ok(&["run", "--quick", "--config", CONFIG, "--compress", codec]);
+    }
+    // Every membership scenario.
+    for topo in ["static", "churn", "partition", "flaky-links"] {
+        assert_ok(&["run", "--quick", "--config", CONFIG, "--topology", topo]);
+    }
+
+    // Config-driven sweep on 2 workers, explicit output path.
+    assert_ok(&[
+        "sweep",
+        "--quick",
+        "--config",
+        CONFIG,
+        "--workers",
+        "2",
+        "--out",
+        "results/cli_smoke_sweep.json",
+    ]);
+    let sweep = Path::new(env!("CARGO_MANIFEST_DIR")).join("results/cli_smoke_sweep.json");
+    assert!(sweep.is_file(), "sweep must write the --out file");
+}
+
+/// Bad flag values are config errors (non-zero exit), not panics; an
+/// unknown command prints usage and exits 2.
+#[test]
+fn bad_flag_values_fail_cleanly() {
+    assert_config_error(&["run", "--quick", "--config", CONFIG, "--backend", "quantum"]);
+    assert_config_error(&["run", "--quick", "--config", CONFIG, "--latency", "warp"]);
+    assert_config_error(&["run", "--quick", "--config", CONFIG, "--compress", "zip"]);
+    assert_config_error(&["run", "--quick", "--config", CONFIG, "--topology", "mesh"]);
+    // `run` takes exactly one value per flag; lists belong to `sweep`.
+    assert_config_error(&["run", "--quick", "--config", CONFIG, "--backend", "sim,threaded"]);
+    // A degenerate [run] key is rejected at config load, not at a panic
+    // site deeper in the run.
+    let out = csadmm(&["run", "--quick", "--config", "examples/configs/nonexistent.toml"]);
+    assert!(!out.status.success(), "missing config file must be an error");
+    let out = csadmm(&["frobnicate"]);
+    assert_eq!(out.status.code(), Some(2), "unknown command must exit 2 with usage");
+}

@@ -100,6 +100,31 @@ fn legacy_quantize_bits_equals_q_codec() {
     assert!(Driver::new(conflict, &ds).is_err());
 }
 
+/// The legacy `csadmm::compression` module path still compiles and is
+/// the same machine as `csadmm::comm`: the re-exported quantizer,
+/// seeded the way `q<bits>` seeds it (`run_seed ^ 0x5154`), produces
+/// the exact bytes of the codec built through `CodecSpec` — so
+/// downstream code importing the old path sees the preserved stream.
+#[test]
+fn compression_shim_reexports_the_same_quantizer_stream() {
+    use csadmm::compression::{raw_bits, StochasticQuantizer};
+    let run_seed = 7u64;
+    let v = Matrix::from_rows(&[&[0.83, -0.21, 1.7, 0.4, -3.2]]);
+    let mut via_shim = v.clone();
+    let mut legacy = StochasticQuantizer::new(8, run_seed ^ 0x5154);
+    let shim_bits = legacy.quantize(&mut via_shim);
+    let mut via_codec = v.clone();
+    let mut codec = CodecSpec::parse("q8").unwrap().build(run_seed).unwrap();
+    let codec_bits = codec.transmit(&mut via_codec).total_bits();
+    assert_eq!(shim_bits, codec_bits, "shim and codec must charge identical wire bits");
+    assert_eq!(
+        via_shim.as_slice(),
+        via_codec.as_slice(),
+        "shim quantizer and q8 codec must produce identical bytes"
+    );
+    assert_eq!(raw_bits(&v), 5 * 64, "re-exported raw_bits accounting intact");
+}
+
 /// Stochastic-quantizer unbiasedness across *seeds*: averaging the
 /// decoded token over many independently-seeded q4 codecs recovers the
 /// input (the per-instance test lives in the unit suite; this one
