@@ -1,0 +1,116 @@
+//! Socket-backend round-trip bench: the same slownode × q8 cell driven
+//! end-to-end on the in-process simulated backend and on real `csadmm
+//! worker` OS processes over loopback sockets — the PR-8 perf baseline
+//! for the process/framing overhead of one coded round.
+//!
+//! Emits `BENCH_pr8.json`:
+//!
+//! ```text
+//! {
+//!   "bench": "socket_roundtrip",
+//!   "iters": <ADMM iterations per run>,
+//!   "codec": "q8",
+//!   "latency": "slownode",
+//!   "traces_identical": true,        (asserted — byte parity)
+//!   "wire_bytes_total": exact ledger bytes of the full run,
+//!   "sim_run_s":        wall-clock of the simulated-backend run,
+//!   "socket_run_s":     wall-clock of the socket-backend run,
+//!   "socket_real_s":    backend-reported time inside socket waits,
+//!   "socket_iters_per_sec": end-to-end socket throughput,
+//!   "overhead_per_iter_us": (socket - sim) wall-clock per iteration
+//! }
+//! ```
+//!
+//! ```bash
+//! cargo bench --bench socket_roundtrip [-- --quick]
+//! ```
+
+use csadmm::comm::CodecSpec;
+use csadmm::coordinator::{Driver, RunConfig};
+use csadmm::data::{synthetic_small, Dataset};
+use csadmm::ecn::{BackendKind, SocketSpec};
+use csadmm::latency::{LatencyKind, LatencySpec};
+use csadmm::metrics::Trace;
+use csadmm::runtime::NativeEngine;
+use csadmm::util::json::{write_json_file, Json};
+use std::time::{Duration, Instant};
+
+/// The stress cell: 1 slow ECN per pool at 20×, q8-quantized z-hops.
+fn cell_cfg(iters: usize) -> RunConfig {
+    RunConfig {
+        n_agents: 4,
+        k_ecn: 2,
+        minibatch: 8,
+        rho: 0.3,
+        max_iters: iters,
+        eval_every: 20,
+        seed: 7,
+        comm: CodecSpec::parse("q8").expect("bench codec token"),
+        latency: LatencySpec {
+            kind: LatencyKind::SlowNode { n_slow: 1, factor: 20.0 },
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn dataset() -> Dataset {
+    synthetic_small(400, 40, 0.1, 77)
+}
+
+/// One full driver run; returns the trace, its wall-clock, and the
+/// backend-reported real time (None for the simulated backend).
+fn run(cfg: RunConfig, ds: &Dataset) -> (Trace, f64, Option<Duration>) {
+    let mut driver = Driver::new(cfg, ds).expect("bench driver");
+    let t0 = Instant::now();
+    let trace = driver.run(&mut NativeEngine::new()).expect("bench run");
+    (trace, t0.elapsed().as_secs_f64(), driver.backend_real_elapsed())
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 60 } else { 240 };
+    let ds = dataset();
+
+    let (t_sim, sim_s, _) = run(cell_cfg(iters), &ds);
+    let socket_cfg = RunConfig {
+        backend: BackendKind::Socket,
+        socket: SocketSpec {
+            worker_exe: Some(env!("CARGO_BIN_EXE_csadmm").into()),
+            ..SocketSpec::loopback()
+        },
+        ..cell_cfg(iters)
+    };
+    let (t_sock, sock_s, real) = run(socket_cfg, &ds);
+
+    // The whole point of the backend: real processes, identical bytes.
+    assert_eq!(
+        t_sim.points, t_sock.points,
+        "socket trace diverged from sim on the bench cell"
+    );
+    let real_s = real.expect("socket backend reports real time").as_secs_f64();
+    let wire_bytes = t_sock.final_comm_bytes().expect("non-empty trace");
+    let overhead_us = (sock_s - sim_s) / iters as f64 * 1e6;
+
+    println!("socket round-trip — slownode × q8, {iters} iterations");
+    println!("  sim    {sim_s:>8.4}s");
+    println!("  socket {sock_s:>8.4}s  (in-wait {real_s:.4}s, {wire_bytes:.0} wire bytes)");
+    println!("  overhead {overhead_us:>7.1} us/iter");
+
+    let out = Json::obj()
+        .str("bench", "socket_roundtrip")
+        .num("iters", iters as f64)
+        .str("codec", "q8")
+        .str("latency", "slownode")
+        .field("traces_identical", Json::Bool(true))
+        .num("wire_bytes_total", wire_bytes)
+        .num("sim_run_s", sim_s)
+        .num("socket_run_s", sock_s)
+        .num("socket_real_s", real_s)
+        .num("socket_iters_per_sec", iters as f64 / sock_s)
+        .num("overhead_per_iter_us", overhead_us)
+        .build();
+    write_json_file(std::path::Path::new("BENCH_pr8.json"), &out)
+        .expect("write BENCH_pr8.json");
+    println!("wrote BENCH_pr8.json");
+}

@@ -18,9 +18,20 @@ usage: csadmm <command> [--quick] [--pjrt] [--artifacts <dir>]
 commands:
   run [--config <file>] [--seed N] [--objective <obj>] [--latency <lat>]
       [--backend <be>] [--compress <cx>] [--topology <topo>]
+      [--socket-transport unix|tcp] [--socket-dir <dir>]
+      [--socket-port N] [--socket-time-scale X]
                                    one experiment from a config file
                                    (default: examples/configs/quickstart.toml,
-                                   resolved relative to the working dir)
+                                   resolved relative to the working dir);
+                                   the --socket-* flags override the
+                                   [socket] table, whose presence is the
+                                   opt-in gate for --backend socket
+  worker --connect <addr> --ecn N [--transport unix|tcp]
+                                   socket-backend worker process: serves
+                                   one ECN's coded gradient rounds over
+                                   the given coordinator link (spawned
+                                   by `run --backend socket`; not meant
+                                   for interactive use)
   table1                           Table I dataset inventory
   fig3-minibatch | fig3-baselines | fig3-stragglers | fig3-spc
   fig4 | fig5 | rate-check         figure/rate reproductions
@@ -56,7 +67,7 @@ commands:
                                    --latency overrides the straggler-zoo
                                    axis, e.g. --latency uniform,pareto;
                                    --backend overrides the backend axis,
-                                   e.g. --backend sim,threaded;
+                                   e.g. --backend sim,threaded,socket;
                                    --compress overrides the token-codec
                                    axis, e.g. --compress identity,q8,topk+ef;
                                    --topology overrides the membership
@@ -68,6 +79,9 @@ latency regimes (<lat>): uniform (paper baseline) | shifted-exp | pareto
                          | slownode | bimodal   (params via [latency])
 backends (<be>): sim (simulated clock, default) | threaded (one real OS
                  thread per ECN; same decoded bytes, real wall-clock)
+                 | socket (one real OS process per ECN, frames on a
+                 unix/tcp socket; same decoded bytes, real network I/O;
+                 needs a [socket] table)
 token codecs (<cx>): identity (exact f64, default) | f32 | q<bits>
                      (stochastic quantizer, e.g. q8) | topk | randk
                      — append +ef for error feedback; params via [comm]

@@ -5,6 +5,7 @@
 //! in-place transform of the matrix (the receiver's reconstruction),
 //! plus an exact [`WireCost`] for what actually crossed the link.
 
+use super::wire::BitWriter;
 use crate::linalg::Matrix;
 use crate::rng::{Rng, Xoshiro256pp};
 
@@ -42,9 +43,21 @@ impl WireCost {
 /// (stochastic quantization, random sparsification, error feedback)
 /// advance their private streams once per [`Self::transmit`] call.
 pub trait TokenCodec {
-    /// Simulate one transfer: `token` leaves as the receiver's decoded
-    /// reconstruction; the return value is the exact wire cost.
-    fn transmit(&mut self, token: &mut Matrix) -> WireCost;
+    /// One transfer with the payload materialized: `token` leaves as
+    /// the receiver's decoded reconstruction, the encoded bits land in
+    /// `w` (exactly [`WireCost::total_bits`] of them — the socket
+    /// backend ships these bytes, so the ledger's books and the wire's
+    /// books are one code path), and the return value is the exact
+    /// wire cost. [`crate::comm::TokenDecoder`] reconstructs the
+    /// in-place result bit-for-bit from the payload.
+    fn transmit_wire(&mut self, token: &mut Matrix, w: &mut BitWriter) -> WireCost;
+
+    /// Simulate one transfer without materializing payload bytes:
+    /// `token` leaves as the receiver's decoded reconstruction; the
+    /// return value is the exact wire cost.
+    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
+        self.transmit_wire(token, &mut BitWriter::new())
+    }
 
     /// Codec label for traces/tables (e.g. `"q8+ef"`).
     fn label(&self) -> String;
@@ -63,7 +76,10 @@ pub fn raw_bits(m: &Matrix) -> u64 {
 pub struct Identity;
 
 impl TokenCodec for Identity {
-    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
+    fn transmit_wire(&mut self, token: &mut Matrix, w: &mut BitWriter) -> WireCost {
+        for &v in token.as_slice() {
+            w.write_f64(v);
+        }
         WireCost { header_bits: 0, payload_bits: raw_bits(token) }
     }
 
@@ -78,9 +94,11 @@ impl TokenCodec for Identity {
 pub struct F32Cast;
 
 impl TokenCodec for F32Cast {
-    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
+    fn transmit_wire(&mut self, token: &mut Matrix, w: &mut BitWriter) -> WireCost {
         for v in token.as_mut_slice() {
-            *v = *v as f32 as f64;
+            let narrow = *v as f32;
+            w.write_bits(narrow.to_bits() as u64, 32);
+            *v = narrow as f64;
         }
         WireCost { header_bits: 0, payload_bits: token.len() as u64 * 32 }
     }
@@ -126,32 +144,37 @@ impl StochasticQuantizer {
     /// all-zero matrix (nothing is encoded — regression for the legacy
     /// accounting bug that charged the full payload there).
     pub fn quantize(&mut self, m: &mut Matrix) -> u64 {
-        self.transmit_cost(m).total_bits()
+        self.transmit(m).total_bits()
     }
+}
 
-    fn transmit_cost(&mut self, m: &mut Matrix) -> WireCost {
-        let levels = (1u64 << (self.bits - 1)) - 1;
-        let maxabs = m.max_abs();
+impl TokenCodec for StochasticQuantizer {
+    fn transmit_wire(&mut self, token: &mut Matrix, w: &mut BitWriter) -> WireCost {
+        let levels = (1i64 << (self.bits - 1)) - 1;
+        let maxabs = token.max_abs();
         if maxabs > 0.0 {
             let scale = maxabs / levels as f64;
-            for v in m.as_mut_slice() {
+            w.write_f64(scale);
+            for v in token.as_mut_slice() {
                 let x = *v / scale;
                 let lo = x.floor();
                 // Stochastic rounding: up with prob = frac(x).
                 let frac = x - lo;
                 let q = if self.rng.next_f64() < frac { lo + 1.0 } else { lo };
-                *v = q * scale;
+                // Wire symbol: the level shifted into [0, 2^bits − 1].
+                // The max(0) guards a measure-zero fp edge (x dipping
+                // below −levels by one ulp *and* the coin landing on
+                // the floor); in-place and wire agree by construction.
+                let u = (q as i64 + levels).max(0) as u64;
+                *v = (u as i64 - levels) as f64 * scale;
+                w.write_bits(u, self.bits);
             }
-            WireCost { header_bits: 64, payload_bits: m.len() as u64 * self.bits as u64 }
+            WireCost { header_bits: 64, payload_bits: token.len() as u64 * self.bits as u64 }
         } else {
+            // Scale 0 announces the zero grid: header only, no payload.
+            w.write_f64(0.0);
             WireCost { header_bits: 64, payload_bits: 0 }
         }
-    }
-}
-
-impl TokenCodec for StochasticQuantizer {
-    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
-        self.transmit_cost(token)
     }
 
     fn label(&self) -> String {
@@ -160,14 +183,15 @@ impl TokenCodec for StochasticQuantizer {
 }
 
 /// How many entries a `frac` sparsifier keeps out of `len`: at least
-/// one, at most all of them.
-fn kept_entries(frac: f64, len: usize) -> usize {
+/// one, at most all of them. Shared with the wire decoder so encoder
+/// and decoder arithmetic cannot drift.
+pub(crate) fn kept_entries(frac: f64, len: usize) -> usize {
     ((frac * len as f64).ceil() as usize).clamp(1, len.max(1))
 }
 
 /// Bits needed to address one of `len` entries (`⌈log2 len⌉`; a
 /// single-entry token needs no index bits).
-fn index_bits(len: usize) -> u64 {
+pub(crate) fn index_bits(len: usize) -> u64 {
     if len <= 1 {
         0
     } else {
@@ -198,9 +222,10 @@ impl TopK {
 }
 
 impl TokenCodec for TopK {
-    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
+    fn transmit_wire(&mut self, token: &mut Matrix, w: &mut BitWriter) -> WireCost {
         let len = token.len();
         let k = kept_entries(self.frac, len);
+        let mut kept: Vec<usize>;
         if k < len {
             let mut order: Vec<usize> = (0..len).collect();
             let vals = token.as_slice();
@@ -211,10 +236,23 @@ impl TokenCodec for TopK {
             order.select_nth_unstable_by(k - 1, |&a, &b| {
                 vals[b].abs().total_cmp(&vals[a].abs()).then(a.cmp(&b))
             });
+            kept = order[..k].to_vec();
             let slice = token.as_mut_slice();
             for &i in &order[k..] {
                 slice[i] = 0.0;
             }
+        } else {
+            kept = (0..len).collect();
+        }
+        // Ascending-index wire order: the unordered partition must not
+        // leak into the payload bytes.
+        kept.sort_unstable();
+        w.write_bits(k as u64, 32);
+        let ib = index_bits(len) as u32;
+        let slice = token.as_slice();
+        for &i in &kept {
+            w.write_bits(i as u64, ib);
+            w.write_f64(slice[i]);
         }
         WireCost { header_bits: 32, payload_bits: k as u64 * (64 + index_bits(len)) }
     }
@@ -248,19 +286,33 @@ impl RandK {
 }
 
 impl TokenCodec for RandK {
-    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
+    fn transmit_wire(&mut self, token: &mut Matrix, w: &mut BitWriter) -> WireCost {
         let len = token.len();
         let k = kept_entries(self.frac, len);
+        // 64-bit sync header: lets the decoder detect a coordinate
+        // stream that has fallen out of step (no indices travel).
+        w.write_bits(k as u64, 64);
         if k < len {
-            let kept = self.rng.sample_indices(len, k);
+            let mut kept = self.rng.sample_indices(len, k);
             let mut keep = vec![false; len];
-            for i in kept {
+            for &i in &kept {
                 keep[i] = true;
             }
             for (i, v) in token.as_mut_slice().iter_mut().enumerate() {
                 if !keep[i] {
                     *v = 0.0;
                 }
+            }
+            kept.sort_unstable();
+            let slice = token.as_slice();
+            for &i in &kept {
+                w.write_f64(slice[i]);
+            }
+        } else {
+            // Keeping everything draws no coordinates — the decoder's
+            // twin stream must stay in lockstep.
+            for &v in token.as_slice() {
+                w.write_f64(v);
             }
         }
         WireCost { header_bits: 64, payload_bits: k as u64 * 64 }
@@ -301,12 +353,14 @@ impl ErrorFeedback {
 }
 
 impl TokenCodec for ErrorFeedback {
-    fn transmit(&mut self, token: &mut Matrix) -> WireCost {
+    fn transmit_wire(&mut self, token: &mut Matrix, w: &mut BitWriter) -> WireCost {
         if let Some(e) = &self.residual {
             token.add_scaled(1.0, e);
         }
         let corrected = token.clone();
-        let cost = self.inner.transmit(token);
+        // The wire carries exactly the inner codec's payload — the
+        // residual is sender-side state and never crosses the link.
+        let cost = self.inner.transmit_wire(token, w);
         let mut e = corrected;
         e.add_scaled(-1.0, token);
         self.residual = Some(e);

@@ -35,14 +35,24 @@
 //!   move) while `comm_bytes` is now tracked next to it.
 //!
 //! The codec is applied by the coordinator to the token variable z on
-//! every hop of a transfer, identically for the simulated and the
-//! threaded gradient backend, so backend traces stay byte-identical
+//! every hop of a transfer, identically for every gradient backend
+//! (simulated, threaded, socket), so backend traces stay byte-identical
 //! under every codec in the zoo. `csadmm fig7` sweeps the zoo and
 //! plots the accuracy-vs-cumulative-bytes trade-off, coded vs uncoded.
+//!
+//! The `wire` layer makes the accounting *measurable*: every codec
+//! encodes through [`TokenCodec::transmit_wire`] into a [`BitWriter`],
+//! so the serialized payload is exactly [`WireCost::bytes`] long, and
+//! frames ([`FrameKind`] + version + length prefix + FNV-1a checksum)
+//! carry those payloads across real sockets in the socket backend.
+//! [`TokenDecoder`] is the receiver-side twin that reconstructs the
+//! token bit-for-bit; [`TokenLink`] pushes every z-hop through a real
+//! loopback socket pair.
 
 mod codec;
 mod ledger;
 mod spec;
+mod wire;
 
 pub use codec::{
     raw_bits, ErrorFeedback, F32Cast, Identity, RandK, StochasticQuantizer, TokenCodec, TopK,
@@ -50,3 +60,8 @@ pub use codec::{
 };
 pub use ledger::WireLedger;
 pub use spec::{CodecKind, CodecSpec, DEFAULT_SPARSE_FRAC};
+pub use wire::{
+    encode_frame, fnv1a, read_frame, read_frame_opt, write_frame, BitReader, BitWriter,
+    ByteReader, ByteWriter, FrameBuffer, FrameKind, TokenDecoder, TokenLink, FRAME_HEADER_LEN,
+    MAX_FRAME_PAYLOAD, WIRE_VERSION,
+};

@@ -1,0 +1,777 @@
+//! The wire format: length-prefixed, versioned, checksummed frames
+//! plus the bit-exact token payload codec.
+//!
+//! Everything the socket backend ships crosses the link inside one
+//! frame layout:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic  b"CZ"
+//! 2       1     version (WIRE_VERSION = 1)
+//! 3       1     frame kind (FrameKind)
+//! 4       4     payload length, u32 LE (≤ MAX_FRAME_PAYLOAD)
+//! 8       4     FNV-1a checksum of the payload, u32 LE
+//! 12      n     payload
+//! ```
+//!
+//! Every malformed frame — truncated, bad magic/version/kind, an
+//! oversized length prefix, a checksum mismatch — surfaces as
+//! [`Error::Runtime`], never a panic and never the blanket
+//! `From<io::Error>` conversion to `Error::Io` (the watchdog machinery
+//! routes on `Runtime`).
+//!
+//! Token payloads are produced by [`TokenCodec::transmit_wire`] through
+//! a [`BitWriter`], so the serialized byte length is **exactly**
+//! [`WireCost::bytes`] — the ledger's books and the socket's books are
+//! one code path. [`TokenDecoder`] reconstructs the receiver-side token
+//! bit-for-bit (including the shared-randomness RandK coordinate
+//! stream), which is what keeps socket traces byte-identical to sim.
+
+use super::codec::{index_bits, kept_entries, TokenCodec, WireCost};
+use super::spec::{CodecKind, CodecSpec};
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::rng::{Rng, Xoshiro256pp};
+use std::io::{Read, Write};
+
+/// Frame magic: "Coded Z-token".
+pub const MAGIC: [u8; 2] = *b"CZ";
+
+/// Wire-format version; peers reject anything else.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Fixed frame-header length in bytes.
+pub const FRAME_HEADER_LEN: usize = 12;
+
+/// Upper bound on one frame's payload (64 MiB): an oversized length
+/// prefix is rejected *before* any allocation, so a corrupt or hostile
+/// header cannot OOM the coordinator.
+pub const MAX_FRAME_PAYLOAD: u32 = 64 << 20;
+
+/// What a frame carries (the protocol's message types).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Worker → coordinator: "ECN j reporting for agent a".
+    Hello,
+    /// Coordinator → worker: objective + shard + code construction.
+    Init,
+    /// Coordinator → worker: one round's work order.
+    Work,
+    /// Worker → coordinator: one round's coded partial gradient.
+    Grad,
+    /// The encoded z-token itself (the per-hop transfer).
+    Token,
+    /// Coordinator → worker: clean shutdown.
+    Bye,
+}
+
+impl FrameKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            FrameKind::Hello => 1,
+            FrameKind::Init => 2,
+            FrameKind::Work => 3,
+            FrameKind::Grad => 4,
+            FrameKind::Token => 5,
+            FrameKind::Bye => 6,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            1 => Some(FrameKind::Hello),
+            2 => Some(FrameKind::Init),
+            3 => Some(FrameKind::Work),
+            4 => Some(FrameKind::Grad),
+            5 => Some(FrameKind::Token),
+            6 => Some(FrameKind::Bye),
+            _ => None,
+        }
+    }
+}
+
+/// FNV-1a over the payload — cheap, dependency-free corruption
+/// detection (this is an integrity check, not an authenticity one).
+pub fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+fn runtime_io(what: &str, e: std::io::Error) -> Error {
+    Error::Runtime(format!("wire: {what}: {e}"))
+}
+
+/// Serialize one frame into a fresh byte vector (header + payload).
+pub fn encode_frame(kind: FrameKind, payload: &[u8]) -> Result<Vec<u8>> {
+    if payload.len() > MAX_FRAME_PAYLOAD as usize {
+        return Err(Error::Runtime(format!(
+            "wire: payload of {} bytes exceeds the {} byte frame cap",
+            payload.len(),
+            MAX_FRAME_PAYLOAD
+        )));
+    }
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(kind.to_u8());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    Ok(out)
+}
+
+/// Write one frame to a stream. IO failures (a peer that hung up, a
+/// broken pipe) map to [`Error::Runtime`] so the caller's watchdog
+/// path handles them uniformly.
+pub fn write_frame<W: Write>(w: &mut W, kind: FrameKind, payload: &[u8]) -> Result<()> {
+    let bytes = encode_frame(kind, payload)?;
+    w.write_all(&bytes).map_err(|e| runtime_io("writing frame", e))?;
+    w.flush().map_err(|e| runtime_io("flushing frame", e))
+}
+
+/// Validate a 12-byte header; returns the frame kind and payload length.
+fn parse_header(h: &[u8; FRAME_HEADER_LEN]) -> Result<(FrameKind, u32, u32)> {
+    if h[0..2] != MAGIC {
+        return Err(Error::Runtime(format!(
+            "wire: bad frame magic {:02x}{:02x} (expected \"CZ\")",
+            h[0], h[1]
+        )));
+    }
+    if h[2] != WIRE_VERSION {
+        return Err(Error::Runtime(format!(
+            "wire: unsupported frame version {} (this build speaks {WIRE_VERSION})",
+            h[2]
+        )));
+    }
+    let kind = FrameKind::from_u8(h[3])
+        .ok_or_else(|| Error::Runtime(format!("wire: unknown frame kind {}", h[3])))?;
+    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]);
+    if len > MAX_FRAME_PAYLOAD {
+        return Err(Error::Runtime(format!(
+            "wire: length prefix {len} exceeds the {MAX_FRAME_PAYLOAD} byte frame cap"
+        )));
+    }
+    let checksum = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    Ok((kind, len, checksum))
+}
+
+/// Read one complete frame from a blocking stream. A stream that ends
+/// mid-frame (truncation, a peer killed mid-write) is
+/// [`Error::Runtime`]; a stream that ends cleanly *between* frames
+/// returns `Ok(None)` so serve loops can distinguish shutdown from
+/// corruption.
+pub fn read_frame_opt<R: Read>(r: &mut R) -> Result<Option<(FrameKind, Vec<u8>)>> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    let mut got = 0;
+    while got < FRAME_HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(Error::Runtime(format!(
+                    "wire: stream closed mid-header ({got} of {FRAME_HEADER_LEN} bytes)"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(runtime_io("reading frame header", e)),
+        }
+    }
+    let (kind, len, checksum) = parse_header(&header)?;
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| runtime_io("reading frame payload (truncated?)", e))?;
+    if fnv1a(&payload) != checksum {
+        return Err(Error::Runtime(
+            "wire: frame checksum mismatch (corrupted payload)".into(),
+        ));
+    }
+    Ok(Some((kind, payload)))
+}
+
+/// [`read_frame_opt`] for callers to whom a clean EOF is also an error
+/// (a coordinator waiting on a worker response).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(FrameKind, Vec<u8>)> {
+    read_frame_opt(r)?
+        .ok_or_else(|| Error::Runtime("wire: peer closed the connection".into()))
+}
+
+/// Incremental frame parser for non-blocking / timeout-sliced reads:
+/// bytes accumulate across short reads, and a complete frame pops out
+/// as soon as its last byte arrives. This is what keeps a `read_timeout`
+/// watchdog from desynchronizing the stream mid-frame.
+#[derive(Debug, Default)]
+pub struct FrameBuffer {
+    pending: Vec<u8>,
+}
+
+impl FrameBuffer {
+    /// Fresh, empty buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append raw bytes received from the stream.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.pending.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame, if the buffer holds one. Corrupt
+    /// headers/payloads surface as [`Error::Runtime`] immediately (the
+    /// stream is unrecoverable at that point).
+    pub fn next_frame(&mut self) -> Result<Option<(FrameKind, Vec<u8>)>> {
+        if self.pending.len() < FRAME_HEADER_LEN {
+            return Ok(None);
+        }
+        let mut header = [0u8; FRAME_HEADER_LEN];
+        header.copy_from_slice(&self.pending[..FRAME_HEADER_LEN]);
+        let (kind, len, checksum) = parse_header(&header)?;
+        let total = FRAME_HEADER_LEN + len as usize;
+        if self.pending.len() < total {
+            return Ok(None);
+        }
+        let payload = self.pending[FRAME_HEADER_LEN..total].to_vec();
+        self.pending.drain(..total);
+        if fnv1a(&payload) != checksum {
+            return Err(Error::Runtime(
+                "wire: frame checksum mismatch (corrupted payload)".into(),
+            ));
+        }
+        Ok(Some((kind, payload)))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bit-packed token payloads.
+// ---------------------------------------------------------------------
+
+/// MSB-first bit packer: the single serialization path every
+/// [`TokenCodec::transmit_wire`] writes through, so the byte length of
+/// a token payload is `WireCost::bytes()` by construction.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits already written into the last byte of `buf` (0..8).
+    partial: u32,
+}
+
+impl BitWriter {
+    /// Fresh, empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `nbits` bits of `value`, MSB first.
+    pub fn write_bits(&mut self, value: u64, nbits: u32) {
+        debug_assert!(nbits <= 64);
+        for i in (0..nbits).rev() {
+            let bit = ((value >> i) & 1) as u8;
+            if self.partial == 0 {
+                self.buf.push(0);
+            }
+            let last = self.buf.last_mut().expect("bit buffer non-empty");
+            *last |= bit << (7 - self.partial);
+            self.partial = (self.partial + 1) % 8;
+        }
+    }
+
+    /// Append an f64 as its 64 raw bits.
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_bits(v.to_bits(), 64);
+    }
+
+    /// Total bits written so far.
+    pub fn bits(&self) -> u64 {
+        if self.partial == 0 {
+            self.buf.len() as u64 * 8
+        } else {
+            (self.buf.len() as u64 - 1) * 8 + self.partial as u64
+        }
+    }
+
+    /// Finish: the packed bytes (final byte zero-padded).
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// MSB-first bit reader over a token payload; running past the end is
+/// [`Error::Runtime`] (a short payload means a framing bug or
+/// truncation, never a panic).
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: u64,
+}
+
+impl<'a> BitReader<'a> {
+    /// Read from a payload slice.
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    /// Read `nbits` bits into the low bits of a u64.
+    pub fn read_bits(&mut self, nbits: u32) -> Result<u64> {
+        debug_assert!(nbits <= 64);
+        if self.pos + nbits as u64 > self.bytes.len() as u64 * 8 {
+            return Err(Error::Runtime(format!(
+                "wire: token payload exhausted at bit {} (wanted {nbits} more of {})",
+                self.pos,
+                self.bytes.len() * 8
+            )));
+        }
+        let mut out = 0u64;
+        for _ in 0..nbits {
+            let byte = self.bytes[(self.pos / 8) as usize];
+            let bit = (byte >> (7 - (self.pos % 8))) & 1;
+            out = (out << 1) | bit as u64;
+            self.pos += 1;
+        }
+        Ok(out)
+    }
+
+    /// Read 64 bits as an f64.
+    pub fn read_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.read_bits(64)?))
+    }
+}
+
+/// Receiver-side token reconstruction: decodes the payload written by
+/// [`TokenCodec::transmit_wire`] back into the exact matrix the codec
+/// left in place at the sender.
+///
+/// Stateful like its encoding twin: the RandK decoder holds the same
+/// seeded coordinate stream (`seed ^ 0x524B`) and advances it once per
+/// decoded transfer, so shared-randomness sparsification round-trips
+/// without index bits on the wire. Error feedback is sender-side only
+/// (the residual never crosses the link), so an `+ef` spec decodes with
+/// its inner codec's layout.
+pub struct TokenDecoder {
+    kind: CodecKind,
+    randk_rng: Option<Xoshiro256pp>,
+}
+
+impl TokenDecoder {
+    /// Build the decoder twin of `spec.build(seed)`.
+    pub fn new(spec: &CodecSpec, seed: u64) -> Self {
+        let randk_rng = match spec.kind {
+            CodecKind::RandK { .. } => Some(Xoshiro256pp::seed_from_u64(seed ^ 0x524B)),
+            _ => None,
+        };
+        Self { kind: spec.kind, randk_rng }
+    }
+
+    /// Decode one token payload into a `rows × cols` matrix.
+    pub fn decode(&mut self, payload: &[u8], rows: usize, cols: usize) -> Result<Matrix> {
+        let len = rows * cols;
+        let mut r = BitReader::new(payload);
+        let mut data = vec![0.0f64; len];
+        match self.kind {
+            CodecKind::Identity => {
+                for v in data.iter_mut() {
+                    *v = r.read_f64()?;
+                }
+            }
+            CodecKind::F32Cast => {
+                for v in data.iter_mut() {
+                    *v = f32::from_bits(r.read_bits(32)? as u32) as f64;
+                }
+            }
+            CodecKind::Quantize { bits } => {
+                let scale = r.read_f64()?;
+                if scale != 0.0 {
+                    let levels = (1i64 << (bits - 1)) - 1;
+                    for v in data.iter_mut() {
+                        // Any symbol in [0, 2^bits) is valid — the
+                        // encoder shifts its level into that range.
+                        let u = r.read_bits(bits)? as i64;
+                        *v = (u - levels) as f64 * scale;
+                    }
+                }
+            }
+            CodecKind::TopK { frac } => {
+                let k = r.read_bits(32)? as usize;
+                if k != kept_entries(frac, len) || k > len {
+                    return Err(Error::Runtime(format!(
+                        "wire: topk count {k} disagrees with frac {frac} over {len} entries"
+                    )));
+                }
+                let ib = index_bits(len) as u32;
+                for _ in 0..k {
+                    let idx = r.read_bits(ib)? as usize;
+                    if idx >= len {
+                        return Err(Error::Runtime(format!(
+                            "wire: topk index {idx} out of range {len}"
+                        )));
+                    }
+                    data[idx] = r.read_f64()?;
+                }
+            }
+            CodecKind::RandK { frac } => {
+                let k = r.read_bits(64)? as usize;
+                if k != kept_entries(frac, len) {
+                    return Err(Error::Runtime(format!(
+                        "wire: randk sync header {k} disagrees with frac {frac} over {len} \
+                         entries (codec streams out of step?)"
+                    )));
+                }
+                let rng = self
+                    .randk_rng
+                    .as_mut()
+                    .expect("randk decoder holds its coordinate stream");
+                if k < len {
+                    // Same draw as the encoder, from the twin stream.
+                    let mut kept = rng.sample_indices(len, k);
+                    kept.sort_unstable();
+                    for idx in kept {
+                        data[idx] = r.read_f64()?;
+                    }
+                } else {
+                    for v in data.iter_mut() {
+                        *v = r.read_f64()?;
+                    }
+                }
+            }
+        }
+        Matrix::from_vec(rows, cols, data)
+    }
+}
+
+/// A real loopback link for the z-token: one connected socket pair the
+/// coordinator pushes every encoded token through. Unix-domain on unix
+/// (the default transport), TCP loopback elsewhere — either way the
+/// bytes genuinely enter and leave the kernel's network stack.
+pub struct TokenLink {
+    tx: TokenStream,
+    rx: TokenStream,
+}
+
+enum TokenStream {
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+    Tcp(std::net::TcpStream),
+}
+
+impl TokenStream {
+    fn write_all_flush(&mut self, bytes: &[u8]) -> Result<()> {
+        let r = match self {
+            #[cfg(unix)]
+            TokenStream::Unix(s) => s.write_all(bytes).and_then(|_| s.flush()),
+            TokenStream::Tcp(s) => s.write_all(bytes).and_then(|_| s.flush()),
+        };
+        r.map_err(|e| runtime_io("writing token frame", e))
+    }
+
+    fn read_frame(&mut self) -> Result<(FrameKind, Vec<u8>)> {
+        match self {
+            #[cfg(unix)]
+            TokenStream::Unix(s) => read_frame(s),
+            TokenStream::Tcp(s) => read_frame(s),
+        }
+    }
+}
+
+impl TokenLink {
+    /// Open a connected loopback pair.
+    pub fn loopback() -> Result<Self> {
+        #[cfg(unix)]
+        {
+            let (a, b) = std::os::unix::net::UnixStream::pair()
+                .map_err(|e| runtime_io("opening unix token pair", e))?;
+            Ok(Self { tx: TokenStream::Unix(a), rx: TokenStream::Unix(b) })
+        }
+        #[cfg(not(unix))]
+        {
+            let listener = std::net::TcpListener::bind(("127.0.0.1", 0))
+                .map_err(|e| runtime_io("binding token loopback", e))?;
+            let addr =
+                listener.local_addr().map_err(|e| runtime_io("token loopback addr", e))?;
+            let tx = std::net::TcpStream::connect(addr)
+                .map_err(|e| runtime_io("connecting token loopback", e))?;
+            let (rx, _) =
+                listener.accept().map_err(|e| runtime_io("accepting token loopback", e))?;
+            tx.set_nodelay(true).ok();
+            rx.set_nodelay(true).ok();
+            Ok(Self { tx: TokenStream::Tcp(tx), rx: TokenStream::Tcp(rx) })
+        }
+    }
+
+    /// One real transfer: encode `token` through the codec's wire path,
+    /// frame it, push the frame through the socket, read it back on the
+    /// receiving end and replace `token` with the decoded
+    /// reconstruction. By the single-code-path construction the decoded
+    /// matrix is bit-identical to the codec's in-place transform, so
+    /// routing the token through the kernel moves no trace byte.
+    pub fn transmit(
+        &mut self,
+        codec: &mut dyn TokenCodec,
+        token: &mut Matrix,
+        decoder: &mut TokenDecoder,
+    ) -> Result<WireCost> {
+        let (rows, cols) = token.shape();
+        let mut w = BitWriter::new();
+        let cost = codec.transmit_wire(token, &mut w);
+        let payload = w.into_bytes();
+        debug_assert_eq!(payload.len() as u64, cost.bytes(), "wire bytes == ledger bytes");
+        let frame = encode_frame(FrameKind::Token, &payload)?;
+        // Write from a scoped thread: a token larger than the kernel's
+        // socket buffer would otherwise deadlock a single-threaded
+        // write-then-read against our own link.
+        let received = std::thread::scope(|s| -> Result<(FrameKind, Vec<u8>)> {
+            let tx = &mut self.tx;
+            let writer = s.spawn(move || tx.write_all_flush(&frame));
+            let got = self.rx.read_frame();
+            writer
+                .join()
+                .map_err(|_| Error::Runtime("wire: token writer thread panicked".into()))??;
+            got
+        })?;
+        let (kind, wire_payload) = received;
+        if kind != FrameKind::Token {
+            return Err(Error::Runtime(format!(
+                "wire: expected a token frame on the z-link, got {kind:?}"
+            )));
+        }
+        let decoded = decoder.decode(&wire_payload, rows, cols)?;
+        debug_assert!(
+            token
+                .as_slice()
+                .iter()
+                .zip(decoded.as_slice())
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "decoded token must be bit-identical to the codec's in-place reconstruction"
+        );
+        *token = decoded;
+        Ok(cost)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Byte-level payload cursors for the control frames (Hello/Init/Work/
+// Grad) — plain LE scalars and matrices, no bit packing.
+// ---------------------------------------------------------------------
+
+/// Little-endian payload builder for control frames.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// Fresh, empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a u8.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a u32 LE.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a u64 LE.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an f64 LE.
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a matrix: rows u32, cols u32, then entries f64 LE in
+    /// row-major order.
+    pub fn put_matrix(&mut self, m: &Matrix) {
+        self.put_u32(m.rows() as u32);
+        self.put_u32(m.cols() as u32);
+        for &v in m.as_slice() {
+            self.put_f64(v);
+        }
+    }
+
+    /// Finish: the payload bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Little-endian payload cursor; overruns are [`Error::Runtime`].
+pub struct ByteReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Read from a payload slice.
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            return Err(Error::Runtime(format!(
+                "wire: control payload exhausted at byte {} (wanted {n} more of {})",
+                self.pos,
+                self.bytes.len()
+            )));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a u8.
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a u32 LE.
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    /// Read a u64 LE.
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// Read an f64 LE.
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// Read a matrix written by [`ByteWriter::put_matrix`].
+    pub fn get_matrix(&mut self) -> Result<Matrix> {
+        let rows = self.get_u32()? as usize;
+        let cols = self.get_u32()? as usize;
+        let len = rows.checked_mul(cols).ok_or_else(|| {
+            Error::Runtime(format!("wire: matrix shape {rows}x{cols} overflows"))
+        })?;
+        if len > (MAX_FRAME_PAYLOAD as usize) / 8 {
+            return Err(Error::Runtime(format!(
+                "wire: matrix shape {rows}x{cols} exceeds the frame cap"
+            )));
+        }
+        let mut data = Vec::with_capacity(len);
+        for _ in 0..len {
+            data.push(self.get_f64()?);
+        }
+        Matrix::from_vec(rows, cols, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_round_trips() {
+        let payload = b"hello coded world".to_vec();
+        let bytes = encode_frame(FrameKind::Work, &payload).unwrap();
+        assert_eq!(bytes.len(), FRAME_HEADER_LEN + payload.len());
+        let (kind, got) = read_frame(&mut bytes.as_slice()).unwrap();
+        assert_eq!(kind, FrameKind::Work);
+        assert_eq!(got, payload);
+        // Clean EOF between frames is None, not an error.
+        assert!(read_frame_opt(&mut [].as_slice()).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_and_corrupt_frames_are_runtime_errors() {
+        let bytes = encode_frame(FrameKind::Grad, b"payload").unwrap();
+        for cut in 1..bytes.len() {
+            match read_frame(&mut &bytes[..cut]) {
+                Err(Error::Runtime(_)) => {}
+                other => panic!("cut at {cut}: expected Error::Runtime, got {other:?}"),
+            }
+        }
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                matches!(read_frame(&mut bad.as_slice()), Err(Error::Runtime(_))),
+                "flip at byte {i} must be rejected as Runtime"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocation() {
+        let mut bytes = encode_frame(FrameKind::Token, b"x").unwrap();
+        bytes[4..8].copy_from_slice(&(MAX_FRAME_PAYLOAD + 1).to_le_bytes());
+        match read_frame(&mut bytes.as_slice()) {
+            Err(Error::Runtime(msg)) => assert!(msg.contains("frame cap"), "{msg}"),
+            other => panic!("expected Error::Runtime, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_buffer_reassembles_across_partial_reads() {
+        let a = encode_frame(FrameKind::Hello, &[1, 2, 3]).unwrap();
+        let b = encode_frame(FrameKind::Bye, &[]).unwrap();
+        let stream: Vec<u8> = a.iter().chain(b.iter()).copied().collect();
+        let mut fb = FrameBuffer::new();
+        let mut frames = vec![];
+        for chunk in stream.chunks(5) {
+            fb.extend(chunk);
+            while let Some(f) = fb.next_frame().unwrap() {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0], (FrameKind::Hello, vec![1, 2, 3]));
+        assert_eq!(frames[1], (FrameKind::Bye, vec![]));
+    }
+
+    #[test]
+    fn bit_writer_reader_round_trip() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_f64(-0.125);
+        w.write_bits(0xFFFF, 16);
+        assert_eq!(w.bits(), 3 + 64 + 16);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), (3usize + 64 + 16).div_ceil(8));
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert_eq!(r.read_f64().unwrap(), -0.125);
+        assert_eq!(r.read_bits(16).unwrap(), 0xFFFF);
+        // Overrun is a Runtime error, not a panic.
+        assert!(matches!(r.read_bits(8), Err(Error::Runtime(_))));
+    }
+
+    #[test]
+    fn byte_cursors_round_trip_matrices() {
+        let m = Matrix::from_rows(&[&[1.5, -2.5], &[0.0, 3.25]]);
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u64(0xDEAD_BEEF);
+        w.put_matrix(&m);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u64().unwrap(), 0xDEAD_BEEF);
+        let got = r.get_matrix().unwrap();
+        assert_eq!(got.as_slice(), m.as_slice());
+        assert!(matches!(r.get_u8(), Err(Error::Runtime(_))));
+    }
+
+    #[test]
+    fn token_link_moves_identity_tokens_bit_exactly() {
+        use crate::comm::Identity;
+        let mut link = TokenLink::loopback().unwrap();
+        let spec = CodecSpec::default();
+        let mut dec = TokenDecoder::new(&spec, 1);
+        let mut token = Matrix::from_rows(&[&[0.25, -1.0, 3.5e-9]]);
+        let want = token.clone();
+        let cost = link.transmit(&mut Identity, &mut token, &mut dec).unwrap();
+        assert_eq!(cost.payload_bits, 192);
+        assert_eq!(token.as_slice(), want.as_slice());
+    }
+}

@@ -26,7 +26,7 @@ use crate::coding::SchemeKind;
 use crate::comm::{CodecKind, CodecSpec};
 use crate::coordinator::{Algorithm, RunConfig, TopologyKind};
 use crate::data::DatasetName;
-use crate::ecn::{BackendKind, ResponseModel};
+use crate::ecn::{BackendKind, ResponseModel, SocketSpec, TransportKind};
 use crate::error::{Error, Result};
 use crate::graph::TraversalKind;
 use crate::latency::{ClockSpec, FaultSpec, LatencyKind, LatencySpec};
@@ -305,6 +305,76 @@ pub fn topology_spec_from_doc(doc: &ConfigDoc) -> Result<TopologySpec> {
     Ok(spec)
 }
 
+/// Parse the `[socket]` deployment table for `backend = socket`:
+///
+/// ```text
+/// [socket]
+/// transport = unix        # unix|tcp (default: unix where available)
+/// dir = /tmp/csadmm       # unix: socket-file directory (default: temp dir)
+/// host = 127.0.0.1        # tcp: bind host
+/// port = 0                # tcp: 0 = ephemeral, else base + agent id
+/// accept_timeout_secs = 10   # worker connect + handshake budget
+/// recv_deadline_secs = 30    # per-wait half-open-peer guard
+/// time_scale = 0          # real seconds slept per modeled second
+/// worker_exe = target/release/csadmm   # default: the current binary
+/// ```
+///
+/// The mere *presence* of the table (even empty) marks the spec
+/// `configured` — `backend = socket` without it is rejected by
+/// [`RunConfig::validate`], so a config can't silently spawn worker
+/// processes.
+pub fn socket_spec_from_doc(doc: &ConfigDoc) -> Result<SocketSpec> {
+    let sec = "socket";
+    let mut spec = SocketSpec {
+        configured: doc.section_names().iter().any(|s| *s == sec),
+        ..SocketSpec::default()
+    };
+    if let Some(tok) = doc.get_str(sec, "transport") {
+        spec.transport = TransportKind::parse(&tok)
+            .ok_or_else(|| Error::Config(format!("unknown socket transport '{tok}'")))?;
+    }
+    if let Some(dir) = doc.get_str(sec, "dir") {
+        spec.dir = Some(dir.into());
+    }
+    if let Some(host) = doc.get_str(sec, "host") {
+        spec.host = host;
+    }
+    if let Some(port) = doc.get_num(sec, "port") {
+        if port < 0.0 || port > u16::MAX as f64 || port.fract() != 0.0 {
+            return Err(Error::Config(format!(
+                "socket.port must be an integer in 0..={}, got {port}",
+                u16::MAX
+            )));
+        }
+        spec.port = port as u16;
+    }
+    for (key, slot) in [
+        ("accept_timeout_secs", &mut spec.accept_timeout),
+        ("recv_deadline_secs", &mut spec.recv_deadline),
+    ] {
+        if let Some(v) = doc.get_num(sec, key) {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(Error::Config(format!(
+                    "socket.{key} must be a positive number of seconds, got {v}"
+                )));
+            }
+            *slot = std::time::Duration::from_secs_f64(v);
+        }
+    }
+    if let Some(v) = doc.get_num(sec, "time_scale") {
+        if !v.is_finite() || v < 0.0 {
+            return Err(Error::Config(format!(
+                "socket.time_scale must be finite and >= 0, got {v}"
+            )));
+        }
+        spec.time_scale = v;
+    }
+    if let Some(exe) = doc.get_str(sec, "worker_exe") {
+        spec.worker_exe = Some(exe.into());
+    }
+    Ok(spec)
+}
+
 /// Parse an optional comma-separated f64 list from a config key.
 fn parse_f64_list(doc: &ConfigDoc, sec: &str, key: &str) -> Result<Vec<f64>> {
     match doc.get_list(sec, key) {
@@ -352,7 +422,7 @@ pub fn run_config_from_doc(doc: &ConfigDoc) -> Result<(RunConfig, DatasetName)> 
     }
     if let Some(v) = doc.get_str(sec, "backend") {
         cfg.backend = BackendKind::parse(&v).ok_or_else(|| {
-            Error::Config(format!("unknown backend '{v}' (expected sim or threaded)"))
+            Error::Config(format!("unknown backend '{v}' (expected sim, threaded or socket)"))
         })?;
     }
     if let Some(v) = doc.get_str(sec, "traversal") {
@@ -409,6 +479,9 @@ pub fn run_config_from_doc(doc: &ConfigDoc) -> Result<(RunConfig, DatasetName)> 
     // Membership dynamics ([topology] table; distinct from the [run]
     // `topology` key above, which picks the graph *shape*).
     cfg.dynamics = topology_spec_from_doc(doc)?;
+    // Socket-backend deployment knobs ([socket] table); its presence is
+    // the opt-in gate for backend = socket.
+    cfg.socket = socket_spec_from_doc(doc)?;
     // Token codec ([comm] table); the legacy [run] quantize_bits key
     // keeps working as the q<bits> alias.
     cfg.comm = comm_spec_from_doc(doc)?;
@@ -527,6 +600,66 @@ delay = 0.01
         assert_eq!(cfg.backend, BackendKind::Sim);
         let bad = ConfigDoc::parse("[run]\nbackend = quantum\n").unwrap();
         assert!(run_config_from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn socket_table_round_trip() {
+        let text = r#"
+[run]
+backend = socket
+
+[socket]
+transport = tcp
+host = 10.0.0.7
+port = 9000
+accept_timeout_secs = 2.5
+recv_deadline_secs = 1
+time_scale = 0
+worker_exe = /opt/csadmm/bin/csadmm
+"#;
+        let doc = ConfigDoc::parse(text).unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.backend, BackendKind::Socket);
+        assert!(cfg.socket.configured);
+        assert_eq!(cfg.socket.transport, TransportKind::Tcp);
+        assert_eq!(cfg.socket.host, "10.0.0.7");
+        assert_eq!(cfg.socket.port, 9000);
+        assert_eq!(cfg.socket.accept_timeout, std::time::Duration::from_millis(2_500));
+        assert_eq!(cfg.socket.recv_deadline, std::time::Duration::from_secs(1));
+        assert_eq!(cfg.socket.time_scale, 0.0);
+        assert_eq!(
+            cfg.socket.worker_exe.as_deref(),
+            Some(std::path::Path::new("/opt/csadmm/bin/csadmm"))
+        );
+        // An empty table still counts as configured (the opt-in gate)…
+        let doc = ConfigDoc::parse("[run]\nbackend = socket\n\n[socket]\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert!(cfg.socket.configured);
+        // …and backend = socket without the table is a config error.
+        let doc = ConfigDoc::parse("[run]\nbackend = socket\n").unwrap();
+        match run_config_from_doc(&doc).err() {
+            Some(Error::Config(msg)) => assert!(msg.contains("[socket]"), "{msg}"),
+            other => panic!("expected Error::Config, got {other:?}"),
+        }
+        // A [socket] table without backend = socket is inert.
+        let doc = ConfigDoc::parse("[socket]\ntime_scale = 0\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.backend, BackendKind::Sim);
+        // Degenerate knobs are config errors, not runtime surprises.
+        for bad in [
+            "[socket]\ntransport = carrier-pigeon\n",
+            "[socket]\nport = 70000\n",
+            "[socket]\nport = -1\n",
+            "[socket]\nport = 80.5\n",
+            "[socket]\naccept_timeout_secs = 0\n",
+            "[socket]\nrecv_deadline_secs = -2\n",
+            "[socket]\ntime_scale = -1\n",
+        ] {
+            assert!(
+                run_config_from_doc(&ConfigDoc::parse(bad).unwrap()).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
     }
 
     #[test]

@@ -4,11 +4,11 @@
 
 use crate::admm::{iadmm_step, AdmmParams, ConsensusState};
 use crate::coding::SchemeKind;
-use crate::comm::{CodecKind, CodecSpec, TokenCodec};
+use crate::comm::{CodecKind, CodecSpec, TokenCodec, TokenDecoder, TokenLink};
 use crate::data::{shard_to_agents, Dataset};
 use crate::ecn::{
     BackendKind, CommModel, EcnPool, GradientBackend, ResponseModel, RoundOutcome, SimBackend,
-    SimClock, ThreadedBackend,
+    SimClock, SocketBackend, SocketSpec, ThreadedBackend,
 };
 use crate::error::{Error, Result};
 use crate::graph::{Topology, TraversalKind};
@@ -95,6 +95,13 @@ pub struct RunConfig {
     /// backend additionally reports real wall-clock through
     /// [`Driver::backend_real_elapsed`].
     pub backend: BackendKind,
+    /// Socket-backend deployment knobs (`[socket]` table / the
+    /// `--socket-*` flags): transport (unix/tcp), bind address,
+    /// accept/recv deadlines, injected-sleep scale and the worker
+    /// binary. `backend = socket` refuses to run until the table is
+    /// present ([`Self::validate`]), so a config can't silently spawn
+    /// worker processes.
+    pub socket: SocketSpec,
     /// Token codec on the agent-link wire (`[comm]` table /
     /// `--compress`): which compressor of the [`crate::comm`] zoo
     /// encodes the z-token on every hop, and whether it carries
@@ -139,6 +146,7 @@ impl Default for RunConfig {
             response: ResponseModel::default(),
             latency: LatencySpec::default(),
             backend: BackendKind::Sim,
+            socket: SocketSpec::default(),
             comm: CodecSpec::default(),
             comm_model: CommModel::default(),
             dynamics: TopologySpec::default(),
@@ -240,6 +248,14 @@ impl RunConfig {
         if self.eval_every == 0 {
             return Err(Error::Config(
                 "eval_every must be at least 1 (the trace records every eval_every-th iterate)"
+                    .into(),
+            ));
+        }
+        if self.backend == BackendKind::Socket && !self.socket.configured {
+            return Err(Error::Config(
+                "backend = socket spawns one real worker process per ECN and needs a \
+                 [socket] table (even an empty one) to opt in; add `[socket]` to the \
+                 config, or use --backend sim|threaded"
                     .into(),
             ));
         }
@@ -357,6 +373,28 @@ impl Driver {
                     )?));
                     objectives.push(obj);
                 }
+                BackendKind::Socket => {
+                    // Same shard bytes on both sides of the socket: the
+                    // coordinator keeps its own objective for x*/exact
+                    // paths while the Init frame ships a copy to each
+                    // worker process.
+                    let obj = cfg.objective.build(shard.data.clone());
+                    pools.push(Box::new(SocketBackend::with_spec(
+                        shard.agent,
+                        cfg.objective,
+                        shard.data,
+                        scheme,
+                        s_design,
+                        code_seed,
+                        cfg.k_ecn,
+                        per_part,
+                        cfg.response.clone(),
+                        &cfg.latency,
+                        pool_rng,
+                        &cfg.socket,
+                    )?));
+                    objectives.push(obj);
+                }
             }
         }
         // Reference optimum x* (Eq. 23): least squares takes the
@@ -449,6 +487,16 @@ impl Driver {
             trace.codec = Some(codec_spec.as_str());
         }
         let mut comm_rng = rng.split();
+        // Socket backend: every z-hop genuinely crosses a loopback
+        // socket pair — the codec's wire payload is framed, shipped and
+        // reconstructed by the receiver-side decoder twin, bit-for-bit
+        // equal to the in-place transmit the other backends use.
+        let mut token_link = match cfg.backend {
+            BackendKind::Socket => {
+                Some((TokenLink::loopback()?, TokenDecoder::new(&codec_spec, cfg.seed)))
+            }
+            _ => None,
+        };
 
         for k in 1..=cfg.max_iters {
             let step = planner.next(k)?;
@@ -457,7 +505,12 @@ impl Driver {
             // configured codec (each relay hop retransmits the encoded
             // token, so bytes are charged per hop).
             if hops > 0 {
-                let cost = codec.transmit(&mut state.z);
+                let cost = match token_link.as_mut() {
+                    Some((link, decoder)) => {
+                        link.transmit(codec.as_mut(), &mut state.z, decoder)?
+                    }
+                    None => codec.transmit(&mut state.z),
+                };
                 comm.charge_transfer(hops, cost);
             }
             clock.advance(cfg.comm_model.sample_hops(hops, &mut comm_rng));

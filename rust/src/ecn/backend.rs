@@ -18,8 +18,17 @@
 //!   shared), while the wall clock genuinely elapses on hardware —
 //!   see [`GradientBackend::real_elapsed`].
 //!
+//! * [`SocketBackend`](super::SocketBackend) — one real OS *process*
+//!   per ECN (`csadmm worker` subcommand), work orders and coded
+//!   responses framed over a genuine Unix-domain or TCP socket
+//!   ([`crate::comm::FrameKind`] frames), dead peers watchdogged into
+//!   [`crate::error::Error::Runtime`]. Same draws, same decode walk,
+//!   same bytes — with real network I/O in
+//!   [`GradientBackend::real_elapsed`].
+//!
 //! [`BackendKind`] is the config/CLI selector (`[run] backend`,
-//! `--backend sim|threaded`) and the `[sweep] backend` axis element.
+//! `--backend sim|threaded|socket`) and the `[sweep] backend` axis
+//! element.
 
 use super::pool::{EcnPool, RoundOutcome};
 use crate::error::Result;
@@ -38,6 +47,10 @@ pub enum BackendKind {
     /// ECN, service delays injected as scaled real sleeps from the same
     /// model draws.
     Threaded,
+    /// Real OS processes + real sockets ([`super::SocketBackend`]) —
+    /// one `csadmm worker` process per ECN, frames on a Unix-domain or
+    /// TCP link; requires a `[socket]` table in the config.
+    Socket,
 }
 
 impl BackendKind {
@@ -46,6 +59,7 @@ impl BackendKind {
         match s {
             "sim" | "simulated" => Some(BackendKind::Sim),
             "threaded" | "threads" | "real" => Some(BackendKind::Threaded),
+            "socket" | "sockets" => Some(BackendKind::Socket),
             _ => None,
         }
     }
@@ -55,6 +69,7 @@ impl BackendKind {
         match self {
             BackendKind::Sim => "sim",
             BackendKind::Threaded => "threaded",
+            BackendKind::Socket => "socket",
         }
     }
 }
@@ -143,11 +158,12 @@ mod tests {
 
     #[test]
     fn kind_parse_round_trips_as_str() {
-        for token in ["sim", "threaded"] {
+        for token in ["sim", "threaded", "socket"] {
             let kind = BackendKind::parse(token).unwrap();
             assert_eq!(kind.as_str(), token);
         }
         assert_eq!(BackendKind::parse("real"), Some(BackendKind::Threaded));
+        assert_eq!(BackendKind::parse("sockets"), Some(BackendKind::Socket));
         assert!(BackendKind::parse("nope").is_none());
         assert_eq!(BackendKind::default(), BackendKind::Sim);
     }

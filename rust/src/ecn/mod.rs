@@ -22,19 +22,25 @@
 //!   arrival-time sampler both backends consume.
 //! * [`GradientBackend`] — the coordinator/ECN execution boundary
 //!   ([`BackendKind`] selects it via `[run] backend` / `--backend`):
-//!   [`SimBackend`] wraps the simulated pool byte-identically, and
+//!   [`SimBackend`] wraps the simulated pool byte-identically,
 //!   [`ThreadedBackend`] runs the same round on one real OS thread per
 //!   ECN — objective-generic gradients, latency-zoo service delays as
 //!   scaled real sleeps from the same model draws, fail-stop faults,
 //!   `recv_timeout`-watchdogged channel waits, and the same
-//!   [`RoundOutcome`] deadline semantics.
+//!   [`RoundOutcome`] deadline semantics — and [`SocketBackend`] runs
+//!   it on one real OS *process* per ECN (`csadmm worker`), work
+//!   orders and coded responses crossing a genuine Unix-domain or TCP
+//!   socket as checksummed [`crate::comm::FrameKind`] frames, dead peers
+//!   surfacing as watchdogged `Error::Runtime` instead of hangs.
 
 mod backend;
 mod clock;
 mod pool;
+mod socket;
 mod threaded;
 
 pub use backend::{BackendKind, GradientBackend, SimBackend};
 pub use clock::{CommModel, SimClock};
 pub use pool::{ArrivalDraw, EcnPool, ResponseModel, RoundOutcome, RoundResult};
+pub use socket::{run_worker, SocketBackend, SocketSpec, TransportKind};
 pub use threaded::ThreadedBackend;

@@ -1,0 +1,1086 @@
+//! Real-network ECN backend: one OS *process* per ECN, frames on a
+//! real socket.
+//!
+//! [`SocketBackend`] is the deployment-shaped sibling of
+//! [`super::ThreadedBackend`]: each ECN runs as a separate worker
+//! process (the `csadmm worker` subcommand, spawned by the
+//! coordinator), and every work order, coded partial gradient and
+//! z-token genuinely crosses a `std::net` link — a Unix-domain socket
+//! by default, TCP loopback on request — serialized through the
+//! length-prefixed, versioned, checksummed frames of the wire layer
+//! ([`crate::comm::FrameKind`]). The `WireLedger`'s byte books stop being
+//! simulated: the payload the ledger charges is byte-for-byte the
+//! payload the kernel carries.
+//!
+//! Byte parity with the simulated backend holds by the same two rules
+//! `ThreadedBackend` proves:
+//!
+//! * **Same draws.** Scheduling is driven by the shared
+//!   [`EcnPool::draw_arrivals`] sampler; workers *sleep* their drawn
+//!   service time (scaled by `time_scale`) before responding, and the
+//!   `[latency] deadline` policy is decided by the modeled times, never
+//!   the real clock.
+//! * **Same decode walk.** The coordinator consumes responses in drawn
+//!   arrival order, decoding from the earliest decodable prefix;
+//!   fail-stopped ECNs (`t = ∞`) receive no work order and are never
+//!   waited on.
+//!
+//! What the real link adds is real failure modes, and they all map onto
+//! the existing fail-stop machinery instead of hangs:
+//!
+//! * **Connection reset / worker killed** — the per-worker stream hits
+//!   EOF or ECONNRESET, or the watchdog's liveness probe
+//!   (`Child::try_wait`) sees the process gone: [`Error::Runtime`]
+//!   within one [`WORKER_WATCHDOG`] tick.
+//! * **Accept timeout** — a worker that never connects fails
+//!   construction after [`SocketSpec::accept_timeout`].
+//! * **Half-open socket** — a peer that is alive but wedged (neither
+//!   data nor EOF) trips the per-wait [`SocketSpec::recv_deadline`].
+//!
+//! Cumulative real wall-clock spent inside rounds — now including
+//! genuine network I/O and kernel scheduling — is reported through
+//! [`GradientBackend::real_elapsed`].
+
+use super::backend::GradientBackend;
+use super::pool::{ArrivalDraw, EcnPool, ResponseModel, RoundOutcome, RoundResult};
+use crate::coding::SchemeKind;
+use crate::comm::{read_frame_opt, write_frame, ByteReader, ByteWriter, FrameBuffer, FrameKind};
+use crate::data::Split;
+use crate::error::{Error, Result};
+use crate::latency::LatencySpec;
+use crate::linalg::Matrix;
+use crate::problem::ObjectiveKind;
+use crate::rng::Xoshiro256pp;
+use crate::runtime::{Engine, NativeEngine};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Upper bound on one injected sleep (seconds of *real* time) — same
+/// rationale as the threaded backend: a pathological tail draw must not
+/// park a worker process for minutes; the modeled time is unaffected.
+const MAX_INJECTED_SLEEP: f64 = 1.0;
+
+/// Watchdog interval for socket waits: every time it elapses without a
+/// complete frame, the awaited worker *process* is checked for liveness
+/// and the wait is checked against the recv deadline.
+const WORKER_WATCHDOG: Duration = Duration::from_millis(500);
+
+/// Polling granularity of the non-blocking accept loop.
+const ACCEPT_SLICE: Duration = Duration::from_millis(10);
+
+/// Distinguishes concurrently-constructed backends' socket files.
+static SOCKET_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Which `std::net` flavor carries the frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Unix-domain stream socket (default on unix; zero-config
+    /// loopback).
+    Unix,
+    /// TCP (loopback by default; `[socket] host`/`port` for real
+    /// deployments).
+    Tcp,
+}
+
+impl Default for TransportKind {
+    fn default() -> Self {
+        if cfg!(unix) {
+            TransportKind::Unix
+        } else {
+            TransportKind::Tcp
+        }
+    }
+}
+
+impl TransportKind {
+    /// Parse from a config/CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "unix" | "uds" => Some(TransportKind::Unix),
+            "tcp" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+
+    /// Canonical config/CLI string.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportKind::Unix => "unix",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Socket-backend deployment parameters: the `[socket]` config table.
+#[derive(Clone, Debug)]
+pub struct SocketSpec {
+    /// Link flavor (`unix` default on unix, `tcp` elsewhere).
+    pub transport: TransportKind,
+    /// Directory for Unix-domain socket files (default: the OS temp
+    /// dir).
+    pub dir: Option<PathBuf>,
+    /// TCP bind host (default loopback).
+    pub host: String,
+    /// TCP base port: `0` (default) binds an ephemeral port per agent;
+    /// a nonzero base binds `port + agent`.
+    pub port: u16,
+    /// How long construction waits for every worker to connect and
+    /// complete the handshake.
+    pub accept_timeout: Duration,
+    /// Per-wait ceiling on one worker response — the half-open-peer
+    /// guard (a worker that is alive but wedged trips this instead of
+    /// hanging the round).
+    pub recv_deadline: Duration,
+    /// Real seconds slept per modeled second (1.0 = the drawn times;
+    /// 0.0 disables sleeping — the parity-test setting).
+    pub time_scale: f64,
+    /// Worker executable (default: the current executable — the
+    /// coordinator binary doubles as the worker via `csadmm worker`).
+    pub worker_exe: Option<PathBuf>,
+    /// Whether a `[socket]` table was present in the config: `--backend
+    /// socket` without one is rejected at validation.
+    pub configured: bool,
+}
+
+impl Default for SocketSpec {
+    fn default() -> Self {
+        Self {
+            transport: TransportKind::default(),
+            dir: None,
+            host: "127.0.0.1".into(),
+            port: 0,
+            accept_timeout: Duration::from_secs(10),
+            recv_deadline: Duration::from_secs(30),
+            time_scale: 1.0,
+            worker_exe: None,
+            configured: false,
+        }
+    }
+}
+
+impl SocketSpec {
+    /// A configured loopback spec with sleeping disabled — what the
+    /// parity tests and CI smokes run.
+    pub fn loopback() -> Self {
+        Self { time_scale: 0.0, configured: true, ..Self::default() }
+    }
+}
+
+/// One connected worker stream (either transport), unified behind
+/// `Read`/`Write`.
+enum WorkerStream {
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Read for WorkerStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            WorkerStream::Unix(s) => s.read(buf),
+            WorkerStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for WorkerStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            WorkerStream::Unix(s) => s.write(buf),
+            WorkerStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            WorkerStream::Unix(s) => s.flush(),
+            WorkerStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+impl WorkerStream {
+    fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            WorkerStream::Unix(s) => s.set_read_timeout(t),
+            WorkerStream::Tcp(s) => s.set_read_timeout(t),
+        }
+    }
+
+    fn set_blocking(&self) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            WorkerStream::Unix(s) => s.set_nonblocking(false),
+            WorkerStream::Tcp(s) => s.set_nonblocking(false),
+        }
+    }
+}
+
+/// The coordinator's listening endpoint.
+enum Listener {
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(true),
+            Listener::Tcp(l) => l.set_nonblocking(true),
+        }
+    }
+
+    /// Non-blocking accept: `Ok(None)` when no connection is pending.
+    fn try_accept(&self) -> Result<Option<WorkerStream>> {
+        let got = match self {
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| WorkerStream::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                s.set_nodelay(true).ok();
+                WorkerStream::Tcp(s)
+            }),
+        };
+        match got {
+            Ok(s) => Ok(Some(s)),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(Error::Runtime(format!("socket backend: accept failed: {e}"))),
+        }
+    }
+}
+
+/// One spawned ECN worker: its process handle, its stream and the
+/// incremental frame parser over that stream.
+struct WorkerConn {
+    child: Child,
+    stream: WorkerStream,
+    buf: FrameBuffer,
+}
+
+/// Process-per-ECN gradient backend over one agent's shard.
+pub struct SocketBackend {
+    /// Simulated-pool core: geometry, latency state and the rng — the
+    /// single source of every draw (the byte-parity contract).
+    pool: EcnPool,
+    workers: Vec<WorkerConn>,
+    time_scale: f64,
+    recv_deadline: Duration,
+    /// Socket file to unlink on drop (already unlinked post-handshake
+    /// in the normal path; kept for the early-failure path).
+    socket_path: Option<PathBuf>,
+    round_id: u64,
+    real_elapsed: Duration,
+}
+
+impl SocketBackend {
+    /// Build the backend: an [`EcnPool`] core for draws/geometry plus
+    /// one worker *process* per ECN, spawned from
+    /// [`SocketSpec::worker_exe`] as `csadmm worker --transport …
+    /// --connect … --ecn j`, connected through a fresh listener and
+    /// initialized over the wire (objective, shard, code construction —
+    /// [`SchemeKind::build`] is deterministic in its inputs, so
+    /// worker-side encoding and coordinator-side decoding agree).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_spec(
+        agent: usize,
+        objective: ObjectiveKind,
+        shard: Split,
+        scheme: SchemeKind,
+        s_design: usize,
+        code_seed: u64,
+        k_ecn: usize,
+        per_partition_batch_rows: usize,
+        response: ResponseModel,
+        latency: &LatencySpec,
+        rng: Xoshiro256pp,
+        spec: &SocketSpec,
+    ) -> Result<Self> {
+        if !spec.time_scale.is_finite() || spec.time_scale < 0.0 {
+            return Err(Error::Config(format!(
+                "socket backend time_scale must be finite and >= 0, got {}",
+                spec.time_scale
+            )));
+        }
+        // Listener first, workers second: a spawned worker must find
+        // someone to connect to.
+        let (listener, connect_addr, socket_path) = bind_listener(agent, spec)?;
+        let exe = match &spec.worker_exe {
+            Some(p) => p.clone(),
+            None => std::env::current_exe().map_err(|e| {
+                Error::Runtime(format!("socket backend: cannot locate worker executable: {e}"))
+            })?,
+        };
+        let mut children: Vec<Child> = Vec::with_capacity(k_ecn);
+        for j in 0..k_ecn {
+            let spawned = Command::new(&exe)
+                .arg("worker")
+                .arg("--transport")
+                .arg(spec.transport.as_str())
+                .arg("--connect")
+                .arg(&connect_addr)
+                .arg("--ecn")
+                .arg(j.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn();
+            match spawned {
+                Ok(c) => children.push(c),
+                Err(e) => {
+                    reap(&mut children);
+                    remove_socket_file(&socket_path);
+                    return Err(Error::Runtime(format!(
+                        "socket backend: spawning ECN worker {j} ({}): {e}",
+                        exe.display()
+                    )));
+                }
+            }
+        }
+        let init = InitParams {
+            objective,
+            shard: &shard,
+            scheme,
+            s_design,
+            code_seed,
+            k_ecn,
+        };
+        let streams = match accept_workers(&listener, &mut children, spec, &init) {
+            Ok(s) => s,
+            Err(e) => {
+                reap(&mut children);
+                remove_socket_file(&socket_path);
+                return Err(e);
+            }
+        };
+        // Every worker is connected: the filesystem name has done its
+        // job (established links survive the unlink).
+        remove_socket_file(&socket_path);
+        let workers = children
+            .into_iter()
+            .zip(streams)
+            .map(|(child, stream)| WorkerConn { child, stream, buf: FrameBuffer::new() })
+            .collect();
+        let pool = EcnPool::with_latency(
+            agent,
+            objective.build(shard),
+            scheme.build(k_ecn, s_design, code_seed)?,
+            per_partition_batch_rows,
+            response,
+            latency,
+            rng,
+        )?;
+        Ok(Self {
+            pool,
+            workers,
+            time_scale: spec.time_scale,
+            recv_deadline: spec.recv_deadline,
+            socket_path: None,
+            round_id: 0,
+            real_elapsed: Duration::ZERO,
+        })
+    }
+
+    /// Real seconds slept per modeled second.
+    pub fn time_scale(&self) -> f64 {
+        self.time_scale
+    }
+
+    /// The simulated-pool core (inspection/tests).
+    pub fn pool(&self) -> &EcnPool {
+        &self.pool
+    }
+
+    /// Kill ECN `ecn`'s worker process (fault injection for the
+    /// dead-peer tests): the next round that awaits it must surface
+    /// [`Error::Runtime`] within one watchdog tick instead of hanging.
+    pub fn kill_worker(&mut self, ecn: usize) -> Result<()> {
+        let conn = self.workers.get_mut(ecn).ok_or_else(|| {
+            Error::Config(format!("socket backend: no ECN {ecn} to kill"))
+        })?;
+        conn.child
+            .kill()
+            .map_err(|e| Error::Runtime(format!("socket backend: killing ECN {ecn}: {e}")))?;
+        let _ = conn.child.wait();
+        Ok(())
+    }
+
+    fn round_inner(&mut self, x: &Matrix, cycle: usize, now: f64) -> Result<RoundOutcome> {
+        self.round_id += 1;
+        let id = self.round_id;
+
+        let arrivals = self.pool.draw_arrivals(now);
+        let deadline = self.pool.deadline();
+        let k = self.pool.code().k();
+        let mut t_of = vec![f64::INFINITY; k];
+        for a in &arrivals {
+            t_of[a.ecn] = a.t;
+        }
+        // Ship this round's work orders. Fail-stopped nodes (t = ∞)
+        // get none: they are never waited on, and responses are
+        // id-tagged, so skipping them costs nothing.
+        for j in 0..k {
+            let t = t_of[j];
+            if !t.is_finite() {
+                continue;
+            }
+            let ranges = self.pool.batch_ranges(j, cycle);
+            let sleep = (t * self.time_scale).clamp(0.0, MAX_INJECTED_SLEEP);
+            let mut w = ByteWriter::new();
+            w.put_u64(id);
+            w.put_u32(ranges.len() as u32);
+            for &(lo, hi) in &ranges {
+                w.put_u32(lo as u32);
+                w.put_u32(hi as u32);
+            }
+            w.put_f64(sleep);
+            w.put_matrix(x);
+            let conn = &mut self.workers[j];
+            if write_frame(&mut conn.stream, FrameKind::Work, &w.into_bytes()).is_err() {
+                return Err(worker_died(self.pool.agent(), j));
+            }
+        }
+
+        // Decode walk: identical control flow to the simulated pool's,
+        // except each consumed arrival blocks on the worker's real
+        // framed response. Split borrows so the helper can take the
+        // worker table while the pool stays readable.
+        let Self { ref pool, ref mut workers, recv_deadline, .. } = *self;
+        let r = pool.code().r();
+        let mut arrived: Vec<(usize, Matrix)> = Vec::with_capacity(k);
+        let mut used = 0;
+        let mut response_time = 0.0;
+        let mut waited_for_straggler = false;
+        let mut saw_unreachable = false;
+        let mut decoded: Option<Matrix> = None;
+        for ArrivalDraw { t, ecn: j, straggler } in arrivals {
+            if !t.is_finite() || deadline.is_some_and(|d| t > d) {
+                saw_unreachable |= !t.is_finite();
+                break;
+            }
+            let coded = wait_for_grad(&mut workers[j], id, j, recv_deadline)?;
+            arrived.push((j, coded));
+            used += 1;
+            response_time = t;
+            waited_for_straggler |= straggler;
+            if used < r {
+                continue;
+            }
+            match pool.code().decode(&arrived) {
+                Ok(sum) => {
+                    decoded = Some(sum);
+                    break;
+                }
+                Err(_) if used < k => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        let sum = match decoded {
+            Some(sum) => sum,
+            None => {
+                return if let Some(d) = deadline {
+                    Ok(RoundOutcome::TimedOut { elapsed: d })
+                } else if saw_unreachable {
+                    Err(Error::Latency(format!(
+                        "agent {}: round stalled — fail-stopped ECNs leave no decodable \
+                         subset; set a [latency] deadline or use a coded scheme that \
+                         tolerates the failure",
+                        pool.agent()
+                    )))
+                } else {
+                    Err(Error::Coding(format!("agent {}: round undecodable", pool.agent())))
+                };
+            }
+        };
+        // G = (1/K) Σ_p g̃_p (Eq. 6).
+        let grad = sum.scaled(1.0 / k as f64);
+        Ok(RoundOutcome::Decoded(RoundResult {
+            grad,
+            response_time,
+            responses_used: used,
+            waited_for_straggler,
+        }))
+    }
+}
+
+impl GradientBackend for SocketBackend {
+    /// Worker processes compute on private [`NativeEngine`]s, so a
+    /// coordinator engine with *different* numerics would silently
+    /// break the sim/socket byte-parity contract — such engines are
+    /// rejected up front (same rule as the threaded backend).
+    fn round(
+        &mut self,
+        x: &Matrix,
+        cycle: usize,
+        now: f64,
+        engine: &mut dyn Engine,
+    ) -> Result<RoundOutcome> {
+        let name = engine.name();
+        if name != "native" && name != "pjrt-stub(native)" {
+            return Err(Error::Config(format!(
+                "socket backend computes worker gradients on the native engine; \
+                 coordinator engine '{name}' would break sim/socket byte parity — \
+                 use --backend sim with this engine"
+            )));
+        }
+        let t0 = Instant::now();
+        let out = self.round_inner(x, cycle, now);
+        self.real_elapsed += t0.elapsed();
+        out
+    }
+
+    fn agent(&self) -> usize {
+        self.pool.agent()
+    }
+
+    fn effective_batch(&self) -> usize {
+        self.pool.effective_batch()
+    }
+
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn real_elapsed(&self) -> Option<Duration> {
+        Some(self.real_elapsed)
+    }
+}
+
+impl Drop for SocketBackend {
+    fn drop(&mut self) {
+        // Best-effort polite goodbye, then reap unconditionally — a
+        // wedged worker must not survive its coordinator.
+        for conn in &mut self.workers {
+            let _ = write_frame(&mut conn.stream, FrameKind::Bye, &[]);
+        }
+        for conn in &mut self.workers {
+            let _ = conn.child.kill();
+            let _ = conn.child.wait();
+        }
+        if let Some(p) = self.socket_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Everything the Init frame ships to a worker.
+struct InitParams<'a> {
+    objective: ObjectiveKind,
+    shard: &'a Split,
+    scheme: SchemeKind,
+    s_design: usize,
+    code_seed: u64,
+    k_ecn: usize,
+}
+
+fn bind_listener(
+    agent: usize,
+    spec: &SocketSpec,
+) -> Result<(Listener, String, Option<PathBuf>)> {
+    match spec.transport {
+        TransportKind::Unix => {
+            #[cfg(unix)]
+            {
+                let dir = spec.dir.clone().unwrap_or_else(std::env::temp_dir);
+                let name = format!(
+                    "csadmm-{agent}-{}-{}.sock",
+                    std::process::id(),
+                    SOCKET_COUNTER.fetch_add(1, Ordering::Relaxed)
+                );
+                let path = dir.join(name);
+                // A stale file from a crashed run would fail the bind.
+                let _ = std::fs::remove_file(&path);
+                let listener = std::os::unix::net::UnixListener::bind(&path).map_err(|e| {
+                    Error::Runtime(format!(
+                        "socket backend: binding unix socket {}: {e}",
+                        path.display()
+                    ))
+                })?;
+                let addr = path.to_string_lossy().into_owned();
+                Ok((Listener::Unix(listener), addr, Some(path)))
+            }
+            #[cfg(not(unix))]
+            {
+                Err(Error::Config(
+                    "socket backend: unix transport is unavailable on this platform; \
+                     set [socket] transport = \"tcp\""
+                        .into(),
+                ))
+            }
+        }
+        TransportKind::Tcp => {
+            let port = if spec.port == 0 {
+                0
+            } else {
+                let p = spec.port as u32 + agent as u32;
+                u16::try_from(p).map_err(|_| {
+                    Error::Config(format!(
+                        "socket backend: base port {} + agent {agent} exceeds 65535",
+                        spec.port
+                    ))
+                })?
+            };
+            let listener = TcpListener::bind((spec.host.as_str(), port)).map_err(|e| {
+                Error::Runtime(format!(
+                    "socket backend: binding {}:{port}: {e}",
+                    spec.host
+                ))
+            })?;
+            let local = listener
+                .local_addr()
+                .map_err(|e| Error::Runtime(format!("socket backend: local_addr: {e}")))?;
+            Ok((Listener::Tcp(listener), local.to_string(), None))
+        }
+    }
+}
+
+/// Accept all `k_ecn` workers, handshake each (Hello in, Init out) and
+/// return their streams ordered by ECN index. Fails within
+/// `accept_timeout` when a worker never connects (or died on startup).
+fn accept_workers(
+    listener: &Listener,
+    children: &mut [Child],
+    spec: &SocketSpec,
+    init: &InitParams<'_>,
+) -> Result<Vec<WorkerStream>> {
+    let k = children.len();
+    listener
+        .set_nonblocking()
+        .map_err(|e| Error::Runtime(format!("socket backend: listener nonblocking: {e}")))?;
+    let mut slots: Vec<Option<WorkerStream>> = (0..k).map(|_| None).collect();
+    let mut connected = 0;
+    let started = Instant::now();
+    while connected < k {
+        match listener.try_accept()? {
+            Some(stream) => {
+                // Accepted sockets may inherit non-blocking mode on
+                // some platforms — force blocking explicitly, with the
+                // handshake bounded by a read timeout.
+                stream.set_blocking().map_err(|e| {
+                    Error::Runtime(format!("socket backend: stream blocking mode: {e}"))
+                })?;
+                stream.set_read_timeout(Some(spec.accept_timeout)).map_err(|e| {
+                    Error::Runtime(format!("socket backend: handshake timeout: {e}"))
+                })?;
+                let ecn = handshake(stream, init, &mut slots)?;
+                slots[ecn]
+                    .as_ref()
+                    .expect("handshake stores the stream")
+                    .set_read_timeout(Some(WORKER_WATCHDOG))
+                    .map_err(|e| {
+                        Error::Runtime(format!("socket backend: watchdog timeout: {e}"))
+                    })?;
+                connected += 1;
+            }
+            None => {
+                // No pending connection: check for workers that died on
+                // startup (bad exe, immediate crash) and the deadline.
+                for (j, child) in children.iter_mut().enumerate() {
+                    if slots[j].is_none() {
+                        if let Ok(Some(status)) = child.try_wait() {
+                            return Err(Error::Runtime(format!(
+                                "socket backend: ECN {j} worker exited before \
+                                 connecting ({status})"
+                            )));
+                        }
+                    }
+                }
+                if started.elapsed() > spec.accept_timeout {
+                    let missing: Vec<usize> = slots
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(j, s)| s.is_none().then_some(j))
+                        .collect();
+                    return Err(Error::Runtime(format!(
+                        "socket backend: workers {missing:?} did not connect within \
+                         {:?}",
+                        spec.accept_timeout
+                    )));
+                }
+                std::thread::sleep(ACCEPT_SLICE);
+            }
+        }
+    }
+    Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+}
+
+/// One worker handshake: read its Hello, place the stream in its ECN
+/// slot, reply with the Init frame. Returns the ECN index.
+fn handshake(
+    mut stream: WorkerStream,
+    init: &InitParams<'_>,
+    slots: &mut [Option<WorkerStream>],
+) -> Result<usize> {
+    let (kind, payload) = match read_frame_opt(&mut stream)? {
+        Some(f) => f,
+        None => {
+            return Err(Error::Runtime(
+                "socket backend: worker hung up before Hello".into(),
+            ))
+        }
+    };
+    if kind != FrameKind::Hello {
+        return Err(Error::Runtime(format!(
+            "socket backend: expected Hello, got {kind:?}"
+        )));
+    }
+    let mut r = ByteReader::new(&payload);
+    let ecn = r.get_u32()? as usize;
+    if ecn >= slots.len() {
+        return Err(Error::Runtime(format!(
+            "socket backend: Hello from unknown ECN {ecn} (k = {})",
+            slots.len()
+        )));
+    }
+    if slots[ecn].is_some() {
+        return Err(Error::Runtime(format!(
+            "socket backend: duplicate Hello from ECN {ecn}"
+        )));
+    }
+    let mut w = ByteWriter::new();
+    put_objective(&mut w, init.objective);
+    w.put_u8(scheme_tag(init.scheme));
+    w.put_u32(init.s_design as u32);
+    w.put_u64(init.code_seed);
+    w.put_u32(init.k_ecn as u32);
+    w.put_u32(ecn as u32);
+    w.put_matrix(&init.shard.inputs);
+    w.put_matrix(&init.shard.targets);
+    write_frame(&mut stream, FrameKind::Init, &w.into_bytes())?;
+    slots[ecn] = Some(stream);
+    Ok(ecn)
+}
+
+/// Wait for ECN `ecn`'s Grad response to round `id`, skipping stale
+/// rounds (work orders the coordinator resolved without this worker).
+/// Frames are reassembled incrementally across [`WORKER_WATCHDOG`]
+/// read timeouts; on every quiet tick the worker *process* is probed
+/// for liveness and the wait is checked against `recv_deadline` — a
+/// dead or half-open peer is an error within a bounded time, never a
+/// hang. The real clock never decides `TimedOut`; the modeled deadline
+/// policy in the caller does (the byte-parity contract).
+fn wait_for_grad(
+    conn: &mut WorkerConn,
+    id: u64,
+    ecn: usize,
+    recv_deadline: Duration,
+) -> Result<Matrix> {
+    let started = Instant::now();
+    let mut chunk = [0u8; 64 * 1024];
+    loop {
+        // Drain complete frames already buffered before touching the
+        // socket again.
+        while let Some((kind, payload)) = conn.buf.next_frame()? {
+            if kind != FrameKind::Grad {
+                return Err(Error::Runtime(format!(
+                    "socket backend: ECN {ecn}: expected Grad, got {kind:?}"
+                )));
+            }
+            let mut r = ByteReader::new(&payload);
+            let gid = r.get_u64()?;
+            if gid < id {
+                continue; // a stale round this worker finished late
+            }
+            if gid > id {
+                return Err(Error::Runtime(format!(
+                    "socket backend: ECN {ecn}: response stream desynchronized \
+                     (got round {gid}, awaiting {id})"
+                )));
+            }
+            return r.get_matrix();
+        }
+        match conn.stream.read(&mut chunk) {
+            Ok(0) => {
+                return Err(Error::Runtime(format!(
+                    "socket backend: ECN {ecn} closed its connection mid-round \
+                     (worker process died?)"
+                )))
+            }
+            Ok(n) => conn.buf.extend(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Watchdog tick: no bytes. Dead process? Wedged peer?
+                if let Ok(Some(status)) = conn.child.try_wait() {
+                    return Err(Error::Runtime(format!(
+                        "socket backend: ECN {ecn} worker process exited mid-round \
+                         ({status})"
+                    )));
+                }
+                if started.elapsed() > recv_deadline {
+                    return Err(Error::Runtime(format!(
+                        "socket backend: ECN {ecn}: no response within the \
+                         {recv_deadline:?} recv deadline (half-open socket?)"
+                    )));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                return Err(Error::Runtime(format!(
+                    "socket backend: ECN {ecn}: read failed: {e} \
+                     (connection reset?)"
+                )))
+            }
+        }
+    }
+}
+
+fn worker_died(agent: usize, ecn: usize) -> Error {
+    Error::Runtime(format!(
+        "agent {agent}: ECN {ecn} worker process is gone (connection reset?)"
+    ))
+}
+
+fn reap(children: &mut Vec<Child>) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    children.clear();
+}
+
+fn remove_socket_file(path: &Option<PathBuf>) {
+    if let Some(p) = path {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+fn put_objective(w: &mut ByteWriter, kind: ObjectiveKind) {
+    match kind {
+        ObjectiveKind::LeastSquares => {
+            w.put_u8(0);
+            w.put_f64(0.0);
+            w.put_f64(0.0);
+        }
+        ObjectiveKind::Logistic { lambda } => {
+            w.put_u8(1);
+            w.put_f64(lambda);
+            w.put_f64(0.0);
+        }
+        ObjectiveKind::Huber { delta } => {
+            w.put_u8(2);
+            w.put_f64(delta);
+            w.put_f64(0.0);
+        }
+        ObjectiveKind::ElasticNet { l1, l2 } => {
+            w.put_u8(3);
+            w.put_f64(l1);
+            w.put_f64(l2);
+        }
+    }
+}
+
+fn get_objective(r: &mut ByteReader<'_>) -> Result<ObjectiveKind> {
+    let tag = r.get_u8()?;
+    let a = r.get_f64()?;
+    let b = r.get_f64()?;
+    match tag {
+        0 => Ok(ObjectiveKind::LeastSquares),
+        1 => Ok(ObjectiveKind::Logistic { lambda: a }),
+        2 => Ok(ObjectiveKind::Huber { delta: a }),
+        3 => Ok(ObjectiveKind::ElasticNet { l1: a, l2: b }),
+        t => Err(Error::Runtime(format!("worker: unknown objective tag {t}"))),
+    }
+}
+
+fn scheme_tag(s: SchemeKind) -> u8 {
+    match s {
+        SchemeKind::Uncoded => 0,
+        SchemeKind::Fractional => 1,
+        SchemeKind::Cyclic => 2,
+    }
+}
+
+fn get_scheme(r: &mut ByteReader<'_>) -> Result<SchemeKind> {
+    match r.get_u8()? {
+        0 => Ok(SchemeKind::Uncoded),
+        1 => Ok(SchemeKind::Fractional),
+        2 => Ok(SchemeKind::Cyclic),
+        t => Err(Error::Runtime(format!("worker: unknown scheme tag {t}"))),
+    }
+}
+
+/// Body of one ECN worker *process* (the `csadmm worker` subcommand):
+/// connect back to the coordinator, introduce itself, receive its
+/// initialization (objective, shard, code construction) and serve
+/// round requests until the coordinator says Bye or hangs up.
+///
+/// A gradient failure exits cleanly (closing the stream) instead of
+/// panicking — the coordinator's watchdog converts the EOF/dead process
+/// into [`Error::Runtime`] through the normal round path.
+pub fn run_worker(transport: TransportKind, connect: &str, ecn: usize) -> Result<()> {
+    let mut stream = match transport {
+        TransportKind::Unix => {
+            #[cfg(unix)]
+            {
+                WorkerStream::Unix(std::os::unix::net::UnixStream::connect(connect).map_err(
+                    |e| Error::Runtime(format!("worker {ecn}: connecting to {connect}: {e}")),
+                )?)
+            }
+            #[cfg(not(unix))]
+            {
+                return Err(Error::Config(
+                    "worker: unix transport is unavailable on this platform".into(),
+                ));
+            }
+        }
+        TransportKind::Tcp => {
+            let s = TcpStream::connect(connect).map_err(|e| {
+                Error::Runtime(format!("worker {ecn}: connecting to {connect}: {e}"))
+            })?;
+            s.set_nodelay(true).ok();
+            WorkerStream::Tcp(s)
+        }
+    };
+    let mut hello = ByteWriter::new();
+    hello.put_u32(ecn as u32);
+    write_frame(&mut stream, FrameKind::Hello, &hello.into_bytes())?;
+
+    let (kind, payload) = match read_frame_opt(&mut stream)? {
+        Some(f) => f,
+        None => return Ok(()), // coordinator vanished before Init: clean exit
+    };
+    if kind != FrameKind::Init {
+        return Err(Error::Runtime(format!(
+            "worker {ecn}: expected Init, got {kind:?}"
+        )));
+    }
+    let mut r = ByteReader::new(&payload);
+    let objective = get_objective(&mut r)?;
+    let scheme = get_scheme(&mut r)?;
+    let s_design = r.get_u32()? as usize;
+    let code_seed = r.get_u64()?;
+    let k_ecn = r.get_u32()? as usize;
+    let my_ecn = r.get_u32()? as usize;
+    if my_ecn != ecn {
+        return Err(Error::Runtime(format!(
+            "worker {ecn}: Init addressed to ECN {my_ecn}"
+        )));
+    }
+    let inputs = r.get_matrix()?;
+    let targets = r.get_matrix()?;
+    let obj = objective.build(Split { inputs, targets });
+    let code = scheme.build(k_ecn, s_design, code_seed)?;
+    let (p, d) = obj.dims();
+    let mut engine = NativeEngine::new();
+    let mut bufs: Vec<Matrix> = Vec::new();
+
+    loop {
+        let (kind, payload) = match read_frame_opt(&mut stream)? {
+            Some(f) => f,
+            None => return Ok(()), // coordinator hung up: clean exit
+        };
+        match kind {
+            FrameKind::Bye => return Ok(()),
+            FrameKind::Work => {
+                let mut r = ByteReader::new(&payload);
+                let id = r.get_u64()?;
+                let n_ranges = r.get_u32()? as usize;
+                let mut ranges = Vec::with_capacity(n_ranges);
+                for _ in 0..n_ranges {
+                    let lo = r.get_u32()? as usize;
+                    let hi = r.get_u32()? as usize;
+                    ranges.push((lo, hi));
+                }
+                let sleep = r.get_f64()?;
+                let x = r.get_matrix()?;
+                if bufs.len() != ranges.len() {
+                    bufs = (0..ranges.len()).map(|_| Matrix::zeros(p, d)).collect();
+                }
+                for (buf, &(lo, hi)) in bufs.iter_mut().zip(&ranges) {
+                    // No error channel back to the coordinator: exit
+                    // cleanly and let the watchdog see the EOF.
+                    if obj.grad_rows_engine(&mut engine, &x, lo, hi, buf).is_err() {
+                        return Ok(());
+                    }
+                }
+                let refs: Vec<&Matrix> = bufs.iter().collect();
+                let coded = code.encode(ecn, &refs);
+                // Injected service delay — the drawn response time,
+                // realized (already scaled and capped by the
+                // coordinator).
+                if sleep > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(
+                        sleep.clamp(0.0, MAX_INJECTED_SLEEP),
+                    ));
+                }
+                let mut w = ByteWriter::new();
+                w.put_u64(id);
+                w.put_matrix(&coded);
+                // Coordinator may be gone during shutdown — clean exit.
+                if write_frame(&mut stream, FrameKind::Grad, &w.into_bytes()).is_err() {
+                    return Ok(());
+                }
+            }
+            other => {
+                return Err(Error::Runtime(format!(
+                    "worker {ecn}: unexpected {other:?} frame in the serve loop"
+                )))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_parse_round_trips() {
+        for t in [TransportKind::Unix, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(t.as_str()), Some(t));
+        }
+        assert_eq!(TransportKind::parse("uds"), Some(TransportKind::Unix));
+        assert_eq!(TransportKind::parse("udp"), None);
+    }
+
+    #[test]
+    fn spec_default_is_unconfigured_loopback_is_configured() {
+        let d = SocketSpec::default();
+        assert!(!d.configured);
+        assert_eq!(d.port, 0);
+        assert_eq!(d.time_scale, 1.0);
+        let l = SocketSpec::loopback();
+        assert!(l.configured);
+        assert_eq!(l.time_scale, 0.0);
+    }
+
+    #[test]
+    fn objective_and_scheme_tags_round_trip() {
+        for kind in [
+            ObjectiveKind::LeastSquares,
+            ObjectiveKind::Logistic { lambda: 0.25 },
+            ObjectiveKind::Huber { delta: 1.5 },
+            ObjectiveKind::ElasticNet { l1: 0.1, l2: 0.2 },
+        ] {
+            let mut w = ByteWriter::new();
+            put_objective(&mut w, kind);
+            let bytes = w.into_bytes();
+            let mut r = ByteReader::new(&bytes);
+            assert_eq!(get_objective(&mut r).unwrap(), kind);
+        }
+        for s in [SchemeKind::Uncoded, SchemeKind::Fractional, SchemeKind::Cyclic] {
+            let mut w = ByteWriter::new();
+            w.put_u8(scheme_tag(s));
+            let bytes = w.into_bytes();
+            let mut r = ByteReader::new(&bytes);
+            assert_eq!(get_scheme(&mut r).unwrap(), s);
+        }
+        let mut r = ByteReader::new(&[9]);
+        assert!(matches!(get_scheme(&mut r), Err(Error::Runtime(_))));
+    }
+}

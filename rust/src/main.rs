@@ -25,7 +25,7 @@ use csadmm::config::{
 };
 use csadmm::coordinator::{Algorithm, Driver, RunConfig};
 use csadmm::data::DatasetName;
-use csadmm::ecn::{BackendKind, ResponseModel};
+use csadmm::ecn::{run_worker, BackendKind, ResponseModel, TransportKind};
 use csadmm::experiments::{self, load_dataset, ROOT_SEED};
 use csadmm::latency::LatencyKind;
 use csadmm::problem::ObjectiveKind;
@@ -70,7 +70,7 @@ fn parse_latency_list(list: &str, doc: Option<&ConfigDoc>) -> Result<Vec<Latency
         .collect()
 }
 
-/// Parse a comma-separated `--backend` list (`sim,threaded`).
+/// Parse a comma-separated `--backend` list (`sim,threaded,socket`).
 fn parse_backend_list(list: &str) -> Result<Vec<BackendKind>> {
     list.split(',')
         .map(|t| {
@@ -211,6 +211,35 @@ fn main() -> Result<()> {
                 }
                 cfg.dynamics = specs.into_iter().next().unwrap();
             }
+            // Socket-backend deployment overrides on top of the
+            // [socket] table (whose presence remains the opt-in gate
+            // for --backend socket).
+            if let Some(t) = args.get("socket-transport") {
+                cfg.socket.transport = TransportKind::parse(t).ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown socket transport '{t}' (expected unix or tcp)"
+                    ))
+                })?;
+            }
+            if let Some(d) = args.get("socket-dir") {
+                cfg.socket.dir = Some(d.into());
+            }
+            if let Some(p) = args.get("socket-port") {
+                cfg.socket.port = p.parse().map_err(|_| {
+                    Error::Config(format!("--socket-port: expected a port in 0..=65535, got '{p}'"))
+                })?;
+            }
+            if let Some(v) = args.get("socket-time-scale") {
+                let scale: f64 = v.parse().map_err(|_| {
+                    Error::Config(format!("--socket-time-scale: expected a number, got '{v}'"))
+                })?;
+                if !scale.is_finite() || scale < 0.0 {
+                    return Err(Error::Config(format!(
+                        "--socket-time-scale must be finite and >= 0, got {scale}"
+                    )));
+                }
+                cfg.socket.time_scale = scale;
+            }
             let ds = load_dataset(dataset, quick);
             let mut engine = factory.create()?;
             println!(
@@ -296,6 +325,37 @@ fn main() -> Result<()> {
                 result.jobs.len(),
                 t0.elapsed()
             );
+        }
+        Some("worker") => {
+            // The socket backend's worker half: spawned by the
+            // coordinator once per ECN, never meant for interactive
+            // use — but contradictory flags must still fail loudly.
+            if let Some(be) = args.get("backend") {
+                if BackendKind::parse(be) != Some(BackendKind::Socket) {
+                    return Err(Error::Config(format!(
+                        "`csadmm worker` is the socket backend's worker process; \
+                         --backend {be} contradicts it (drop the flag)"
+                    )));
+                }
+            }
+            let transport = match args.get("transport") {
+                None => TransportKind::default(),
+                Some(t) => TransportKind::parse(t).ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown socket transport '{t}' (expected unix or tcp)"
+                    ))
+                })?,
+            };
+            let connect = args.get("connect").ok_or_else(|| {
+                Error::Config(
+                    "worker needs --connect <addr> (the coordinator's listener address)"
+                        .into(),
+                )
+            })?;
+            let ecn = args.get_usize("ecn").ok_or_else(|| {
+                Error::Config("worker needs --ecn <index> (the ECN slot it serves)".into())
+            })?;
+            run_worker(transport, connect, ecn)?;
         }
         Some("table1") => {
             experiments::table1::run(quick);

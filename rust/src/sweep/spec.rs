@@ -40,9 +40,10 @@ pub struct SweepSpec {
     /// Latency-regime axis (`latency.kind`): the straggler zoo. Clocks,
     /// faults and deadline stay as configured on the base spec.
     pub latencies: Vec<LatencyKind>,
-    /// Execution-backend axis (`sim`, `threaded`): same decoded bytes,
-    /// different runtimes — sweeping it cross-checks the backend parity
-    /// across whole grids.
+    /// Execution-backend axis (`sim`, `threaded`, `socket`): same
+    /// decoded bytes, different runtimes — sweeping it cross-checks the
+    /// backend parity across whole grids. (A `socket` cell spawns real
+    /// worker processes, so its base config needs a `[socket]` table.)
     pub backends: Vec<BackendKind>,
     /// Membership-dynamics axis (`topo=` cell labels): each entry a full
     /// [`TopologySpec`] (scenario + parameters + explicit events), so a
@@ -316,7 +317,7 @@ impl SweepSpec {
     /// s = 1                            # tolerated stragglers
     /// eps = 1e-3, 5e-3                 # straggler delay ε
     /// latency = uniform, pareto        # straggler-zoo regime axis
-    /// backend = sim, threaded          # execution-backend axis
+    /// backend = sim, threaded, socket  # execution-backend axis
     /// topo = static, churn, partition  # membership-dynamics axis
     /// minibatch = 16, 32
     /// rho = 0.08

@@ -9,6 +9,7 @@ use std::path::Path;
 use std::process::{Command, Output};
 
 const CONFIG: &str = "examples/configs/cli_smoke.toml";
+const SOCKET_CONFIG: &str = "examples/configs/socket_demo.toml";
 
 /// Run the binary from the workspace root (relative config and
 /// `results/` paths resolve exactly as in the documented invocations).
@@ -50,10 +51,22 @@ fn run_sweep_and_every_flag_parse_path() {
     let trace = Path::new(env!("CARGO_MANIFEST_DIR")).join("results/cli_run.json");
     assert!(trace.is_file(), "run must write results/cli_run.json");
 
-    // Both gradient backends.
+    // Both in-process gradient backends.
     for backend in ["sim", "threaded"] {
         assert_ok(&["run", "--quick", "--config", CONFIG, "--backend", backend]);
     }
+
+    // The socket backend, via its demo config (which carries the
+    // [socket] opt-in table): run the same cell on sim and on real
+    // worker processes, and byte-compare the trace artifacts.
+    assert_ok(&["run", "--quick", "--config", SOCKET_CONFIG, "--backend", "sim"]);
+    let sim_bytes = std::fs::read(&trace).expect("sim trace artifact");
+    assert_ok(&["run", "--quick", "--config", SOCKET_CONFIG]);
+    let sock_bytes = std::fs::read(&trace).expect("socket trace artifact");
+    assert_eq!(
+        sim_bytes, sock_bytes,
+        "socket-backend trace must be byte-identical to the sim trace"
+    );
     // The whole latency zoo.
     for latency in ["uniform", "shifted-exp", "pareto", "slownode", "bimodal"] {
         assert_ok(&["run", "--quick", "--config", CONFIG, "--latency", latency]);
@@ -92,6 +105,15 @@ fn bad_flag_values_fail_cleanly() {
     assert_config_error(&["run", "--quick", "--config", CONFIG, "--topology", "mesh"]);
     // `run` takes exactly one value per flag; lists belong to `sweep`.
     assert_config_error(&["run", "--quick", "--config", CONFIG, "--backend", "sim,threaded"]);
+    // --backend socket without a [socket] table: spawning worker
+    // processes needs the explicit opt-in, so this is a config error.
+    assert_config_error(&["run", "--quick", "--config", CONFIG, "--backend", "socket"]);
+    // The worker subcommand rejects contradictory or incomplete
+    // invocations instead of connecting anywhere.
+    assert_config_error(&["worker", "--backend", "sim"]);
+    assert_config_error(&["worker", "--transport", "unix"]);
+    assert_config_error(&["worker", "--connect", "/tmp/nowhere.sock"]);
+    assert_config_error(&["worker", "--transport", "carrier-pigeon", "--connect", "x", "--ecn", "0"]);
     // A degenerate [run] key is rejected at config load, not at a panic
     // site deeper in the run.
     let out = csadmm(&["run", "--quick", "--config", "examples/configs/nonexistent.toml"]);

@@ -1,0 +1,203 @@
+//! Socket-backend parity and dead-peer semantics (PR 8).
+//!
+//! The tentpole acceptance: `--backend socket` — one real OS process
+//! per ECN, every exchange a checksummed frame on a real Unix-domain
+//! (or TCP) socket — produces traces byte-identical to the simulated
+//! and threaded backends on the golden config, in a heavy-tail latency
+//! regime, and through a churn-topology schedule, while
+//! `backend_real_elapsed` shows genuine network I/O time. And when a
+//! worker process dies mid-run, the round surfaces `Error::Runtime`
+//! within the watchdog deadline instead of hanging.
+
+use csadmm::coding::SchemeKind;
+use csadmm::coordinator::{Algorithm, Driver, RunConfig};
+use csadmm::data::{synthetic_small, Dataset};
+use csadmm::ecn::{
+    BackendKind, GradientBackend, ResponseModel, RoundOutcome, SocketBackend, SocketSpec,
+};
+use csadmm::error::Error;
+use csadmm::latency::{FaultSpec, LatencyKind, LatencySpec};
+use csadmm::linalg::Matrix;
+use csadmm::metrics::Trace;
+use csadmm::problem::ObjectiveKind;
+use csadmm::rng::Xoshiro256pp;
+use csadmm::runtime::NativeEngine;
+use csadmm::topology::{ScenarioKind, TopologySpec};
+use std::time::{Duration, Instant};
+
+/// The parity-test socket spec: loopback transport, sleeping disabled,
+/// and the worker half served by this crate's own binary (the test
+/// harness executable has no `worker` subcommand).
+fn socket_spec() -> SocketSpec {
+    SocketSpec {
+        worker_exe: Some(env!("CARGO_BIN_EXE_csadmm").into()),
+        ..SocketSpec::loopback()
+    }
+}
+
+/// The blessed golden-trace cell (tests/golden_trace.rs).
+fn golden_cfg() -> RunConfig {
+    RunConfig {
+        n_agents: 4,
+        k_ecn: 2,
+        minibatch: 8,
+        rho: 0.3,
+        max_iters: 240,
+        eval_every: 40,
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+fn golden_ds() -> Dataset {
+    synthetic_small(400, 40, 0.1, 77)
+}
+
+fn run(cfg: RunConfig, ds: &Dataset) -> (Trace, Option<Duration>) {
+    let mut driver = Driver::new(cfg, ds).unwrap();
+    let trace = driver.run(&mut NativeEngine::new()).unwrap();
+    let real = driver.backend_real_elapsed();
+    (trace, real)
+}
+
+fn with_socket(cfg: &RunConfig) -> RunConfig {
+    RunConfig { backend: BackendKind::Socket, socket: socket_spec(), ..cfg.clone() }
+}
+
+/// Golden cell, all three backends: identical traces, and only the
+/// real backends report wall-clock (the socket one having genuinely
+/// crossed the kernel's network stack on every round and every z-hop).
+#[test]
+fn socket_trace_is_byte_identical_to_sim_and_threaded_on_golden_cell() {
+    let ds = golden_ds();
+    let (t_sim, r_sim) = run(golden_cfg(), &ds);
+    let (t_thr, _) =
+        run(RunConfig { backend: BackendKind::Threaded, ..golden_cfg() }, &ds);
+    let (t_sock, r_sock) = run(with_socket(&golden_cfg()), &ds);
+    assert!(r_sim.is_none(), "sim reports no real time");
+    assert_eq!(t_sim.points, t_thr.points, "threaded must match sim");
+    assert_eq!(t_sim.points, t_sock.points, "socket must match sim byte-for-byte");
+    assert!(
+        r_sock.unwrap() > Duration::ZERO,
+        "socket rounds must accumulate real network I/O time"
+    );
+}
+
+/// One heavy-tail cell: a coded run under Pareto service times (the
+/// regime where arrival order and the decode walk actually bite) stays
+/// byte-identical across the socket boundary.
+#[test]
+fn socket_matches_sim_under_heavy_tail_latency() {
+    let cfg = RunConfig {
+        algo: Algorithm::CsIAdmm(SchemeKind::Cyclic),
+        s_tolerated: 1,
+        minibatch: 16,
+        latency: LatencySpec {
+            kind: LatencyKind::Pareto { scale: 2e-5, alpha: 1.3 },
+            ..Default::default()
+        },
+        max_iters: 160,
+        ..golden_cfg()
+    };
+    let ds = golden_ds();
+    let (t_sim, _) = run(cfg.clone(), &ds);
+    let (t_sock, r_sock) = run(with_socket(&cfg), &ds);
+    assert_eq!(t_sim.points, t_sock.points, "heavy-tail cell must not diverge");
+    assert!(r_sock.unwrap() > Duration::ZERO);
+}
+
+/// One churn cell: agents leaving and rejoining re-plan the walk; the
+/// socket backend follows the exact same schedule and bytes, epoch
+/// markers included.
+#[test]
+fn socket_matches_sim_through_churn_topology() {
+    let cfg = RunConfig {
+        dynamics: TopologySpec {
+            scenario: ScenarioKind::Churn,
+            churn_period: 60,
+            churn_span: 24,
+            churn_agents: 1,
+            ..Default::default()
+        },
+        max_iters: 160,
+        ..golden_cfg()
+    };
+    let ds = golden_ds();
+    let (t_sim, _) = run(cfg.clone(), &ds);
+    let (t_sock, _) = run(with_socket(&cfg), &ds);
+    assert_eq!(t_sim.points, t_sock.points, "churn cell must not diverge");
+    assert_eq!(t_sim.epochs, t_sock.epochs, "membership epochs must match");
+    assert!(!t_sock.epochs.is_empty(), "the churn schedule must actually fire");
+}
+
+/// Builds one agent's socket backend directly (the dead-peer and
+/// fault-mapping tests drive rounds by hand).
+fn direct_backend(scheme: SchemeKind, s: usize, latency: &LatencySpec) -> SocketBackend {
+    let ds = synthetic_small(240, 20, 0.1, 95);
+    SocketBackend::with_spec(
+        0,
+        ObjectiveKind::LeastSquares,
+        ds.train,
+        scheme,
+        s,
+        7,
+        4,
+        8,
+        ResponseModel::default(),
+        latency,
+        Xoshiro256pp::seed_from_u64(92),
+        &socket_spec(),
+    )
+    .unwrap()
+}
+
+/// Killing a worker process mid-run surfaces `Error::Runtime` within
+/// the watchdog deadline — never a hang. Uncoded needs all K
+/// responses, so the dead ECN is guaranteed to be awaited.
+#[test]
+fn killed_worker_process_is_a_runtime_error_not_a_hang() {
+    let mut be = direct_backend(SchemeKind::Uncoded, 0, &LatencySpec::default());
+    let x = Matrix::full(3, 1, 0.4);
+    let mut eng = NativeEngine::new();
+    match be.round(&x, 0, 0.0, &mut eng).unwrap() {
+        RoundOutcome::Decoded(r) => assert_eq!(r.responses_used, 4),
+        other => panic!("healthy round must decode, got {other:?}"),
+    }
+    be.kill_worker(0).unwrap();
+    let t0 = Instant::now();
+    match be.round(&x, 1, 0.0, &mut eng) {
+        Err(Error::Runtime(msg)) => {
+            assert!(
+                msg.contains("worker") || msg.contains("ECN"),
+                "error must name the dead peer: {msg}"
+            );
+        }
+        other => panic!("expected Error::Runtime from the dead peer, got {other:?}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "dead-peer detection took {:?} — the watchdog must bound it",
+        t0.elapsed()
+    );
+}
+
+/// The modeled fail-stop + deadline machinery maps through the socket
+/// backend exactly like sim/threaded: the round resolves to `TimedOut`
+/// with the modeled elapsed time, no real worker is waited on.
+#[test]
+fn modeled_fail_stop_with_deadline_times_out_like_sim() {
+    let latency = LatencySpec {
+        faults: vec![FaultSpec { agent: None, ecn: 0, fail_at: 0.0, recover_at: None }],
+        deadline: Some(1e-3),
+        ..Default::default()
+    };
+    let mut be = direct_backend(SchemeKind::Uncoded, 0, &latency);
+    let x = Matrix::zeros(3, 1);
+    let mut eng = NativeEngine::new();
+    let t0 = Instant::now();
+    match be.round(&x, 0, 1.0, &mut eng).unwrap() {
+        RoundOutcome::TimedOut { elapsed } => assert_eq!(elapsed, 1e-3),
+        other => panic!("expected modeled timeout, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(5));
+}

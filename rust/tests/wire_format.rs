@@ -1,0 +1,209 @@
+//! Wire-format property tests (PR 8): the serialized token payload is
+//! the same bytes the ledger charges, the receiver-side [`TokenDecoder`]
+//! reconstructs exactly the token the in-place transmit left behind —
+//! for every codec in the zoo, with and without error feedback — and
+//! malformed frames (truncated, corrupted, oversized length prefix)
+//! surface as [`Error::Runtime`], never as a panic or a hang.
+
+use csadmm::comm::{
+    encode_frame, read_frame, read_frame_opt, BitWriter, CodecSpec, FrameKind, TokenCodec,
+    TokenDecoder, FRAME_HEADER_LEN, MAX_FRAME_PAYLOAD,
+};
+use csadmm::error::Error;
+use csadmm::linalg::Matrix;
+use csadmm::rng::Rng;
+use csadmm::util::prop::property;
+
+/// Every CLI-reachable codec token, with and without error feedback.
+const CODEC_TOKENS: [&str; 12] = [
+    "identity",
+    "f32",
+    "q4",
+    "q8",
+    "q16",
+    "topk",
+    "randk",
+    "identity+ef",
+    "f32+ef",
+    "q8+ef",
+    "topk+ef",
+    "randk+ef",
+];
+
+fn bits_of(m: &Matrix) -> Vec<u64> {
+    m.as_slice().iter().map(|v| v.to_bits()).collect()
+}
+
+/// The core contract of the single-code-path refactor, as a property
+/// over random tokens: for every codec, `transmit_wire`'s payload is
+/// exactly `WireCost::bytes()` long, and the decoder twin reconstructs
+/// the post-transmit token bit-for-bit. Three consecutive rounds per
+/// case keep stateful codecs honest (error-feedback residuals carry
+/// over, RandK's index stream advances).
+#[test]
+fn payload_round_trips_bit_exactly_for_every_codec() {
+    property("wire payload round-trip", 40, |rng| {
+        let rows = 1 + rng.below(5) as usize;
+        let cols = 1 + rng.below(7) as usize;
+        let seed = rng.next_u64();
+        let zero_token = rng.below(8) == 0;
+        for token_str in CODEC_TOKENS {
+            let spec = CodecSpec::parse(token_str).unwrap();
+            let mut codec = spec.build(seed).unwrap();
+            let mut decoder = TokenDecoder::new(&spec, seed);
+            let mut token = if zero_token {
+                Matrix::zeros(rows, cols)
+            } else {
+                Matrix::from_vec(
+                    rows,
+                    cols,
+                    (0..rows * cols).map(|_| rng.normal()).collect(),
+                )
+                .unwrap()
+            };
+            for round in 0..3 {
+                let mut w = BitWriter::new();
+                let cost = codec.transmit_wire(&mut token, &mut w);
+                let payload = w.into_bytes();
+                assert_eq!(
+                    payload.len() as u64,
+                    cost.bytes(),
+                    "{token_str} round {round}: payload length must equal the charged bytes"
+                );
+                let decoded = decoder
+                    .decode(&payload, rows, cols)
+                    .unwrap_or_else(|e| panic!("{token_str} round {round}: decode failed: {e}"));
+                assert_eq!(
+                    bits_of(&decoded),
+                    bits_of(&token),
+                    "{token_str} round {round}: wire decode must equal the in-place transmit"
+                );
+                // Next round transports a perturbed token, like the
+                // driver's evolving z.
+                for v in token.as_mut_slice() {
+                    *v += 0.25 * rng.normal();
+                }
+            }
+        }
+    });
+}
+
+/// A full frame is exactly header + charged payload bytes — the
+/// WireLedger's books are measurable on the socket, byte for byte.
+#[test]
+fn frame_length_is_header_plus_charged_bytes() {
+    property("frame length matches ledger", 20, |rng| {
+        let rows = 1 + rng.below(4) as usize;
+        let cols = 1 + rng.below(6) as usize;
+        let seed = rng.next_u64();
+        for token_str in CODEC_TOKENS {
+            let spec = CodecSpec::parse(token_str).unwrap();
+            let mut codec = spec.build(seed).unwrap();
+            let mut token = Matrix::from_vec(
+                rows,
+                cols,
+                (0..rows * cols).map(|_| rng.normal()).collect(),
+            )
+            .unwrap();
+            let mut w = BitWriter::new();
+            let cost = codec.transmit_wire(&mut token, &mut w);
+            let payload = w.into_bytes();
+            let frame = encode_frame(FrameKind::Token, &payload).unwrap();
+            assert_eq!(
+                frame.len() as u64,
+                FRAME_HEADER_LEN as u64 + cost.bytes(),
+                "{token_str}: frame bytes must be header + charged payload"
+            );
+        }
+    });
+}
+
+/// Every strict prefix of a valid frame is a runtime error (mid-header
+/// or mid-payload truncation), except the empty prefix, which is a
+/// clean at-boundary EOF for the `_opt` reader and a runtime error for
+/// the strict one. No cut point may panic.
+#[test]
+fn truncated_frames_are_runtime_errors_never_panics() {
+    let payload: Vec<u8> = (0..37u8).collect();
+    let frame = encode_frame(FrameKind::Grad, &payload).unwrap();
+    assert!(matches!(read_frame_opt(&mut &frame[..0]), Ok(None)));
+    match read_frame(&mut &frame[..0]) {
+        Err(Error::Runtime(_)) => {}
+        other => panic!("empty stream via strict reader: {other:?}"),
+    }
+    for cut in 1..frame.len() {
+        match read_frame_opt(&mut &frame[..cut]) {
+            Err(Error::Runtime(_)) => {}
+            other => panic!("cut at {cut}: expected Error::Runtime, got {other:?}"),
+        }
+    }
+    // The intact frame still reads back.
+    let (kind, body) = read_frame(&mut &frame[..]).unwrap();
+    assert_eq!(kind, FrameKind::Grad);
+    assert_eq!(body, payload);
+}
+
+/// Flipping any single byte of a frame — magic, version, kind, length
+/// prefix, checksum or payload — is rejected as a runtime error.
+#[test]
+fn corrupted_frames_are_runtime_errors() {
+    let payload: Vec<u8> = (0..29u8).map(|b| b.wrapping_mul(37)).collect();
+    let frame = encode_frame(FrameKind::Token, &payload).unwrap();
+    for i in 0..frame.len() {
+        let mut bad = frame.clone();
+        bad[i] ^= 0x40;
+        match read_frame(&mut &bad[..]) {
+            Err(Error::Runtime(_)) => {}
+            other => panic!("byte {i} flipped: expected Error::Runtime, got {other:?}"),
+        }
+    }
+}
+
+/// A length prefix past the frame cap is rejected before any
+/// allocation happens — a hostile 4 GiB announcement can't OOM the
+/// coordinator.
+#[test]
+fn oversized_length_prefix_rejected() {
+    let mut header = Vec::new();
+    header.extend_from_slice(b"CZ");
+    header.push(1); // version
+    header.push(5); // FrameKind::Token on the wire
+    header.extend_from_slice(&u32::MAX.to_le_bytes());
+    header.extend_from_slice(&0u32.to_le_bytes());
+    assert_eq!(header.len(), FRAME_HEADER_LEN);
+    match read_frame(&mut &header[..]) {
+        Err(Error::Runtime(msg)) => {
+            assert!(msg.contains("cap") || msg.contains("exceeds"), "{msg}");
+        }
+        other => panic!("expected Error::Runtime, got {other:?}"),
+    }
+    // Sending one is refused symmetrically.
+    let oversized = vec![0u8; MAX_FRAME_PAYLOAD as usize + 1];
+    assert!(matches!(
+        encode_frame(FrameKind::Token, &oversized),
+        Err(Error::Runtime(_))
+    ));
+}
+
+/// Garbage payload bytes under a *valid* frame must surface as decode
+/// errors, not panics: the decoder's cursors bound every read.
+#[test]
+fn garbage_token_payloads_fail_cleanly() {
+    property("garbage payload decode", 60, |rng| {
+        let rows = 1 + rng.below(4) as usize;
+        let cols = 1 + rng.below(4) as usize;
+        let n = rng.below(24) as usize;
+        let garbage: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        for token_str in ["identity", "f32", "q8", "topk", "randk"] {
+            let spec = CodecSpec::parse(token_str).unwrap();
+            let mut decoder = TokenDecoder::new(&spec, rng.next_u64());
+            // Either a clean decode (the bytes happened to parse) or a
+            // runtime error — anything but a panic.
+            match decoder.decode(&garbage, rows, cols) {
+                Ok(m) => assert_eq!(m.shape(), (rows, cols)),
+                Err(Error::Runtime(_)) => {}
+                Err(other) => panic!("{token_str}: unexpected error class {other:?}"),
+            }
+        }
+    });
+}
