@@ -9,7 +9,8 @@ Usage:
 For each file the committed baseline is read from git (`<ref>:<path>`,
 default HEAD) and every numeric leaf present in both documents is
 compared. Leaves whose key marks them as wall-clock measurements
-(``*_s``, ``*_per_sec``, ``*ns*``, ``speedup*``) are *timing* leaves:
+(``*_s``, ``*_per_sec``, ``*ns*``, ``speedup*``, ``p50*``/``p99*``
+round-latency percentiles) are *timing* leaves:
 a relative change beyond the threshold (default 20%) prints a WARN
 line. All other numeric leaves are *deterministic* (byte counts,
 accuracies, parity booleans): ANY change prints a DIFF line, because
@@ -32,7 +33,7 @@ import json
 import subprocess
 import sys
 
-TIMING_MARKERS = ("_s", "_per_sec", "ns", "speedup", "wall", "rounds_per")
+TIMING_MARKERS = ("_s", "_per_sec", "ns", "speedup", "wall", "rounds_per", "p50", "p99")
 
 
 def is_timing_key(key: str) -> bool:

@@ -18,6 +18,7 @@ usage: csadmm <command> [--quick] [--pjrt] [--artifacts <dir>]
 commands:
   run [--config <file>] [--seed N] [--objective <obj>] [--latency <lat>]
       [--backend <be>] [--compress <cx>] [--topology <topo>]
+      [--shard-threads N]
       [--socket-transport unix|tcp] [--socket-dir <dir>]
       [--socket-port N] [--socket-time-scale X]
                                    one experiment from a config file
@@ -25,7 +26,11 @@ commands:
                                    resolved relative to the working dir);
                                    the --socket-* flags override the
                                    [socket] table, whose presence is the
-                                   opt-in gate for --backend socket
+                                   opt-in gate for --backend socket;
+                                   --shard-threads fans each shard's
+                                   gradient kernels over N scoped threads
+                                   (bitwise-identical traces for any N;
+                                   default 1)
   worker --connect <addr> --ecn N [--transport unix|tcp]
                                    socket-backend worker process: serves
                                    one ECN's coded gradient rounds over
@@ -51,6 +56,15 @@ commands:
                                    re-plans around the cut and recovers,
                                    coded vs uncoded (epoch markers in
                                    the trace shade the disruption)
+  bench-scale [--shard-threads N] [--out <file>]
+                                   SLO-gated engine-scaling grid: times
+                                   fused gradient rounds over rows in
+                                   {1e4,1e5,1e6} x ECNs in {16,64,256}
+                                   (--quick: 1e4 x {16,64}, ungated) and
+                                   writes rounds/sec, ns/row and p50/p99
+                                   round latency to --out (default
+                                   BENCH_pr9.json); a full-grid cell
+                                   over the ns/row SLO fails the run
   sweep [--config <file>] [--workers N] [--out <file>]
         [--objective <obj>[,<obj>...]] [--latency <lat>[,<lat>...]]
         [--backend <be>[,<be>...]] [--compress <cx>[,<cx>...]]

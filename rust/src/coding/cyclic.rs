@@ -244,6 +244,15 @@ impl GradientCode for CyclicRepetition {
         out
     }
 
+    fn encode_into(&self, ecn: usize, parts: &[Matrix], out: &mut Matrix) {
+        // Same coefficient walk as `encode`, reading each partition
+        // gradient from the full array instead of a borrowed view.
+        out.fill_zero();
+        for &part_idx in &self.assignments[ecn] {
+            out.add_scaled(self.b[(ecn, part_idx)], &parts[part_idx]);
+        }
+    }
+
     fn decode(&self, arrived: &[(usize, Matrix)]) -> Result<Matrix> {
         // Use the first R arrivals (paper: "until the R-th fast
         // responded message is received").

@@ -75,6 +75,16 @@ impl GradientCode for FractionalRepetition {
         out
     }
 
+    fn encode_into(&self, ecn: usize, parts: &[Matrix], out: &mut Matrix) {
+        // Same accumulation order as `encode`: block head first, then
+        // the remaining block members in ascending partition order.
+        let support = &self.assignments[ecn];
+        out.copy_from(&parts[support[0]]);
+        for &p in &support[1..] {
+            *out += &parts[p];
+        }
+    }
+
     fn decode(&self, arrived: &[(usize, Matrix)]) -> Result<Matrix> {
         let groups = self.num_groups();
         let mut have: Vec<Option<&Matrix>> = vec![None; groups];

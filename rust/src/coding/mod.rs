@@ -55,6 +55,14 @@ pub trait GradientCode: Send + Sync {
     /// (`partial[t]` is the gradient of partition `assignment(j)[t]`).
     fn encode(&self, ecn: usize, partial: &[&Matrix]) -> Matrix;
 
+    /// Allocation-free [`Self::encode`]: writes ECN `j`'s coded message
+    /// into `out` (resized by the caller to the gradient shape), reading
+    /// its per-partition gradients from the *full* partition array
+    /// `parts` via [`Self::assignment`] — the ECN pool's steady-state
+    /// hot path. Must produce byte-identical results to `encode` (same
+    /// coefficients, same accumulation order).
+    fn encode_into(&self, ecn: usize, parts: &[Matrix], out: &mut Matrix);
+
     /// Decode `Σ_{p=1..K} g̃_p` from the arrived coded gradients
     /// (`(ecn_index, coded_gradient)` pairs, at least R of them).
     fn decode(&self, arrived: &[(usize, Matrix)]) -> Result<Matrix>;
@@ -130,7 +138,21 @@ pub mod test_support {
             .map(|j| {
                 let partial: Vec<&Matrix> =
                     code.assignment(j).iter().map(|&pi| &parts[pi]).collect();
-                code.encode(j, &partial)
+                let msg = code.encode(j, &partial);
+                // The allocation-free hot-path encoder is byte-identical
+                // to the allocating form — the ECN pool's reuse contract.
+                let mut reused = Matrix::full(p, d, f64::NAN);
+                code.encode_into(j, &parts, &mut reused);
+                let bits = |m: &Matrix| -> Vec<u64> {
+                    m.as_slice().iter().map(|v| v.to_bits()).collect()
+                };
+                assert_eq!(
+                    bits(&msg),
+                    bits(&reused),
+                    "{}: encode_into diverged from encode on ECN {j}",
+                    code.name()
+                );
+                msg
             })
             .collect();
         (coded, expect)

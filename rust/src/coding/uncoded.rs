@@ -40,6 +40,10 @@ impl GradientCode for Uncoded {
         partial[0].clone()
     }
 
+    fn encode_into(&self, ecn: usize, parts: &[Matrix], out: &mut Matrix) {
+        out.copy_from(&parts[self.assignments[ecn][0]]);
+    }
+
     fn decode(&self, arrived: &[(usize, Matrix)]) -> Result<Matrix> {
         if arrived.len() < self.k {
             return Err(Error::Coding(format!(

@@ -456,6 +456,7 @@ pub fn run_config_from_doc(doc: &ConfigDoc) -> Result<(RunConfig, DatasetName)> 
     set_num!(max_iters, "max_iters", usize);
     set_num!(eval_every, "eval_every", usize);
     set_num!(seed, "seed", u64);
+    set_num!(shard_threads, "shard_threads", usize);
     if let Some(v) = doc.get_num(sec, "c_tau") {
         cfg.c_tau = Some(v);
     }
@@ -580,6 +581,7 @@ delay = 0.01
             "[run]\nn_agents = 0\n",
             "[run]\nminibatch = 0\n",
             "[run]\nmax_iters = 0\n",
+            "[run]\nshard_threads = 0\n",
             "[run]\nn_agents = 1\n\n[topology]\nscenario = partition\n",
         ] {
             let doc = ConfigDoc::parse(toml).unwrap();
@@ -588,6 +590,16 @@ delay = 0.01
                 "{toml:?} must be rejected as a config error"
             );
         }
+    }
+
+    #[test]
+    fn shard_threads_key_round_trip() {
+        let doc = ConfigDoc::parse("[run]\nshard_threads = 4\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.shard_threads, 4);
+        let default = ConfigDoc::parse("[run]\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&default).unwrap();
+        assert_eq!(cfg.shard_threads, 1, "sequential legacy default");
     }
 
     #[test]

@@ -120,6 +120,14 @@ pub struct RunConfig {
     pub max_iters: usize,
     pub eval_every: usize,
     pub seed: u64,
+    /// Scoped worker threads the engine may fan a single shard's
+    /// gradient kernels over (`[run] shard_threads` /
+    /// `--shard-threads`). The kernel layer splits only the *output*
+    /// across threads — each output element keeps its unchanged
+    /// sequential accumulation chain — so every value produces
+    /// bitwise-identical traces; 1 (the default) is the sequential
+    /// legacy path. Zero is rejected by [`Self::validate`].
+    pub shard_threads: usize,
     /// Legacy token-quantization knob, kept as a config alias: `Some(b)`
     /// behaves exactly like `comm = q<b>` (same rng stream, so
     /// pre-refactor quantized traces are reproduced byte-for-byte).
@@ -153,6 +161,7 @@ impl Default for RunConfig {
             max_iters: 2_000,
             eval_every: 20,
             seed: 1,
+            shard_threads: 1,
             quantize_bits: None,
         }
     }
@@ -251,6 +260,13 @@ impl RunConfig {
                     .into(),
             ));
         }
+        if self.shard_threads == 0 {
+            return Err(Error::Config(
+                "shard_threads must be at least 1 (1 = sequential; larger values fan the \
+                 gradient kernels over scoped threads, bitwise-identically)"
+                    .into(),
+            ));
+        }
         if self.backend == BackendKind::Socket && !self.socket.configured {
             return Err(Error::Config(
                 "backend = socket spawns one real worker process per ECN and needs a \
@@ -293,6 +309,9 @@ pub struct Driver {
     /// for least squares, cached full-gradient solve otherwise.
     xstar: Option<crate::linalg::Matrix>,
     test: crate::data::Split,
+    /// Scratch arena for the driver's own evaluation path (the held-out
+    /// test metric): warm once, reuse every eval point.
+    ws: crate::runtime::Workspace,
 }
 
 impl Driver {
@@ -408,7 +427,15 @@ impl Driver {
                 Some(reference_optimum_cached(key, &objectives)?)
             }
         };
-        Ok(Self { cfg, topo, objectives, pools, xstar, test: ds.test.clone() })
+        Ok(Self {
+            cfg,
+            topo,
+            objectives,
+            pools,
+            xstar,
+            test: ds.test.clone(),
+            ws: crate::runtime::Workspace::new(),
+        })
     }
 
     /// Schedule parameters actually used by `run`: Corollary-1 defaults,
@@ -457,6 +484,10 @@ impl Driver {
     /// Execute the run, producing a metrics trace.
     pub fn run(&mut self, engine: &mut dyn Engine) -> Result<Trace> {
         let cfg = self.cfg.clone();
+        // Intra-shard data parallelism: a hint only — the kernels are
+        // bitwise-identical for every thread count, so this never
+        // changes a trace byte (asserted by the golden/parity tests).
+        engine.set_shard_threads(cfg.shard_threads);
         let n = cfg.n_agents;
         let (p, d) = self.objectives[0].dims();
         let params = self.effective_params();
@@ -569,7 +600,7 @@ impl Driver {
                     // Objective-routed test metric: MSE for the
                     // regression losses, classification error for
                     // logistic (Eq. 23's companion column).
-                    test_mse: self.objectives[0].test_loss(&state.z, &self.test),
+                    test_mse: self.objectives[0].test_loss_ws(&state.z, &self.test, &mut self.ws),
                 });
             }
         }
@@ -615,6 +646,7 @@ mod tests {
             ("n_agents = 0", RunConfig { n_agents: 0, ..base_cfg() }),
             ("minibatch = 0", RunConfig { minibatch: 0, ..base_cfg() }),
             ("max_iters = 0", RunConfig { max_iters: 0, ..base_cfg() }),
+            ("shard_threads = 0", RunConfig { shard_threads: 0, ..base_cfg() }),
             (
                 "partition with 1 agent",
                 RunConfig {
@@ -697,6 +729,22 @@ mod tests {
         let t_thr = thr_driver.run(&mut NativeEngine::new()).unwrap();
         assert_eq!(t_sim.points, t_thr.points, "backend must not perturb the trace");
         assert!(thr_driver.backend_real_elapsed().unwrap() > std::time::Duration::ZERO);
+    }
+
+    /// `shard_threads` is a pure throughput knob: the trace is
+    /// byte-for-byte the one the sequential default produces, for every
+    /// thread count (the kernel layer's determinism contract, end to
+    /// end through the driver).
+    #[test]
+    fn shard_threads_do_not_perturb_the_trace() {
+        let ds = ds();
+        let base = RunConfig { max_iters: 200, eval_every: 40, ..base_cfg() };
+        let t_seq = Driver::new(base.clone(), &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+        for threads in [2usize, 4] {
+            let cfg = RunConfig { shard_threads: threads, ..base.clone() };
+            let t = Driver::new(cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+            assert_eq!(t_seq.points, t.points, "shard_threads = {threads} moved the trace");
+        }
     }
 
     #[test]

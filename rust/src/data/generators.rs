@@ -67,6 +67,18 @@ pub fn synthetic_small(n_train: usize, n_test: usize, sigma: f64, seed: u64) -> 
     planted(DatasetName::Synthetic, n_train, n_test, 3, 1, sigma, 1.0, &mut rng)
 }
 
+/// Scalable planted regression with a configurable feature width — the
+/// bench-scale harness's workload (`csadmm bench-scale` sweeps
+/// `n ∈ {10⁴, 10⁵, 10⁶}` at `p = 32`, where the fixed `p = 3` of
+/// [`synthetic_small`] would make the kernel layer trivially
+/// memory-bound). Single-output (`d = 1`), tiny held-out split (the
+/// harness times gradient rounds, not evaluation).
+pub fn synthetic_wide(n_train: usize, p: usize, sigma: f64, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x5749_4445);
+    let n_test = (n_train / 100).clamp(1, 1_000);
+    planted(DatasetName::Synthetic, n_train, n_test, p, 1, sigma, 1.0, &mut rng)
+}
+
 /// USPS stand-in (Table I row 2): 1 000 / 100, 64 → 10. Ten class
 /// prototypes + within-class scatter, one-hot-style targets regressed —
 /// the multi-output least-squares task the paper runs on USPS.
@@ -214,6 +226,18 @@ mod tests {
         let x = cholesky_solve(&gram, &rhs).unwrap();
         let resid = &o.matmul(&x) - t;
         assert!(resid.norm() / t.norm() < 0.05);
+    }
+
+    #[test]
+    fn synthetic_wide_dims_scale_with_request() {
+        let ds = synthetic_wide(500, 32, 0.1, 7);
+        assert_eq!(ds.train.len(), 500);
+        assert_eq!(ds.p(), 32);
+        assert_eq!(ds.d(), 1);
+        assert_eq!(ds.test.len(), 5, "1% held-out split");
+        // Deterministic in the seed.
+        let again = synthetic_wide(500, 32, 0.1, 7);
+        assert_eq!(ds.train.inputs, again.train.inputs);
     }
 
     #[test]

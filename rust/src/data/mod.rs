@@ -29,6 +29,7 @@ mod partition;
 pub use batch::BatchCursor;
 pub use dataset::{Dataset, DatasetName, Split};
 pub use generators::{
-    ijcnn1_like, ijcnn1_like_small, synthetic, synthetic_small, usps_like, usps_like_small,
+    ijcnn1_like, ijcnn1_like_small, synthetic, synthetic_small, synthetic_wide, usps_like,
+    usps_like_small,
 };
 pub use partition::{partition_to_ecns, shard_to_agents, AgentShard, EcnPartition};

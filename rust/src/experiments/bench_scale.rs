@@ -1,0 +1,256 @@
+//! `csadmm bench-scale` — the SLO-gated engine-scaling harness.
+//!
+//! Times the fused gradient hot path (`Engine::grad_batch_range`) at
+//! bench scale: a grid of dataset sizes `rows ∈ {10⁴, 10⁵, 10⁶}` ×
+//! ECN fan-outs `K ∈ {16, 64, 256}` on the `p = 32` wide synthetic
+//! workload ([`crate::data::synthetic_wide`]). One *round* is one full
+//! pass over the data fanned across K contiguous ECN partitions — the
+//! exact per-agent work of an uncoded gradient round, minus the
+//! simulated-latency machinery (which costs no real time and would
+//! only blur the kernel measurement).
+//!
+//! Per cell the harness reports rounds/sec, amortized ns/row, and the
+//! p50/p99 round-latency percentiles, and checks each cell against the
+//! [`SLO_NS_PER_ROW`] preflight ceiling. The artifact (default
+//! `BENCH_pr9.json`) is consumed by `python/tools/bench_diff.py`, which
+//! treats the percentile fields as timing leaves (±20% vs the armed
+//! baseline). In full mode an SLO violation is an [`Error::Runtime`] —
+//! the CI stress lane fails loudly; `--quick` never gates, so the
+//! gating-lane smoke can't flake on a loaded runner.
+
+use super::ROOT_SEED;
+use crate::data::synthetic_wide;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::runtime::EngineFactory;
+use crate::util::json::{write_json_file, Json};
+use crate::util::table::{fnum, Table};
+use std::path::Path;
+use std::time::Instant;
+
+/// SLO preflight ceiling on the amortized per-row gradient cost. The
+/// `p = 32` row costs ~64 flops plus streaming loads — tens of ns on
+/// any release build — so the ceiling carries ~50× headroom: it exists
+/// to catch an accidentally quadratic hot path or a debug-profile
+/// binary sneaking into the stress lane, not to police µ-architecture.
+pub const SLO_NS_PER_ROW: f64 = 2_000.0;
+
+/// Feature width of the bench workload (wide enough that the AᵀB side
+/// of the fused kernel does real work; `synthetic_small`'s p = 3 would
+/// make every cell trivially memory-bound).
+const FEATURES: usize = 32;
+
+/// One measured grid cell.
+struct Cell {
+    name: String,
+    rows: usize,
+    ecns: usize,
+    rounds_per_sec: f64,
+    ns_per_row: f64,
+    p50_s: f64,
+    p99_s: f64,
+    slo_pass: bool,
+}
+
+/// Human-stable cell name (`rows1e4_ecn16`) — the identity field
+/// `bench_diff.py` keys array entries on.
+fn cell_name(rows: usize, ecns: usize) -> String {
+    let r = match rows {
+        10_000 => "1e4".into(),
+        100_000 => "1e5".into(),
+        1_000_000 => "1e6".into(),
+        other => other.to_string(),
+    };
+    format!("rows{r}_ecn{ecns}")
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).saturating_sub(1);
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run the bench-scale sweep and write the artifact to `out`.
+///
+/// `quick` shrinks the grid to `{10⁴} × {16, 64}` with fewer rounds and
+/// never fails on the SLO (the gating-lane smoke); the full grid gates.
+/// `shard_threads` is forwarded to the engine — bitwise-neutral by the
+/// kernel determinism contract, so it only moves the timing columns.
+pub fn run(
+    quick: bool,
+    factory: &dyn EngineFactory,
+    shard_threads: usize,
+    out: &Path,
+) -> Result<()> {
+    let row_counts: &[usize] = if quick { &[10_000] } else { &[10_000, 100_000, 1_000_000] };
+    let ecn_counts: &[usize] = if quick { &[16, 64] } else { &[16, 64, 256] };
+    let rounds = if quick { 8 } else { 40 };
+    let mut engine = factory.create()?;
+    engine.set_shard_threads(shard_threads);
+    println!(
+        "bench-scale: {} cells × {rounds} rounds, p = {FEATURES}, engine = {}, \
+         shard_threads = {shard_threads}{}",
+        row_counts.len() * ecn_counts.len(),
+        engine.name(),
+        if quick { " (quick: SLO reported, not gated)" } else { "" }
+    );
+    let mut cells: Vec<Cell> = Vec::new();
+    for &rows in row_counts {
+        // One dataset per row count, reused across the ECN axis (the
+        // generator is deterministic in the seed, so the cells stay
+        // comparable across runs).
+        let ds = synthetic_wide(rows, FEATURES, 0.1, ROOT_SEED ^ rows as u64);
+        let o = &ds.train.inputs;
+        let t = &ds.train.targets;
+        let x = Matrix::full(FEATURES, 1, 0.1);
+        let mut grad = Matrix::zeros(FEATURES, 1);
+        let mut sum = Matrix::zeros(FEATURES, 1);
+        for &ecns in ecn_counts {
+            let mut one_round = |engine: &mut dyn crate::runtime::Engine| -> Result<()> {
+                sum.fill_zero();
+                for j in 0..ecns {
+                    let lo = j * rows / ecns;
+                    let hi = (j + 1) * rows / ecns;
+                    engine.grad_batch_range(o, t, lo, hi, &x, &mut grad)?;
+                    sum += &grad;
+                }
+                Ok(())
+            };
+            // Warm-up round: sizes the engine workspace and faults the
+            // data pages in; excluded from the timed sample.
+            one_round(engine.as_mut())?;
+            let mut times_s: Vec<f64> = Vec::with_capacity(rounds);
+            for _ in 0..rounds {
+                let t0 = Instant::now();
+                one_round(engine.as_mut())?;
+                times_s.push(t0.elapsed().as_secs_f64());
+            }
+            let total_s: f64 = times_s.iter().sum();
+            times_s.sort_by(f64::total_cmp);
+            let ns_per_row = total_s * 1e9 / (rounds as f64 * rows as f64);
+            cells.push(Cell {
+                name: cell_name(rows, ecns),
+                rows,
+                ecns,
+                rounds_per_sec: rounds as f64 / total_s,
+                ns_per_row,
+                p50_s: percentile(&times_s, 0.50),
+                p99_s: percentile(&times_s, 0.99),
+                slo_pass: ns_per_row <= SLO_NS_PER_ROW,
+            });
+        }
+    }
+    let mut table = Table::new(
+        "bench-scale (gradient rounds, p = 32)",
+        &["cell", "rows", "ECNs", "rounds/s", "ns/row", "p50 (s)", "p99 (s)", "SLO"],
+    );
+    for c in &cells {
+        table.row(&[
+            c.name.clone(),
+            c.rows.to_string(),
+            c.ecns.to_string(),
+            fnum(c.rounds_per_sec),
+            fnum(c.ns_per_row),
+            fnum(c.p50_s),
+            fnum(c.p99_s),
+            (if c.slo_pass { "pass" } else { "FAIL" }).into(),
+        ]);
+    }
+    table.print();
+    let json = Json::obj()
+        .str("bench", "bench_scale")
+        .str("mode", if quick { "quick" } else { "full" })
+        .str("engine", engine.name())
+        .num("features", FEATURES as f64)
+        .num("rounds_per_cell", rounds as f64)
+        .num("shard_threads", shard_threads as f64)
+        .num("slo_ns_per_row", SLO_NS_PER_ROW)
+        .field(
+            "cells",
+            Json::Arr(
+                cells
+                    .iter()
+                    .map(|c| {
+                        Json::obj()
+                            .str("name", &c.name)
+                            .num("rows", c.rows as f64)
+                            .num("ecns", c.ecns as f64)
+                            .num("rounds_per_sec", c.rounds_per_sec)
+                            .num("ns_per_row", c.ns_per_row)
+                            .num("p50_round_latency_s", c.p50_s)
+                            .num("p99_round_latency_s", c.p99_s)
+                            .field("slo_pass", Json::Bool(c.slo_pass))
+                            .build()
+                    })
+                    .collect(),
+            ),
+        )
+        .build();
+    write_json_file(out, &json)?;
+    println!("bench-scale artifact written to {}", out.display());
+    let failed: Vec<&str> =
+        cells.iter().filter(|c| !c.slo_pass).map(|c| c.name.as_str()).collect();
+    if !failed.is_empty() {
+        let msg = format!(
+            "bench-scale SLO preflight: {} cell(s) exceed {SLO_NS_PER_ROW} ns/row: {}",
+            failed.len(),
+            failed.join(", ")
+        );
+        if quick {
+            // The gating-lane smoke reports but never gates — a loaded
+            // runner must not flake the merge lane on wall-clock.
+            println!("note: {msg}");
+        } else {
+            return Err(Error::Runtime(msg));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngineFactory;
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let s: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile(&s, 0.50), 5.0);
+        assert_eq!(percentile(&s, 0.99), 10.0);
+        assert_eq!(percentile(&s, 0.10), 1.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn cell_names_are_stable_identities() {
+        assert_eq!(cell_name(10_000, 16), "rows1e4_ecn16");
+        assert_eq!(cell_name(1_000_000, 256), "rows1e6_ecn256");
+        assert_eq!(cell_name(500, 4), "rows500_ecn4");
+    }
+
+    /// The quick grid runs end to end and emits a well-formed artifact
+    /// with the percentile fields `bench_diff.py` consumes.
+    #[test]
+    fn quick_grid_runs_and_emits_artifact() {
+        let out = std::env::temp_dir().join("csadmm_bench_scale_test.json");
+        run(true, &NativeEngineFactory, 2, &out).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        for key in [
+            "\"bench\": \"bench_scale\"",
+            "\"mode\": \"quick\"",
+            "rows1e4_ecn16",
+            "rows1e4_ecn64",
+            "p50_round_latency_s",
+            "p99_round_latency_s",
+            "rounds_per_sec",
+            "ns_per_row",
+            "slo_pass",
+        ] {
+            assert!(text.contains(key), "artifact lacks {key}:\n{text}");
+        }
+        let _ = std::fs::remove_file(&out);
+    }
+}

@@ -18,7 +18,9 @@
 //! | Fig. 6 (ext.)  | [`fig6::run`] — wall-clock time-to-ε per latency regime |
 //! | Fig. 7 (ext.)  | [`fig7::run`] — accuracy vs wire bytes across the compressor zoo |
 //! | Fig. 8 (ext.)  | [`fig8::run`] — convergence through a partition-and-repair event |
+//! | bench-scale    | [`bench_scale::run`] — SLO-gated gradient-round scaling grid |
 
+pub mod bench_scale;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;

@@ -1,0 +1,461 @@
+//! Fused, blocked, optionally multi-threaded f64 kernels — the engine
+//! core behind [`crate::runtime::NativeEngine`]'s hot path.
+//!
+//! # Determinism contract
+//!
+//! Every kernel here reproduces the accumulation order of the reference
+//! kernels in [`super::ops`] **bit for bit**, for every thread count:
+//!
+//! * Blocking is only ever applied over *output* rows (and, for the
+//!   fused gradient, over tiles of *data* rows that are walked in
+//!   order). The reduction dimension — the k-walk of `matmul`, the
+//!   data-row walk of `AᵀB` — stays sequential per output element, in
+//!   the exact order (and with the exact `== 0.0` skips and unroll
+//!   grouping) of the reference kernels.
+//! * Thread parallelism splits the *output* across scoped threads:
+//!   every output element is produced by exactly one thread running the
+//!   unchanged sequential accumulation chain. There is no per-thread
+//!   partial reduction, so results are bitwise identical for any
+//!   `threads` value, including the sequential `threads = 1` path.
+//!
+//! This is what lets `[run] shard_threads` default to 1 (the
+//! byte-identical legacy path) while any larger value produces the same
+//! blessed golden-trace bytes. The contract is pinned by the
+//! `blocked_kernels_bitwise_match_reference` property test below and by
+//! the golden-trace suite.
+//!
+//! # Why fuse?
+//!
+//! The least-squares gradient `Oᵀ(Ox − T)/m` touches the data block
+//! twice. [`fused_ls_grad_range`] computes the residual one
+//! [`TILE_ROWS`]-row tile at a time and feeds each tile straight into
+//! the `AᵀB` accumulation, so the residual never exists beyond one tile
+//! (cache-resident) and the only buffers are the caller's scratch tile
+//! and the output gradient — zero allocation inside the kernel.
+
+use super::ops::{axpy, dot, KB};
+use super::Matrix;
+
+/// Rows per residual tile in [`fused_ls_grad_range`]. One tile of the
+/// widest practical feature count (512 × 64 f64 = 256 KiB) still fits
+/// in L2 alongside the x block; the tile walk is sequential so the
+/// value affects cache behaviour only, never the bytes.
+pub const TILE_ROWS: usize = 512;
+
+/// `out = a · b`, blocked over output rows and (optionally) fanned out
+/// over `threads` scoped threads. Bitwise-identical to
+/// [`super::matmul_into`] for every `threads` value; see the module
+/// docs for the contract.
+pub fn matmul_blocked_into(a: &Matrix, b: &Matrix, out: &mut Matrix, threads: usize) {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "matmul_blocked: inner dims {ka} vs {kb}");
+    assert_eq!(out.shape(), (m, n), "matmul_blocked: out shape");
+    out.fill_zero();
+    if m == 0 || n == 0 {
+        return;
+    }
+    let asl = a.as_slice();
+    let bs = b.as_slice();
+    let os = out.as_mut_slice();
+    let t = threads.max(1).min(m);
+    if t <= 1 {
+        matmul_row_block(asl, bs, os, 0, ka, n);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|s| {
+        for (ci, ochunk) in os.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ci * rows_per;
+            s.spawn(move || matmul_row_block(asl, bs, ochunk, i0, ka, n));
+        }
+    });
+}
+
+/// Output rows `[i0, i0 + ochunk.len()/n)` of `a · b` — the reference
+/// `matmul_into` inner loop verbatim (k-blocked, zero-skip,
+/// unrolled-by-4 axpy over the output row).
+fn matmul_row_block(asl: &[f64], bs: &[f64], ochunk: &mut [f64], i0: usize, ka: usize, n: usize) {
+    for (li, orow) in ochunk.chunks_exact_mut(n).enumerate() {
+        let i = i0 + li;
+        let arow = &asl[i * ka..(i + 1) * ka];
+        let mut k0 = 0;
+        while k0 < ka {
+            let k1 = (k0 + KB).min(ka);
+            for k in k0..k1 {
+                let aik = arow[k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bs[k * n..k * n + n];
+                let chunks = n / 4 * 4;
+                let (o4, orest) = orow.split_at_mut(chunks);
+                let (b4, brest) = brow.split_at(chunks);
+                for (oc, bc) in o4.chunks_exact_mut(4).zip(b4.chunks_exact(4)) {
+                    oc[0] += aik * bc[0];
+                    oc[1] += aik * bc[1];
+                    oc[2] += aik * bc[2];
+                    oc[3] += aik * bc[3];
+                }
+                for (o, bv) in orest.iter_mut().zip(brest) {
+                    *o += aik * bv;
+                }
+            }
+            k0 = k1;
+        }
+    }
+}
+
+/// `out = aᵀ · b` without materializing the transpose, blocked over
+/// output rows and (optionally) fanned out over `threads` scoped
+/// threads. Bitwise-identical to [`super::matmul_at_b`] for every
+/// `threads` value: each output row's accumulation walks the data rows
+/// `r = 0..m` in the reference order.
+pub fn matmul_at_b_blocked(a: &Matrix, b: &Matrix, out: &mut Matrix, threads: usize) {
+    let (m, p) = a.shape();
+    let (mb, d) = b.shape();
+    assert_eq!(m, mb, "at_b_blocked: row dims {m} vs {mb}");
+    assert_eq!(out.shape(), (p, d), "at_b_blocked: out shape");
+    out.fill_zero();
+    if p == 0 || d == 0 {
+        return;
+    }
+    let asl = a.as_slice();
+    let bsl = b.as_slice();
+    let os = out.as_mut_slice();
+    let t = threads.max(1).min(p);
+    if t <= 1 {
+        at_b_row_block(asl, bsl, os, 0, m, p, d);
+        return;
+    }
+    let rows_per = p.div_ceil(t);
+    std::thread::scope(|s| {
+        for (ci, ochunk) in os.chunks_mut(rows_per * d).enumerate() {
+            let j0 = ci * rows_per;
+            s.spawn(move || at_b_row_block(asl, bsl, ochunk, j0, m, p, d));
+        }
+    });
+}
+
+/// Output rows `[j0, j0 + ochunk.len()/d)` of `aᵀ · b` — the reference
+/// `matmul_at_b` loop restricted to a column band of `a` (data-row walk
+/// sequential, zero-skip preserved).
+fn at_b_row_block(asl: &[f64], bsl: &[f64], ochunk: &mut [f64], j0: usize, m: usize, p: usize, d: usize) {
+    let jn = ochunk.len() / d;
+    for r in 0..m {
+        let arow = &asl[r * p + j0..r * p + j0 + jn];
+        let brow = &bsl[r * d..(r + 1) * d];
+        for (lj, &ari) in arow.iter().enumerate() {
+            if ari == 0.0 {
+                continue;
+            }
+            let orow = &mut ochunk[lj * d..(lj + 1) * d];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += ari * bv;
+            }
+        }
+    }
+}
+
+/// Fused least-squares batch gradient over a row range:
+/// `out = Oᵀ(Ox − T)/m` on rows `[lo, hi)` of the full data matrices,
+/// computing the residual one tile at a time into `resid_tile` (shape
+/// `(tile_rows, d)`, any `tile_rows ≥ 1`) so the full residual is never
+/// materialized. No allocation. Bitwise-identical to the two-pass
+/// reference (full residual, then `AᵀB`) for every `threads` value and
+/// every tile size: each output element's accumulation still walks the
+/// data rows in order `lo..hi`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_ls_grad_range(
+    o_full: &Matrix,
+    t_full: &Matrix,
+    lo: usize,
+    hi: usize,
+    x: &Matrix,
+    resid_tile: &mut Matrix,
+    out: &mut Matrix,
+    threads: usize,
+) {
+    let m = hi - lo;
+    let (p, d) = (x.rows(), x.cols());
+    debug_assert!(hi <= o_full.rows());
+    debug_assert_eq!(o_full.cols(), p);
+    debug_assert_eq!(t_full.cols(), d);
+    debug_assert_eq!(out.shape(), (p, d));
+    debug_assert_eq!(resid_tile.cols(), d);
+    let o = &o_full.as_slice()[lo * p..hi * p];
+    let t = &t_full.as_slice()[lo * d..hi * d];
+    let xs = x.as_slice();
+    let tile = resid_tile.rows().max(1);
+    let threads = threads.max(1);
+    out.fill_zero();
+    if d == 1 {
+        // Single-output fast path: dot-product residuals, axpy
+        // accumulation — the reference d == 1 kernel, tiled and fanned
+        // out over the output band.
+        let os = out.as_mut_slice();
+        let rs_all = resid_tile.as_mut_slice();
+        let mut r0 = 0;
+        while r0 < m {
+            let r1 = (r0 + tile).min(m);
+            let tn = r1 - r0;
+            let rs = &mut rs_all[..tn];
+            if threads <= 1 || tn < 2 {
+                for (k, rv) in rs.iter_mut().enumerate() {
+                    let r = r0 + k;
+                    *rv = dot(&o[r * p..(r + 1) * p], xs) - t[r];
+                }
+            } else {
+                let per = tn.div_ceil(threads);
+                std::thread::scope(|s| {
+                    for (ci, chunk) in rs.chunks_mut(per).enumerate() {
+                        let rbase = r0 + ci * per;
+                        s.spawn(move || {
+                            for (k, rv) in chunk.iter_mut().enumerate() {
+                                let r = rbase + k;
+                                *rv = dot(&o[r * p..(r + 1) * p], xs) - t[r];
+                            }
+                        });
+                    }
+                });
+            }
+            let rs = &rs_all[..tn];
+            if threads <= 1 || p < 2 {
+                for (k, &rv) in rs.iter().enumerate() {
+                    let r = r0 + k;
+                    axpy(rv, &o[r * p..(r + 1) * p], os);
+                }
+            } else {
+                let per = p.div_ceil(threads);
+                std::thread::scope(|s| {
+                    for (ci, ochunk) in os.chunks_mut(per).enumerate() {
+                        let j0 = ci * per;
+                        s.spawn(move || {
+                            let jn = ochunk.len();
+                            for (k, &rv) in rs.iter().enumerate() {
+                                let r = r0 + k;
+                                axpy(rv, &o[r * p + j0..r * p + j0 + jn], ochunk);
+                            }
+                        });
+                    }
+                });
+            }
+            r0 = r1;
+        }
+        let inv_m = 1.0 / m as f64;
+        for v in out.as_mut_slice().iter_mut() {
+            *v *= inv_m;
+        }
+        return;
+    }
+    // General d: residual rows computed as in the reference kernel
+    // (copy-negate target, zero-skip accumulate), then the AᵀB band
+    // accumulation per tile.
+    let os = out.as_mut_slice();
+    let rs_all = resid_tile.as_mut_slice();
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + tile).min(m);
+        let tn = r1 - r0;
+        let rs = &mut rs_all[..tn * d];
+        if threads <= 1 || tn < 2 {
+            resid_rows(o, t, xs, rs, r0, p, d);
+        } else {
+            let per = tn.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (ci, chunk) in rs.chunks_mut(per * d).enumerate() {
+                    let rbase = r0 + ci * per;
+                    s.spawn(move || resid_rows(o, t, xs, chunk, rbase, p, d));
+                }
+            });
+        }
+        let rs = &rs_all[..tn * d];
+        if threads <= 1 || p < 2 {
+            accum_at_b_band(o, rs, os, r0, tn, 0, p, d);
+        } else {
+            let per = p.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (ci, ochunk) in os.chunks_mut(per * d).enumerate() {
+                    let j0 = ci * per;
+                    s.spawn(move || {
+                        let jn = ochunk.len() / d;
+                        accum_at_b_band_into(o, rs, ochunk, r0, tn, j0, jn, p, d);
+                    });
+                }
+            });
+        }
+        r0 = r1;
+    }
+    let inv_m = 1.0 / m as f64;
+    for v in os.iter_mut() {
+        *v *= inv_m;
+    }
+}
+
+/// Residual rows `rbase..rbase + rs.len()/d` of `Ox − T` (reference
+/// arithmetic: copy target row, negate, zero-skip accumulate `O·x`).
+fn resid_rows(o: &[f64], t: &[f64], xs: &[f64], rs: &mut [f64], rbase: usize, p: usize, d: usize) {
+    for (k, rrow) in rs.chunks_exact_mut(d).enumerate() {
+        let r = rbase + k;
+        let orow = &o[r * p..(r + 1) * p];
+        rrow.copy_from_slice(&t[r * d..(r + 1) * d]);
+        for c in 0..d {
+            rrow[c] = -rrow[c];
+        }
+        for (j, &ov) in orow.iter().enumerate() {
+            if ov == 0.0 {
+                continue;
+            }
+            let xrow = &xs[j * d..(j + 1) * d];
+            for c in 0..d {
+                rrow[c] += ov * xrow[c];
+            }
+        }
+    }
+}
+
+/// `os[j*d..] += Σ_r o[r][j]·rs[r]` over the tile rows, full output.
+#[allow(clippy::too_many_arguments)]
+fn accum_at_b_band(o: &[f64], rs: &[f64], os: &mut [f64], r0: usize, tn: usize, j0: usize, p: usize, d: usize) {
+    let jn = os.len() / d - j0;
+    accum_at_b_band_into(o, rs, &mut os[j0 * d..(j0 + jn) * d], r0, tn, j0, jn, p, d);
+}
+
+/// Output-row band `[j0, j0 + jn)` of the `AᵀB` accumulation for one
+/// residual tile (data-row walk sequential, zero-skip preserved).
+#[allow(clippy::too_many_arguments)]
+fn accum_at_b_band_into(
+    o: &[f64],
+    rs: &[f64],
+    ochunk: &mut [f64],
+    r0: usize,
+    tn: usize,
+    j0: usize,
+    jn: usize,
+    p: usize,
+    d: usize,
+) {
+    for k in 0..tn {
+        let r = r0 + k;
+        let orow = &o[r * p + j0..r * p + j0 + jn];
+        let rrow = &rs[k * d..(k + 1) * d];
+        for (lj, &ov) in orow.iter().enumerate() {
+            if ov == 0.0 {
+                continue;
+            }
+            let gout = &mut ochunk[lj * d..(lj + 1) * d];
+            for c in 0..d {
+                gout[c] += ov * rrow[c];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_at_b, matmul_into};
+    use crate::rng::{Rng, Xoshiro256pp};
+    use crate::util::prop::property;
+
+    fn random_matrix(rng: &mut Xoshiro256pp, r: usize, c: usize) -> Matrix {
+        // Mix in exact zeros so the zero-skip branches are exercised.
+        Matrix::from_vec(
+            r,
+            c,
+            (0..r * c)
+                .map(|_| if rng.below(8) == 0 { 0.0 } else { rng.normal() })
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    fn bits(m: &Matrix) -> Vec<u64> {
+        m.as_slice().iter().map(|v| v.to_bits()).collect()
+    }
+
+    /// The satellite property test: blocked kernels are bitwise equal to
+    /// the reference kernels on random shapes (including ragged tile
+    /// remainders) for thread counts 1, 2, 3 and 4.
+    #[test]
+    fn blocked_kernels_bitwise_match_reference() {
+        property("blocked kernels bitwise", 25, |rng| {
+            let m = 1 + rng.below(90) as usize;
+            let k = 1 + rng.below(70) as usize;
+            let n = 1 + rng.below(20) as usize;
+            let a = random_matrix(rng, m, k);
+            let b = random_matrix(rng, k, n);
+            let mut reference = Matrix::zeros(m, n);
+            matmul_into(&a, &b, &mut reference);
+            let mut atb_ref = Matrix::zeros(k, n);
+            matmul_at_b(&a, &b, &mut atb_ref);
+            for threads in [1usize, 2, 3, 4] {
+                let mut got = Matrix::zeros(m, n);
+                matmul_blocked_into(&a, &b, &mut got, threads);
+                assert_eq!(bits(&got), bits(&reference), "matmul {m}x{k}x{n} t={threads}");
+                let mut atb = Matrix::zeros(k, n);
+                matmul_at_b_blocked(&a, &b, &mut atb, threads);
+                assert_eq!(bits(&atb), bits(&atb_ref), "at_b {m}x{k}x{n} t={threads}");
+            }
+        });
+    }
+
+    /// Reference two-pass gradient on a row range, straight off the
+    /// `NativeEngine` legacy arithmetic.
+    fn reference_grad_range(o: &Matrix, t: &Matrix, lo: usize, hi: usize, x: &Matrix) -> Matrix {
+        let m = hi - lo;
+        let (p, d) = (x.rows(), x.cols());
+        let osl = &o.as_slice()[lo * p..hi * p];
+        let tsl = &t.as_slice()[lo * d..hi * d];
+        let xs = x.as_slice();
+        let mut out = Matrix::zeros(p, d);
+        let os = out.as_mut_slice();
+        if d == 1 {
+            let mut rs = vec![0.0; m];
+            for (r, rv) in rs.iter_mut().enumerate() {
+                *rv = dot(&osl[r * p..(r + 1) * p], xs) - tsl[r];
+            }
+            for (r, &rv) in rs.iter().enumerate() {
+                axpy(rv, &osl[r * p..(r + 1) * p], os);
+            }
+        } else {
+            let mut rs = vec![0.0; m * d];
+            resid_rows(osl, tsl, xs, &mut rs, 0, p, d);
+            accum_at_b_band(osl, &rs, os, 0, m, 0, p, d);
+        }
+        let inv_m = 1.0 / m as f64;
+        for v in os.iter_mut() {
+            *v *= inv_m;
+        }
+        out
+    }
+
+    /// The fused kernel is bitwise-stable across tile sizes and thread
+    /// counts, and bitwise equal to the untiled two-pass reference.
+    #[test]
+    fn fused_grad_bitwise_stable_across_tiles_and_threads() {
+        property("fused grad bitwise", 20, |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let p = 1 + rng.below(30) as usize;
+            let d = 1 + rng.below(4) as usize;
+            let lo = rng.below(n as u64) as usize;
+            let hi = lo + 1 + rng.below((n - lo) as u64) as usize;
+            let o = random_matrix(rng, n, p);
+            let t = random_matrix(rng, n, d);
+            let x = random_matrix(rng, p, d);
+            let expect = bits(&reference_grad_range(&o, &t, lo, hi, &x));
+            for tile in [1usize, 3, 64, TILE_ROWS] {
+                for threads in [1usize, 2, 4] {
+                    let mut scratch = Matrix::zeros(tile.min(hi - lo), d);
+                    let mut out = Matrix::zeros(p, d);
+                    fused_ls_grad_range(&o, &t, lo, hi, &x, &mut scratch, &mut out, threads);
+                    assert_eq!(
+                        bits(&out),
+                        expect,
+                        "rows {lo}..{hi} p={p} d={d} tile={tile} t={threads}"
+                    );
+                }
+            }
+        });
+    }
+}

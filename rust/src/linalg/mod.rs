@@ -9,14 +9,20 @@
 //! * `solve` — Cholesky (SPD) and partial-pivot LU solvers
 //!   ([`cholesky_solve`], [`lu_solve`]), used for exact ADMM x-updates
 //!   and for the global optimum `x*`.
+//! * `kernels` — the fused/blocked engine core ([`fused_ls_grad_range`],
+//!   [`matmul_blocked_into`], [`matmul_at_b_blocked`]): bitwise-identical
+//!   to the reference kernels for any tile size and `shard_threads`
+//!   count (see the module docs for the determinism contract).
 //!
 //! Shapes follow the paper: model `x ∈ R^{p×d}`, data `O ∈ R^{m×p}`,
 //! targets `T ∈ R^{m×d}`.
 
+mod kernels;
 mod matrix;
 mod ops;
 mod solve;
 
+pub use kernels::{fused_ls_grad_range, matmul_at_b_blocked, matmul_blocked_into, TILE_ROWS};
 pub use matrix::Matrix;
 pub use ops::{axpy, dot, matmul, matmul_at_b, matmul_into, nrm2};
 pub use solve::{cholesky_factor, cholesky_solve, lu_solve, CholeskyFactor};

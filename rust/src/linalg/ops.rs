@@ -11,7 +11,7 @@ use super::Matrix;
 /// the paper's shapes are small (p ≤ 64, d ≤ 10, m ≤ 512 per batch), so a
 /// single-level k-block with an unrolled inner loop beats fancier
 /// schemes; see EXPERIMENTS.md §Perf.
-const KB: usize = 64;
+pub(super) const KB: usize = 64;
 
 /// `out = a · b`, allocation-free. `out` must have shape `(a.rows, b.cols)`.
 ///

@@ -32,7 +32,11 @@ pub fn cholesky_factor(a: &Matrix) -> Result<CholeskyFactor> {
                 s -= l[(i, k)] * l[(j, k)];
             }
             if i == j {
-                if s <= 0.0 {
+                // `!(s > 0.0)` instead of `s <= 0.0`: a NaN pivot (from
+                // NaN-poisoned input) fails both comparisons with 0.0
+                // and must land in the error arm, not silently take
+                // `sqrt(NaN)` and poison the whole factor.
+                if !(s > 0.0) {
                     return Err(Error::Linalg(format!(
                         "cholesky: non-positive pivot {s:.3e} at {i}"
                     )));
@@ -115,7 +119,10 @@ pub fn lu_solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
                 pmax = r;
             }
         }
-        if vmax < 1e-12 {
+        // `!(vmax >= 1e-12)` instead of `vmax < 1e-12`: a NaN column
+        // (NaN-poisoned input) compares false either way and must be
+        // rejected here rather than divide through the elimination.
+        if !(vmax >= 1e-12) {
             return Err(Error::Linalg(format!("lu: (near-)singular at col {col}")));
         }
         if pmax != col {
@@ -223,6 +230,46 @@ mod tests {
         let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
         let b = Matrix::from_rows(&[&[1.0], &[2.0]]);
         assert!(lu_solve(&a, &b).is_err());
+    }
+
+    #[test]
+    fn nan_input_is_a_clean_error_not_a_poisoned_result() {
+        // A NaN anywhere in the matrix must surface as Error::Linalg
+        // from both solvers — never as a NaN-filled "solution".
+        let mut a = Matrix::from_rows(&[&[4.0, 1.0], &[1.0, 3.0]]);
+        a[(0, 0)] = f64::NAN;
+        assert!(cholesky_factor(&a).is_err(), "cholesky accepted a NaN pivot");
+        let b = Matrix::from_rows(&[&[1.0], &[2.0]]);
+        assert!(lu_solve(&a, &b).is_err(), "lu accepted a NaN column");
+        // NaN off the first pivot too (caught at a later column).
+        let mut a2 = Matrix::from_rows(&[&[4.0, 1.0], &[1.0, 3.0]]);
+        a2[(1, 1)] = f64::NAN;
+        assert!(cholesky_factor(&a2).is_err());
+        assert!(lu_solve(&a2, &b).is_err());
+    }
+
+    #[test]
+    fn one_by_one_systems_solve_exactly() {
+        let a = Matrix::from_rows(&[&[4.0]]);
+        let b = Matrix::from_rows(&[&[8.0]]);
+        let x = cholesky_solve(&a, &b).unwrap();
+        assert_eq!(x[(0, 0)], 2.0);
+        let y = lu_solve(&a, &b).unwrap();
+        assert_eq!(y[(0, 0)], 2.0);
+        // Non-positive 1x1 is indefinite for Cholesky, regular for LU.
+        let neg = Matrix::from_rows(&[&[-4.0]]);
+        assert!(cholesky_factor(&neg).is_err());
+        assert_eq!(lu_solve(&neg, &b).unwrap()[(0, 0)], -2.0);
+    }
+
+    #[test]
+    fn empty_systems_are_vacuously_solvable() {
+        let a = Matrix::zeros(0, 0);
+        let b = Matrix::zeros(0, 2);
+        let x = cholesky_solve(&a, &b).unwrap();
+        assert_eq!(x.shape(), (0, 2));
+        let y = lu_solve(&a, &b).unwrap();
+        assert_eq!(y.shape(), (0, 2));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! csadmm table1 [--quick]
 //! csadmm fig3-minibatch | fig3-baselines | fig3-stragglers | fig3-spc
 //! csadmm fig4 | fig5 | fig6 | rate-check   [--quick] [--pjrt]
+//! csadmm bench-scale [--quick] [--shard-threads N] [--out <file>]
 //! csadmm sweep [--config <file>] [--workers N] [--out <file>]
 //! csadmm all [--quick]
 //! ```
@@ -229,6 +230,15 @@ fn main() -> Result<()> {
                     Error::Config(format!("--socket-port: expected a port in 0..=65535, got '{p}'"))
                 })?;
             }
+            if let Some(v) = args.get("shard-threads") {
+                let threads: usize = v.parse().map_err(|_| {
+                    Error::Config(format!(
+                        "--shard-threads: expected a positive integer, got '{v}'"
+                    ))
+                })?;
+                cfg.shard_threads = threads;
+                // Zero is rejected by cfg.validate() in Driver::new.
+            }
             if let Some(v) = args.get("socket-time-scale") {
                 let scale: f64 = v.parse().map_err(|_| {
                     Error::Config(format!("--socket-time-scale: expected a number, got '{v}'"))
@@ -392,6 +402,31 @@ fn main() -> Result<()> {
         }
         Some("rate-check") => {
             experiments::rate_check::run(quick, factory.as_ref())?;
+        }
+        Some("bench-scale") => {
+            let threads = match args.get("shard-threads") {
+                None => 1,
+                Some(v) => {
+                    let t: usize = v.parse().map_err(|_| {
+                        Error::Config(format!(
+                            "--shard-threads: expected a positive integer, got '{v}'"
+                        ))
+                    })?;
+                    if t == 0 {
+                        return Err(Error::Config(
+                            "--shard-threads must be at least 1 (1 = sequential)".into(),
+                        ));
+                    }
+                    t
+                }
+            };
+            let out = args.get("out").unwrap_or("BENCH_pr9.json");
+            experiments::bench_scale::run(
+                quick,
+                factory.as_ref(),
+                threads,
+                std::path::Path::new(out),
+            )?;
         }
         Some("all") => {
             experiments::table1::run(quick);

@@ -47,7 +47,18 @@ pub fn accuracy(xs: &[Matrix], xstar: Option<&Matrix>) -> Result<f64> {
 /// Mean-squared-error test loss of model `x` on a split:
 /// `‖O x − T‖_F² / n_test`.
 pub fn test_mse(x: &Matrix, test: &Split) -> f64 {
-    let resid = &test.inputs.matmul(x) - &test.targets;
+    test_mse_ws(x, test, &mut crate::runtime::Workspace::new())
+}
+
+/// Allocation-free [`test_mse`]: the evaluation residual lives in the
+/// caller's [`Workspace`](crate::runtime::Workspace) and is reused
+/// across evaluation points (the driver evaluates every `eval_every`
+/// iterations; this keeps those evaluations off the heap). Bitwise the
+/// same result as `test_mse`.
+pub fn test_mse_ws(x: &Matrix, test: &Split, ws: &mut crate::runtime::Workspace) -> f64 {
+    let resid = ws.eval(test.inputs.rows(), x.cols());
+    crate::linalg::matmul_into(&test.inputs, x, resid);
+    *resid -= &test.targets;
     resid.norm_sq() / test.len() as f64
 }
 
@@ -138,6 +149,26 @@ mod tests {
         let x_bad = Matrix::from_rows(&[&[0.0]]);
         // residuals [2,4]: mse = (4+16)/2 = 10
         assert!((test_mse(&x_bad, &split) - 10.0).abs() < 1e-12);
+    }
+
+    /// The workspace-routed evaluation is bitwise the same as the
+    /// allocating form and reuses its buffer across evaluation points.
+    #[test]
+    fn test_mse_ws_matches_and_reuses() {
+        use crate::rng::{Rng, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::seed_from_u64(85);
+        let split = Split {
+            inputs: Matrix::from_vec(40, 3, (0..120).map(|_| rng.normal()).collect()).unwrap(),
+            targets: Matrix::from_vec(40, 1, (0..40).map(|_| rng.normal()).collect()).unwrap(),
+        };
+        let mut ws = crate::runtime::Workspace::new();
+        for i in 0..10 {
+            let x = Matrix::full(3, 1, 0.1 * i as f64);
+            let a = test_mse(&x, &split);
+            let b = test_mse_ws(&x, &split, &mut ws);
+            assert_eq!(a.to_bits(), b.to_bits(), "eval point {i}");
+        }
+        assert_eq!(ws.allocations(), 1, "one warm-up allocation, then reuse");
     }
 
     #[test]

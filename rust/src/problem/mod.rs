@@ -121,6 +121,22 @@ pub trait Objective {
         crate::metrics::test_mse(x, test)
     }
 
+    /// [`Self::test_loss`] with caller-provided scratch: the default
+    /// MSE path routes through
+    /// [`crate::metrics::test_mse_ws`] so repeated evaluations reuse
+    /// one residual buffer instead of allocating per point (bitwise the
+    /// same value). Objectives that override `test_loss` with a
+    /// non-residual metric fall through to it unchanged — their custom
+    /// override is still honored because this default dispatches on
+    /// `self`.
+    fn test_loss_ws(&self, x: &Matrix, test: &Split, ws: &mut crate::runtime::Workspace) -> f64 {
+        if self.as_least_squares().is_some() {
+            crate::metrics::test_mse_ws(x, test, ws)
+        } else {
+            self.test_loss(x, test)
+        }
+    }
+
     /// Downcast hook: `Some(self)` for [`LeastSquares`], letting
     /// [`reference_optimum`] take the closed-form normal-equations path.
     fn as_least_squares(&self) -> Option<&LeastSquares> {

@@ -23,9 +23,11 @@
 
 mod native;
 mod pjrt;
+mod workspace;
 
 pub use native::NativeEngine;
 pub use pjrt::{artifact_name, PjrtEngine};
+pub use workspace::Workspace;
 
 use crate::error::Result;
 use crate::linalg::Matrix;
@@ -85,6 +87,20 @@ pub trait Engine {
         n: usize,
     ) -> Result<(Matrix, Matrix, Matrix)> {
         Ok(native_admm_step(x, y, z, g, rho, tau, gamma, n))
+    }
+
+    /// Hint: number of scoped worker threads the engine may fan a
+    /// single shard's gradient kernels over (`[run] shard_threads`).
+    ///
+    /// The determinism contract requires bitwise-identical results for
+    /// every value — 1 is the sequential legacy path, larger values
+    /// split only the kernel *output* across threads (each output
+    /// element keeps its unchanged sequential accumulation chain; see
+    /// `linalg::kernels`). Engines without intra-shard parallelism
+    /// ignore the hint, which is sound for the same reason: every
+    /// thread count produces the same bytes.
+    fn set_shard_threads(&mut self, threads: usize) {
+        let _ = threads;
     }
 
     /// Engine name for logs.

@@ -1,33 +1,35 @@
 //! Pure-Rust engine over [`crate::linalg`] — the reference
 //! implementation and the artifact-free fallback.
 
-use super::Engine;
+use super::{Engine, Workspace};
 use crate::error::Result;
-use crate::linalg::{matmul_at_b, matmul_into, Matrix};
+use crate::linalg::{fused_ls_grad_range, matmul_at_b_blocked, matmul_blocked_into, Matrix, TILE_ROWS};
 
-/// Native engine with preallocated per-shape workspaces so the hot loop
-/// performs no allocation after warm-up.
+/// Native engine over the fused/blocked kernel layer
+/// (`linalg::kernels`), with a [`Workspace`] scratch arena so the hot
+/// loop performs no allocation after warm-up, and optional intra-shard
+/// scoped-thread parallelism (`shard_threads`; bitwise-identical for
+/// every value — see the kernel module's determinism contract).
 #[derive(Default)]
 pub struct NativeEngine {
-    /// Cached residual buffer keyed by (m, d).
-    resid: Option<Matrix>,
+    ws: Workspace,
+    shard_threads: usize,
 }
 
 impl NativeEngine {
-    /// New engine.
+    /// New engine (sequential: `shard_threads = 1`).
     pub fn new() -> Self {
-        Self::default()
+        Self { ws: Workspace::new(), shard_threads: 1 }
     }
 
-    fn resid_buf(&mut self, m: usize, d: usize) -> &mut Matrix {
-        let need_new = match &self.resid {
-            Some(r) => r.shape() != (m, d),
-            None => true,
-        };
-        if need_new {
-            self.resid = Some(Matrix::zeros(m, d));
-        }
-        self.resid.as_mut().unwrap()
+    /// The engine's scratch arena — exposed so tests can assert the
+    /// zero-allocation steady state via [`Workspace::allocations`].
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    fn threads(&self) -> usize {
+        self.shard_threads.max(1)
     }
 }
 
@@ -37,18 +39,20 @@ impl Engine for NativeEngine {
         let (p, d) = (x.rows(), x.cols());
         debug_assert_eq!(o.cols(), p);
         debug_assert_eq!(t.shape(), (m, d));
-        let resid = self.resid_buf(m, d);
-        matmul_into(o, x, resid); // resid = O x
-        *resid -= t; //            resid = O x − T
+        let threads = self.threads();
+        let resid = self.ws.resid_full(m, d);
+        matmul_blocked_into(o, x, resid, threads); // resid = O x
+        *resid -= t; //                               resid = O x − T
         let mut out = Matrix::zeros(p, d);
-        matmul_at_b(o, resid, &mut out); // out = Oᵀ resid
+        matmul_at_b_blocked(o, resid, &mut out, threads); // out = Oᵀ resid
         out.scale(1.0 / m as f64);
         Ok(out)
     }
 
-    /// Zero-copy hot path: computes directly on the row block of the
-    /// full data matrices (row-major ⇒ the block is a contiguous
-    /// subslice), reusing the residual workspace and the caller's
+    /// Zero-copy hot path: the fused residual-then-AᵀB kernel runs
+    /// directly on the row block of the full data matrices (row-major ⇒
+    /// the block is a contiguous subslice), materializing the residual
+    /// one workspace tile at a time and writing into the caller's
     /// output buffer. No allocation after warm-up.
     fn grad_batch_range(
         &mut self,
@@ -63,74 +67,14 @@ impl Engine for NativeEngine {
         let (p, d) = (x.rows(), x.cols());
         debug_assert!(hi <= o_full.rows());
         debug_assert_eq!(out.shape(), (p, d));
-        let o = &o_full.as_slice()[lo * p..hi * p];
-        let t = &t_full.as_slice()[lo * d..hi * d];
-        let xs = x.as_slice();
-        // d == 1 fast path (the synthetic dataset / any single-output
-        // model): two GEMVs with the unrolled dot kernel — §Perf.
-        if d == 1 {
-            let resid = self.resid_buf(m, 1);
-            let rs = resid.as_mut_slice();
-            for r in 0..m {
-                rs[r] = crate::linalg::dot(&o[r * p..(r + 1) * p], xs) - t[r];
-            }
-            let os = out.as_mut_slice();
-            for v in os.iter_mut() {
-                *v = 0.0;
-            }
-            for r in 0..m {
-                crate::linalg::axpy(rs[r], &o[r * p..(r + 1) * p], os);
-            }
-            let inv_m = 1.0 / m as f64;
-            for v in os.iter_mut() {
-                *v *= inv_m;
-            }
-            return Ok(());
-        }
-        let resid = self.resid_buf(m, d);
-        // resid = O x − T, row by row (p, d are small: register-friendly).
-        {
-            let rs = resid.as_mut_slice();
-            for r in 0..m {
-                let orow = &o[r * p..(r + 1) * p];
-                let rrow = &mut rs[r * d..(r + 1) * d];
-                rrow.copy_from_slice(&t[r * d..(r + 1) * d]);
-                for c in 0..d {
-                    rrow[c] = -rrow[c];
-                }
-                for (j, &ov) in orow.iter().enumerate() {
-                    if ov == 0.0 {
-                        continue;
-                    }
-                    let xrow = &xs[j * d..(j + 1) * d];
-                    for c in 0..d {
-                        rrow[c] += ov * xrow[c];
-                    }
-                }
-            }
-        }
-        // out = Oᵀ resid / m.
-        out.fill_zero();
-        let os = out.as_mut_slice();
-        let rs = resid.as_slice();
-        for r in 0..m {
-            let orow = &o[r * p..(r + 1) * p];
-            let rrow = &rs[r * d..(r + 1) * d];
-            for (j, &ov) in orow.iter().enumerate() {
-                if ov == 0.0 {
-                    continue;
-                }
-                let gout = &mut os[j * d..(j + 1) * d];
-                for c in 0..d {
-                    gout[c] += ov * rrow[c];
-                }
-            }
-        }
-        let inv_m = 1.0 / m as f64;
-        for v in os.iter_mut() {
-            *v *= inv_m;
-        }
+        let threads = self.threads();
+        let tile = self.ws.resid_tile(TILE_ROWS.min(m).max(1), d);
+        fused_ls_grad_range(o_full, t_full, lo, hi, x, tile, out, threads);
         Ok(())
+    }
+
+    fn set_shard_threads(&mut self, threads: usize) {
+        self.shard_threads = threads.max(1);
     }
 
     fn name(&self) -> &'static str {
@@ -188,6 +132,66 @@ mod tests {
             // x = 0 ⇒ grad = −Oᵀ T / m = −(1·2·m)/m = −2 per entry… for
             // all-ones O: (OᵀT)_{ij} = Σ_r 1·2 = 2m ⇒ grad = −2.
             assert!(g.as_slice().iter().all(|&v| (v + 2.0).abs() < 1e-12));
+        }
+    }
+
+    /// The acceptance-criterion assertion: after one warm-up round, the
+    /// range-gradient hot path (the per-partition kernel every driver
+    /// round runs) performs zero heap allocation — the workspace
+    /// allocation counter does not move across rounds or thread counts.
+    #[test]
+    fn steady_state_rounds_allocate_nothing() {
+        let mut rng = Xoshiro256pp::seed_from_u64(83);
+        let (n, p, d) = (96, 7, 1);
+        let o = Matrix::from_vec(n, p, (0..n * p).map(|_| rng.normal()).collect()).unwrap();
+        let t = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.normal()).collect()).unwrap();
+        let x = Matrix::from_vec(p, d, (0..p * d).map(|_| rng.normal()).collect()).unwrap();
+        let mut out = Matrix::zeros(p, d);
+        for threads in [1usize, 2, 4] {
+            let mut eng = NativeEngine::new();
+            eng.set_shard_threads(threads);
+            eng.grad_batch_range(&o, &t, 0, 16, &x, &mut out).unwrap();
+            let warm = eng.workspace().allocations();
+            for round in 0..100 {
+                let lo = (round * 16) % (n - 16);
+                eng.grad_batch_range(&o, &t, lo, lo + 16, &x, &mut out).unwrap();
+                assert_eq!(
+                    eng.workspace().allocations(),
+                    warm,
+                    "round {round} (threads {threads}) allocated"
+                );
+            }
+        }
+    }
+
+    /// The engine produces bitwise-identical gradients for every
+    /// `shard_threads` value — the contract `[run] shard_threads`
+    /// relies on.
+    #[test]
+    fn shard_threads_is_bitwise_neutral() {
+        let mut rng = Xoshiro256pp::seed_from_u64(84);
+        for &(n, p, d) in &[(64usize, 11usize, 1usize), (50, 6, 3)] {
+            let o = Matrix::from_vec(n, p, (0..n * p).map(|_| rng.normal()).collect()).unwrap();
+            let t = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.normal()).collect()).unwrap();
+            let x = Matrix::from_vec(p, d, (0..p * d).map(|_| rng.normal()).collect()).unwrap();
+            let mut reference: Option<Vec<u64>> = None;
+            for threads in [1usize, 2, 3, 4, 7] {
+                let mut eng = NativeEngine::new();
+                eng.set_shard_threads(threads);
+                let mut out = Matrix::zeros(p, d);
+                eng.grad_batch_range(&o, &t, 3, n - 5, &x, &mut out).unwrap();
+                let g = eng.grad_batch(&o, &t, &x).unwrap();
+                let bits: Vec<u64> = out
+                    .as_slice()
+                    .iter()
+                    .chain(g.as_slice())
+                    .map(|v| v.to_bits())
+                    .collect();
+                match &reference {
+                    None => reference = Some(bits),
+                    Some(r) => assert_eq!(r, &bits, "threads {threads} moved bytes ({p}x{d})"),
+                }
+            }
         }
     }
 }

@@ -178,6 +178,41 @@ mod real {
             ))
         }
 
+        fn grad_batch_range(
+            &mut self,
+            o_full: &Matrix,
+            t_full: &Matrix,
+            lo: usize,
+            hi: usize,
+            x: &Matrix,
+            out: &mut Matrix,
+        ) -> Result<()> {
+            let (m, p, d) = (hi - lo, x.rows(), x.cols());
+            // Only materialize the row block when a PJRT artifact will
+            // actually consume it (literals need an owned copy anyway);
+            // otherwise pass the range straight through to the native
+            // engine's zero-copy fused kernel instead of slicing first.
+            if self.has_grad_artifact(m, p, d) {
+                let o = o_full.slice_rows(lo, hi);
+                let t = t_full.slice_rows(lo, hi);
+                let g = self.grad_batch(&o, &t, x)?;
+                out.copy_from(&g);
+                return Ok(());
+            }
+            if self.strict {
+                return Err(Error::Runtime(format!(
+                    "artifact not found: {}",
+                    self.dir.join(artifact_name("grad", &[m, p, d])).display()
+                )));
+            }
+            self.native_calls += 1;
+            self.fallback.grad_batch_range(o_full, t_full, lo, hi, x, out)
+        }
+
+        fn set_shard_threads(&mut self, threads: usize) {
+            self.fallback.set_shard_threads(threads);
+        }
+
         fn name(&self) -> &'static str {
             "pjrt"
         }
@@ -276,6 +311,10 @@ mod stub {
             }
             self.native_calls += 1;
             Ok(super::super::native_admm_step(x, y, z, g, rho, tau, gamma, n))
+        }
+
+        fn set_shard_threads(&mut self, threads: usize) {
+            self.fallback.set_shard_threads(threads);
         }
 
         fn name(&self) -> &'static str {

@@ -1,0 +1,115 @@
+//! Scratch arena for the engine hot path.
+//!
+//! A [`Workspace`] owns the named, shape-keyed scratch buffers the
+//! gradient hot loop needs — the residual tile of the fused kernel, the
+//! full residual of `grad_batch`, and the evaluation residual of the
+//! test-loss path — so steady-state rounds perform **zero heap
+//! allocation**: a buffer is (re)allocated only when its requested
+//! shape changes, and `allocations()` counts exactly those events,
+//! which is what the reuse tests assert.
+
+use crate::linalg::Matrix;
+
+/// Named scratch buffers with an allocation counter.
+///
+/// Each accessor returns the buffer resized to the requested shape
+/// (contents unspecified — callers overwrite). Requesting the same
+/// shape again returns the same storage without touching the heap.
+pub struct Workspace {
+    /// Residual tile for the fused range-gradient kernel.
+    resid_tile: Matrix,
+    /// Full residual for the whole-batch `grad_batch` path.
+    resid_full: Matrix,
+    /// Evaluation residual for the test-loss path.
+    eval: Matrix,
+    /// Number of buffer (re)allocations since construction.
+    allocations: u64,
+}
+
+impl Workspace {
+    /// Empty arena; the first request of each buffer allocates it.
+    pub fn new() -> Self {
+        Self {
+            resid_tile: Matrix::zeros(0, 0),
+            resid_full: Matrix::zeros(0, 0),
+            eval: Matrix::zeros(0, 0),
+            allocations: 0,
+        }
+    }
+
+    fn ensure(buf: &mut Matrix, rows: usize, cols: usize, allocations: &mut u64) {
+        if buf.shape() != (rows, cols) {
+            *buf = Matrix::zeros(rows, cols);
+            *allocations += 1;
+        }
+    }
+
+    /// Residual-tile buffer (`rows × cols`) for
+    /// [`crate::linalg::fused_ls_grad_range`].
+    pub fn resid_tile(&mut self, rows: usize, cols: usize) -> &mut Matrix {
+        Self::ensure(&mut self.resid_tile, rows, cols, &mut self.allocations);
+        &mut self.resid_tile
+    }
+
+    /// Full-residual buffer (`rows × cols`) for the whole-batch path.
+    pub fn resid_full(&mut self, rows: usize, cols: usize) -> &mut Matrix {
+        Self::ensure(&mut self.resid_full, rows, cols, &mut self.allocations);
+        &mut self.resid_full
+    }
+
+    /// Evaluation-residual buffer (`rows × cols`) for the test-loss
+    /// path ([`crate::metrics::test_mse_ws`]).
+    pub fn eval(&mut self, rows: usize, cols: usize) -> &mut Matrix {
+        Self::ensure(&mut self.eval, rows, cols, &mut self.allocations);
+        &mut self.eval
+    }
+
+    /// Number of buffer (re)allocations since construction. Constant
+    /// across calls ⇔ the steady state allocates nothing.
+    pub fn allocations(&self) -> u64 {
+        self.allocations
+    }
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The zero-allocation contract: repeated same-shape requests never
+    /// touch the heap; only a shape change does.
+    #[test]
+    fn steady_state_allocates_nothing() {
+        let mut ws = Workspace::new();
+        ws.resid_tile(8, 1);
+        ws.resid_full(16, 3);
+        ws.eval(100, 1);
+        let warm = ws.allocations();
+        assert_eq!(warm, 3);
+        for _ in 0..50 {
+            ws.resid_tile(8, 1).fill_zero();
+            ws.resid_full(16, 3).fill_zero();
+            ws.eval(100, 1).fill_zero();
+        }
+        assert_eq!(ws.allocations(), warm, "steady state must not reallocate");
+        ws.resid_tile(9, 1);
+        assert_eq!(ws.allocations(), warm + 1, "shape change is one allocation");
+    }
+
+    /// Buffers are independent: resizing one leaves the others alone.
+    #[test]
+    fn buffers_are_independent() {
+        let mut ws = Workspace::new();
+        ws.resid_tile(4, 2).fill_zero();
+        ws.eval(7, 1).fill_zero();
+        let before = ws.allocations();
+        ws.resid_tile(5, 2);
+        assert_eq!(ws.eval(7, 1).shape(), (7, 1));
+        assert_eq!(ws.allocations(), before + 1);
+    }
+}

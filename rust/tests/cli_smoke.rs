@@ -67,6 +67,27 @@ fn run_sweep_and_every_flag_parse_path() {
         sim_bytes, sock_bytes,
         "socket-backend trace must be byte-identical to the sim trace"
     );
+    // Intra-shard data parallelism: the --shard-threads flag parses
+    // through config + driver, and a 2-thread run is byte-identical to
+    // the sequential artifact it just wrote.
+    assert_ok(&["run", "--quick", "--config", SOCKET_CONFIG, "--backend", "sim"]);
+    let seq_bytes = std::fs::read(&trace).expect("sequential trace artifact");
+    assert_ok(&[
+        "run",
+        "--quick",
+        "--config",
+        SOCKET_CONFIG,
+        "--backend",
+        "sim",
+        "--shard-threads",
+        "2",
+    ]);
+    let par_bytes = std::fs::read(&trace).expect("shard-threads trace artifact");
+    assert_eq!(
+        seq_bytes, par_bytes,
+        "--shard-threads 2 must be byte-identical to the sequential run"
+    );
+
     // The whole latency zoo.
     for latency in ["uniform", "shifted-exp", "pareto", "slownode", "bimodal"] {
         assert_ok(&["run", "--quick", "--config", CONFIG, "--latency", latency]);
@@ -79,6 +100,21 @@ fn run_sweep_and_every_flag_parse_path() {
     for topo in ["static", "churn", "partition", "flaky-links"] {
         assert_ok(&["run", "--quick", "--config", CONFIG, "--topology", topo]);
     }
+
+    // The bench-scale harness, quick grid, to its own artifact path
+    // (never the default BENCH_pr9.json — that file is the committed
+    // baseline and must stay clean under the test tree).
+    assert_ok(&[
+        "bench-scale",
+        "--quick",
+        "--shard-threads",
+        "2",
+        "--out",
+        "results/cli_smoke_bench_scale.json",
+    ]);
+    let bench =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("results/cli_smoke_bench_scale.json");
+    assert!(bench.is_file(), "bench-scale must write the --out file");
 
     // Config-driven sweep on 2 workers, explicit output path.
     assert_ok(&[
@@ -105,6 +141,18 @@ fn bad_flag_values_fail_cleanly() {
     assert_config_error(&["run", "--quick", "--config", CONFIG, "--topology", "mesh"]);
     // `run` takes exactly one value per flag; lists belong to `sweep`.
     assert_config_error(&["run", "--quick", "--config", CONFIG, "--backend", "sim,threaded"]);
+    // shard_threads = 0 is a config error on both subcommands that
+    // accept it (1 is the sequential floor).
+    assert_config_error(&["run", "--quick", "--config", CONFIG, "--shard-threads", "0"]);
+    assert_config_error(&["run", "--quick", "--config", CONFIG, "--shard-threads", "two"]);
+    assert_config_error(&[
+        "bench-scale",
+        "--quick",
+        "--shard-threads",
+        "0",
+        "--out",
+        "results/cli_smoke_bench_reject.json",
+    ]);
     // --backend socket without a [socket] table: spawning worker
     // processes needs the explicit opt-in, so this is a config error.
     assert_config_error(&["run", "--quick", "--config", CONFIG, "--backend", "socket"]);

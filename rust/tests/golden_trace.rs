@@ -69,6 +69,26 @@ fn least_squares_trace_is_byte_identical_to_golden() {
     );
 }
 
+/// Intra-shard data parallelism must not move a single byte of the
+/// blessed trace: the kernels split only the *output* across threads,
+/// keeping every element's sequential accumulation chain, so
+/// `shard_threads ∈ {2, 4}` renders exactly the golden bytes.
+#[test]
+fn shard_threads_render_the_exact_golden_bytes() {
+    let sequential = render_trace();
+    let ds = synthetic_small(400, 40, 0.1, 77);
+    for threads in [2usize, 4] {
+        let cfg = RunConfig { shard_threads: threads, ..golden_cfg() };
+        let mut driver = Driver::new(cfg, &ds).expect("threaded golden driver builds");
+        let trace = driver.run(&mut NativeEngine::new()).expect("threaded golden run succeeds");
+        assert_eq!(
+            trace.to_json().to_string(),
+            sequential,
+            "shard_threads = {threads} perturbed the golden trace bytes"
+        );
+    }
+}
+
 /// The golden config sanity-checks itself: evaluation points land where
 /// `eval_every` says, and the trace improves from its first point (a
 /// drifting generator or schedule would silently invalidate the golden

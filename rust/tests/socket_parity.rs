@@ -83,6 +83,34 @@ fn socket_trace_is_byte_identical_to_sim_and_threaded_on_golden_cell() {
     );
 }
 
+/// Intra-shard data parallelism composes with every backend: for
+/// `shard_threads ∈ {1, 2, 4}` the sim, threaded and socket backends
+/// all render the exact trace of the sequential sim reference (the
+/// kernel layer splits only the output across threads, so the thread
+/// count can never move a byte, wherever the engine runs).
+#[test]
+fn shard_threads_are_bitwise_neutral_across_all_backends() {
+    let base = RunConfig { max_iters: 120, ..golden_cfg() };
+    let ds = golden_ds();
+    let (reference, _) = run(base.clone(), &ds);
+    for threads in [1usize, 2, 4] {
+        let cfg = RunConfig { shard_threads: threads, ..base.clone() };
+        let (t_sim, _) = run(cfg.clone(), &ds);
+        let (t_thr, _) =
+            run(RunConfig { backend: BackendKind::Threaded, ..cfg.clone() }, &ds);
+        let (t_sock, _) = run(with_socket(&cfg), &ds);
+        assert_eq!(reference.points, t_sim.points, "sim moved at shard_threads={threads}");
+        assert_eq!(
+            reference.points, t_thr.points,
+            "threaded moved at shard_threads={threads}"
+        );
+        assert_eq!(
+            reference.points, t_sock.points,
+            "socket moved at shard_threads={threads}"
+        );
+    }
+}
+
 /// One heavy-tail cell: a coded run under Pareto service times (the
 /// regime where arrival order and the decode walk actually bite) stays
 /// byte-identical across the socket boundary.
