@@ -49,7 +49,9 @@ def leaves(doc, prefix="", keep=None):
     """Flatten a JSON document to {path: value} over its leaves.
 
     Array elements are keyed by a stable identity field when present
-    (regime/codec/workers) so reordering does not misalign entries.
+    (regime/codec/workers/name) so reordering does not misalign entries;
+    bench-scale cells repeat each `name` once per kernel tier, so a
+    `tier` field is folded into the tag when present.
     `keep` filters leaf values (default: numbers and booleans only).
     """
     if keep is None:
@@ -65,6 +67,8 @@ def leaves(doc, prefix="", keep=None):
                 for ident in ("regime", "codec", "workers", "name"):
                     if ident in v:
                         tag = f"{ident}={v[ident]}"
+                        if "tier" in v:
+                            tag += f",tier={v['tier']}"
                         break
             out.update(leaves(v, f"{prefix}[{tag}]", keep))
     elif keep(doc):

@@ -9,9 +9,11 @@
 //! matrix `(OᵀO/b + 2ρ d_i I)`; each agent factors it once.
 
 use super::GossipAlgorithm;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::graph::Topology;
-use crate::linalg::{cholesky_factor, matmul_at_b, CholeskyFactor, Matrix};
+use crate::linalg::{
+    cholesky_factor_blocked_with, matmul_at_b, CholeskyFactor, Matrix, SolveScratch,
+};
 use crate::problem::LeastSquares;
 
 /// D-ADMM baseline.
@@ -53,12 +55,23 @@ impl DAdmm {
         }
     }
 
-    fn prepare(&mut self, topo: &Topology, objs: &[LeastSquares], p: usize, d: usize) {
+    fn prepare(
+        &mut self,
+        topo: &Topology,
+        objs: &[LeastSquares],
+        p: usize,
+        d: usize,
+    ) -> Result<()> {
         self.phi = (0..objs.len()).map(|_| Matrix::zeros(p, d)).collect();
+        self.factors.clear();
+        self.crosses.clear();
         if self.linearize_alpha.is_some() {
             self.ready = true;
-            return; // gradient path needs no factors
+            return Ok(()); // gradient path needs no factors
         }
+        // All agents share the p×p Gram shape, so one panel arena
+        // serves every blocked factorization in the loop.
+        let mut scratch = SolveScratch::new();
         for (i, obj) in objs.iter().enumerate() {
             let o = &obj.data().inputs;
             let t = &obj.data().targets;
@@ -70,13 +83,23 @@ impl DAdmm {
             for r in 0..p {
                 gram[(r, r)] += 2.0 * self.rho * deg;
             }
-            self.factors.push(cholesky_factor(&gram).expect("SPD"));
+            // Rank-deficient shards with a too-small ρ make this matrix
+            // singular — a user-reachable configuration, so it must
+            // surface as an error rather than a panic.
+            let factor = cholesky_factor_blocked_with(&gram, &mut scratch).map_err(|e| {
+                Error::Linalg(format!(
+                    "D-ADMM agent {i}: x-update matrix O'O/b + 2*rho*deg*I is not \
+                     positive definite (rank-deficient shard and rho too small?): {e}"
+                ))
+            })?;
+            self.factors.push(factor);
             let mut cross = Matrix::zeros(p, d);
             matmul_at_b(o, t, &mut cross);
             cross.scale(1.0 / b);
             self.crosses.push(cross);
         }
         self.ready = true;
+        Ok(())
     }
 }
 
@@ -100,7 +123,7 @@ impl GossipAlgorithm for DAdmm {
         let n = xs.len();
         let (p, d) = xs[0].shape();
         if !self.ready {
-            self.prepare(topo, objs, p, d);
+            self.prepare(topo, objs, p, d)?;
         }
         // x-update (all agents in parallel on the k-th iterates).
         let mut next = Vec::with_capacity(n);
@@ -205,5 +228,34 @@ mod tests {
             }
             assert!(sum.max_abs() < 1e-9, "dual sum {} at k={k}", sum.max_abs());
         }
+    }
+
+    #[test]
+    fn rank_deficient_shard_reports_linalg_error() {
+        use crate::data::Split;
+        use crate::error::Error;
+        use crate::rng::{Rng, Xoshiro256pp};
+        // Two zero feature columns and ρ = 0 leave OᵀO/b rank one: the
+        // x-update factor must surface as `Error::Linalg`, not abort
+        // the process (the pre-PR 10 `.expect("SPD")` panicked here).
+        let mut rng = Xoshiro256pp::seed_from_u64(118);
+        let mut vals = vec![0.0; 8 * 3];
+        for r in 0..8 {
+            vals[r * 3] = rng.normal();
+        }
+        let inputs = Matrix::from_vec(8, 3, vals).unwrap();
+        let targets =
+            Matrix::from_vec(8, 1, (0..8).map(|_| rng.normal()).collect()).unwrap();
+        let objs: Vec<LeastSquares> = (0..2)
+            .map(|_| {
+                LeastSquares::new(Split { inputs: inputs.clone(), targets: targets.clone() })
+            })
+            .collect();
+        let topo = Topology::random_connected(2, 1.0, &mut rng).unwrap();
+        let mut alg = DAdmm::new(0.0);
+        let mut xs: Vec<Matrix> = (0..2).map(|_| Matrix::zeros(3, 1)).collect();
+        let err = alg.step(1, &topo, &objs, &mut xs).unwrap_err();
+        assert!(matches!(err, Error::Linalg(_)), "expected Linalg error, got {err:?}");
+        assert!(err.to_string().contains("agent 0"), "context in message: {err}");
     }
 }

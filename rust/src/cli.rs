@@ -18,7 +18,7 @@ usage: csadmm <command> [--quick] [--pjrt] [--artifacts <dir>]
 commands:
   run [--config <file>] [--seed N] [--objective <obj>] [--latency <lat>]
       [--backend <be>] [--compress <cx>] [--topology <topo>]
-      [--shard-threads N]
+      [--shard-threads N] [--kernel exact|fast]
       [--socket-transport unix|tcp] [--socket-dir <dir>]
       [--socket-port N] [--socket-time-scale X]
                                    one experiment from a config file
@@ -30,7 +30,11 @@ commands:
                                    --shard-threads fans each shard's
                                    gradient kernels over N scoped threads
                                    (bitwise-identical traces for any N;
-                                   default 1)
+                                   default 1); --kernel picks the kernel
+                                   tier (exact = reference accumulation
+                                   order, golden byte-identity, default;
+                                   fast = 4-lane unrolled loops, <=1e-12
+                                   relative parity, no byte-identity)
   worker --connect <addr> --ecn N [--transport unix|tcp]
                                    socket-backend worker process: serves
                                    one ECN's coded gradient rounds over
@@ -56,19 +60,24 @@ commands:
                                    re-plans around the cut and recovers,
                                    coded vs uncoded (epoch markers in
                                    the trace shade the disruption)
-  bench-scale [--shard-threads N] [--out <file>]
+  bench-scale [--shard-threads N] [--kernel <tier>[,<tier>...]]
+              [--out <file>]
                                    SLO-gated engine-scaling grid: times
                                    fused gradient rounds over rows in
                                    {1e4,1e5,1e6} x ECNs in {16,64,256}
                                    (--quick: 1e4 x {16,64}, ungated) and
                                    writes rounds/sec, ns/row and p50/p99
                                    round latency to --out (default
-                                   BENCH_pr9.json); a full-grid cell
-                                   over the ns/row SLO fails the run
+                                   BENCH_pr10.json); the grid runs once
+                                   per kernel tier (default: exact,fast;
+                                   both measured emits the per-cell
+                                   exact-vs-fast speedup leaf); a
+                                   full-grid cell over the ns/row SLO
+                                   fails the run
   sweep [--config <file>] [--workers N] [--out <file>]
         [--objective <obj>[,<obj>...]] [--latency <lat>[,<lat>...]]
         [--backend <be>[,<be>...]] [--compress <cx>[,<cx>...]]
-        [--topology <topo>[,<topo>...]]
+        [--topology <topo>[,<topo>...]] [--kernel <tier>[,<tier>...]]
                                    parallel parameter grid: expands the
                                    [sweep] section of the config (or a
                                    built-in 24-job demo grid) and runs it
@@ -85,7 +94,9 @@ commands:
                                    --compress overrides the token-codec
                                    axis, e.g. --compress identity,q8,topk+ef;
                                    --topology overrides the membership
-                                   axis, e.g. --topology static,churn
+                                   axis, e.g. --topology static,churn;
+                                   --kernel overrides the kernel-tier
+                                   axis, e.g. --kernel exact,fast
   all                              every experiment above
 
 objectives (<obj>): ls (least squares, Eq. 24) | logistic | huber | enet
@@ -101,7 +112,10 @@ token codecs (<cx>): identity (exact f64, default) | f32 | q<bits>
                      — append +ef for error feedback; params via [comm]
 topologies (<topo>): static (fixed membership, default) | churn
                      | partition | flaky-links  (params and explicit
-                     leave/join event lists via [topology])";
+                     leave/join event lists via [topology])
+kernel tiers (<tier>): exact (reference accumulation order, golden
+                       byte-identity, default) | fast (4-lane unrolled
+                       inner loops, <=1e-12 relative parity)";
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]

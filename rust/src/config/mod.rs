@@ -30,6 +30,7 @@ use crate::ecn::{BackendKind, ResponseModel, SocketSpec, TransportKind};
 use crate::error::{Error, Result};
 use crate::graph::TraversalKind;
 use crate::latency::{ClockSpec, FaultSpec, LatencyKind, LatencySpec};
+use crate::linalg::KernelTier;
 use crate::problem::ObjectiveKind;
 use crate::topology::{parse_join_event, MemberEvent, ScenarioKind, TopologySpec};
 
@@ -425,6 +426,11 @@ pub fn run_config_from_doc(doc: &ConfigDoc) -> Result<(RunConfig, DatasetName)> 
             Error::Config(format!("unknown backend '{v}' (expected sim, threaded or socket)"))
         })?;
     }
+    if let Some(v) = doc.get_str(sec, "kernel") {
+        cfg.kernel = KernelTier::parse(&v).ok_or_else(|| {
+            Error::Config(format!("unknown kernel '{v}' (expected exact or fast)"))
+        })?;
+    }
     if let Some(v) = doc.get_str(sec, "traversal") {
         cfg.traversal = match v.as_str() {
             "hamiltonian" => TraversalKind::Hamiltonian,
@@ -600,6 +606,21 @@ delay = 0.01
         let default = ConfigDoc::parse("[run]\n").unwrap();
         let (cfg, _) = run_config_from_doc(&default).unwrap();
         assert_eq!(cfg.shard_threads, 1, "sequential legacy default");
+    }
+
+    #[test]
+    fn kernel_key_round_trip() {
+        let doc = ConfigDoc::parse("[run]\nkernel = fast\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.kernel, KernelTier::Fast);
+        let doc = ConfigDoc::parse("[run]\nkernel = exact\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.kernel, KernelTier::Exact);
+        let default = ConfigDoc::parse("[run]\n").unwrap();
+        let (cfg, _) = run_config_from_doc(&default).unwrap();
+        assert_eq!(cfg.kernel, KernelTier::Exact, "exact tier is the golden default");
+        let bad = ConfigDoc::parse("[run]\nkernel = warp\n").unwrap();
+        assert!(run_config_from_doc(&bad).is_err());
     }
 
     #[test]

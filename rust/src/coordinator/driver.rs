@@ -13,6 +13,7 @@ use crate::ecn::{
 use crate::error::{Error, Result};
 use crate::graph::{Topology, TraversalKind};
 use crate::latency::LatencySpec;
+use crate::linalg::KernelTier;
 use crate::metrics::{accuracy, CommCost, Trace, TracePoint};
 use crate::problem::{
     reference_cache_key, reference_optimum, reference_optimum_cached, Objective, ObjectiveKind,
@@ -128,6 +129,14 @@ pub struct RunConfig {
     /// bitwise-identical traces; 1 (the default) is the sequential
     /// legacy path. Zero is rejected by [`Self::validate`].
     pub shard_threads: usize,
+    /// Kernel tier (`[run] kernel` / `--kernel`):
+    /// [`KernelTier::Exact`] (the default) keeps the reference
+    /// accumulation order — traces stay byte-identical to the blessed
+    /// golden trace; [`KernelTier::Fast`] selects the 4-lane
+    /// reassociated inner loops (≤ 1e-12 relative parity, still
+    /// bitwise-deterministic across `shard_threads` values, but *not*
+    /// byte-identical to the exact tier).
+    pub kernel: KernelTier,
     /// Legacy token-quantization knob, kept as a config alias: `Some(b)`
     /// behaves exactly like `comm = q<b>` (same rng stream, so
     /// pre-refactor quantized traces are reproduced byte-for-byte).
@@ -162,6 +171,7 @@ impl Default for RunConfig {
             eval_every: 20,
             seed: 1,
             shard_threads: 1,
+            kernel: KernelTier::Exact,
             quantize_bits: None,
         }
     }
@@ -488,6 +498,9 @@ impl Driver {
         // bitwise-identical for every thread count, so this never
         // changes a trace byte (asserted by the golden/parity tests).
         engine.set_shard_threads(cfg.shard_threads);
+        // Kernel tier: Exact (default) preserves golden byte-identity;
+        // Fast swaps in the 4-lane reassociated loops (≤ 1e-12 parity).
+        engine.set_kernel_tier(cfg.kernel);
         let n = cfg.n_agents;
         let (p, d) = self.objectives[0].dims();
         let params = self.effective_params();
@@ -516,6 +529,13 @@ impl Driver {
         let mut codec = codec_spec.build(cfg.seed)?;
         if !codec_spec.is_plain_identity() {
             trace.codec = Some(codec_spec.as_str());
+        }
+        // Like the codec: only a non-default tier stamps the trace, so
+        // the exact path keeps the historical (golden) artifact bytes
+        // while a fast-tier artifact can never silently pass a
+        // byte-compare against a blessed exact trace.
+        if cfg.kernel != KernelTier::Exact {
+            trace.kernel = Some(cfg.kernel.as_str().to_string());
         }
         let mut comm_rng = rng.split();
         // Socket backend: every z-hop genuinely crosses a loopback
@@ -745,6 +765,37 @@ mod tests {
             let t = Driver::new(cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
             assert_eq!(t_seq.points, t.points, "shard_threads = {threads} moved the trace");
         }
+    }
+
+    /// Kernel-tier contract end to end through the driver: the exact
+    /// tier (explicitly set) is byte-for-byte the default trace, and
+    /// the fast tier still converges to the same quality even though
+    /// its reassociated accumulation order may move individual bytes.
+    #[test]
+    fn kernel_tier_exact_is_byte_neutral_and_fast_converges() {
+        let ds = ds();
+        let base = RunConfig { max_iters: 200, eval_every: 40, ..base_cfg() };
+        let t_default =
+            Driver::new(base.clone(), &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+        let exact_cfg = RunConfig { kernel: KernelTier::Exact, ..base.clone() };
+        let t_exact =
+            Driver::new(exact_cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+        assert_eq!(t_default.points, t_exact.points, "explicit exact tier moved the trace");
+        assert_eq!(t_exact.kernel, None, "exact tier must not stamp the artifact");
+        let fast_cfg = RunConfig { kernel: KernelTier::Fast, ..base.clone() };
+        let t_fast =
+            Driver::new(fast_cfg, &ds).unwrap().run(&mut NativeEngine::new()).unwrap();
+        assert_eq!(
+            t_fast.kernel.as_deref(),
+            Some("fast"),
+            "fast tier must stamp the artifact so golden byte-compares fail loudly"
+        );
+        assert_eq!(t_fast.points.len(), t_default.points.len());
+        let (a, b) = (t_default.final_accuracy(), t_fast.final_accuracy());
+        assert!(
+            (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+            "fast tier diverged from exact: {a} vs {b}"
+        );
     }
 
     #[test]

@@ -212,7 +212,7 @@ mod tests {
     }
 
     #[test]
-    fn synthetic_is_nearly_linear() {
+    fn synthetic_is_nearly_linear() -> crate::error::Result<()> {
         // With tiny noise, the planted model should fit almost exactly:
         // residual of the LS solution << target norm.
         use crate::linalg::cholesky_solve;
@@ -223,9 +223,12 @@ mod tests {
         crate::linalg::matmul_at_b(o, o, &mut gram);
         let mut rhs = crate::linalg::Matrix::zeros(3, 1);
         crate::linalg::matmul_at_b(o, t, &mut rhs);
-        let x = cholesky_solve(&gram, &rhs).unwrap();
+        // Propagated, not unwrapped: a degenerate draw should fail the
+        // test with the solver's diagnostic, not a panic backtrace.
+        let x = cholesky_solve(&gram, &rhs)?;
         let resid = &o.matmul(&x) - t;
         assert!(resid.norm() / t.norm() < 0.05);
+        Ok(())
     }
 
     #[test]

@@ -11,17 +11,21 @@
 //!
 //! Per cell the harness reports rounds/sec, amortized ns/row, and the
 //! p50/p99 round-latency percentiles, and checks each cell against the
-//! [`SLO_NS_PER_ROW`] preflight ceiling. The artifact (default
-//! `BENCH_pr9.json`) is consumed by `python/tools/bench_diff.py`, which
-//! treats the percentile fields as timing leaves (±20% vs the armed
-//! baseline). In full mode an SLO violation is an [`Error::Runtime`] —
-//! the CI stress lane fails loudly; `--quick` never gates, so the
-//! gating-lane smoke can't flake on a loaded runner.
+//! [`SLO_NS_PER_ROW`] preflight ceiling. The grid runs once per
+//! requested [`KernelTier`] (`--kernel exact,fast`); when both tiers
+//! are measured the artifact additionally carries the per-cell
+//! `speedup_fast_vs_exact` leaf. The artifact (default
+//! `BENCH_pr10.json`) is consumed by `python/tools/bench_diff.py`,
+//! which treats the percentile and speedup fields as timing leaves
+//! (±20% vs the armed baseline). In full mode an SLO violation is an
+//! [`Error::Runtime`] — the CI stress lane fails loudly; `--quick`
+//! never gates, so the gating-lane smoke can't flake on a loaded
+//! runner.
 
 use super::ROOT_SEED;
 use crate::data::synthetic_wide;
 use crate::error::{Error, Result};
-use crate::linalg::Matrix;
+use crate::linalg::{KernelTier, Matrix};
 use crate::runtime::EngineFactory;
 use crate::util::json::{write_json_file, Json};
 use crate::util::table::{fnum, Table};
@@ -40,9 +44,10 @@ pub const SLO_NS_PER_ROW: f64 = 2_000.0;
 /// make every cell trivially memory-bound).
 const FEATURES: usize = 32;
 
-/// One measured grid cell.
+/// One measured grid cell (one kernel tier × one grid point).
 struct Cell {
     name: String,
+    tier: KernelTier,
     rows: usize,
     ecns: usize,
     rounds_per_sec: f64,
@@ -79,22 +84,33 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 /// never fails on the SLO (the gating-lane smoke); the full grid gates.
 /// `shard_threads` is forwarded to the engine — bitwise-neutral by the
 /// kernel determinism contract, so it only moves the timing columns.
+/// The grid is measured once per tier in `tiers` (deduplicated, in
+/// [`KernelTier::ALL`] order); when both tiers are present the artifact
+/// carries the per-cell `speedup_fast_vs_exact` leaf.
 pub fn run(
     quick: bool,
     factory: &dyn EngineFactory,
     shard_threads: usize,
+    tiers: &[KernelTier],
     out: &Path,
 ) -> Result<()> {
+    let tiers: Vec<KernelTier> =
+        KernelTier::ALL.iter().copied().filter(|t| tiers.contains(t)).collect();
+    if tiers.is_empty() {
+        return Err(Error::Config("bench-scale needs at least one kernel tier".into()));
+    }
     let row_counts: &[usize] = if quick { &[10_000] } else { &[10_000, 100_000, 1_000_000] };
     let ecn_counts: &[usize] = if quick { &[16, 64] } else { &[16, 64, 256] };
     let rounds = if quick { 8 } else { 40 };
     let mut engine = factory.create()?;
     engine.set_shard_threads(shard_threads);
+    let tier_labels: Vec<&str> = tiers.iter().map(|t| t.as_str()).collect();
     println!(
         "bench-scale: {} cells × {rounds} rounds, p = {FEATURES}, engine = {}, \
-         shard_threads = {shard_threads}{}",
-        row_counts.len() * ecn_counts.len(),
+         shard_threads = {shard_threads}, kernel = {}{}",
+        row_counts.len() * ecn_counts.len() * tiers.len(),
         engine.name(),
+        tier_labels.join(","),
         if quick { " (quick: SLO reported, not gated)" } else { "" }
     );
     let mut cells: Vec<Cell> = Vec::new();
@@ -109,47 +125,52 @@ pub fn run(
         let mut grad = Matrix::zeros(FEATURES, 1);
         let mut sum = Matrix::zeros(FEATURES, 1);
         for &ecns in ecn_counts {
-            let mut one_round = |engine: &mut dyn crate::runtime::Engine| -> Result<()> {
-                sum.fill_zero();
-                for j in 0..ecns {
-                    let lo = j * rows / ecns;
-                    let hi = (j + 1) * rows / ecns;
-                    engine.grad_batch_range(o, t, lo, hi, &x, &mut grad)?;
-                    sum += &grad;
-                }
-                Ok(())
-            };
-            // Warm-up round: sizes the engine workspace and faults the
-            // data pages in; excluded from the timed sample.
-            one_round(engine.as_mut())?;
-            let mut times_s: Vec<f64> = Vec::with_capacity(rounds);
-            for _ in 0..rounds {
-                let t0 = Instant::now();
+            for &tier in &tiers {
+                engine.set_kernel_tier(tier);
+                let mut one_round = |engine: &mut dyn crate::runtime::Engine| -> Result<()> {
+                    sum.fill_zero();
+                    for j in 0..ecns {
+                        let lo = j * rows / ecns;
+                        let hi = (j + 1) * rows / ecns;
+                        engine.grad_batch_range(o, t, lo, hi, &x, &mut grad)?;
+                        sum += &grad;
+                    }
+                    Ok(())
+                };
+                // Warm-up round: sizes the engine workspace and faults
+                // the data pages in; excluded from the timed sample.
                 one_round(engine.as_mut())?;
-                times_s.push(t0.elapsed().as_secs_f64());
+                let mut times_s: Vec<f64> = Vec::with_capacity(rounds);
+                for _ in 0..rounds {
+                    let t0 = Instant::now();
+                    one_round(engine.as_mut())?;
+                    times_s.push(t0.elapsed().as_secs_f64());
+                }
+                let total_s: f64 = times_s.iter().sum();
+                times_s.sort_by(f64::total_cmp);
+                let ns_per_row = total_s * 1e9 / (rounds as f64 * rows as f64);
+                cells.push(Cell {
+                    name: cell_name(rows, ecns),
+                    tier,
+                    rows,
+                    ecns,
+                    rounds_per_sec: rounds as f64 / total_s,
+                    ns_per_row,
+                    p50_s: percentile(&times_s, 0.50),
+                    p99_s: percentile(&times_s, 0.99),
+                    slo_pass: ns_per_row <= SLO_NS_PER_ROW,
+                });
             }
-            let total_s: f64 = times_s.iter().sum();
-            times_s.sort_by(f64::total_cmp);
-            let ns_per_row = total_s * 1e9 / (rounds as f64 * rows as f64);
-            cells.push(Cell {
-                name: cell_name(rows, ecns),
-                rows,
-                ecns,
-                rounds_per_sec: rounds as f64 / total_s,
-                ns_per_row,
-                p50_s: percentile(&times_s, 0.50),
-                p99_s: percentile(&times_s, 0.99),
-                slo_pass: ns_per_row <= SLO_NS_PER_ROW,
-            });
         }
     }
     let mut table = Table::new(
         "bench-scale (gradient rounds, p = 32)",
-        &["cell", "rows", "ECNs", "rounds/s", "ns/row", "p50 (s)", "p99 (s)", "SLO"],
+        &["cell", "tier", "rows", "ECNs", "rounds/s", "ns/row", "p50 (s)", "p99 (s)", "SLO"],
     );
     for c in &cells {
         table.row(&[
             c.name.clone(),
+            c.tier.as_str().into(),
             c.rows.to_string(),
             c.ecns.to_string(),
             fnum(c.rounds_per_sec),
@@ -160,10 +181,30 @@ pub fn run(
         ]);
     }
     table.print();
-    let json = Json::obj()
+    // Exact-vs-fast speedup per grid point — only when both tiers were
+    // measured in this invocation.
+    let speedups: Vec<(String, f64)> = cells
+        .iter()
+        .filter(|c| c.tier == KernelTier::Exact)
+        .filter_map(|e| {
+            cells
+                .iter()
+                .find(|f| f.tier == KernelTier::Fast && f.name == e.name)
+                .map(|f| (e.name.clone(), e.ns_per_row / f.ns_per_row))
+        })
+        .collect();
+    if !speedups.is_empty() {
+        let mut t = Table::new("exact → fast speedup", &["cell", "speedup (×)"]);
+        for (name, s) in &speedups {
+            t.row(&[name.clone(), fnum(*s)]);
+        }
+        t.print();
+    }
+    let mut root = Json::obj()
         .str("bench", "bench_scale")
         .str("mode", if quick { "quick" } else { "full" })
         .str("engine", engine.name())
+        .str("kernel_tiers", &tier_labels.join(","))
         .num("features", FEATURES as f64)
         .num("rounds_per_cell", rounds as f64)
         .num("shard_threads", shard_threads as f64)
@@ -176,6 +217,7 @@ pub fn run(
                     .map(|c| {
                         Json::obj()
                             .str("name", &c.name)
+                            .str("tier", c.tier.as_str())
                             .num("rows", c.rows as f64)
                             .num("ecns", c.ecns as f64)
                             .num("rounds_per_sec", c.rounds_per_sec)
@@ -187,12 +229,28 @@ pub fn run(
                     })
                     .collect(),
             ),
-        )
-        .build();
+        );
+    if !speedups.is_empty() {
+        root = root.field(
+            "tier_speedup",
+            Json::Arr(
+                speedups
+                    .iter()
+                    .map(|(name, s)| {
+                        Json::obj().str("name", name).num("speedup_fast_vs_exact", *s).build()
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    let json = root.build();
     write_json_file(out, &json)?;
     println!("bench-scale artifact written to {}", out.display());
-    let failed: Vec<&str> =
-        cells.iter().filter(|c| !c.slo_pass).map(|c| c.name.as_str()).collect();
+    let failed: Vec<String> = cells
+        .iter()
+        .filter(|c| !c.slo_pass)
+        .map(|c| format!("{}[{}]", c.name, c.tier.as_str()))
+        .collect();
     if !failed.is_empty() {
         let msg = format!(
             "bench-scale SLO preflight: {} cell(s) exceed {SLO_NS_PER_ROW} ns/row: {}",
@@ -231,26 +289,50 @@ mod tests {
         assert_eq!(cell_name(500, 4), "rows500_ecn4");
     }
 
-    /// The quick grid runs end to end and emits a well-formed artifact
-    /// with the percentile fields `bench_diff.py` consumes.
+    /// The quick grid runs end to end over both tiers and emits a
+    /// well-formed artifact with the percentile fields and the per-cell
+    /// speedup leaf `bench_diff.py` consumes.
     #[test]
     fn quick_grid_runs_and_emits_artifact() {
         let out = std::env::temp_dir().join("csadmm_bench_scale_test.json");
-        run(true, &NativeEngineFactory, 2, &out).unwrap();
+        run(true, &NativeEngineFactory, 2, &KernelTier::ALL, &out).unwrap();
         let text = std::fs::read_to_string(&out).unwrap();
         for key in [
             "\"bench\": \"bench_scale\"",
             "\"mode\": \"quick\"",
+            "\"kernel_tiers\": \"exact,fast\"",
             "rows1e4_ecn16",
             "rows1e4_ecn64",
+            "\"tier\": \"exact\"",
+            "\"tier\": \"fast\"",
             "p50_round_latency_s",
             "p99_round_latency_s",
             "rounds_per_sec",
             "ns_per_row",
             "slo_pass",
+            "speedup_fast_vs_exact",
         ] {
             assert!(text.contains(key), "artifact lacks {key}:\n{text}");
         }
         let _ = std::fs::remove_file(&out);
+    }
+
+    /// A single-tier invocation omits the speedup leaf (nothing to
+    /// compare against) rather than emitting a degenerate 1.0 entry.
+    #[test]
+    fn single_tier_has_no_speedup_leaf() {
+        let out = std::env::temp_dir().join("csadmm_bench_scale_single_tier.json");
+        run(true, &NativeEngineFactory, 1, &[KernelTier::Fast], &out).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.contains("\"kernel_tiers\": \"fast\""));
+        assert!(!text.contains("speedup_fast_vs_exact"), "single tier must not emit speedup");
+        let _ = std::fs::remove_file(&out);
+    }
+
+    /// An empty tier list is a config error, not a silent no-op grid.
+    #[test]
+    fn empty_tier_list_is_rejected() {
+        let out = std::env::temp_dir().join("csadmm_bench_scale_empty.json");
+        assert!(run(true, &NativeEngineFactory, 1, &[], &out).is_err());
     }
 }

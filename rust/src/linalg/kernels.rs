@@ -42,11 +42,75 @@ use super::Matrix;
 /// value affects cache behaviour only, never the bytes.
 pub const TILE_ROWS: usize = 512;
 
+/// The two-tier kernel policy (`[run] kernel` / `--kernel`).
+///
+/// * [`KernelTier::Exact`] (the default) runs the reference-order
+///   kernels: every output element keeps the naive loop's sequential
+///   accumulation chain bit for bit, so traces are **byte-identical**
+///   to the blessed golden trace for any thread count. This is the
+///   only tier on which golden byte-compares are meaningful.
+/// * [`KernelTier::Fast`] runs register-blocked inner loops built on
+///   explicit 4-lane `[f64; 4]` accumulator arrays (plain stable-Rust
+///   unrolls the autovectorizer turns into SIMD — no `std::simd`):
+///   4-wide output-column accumulators for the matmul, 4-row-unrolled
+///   data walks for `AᵀB`, and a multi-target (`d > 1`) fused-gradient
+///   path that sweeps all `d` targets of a tile in one pass. The
+///   reassociated sums round differently from the reference chain, so
+///   `Fast` trades golden byte-identity for throughput; results agree
+///   with `Exact` to ≤ 1e-12 relative error (pinned by the tier-parity
+///   property suite). Within the tier, results are still bitwise
+///   deterministic — and, because thread fan-out splits only the
+///   output, bitwise identical for any `threads` value.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelTier {
+    /// Reference accumulation order; golden-trace byte identity holds.
+    #[default]
+    Exact,
+    /// 4-lane reassociated inner loops; ≤ 1e-12 relative parity.
+    Fast,
+}
+
+impl KernelTier {
+    /// Every tier, in the order sweep grids and bench grids walk them.
+    pub const ALL: [KernelTier; 2] = [KernelTier::Exact, KernelTier::Fast];
+
+    /// Parse a CLI / config token (`exact` | `fast`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim() {
+            "exact" => Some(KernelTier::Exact),
+            "fast" => Some(KernelTier::Fast),
+            _ => None,
+        }
+    }
+
+    /// The canonical token (round-trips through [`KernelTier::parse`]).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelTier::Exact => "exact",
+            KernelTier::Fast => "fast",
+        }
+    }
+}
+
 /// `out = a · b`, blocked over output rows and (optionally) fanned out
 /// over `threads` scoped threads. Bitwise-identical to
 /// [`super::matmul_into`] for every `threads` value; see the module
 /// docs for the contract.
 pub fn matmul_blocked_into(a: &Matrix, b: &Matrix, out: &mut Matrix, threads: usize) {
+    matmul_blocked_into_tiered(a, b, out, threads, KernelTier::Exact);
+}
+
+/// [`matmul_blocked_into`] with an explicit [`KernelTier`]:
+/// [`KernelTier::Exact`] is the reference-order path, [`KernelTier::Fast`]
+/// keeps four output columns in a `[f64; 4]` register accumulator per
+/// k-walk instead of round-tripping the output row through memory.
+pub fn matmul_blocked_into_tiered(
+    a: &Matrix,
+    b: &Matrix,
+    out: &mut Matrix,
+    threads: usize,
+    tier: KernelTier,
+) {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "matmul_blocked: inner dims {ka} vs {kb}");
@@ -58,16 +122,20 @@ pub fn matmul_blocked_into(a: &Matrix, b: &Matrix, out: &mut Matrix, threads: us
     let asl = a.as_slice();
     let bs = b.as_slice();
     let os = out.as_mut_slice();
+    let block: fn(&[f64], &[f64], &mut [f64], usize, usize, usize) = match tier {
+        KernelTier::Exact => matmul_row_block,
+        KernelTier::Fast => matmul_row_block_fast,
+    };
     let t = threads.max(1).min(m);
     if t <= 1 {
-        matmul_row_block(asl, bs, os, 0, ka, n);
+        block(asl, bs, os, 0, ka, n);
         return;
     }
     let rows_per = m.div_ceil(t);
     std::thread::scope(|s| {
         for (ci, ochunk) in os.chunks_mut(rows_per * n).enumerate() {
             let i0 = ci * rows_per;
-            s.spawn(move || matmul_row_block(asl, bs, ochunk, i0, ka, n));
+            s.spawn(move || block(asl, bs, ochunk, i0, ka, n));
         }
     });
 }
@@ -106,12 +174,67 @@ fn matmul_row_block(asl: &[f64], bs: &[f64], ochunk: &mut [f64], i0: usize, ka: 
     }
 }
 
+/// Fast-tier twin of [`matmul_row_block`]: each group of four output
+/// columns lives in a `[f64; 4]` accumulator for the whole k-walk, so
+/// the inner loop is four independent fused chains over contiguous `b`
+/// loads — the shape the autovectorizer maps onto 256-bit lanes. The
+/// zero-skip branch is dropped (it defeats vectorization); sums are
+/// reassociated relative to the reference chain.
+fn matmul_row_block_fast(
+    asl: &[f64],
+    bs: &[f64],
+    ochunk: &mut [f64],
+    i0: usize,
+    ka: usize,
+    n: usize,
+) {
+    let n4 = n / 4 * 4;
+    for (li, orow) in ochunk.chunks_exact_mut(n).enumerate() {
+        let i = i0 + li;
+        let arow = &asl[i * ka..(i + 1) * ka];
+        let mut j0 = 0;
+        while j0 < n4 {
+            let mut acc = [0.0f64; 4];
+            for (k, &aik) in arow.iter().enumerate() {
+                let bq = &bs[k * n + j0..k * n + j0 + 4];
+                acc[0] += aik * bq[0];
+                acc[1] += aik * bq[1];
+                acc[2] += aik * bq[2];
+                acc[3] += aik * bq[3];
+            }
+            orow[j0..j0 + 4].copy_from_slice(&acc);
+            j0 += 4;
+        }
+        for j in n4..n {
+            let mut acc = 0.0;
+            for (k, &aik) in arow.iter().enumerate() {
+                acc += aik * bs[k * n + j];
+            }
+            orow[j] = acc;
+        }
+    }
+}
+
 /// `out = aᵀ · b` without materializing the transpose, blocked over
 /// output rows and (optionally) fanned out over `threads` scoped
 /// threads. Bitwise-identical to [`super::matmul_at_b`] for every
 /// `threads` value: each output row's accumulation walks the data rows
 /// `r = 0..m` in the reference order.
 pub fn matmul_at_b_blocked(a: &Matrix, b: &Matrix, out: &mut Matrix, threads: usize) {
+    matmul_at_b_blocked_tiered(a, b, out, threads, KernelTier::Exact);
+}
+
+/// [`matmul_at_b_blocked`] with an explicit [`KernelTier`]:
+/// [`KernelTier::Fast`] unrolls the data-row walk four rows deep, so
+/// every output element accumulates a `[f64; 4]` product lane per pass
+/// instead of one product per pass.
+pub fn matmul_at_b_blocked_tiered(
+    a: &Matrix,
+    b: &Matrix,
+    out: &mut Matrix,
+    threads: usize,
+    tier: KernelTier,
+) {
     let (m, p) = a.shape();
     let (mb, d) = b.shape();
     assert_eq!(m, mb, "at_b_blocked: row dims {m} vs {mb}");
@@ -123,16 +246,20 @@ pub fn matmul_at_b_blocked(a: &Matrix, b: &Matrix, out: &mut Matrix, threads: us
     let asl = a.as_slice();
     let bsl = b.as_slice();
     let os = out.as_mut_slice();
+    let block: fn(&[f64], &[f64], &mut [f64], usize, usize, usize, usize) = match tier {
+        KernelTier::Exact => at_b_row_block,
+        KernelTier::Fast => at_b_row_block_fast,
+    };
     let t = threads.max(1).min(p);
     if t <= 1 {
-        at_b_row_block(asl, bsl, os, 0, m, p, d);
+        block(asl, bsl, os, 0, m, p, d);
         return;
     }
     let rows_per = p.div_ceil(t);
     std::thread::scope(|s| {
         for (ci, ochunk) in os.chunks_mut(rows_per * d).enumerate() {
             let j0 = ci * rows_per;
-            s.spawn(move || at_b_row_block(asl, bsl, ochunk, j0, m, p, d));
+            s.spawn(move || block(asl, bsl, ochunk, j0, m, p, d));
         }
     });
 }
@@ -145,6 +272,64 @@ fn at_b_row_block(asl: &[f64], bsl: &[f64], ochunk: &mut [f64], j0: usize, m: us
     for r in 0..m {
         let arow = &asl[r * p + j0..r * p + j0 + jn];
         let brow = &bsl[r * d..(r + 1) * d];
+        for (lj, &ari) in arow.iter().enumerate() {
+            if ari == 0.0 {
+                continue;
+            }
+            let orow = &mut ochunk[lj * d..(lj + 1) * d];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += ari * bv;
+            }
+        }
+    }
+}
+
+/// Fast-tier twin of [`at_b_row_block`]: the data-row walk is unrolled
+/// four rows deep, so each output element gains a pairwise-summed
+/// `[f64; 4]` product lane per pass — four independent loads the
+/// autovectorizer can keep in flight. Remainder rows (< 4) fall back to
+/// the reference walk; sums are reassociated relative to it.
+fn at_b_row_block_fast(
+    asl: &[f64],
+    bsl: &[f64],
+    ochunk: &mut [f64],
+    j0: usize,
+    m: usize,
+    p: usize,
+    d: usize,
+) {
+    let jn = ochunk.len() / d;
+    let m4 = m / 4 * 4;
+    let mut r = 0;
+    while r < m4 {
+        let a0 = &asl[r * p + j0..r * p + j0 + jn];
+        let a1 = &asl[(r + 1) * p + j0..(r + 1) * p + j0 + jn];
+        let a2 = &asl[(r + 2) * p + j0..(r + 2) * p + j0 + jn];
+        let a3 = &asl[(r + 3) * p + j0..(r + 3) * p + j0 + jn];
+        let b0 = &bsl[r * d..(r + 1) * d];
+        let b1 = &bsl[(r + 1) * d..(r + 2) * d];
+        let b2 = &bsl[(r + 2) * d..(r + 3) * d];
+        let b3 = &bsl[(r + 3) * d..(r + 4) * d];
+        if d == 1 {
+            let (v0, v1, v2, v3) = (b0[0], b1[0], b2[0], b3[0]);
+            for (lj, o) in ochunk.iter_mut().enumerate() {
+                let lane = [a0[lj] * v0, a1[lj] * v1, a2[lj] * v2, a3[lj] * v3];
+                *o += (lane[0] + lane[1]) + (lane[2] + lane[3]);
+            }
+        } else {
+            for lj in 0..jn {
+                let orow = &mut ochunk[lj * d..(lj + 1) * d];
+                for (c, o) in orow.iter_mut().enumerate() {
+                    let lane = [a0[lj] * b0[c], a1[lj] * b1[c], a2[lj] * b2[c], a3[lj] * b3[c]];
+                    *o += (lane[0] + lane[1]) + (lane[2] + lane[3]);
+                }
+            }
+        }
+        r += 4;
+    }
+    for rr in m4..m {
+        let arow = &asl[rr * p + j0..rr * p + j0 + jn];
+        let brow = &bsl[rr * d..(rr + 1) * d];
         for (lj, &ari) in arow.iter().enumerate() {
             if ari == 0.0 {
                 continue;
@@ -175,6 +360,37 @@ pub fn fused_ls_grad_range(
     resid_tile: &mut Matrix,
     out: &mut Matrix,
     threads: usize,
+) {
+    fused_ls_grad_range_tiered(
+        o_full,
+        t_full,
+        lo,
+        hi,
+        x,
+        resid_tile,
+        out,
+        threads,
+        KernelTier::Exact,
+    );
+}
+
+/// [`fused_ls_grad_range`] with an explicit [`KernelTier`]. The
+/// [`KernelTier::Fast`] path unrolls the tile-row accumulation four
+/// rows deep (`[f64; 4]` product lanes) for `d == 1`, and for the
+/// multi-target case sweeps **all `d` targets of a tile in one pass** —
+/// residual rows four features deep, `AᵀB` accumulation four tile rows
+/// deep — instead of per-column walks.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_ls_grad_range_tiered(
+    o_full: &Matrix,
+    t_full: &Matrix,
+    lo: usize,
+    hi: usize,
+    x: &Matrix,
+    resid_tile: &mut Matrix,
+    out: &mut Matrix,
+    threads: usize,
+    tier: KernelTier,
 ) {
     let m = hi - lo;
     let (p, d) = (x.rows(), x.cols());
@@ -220,23 +436,18 @@ pub fn fused_ls_grad_range(
                 });
             }
             let rs = &rs_all[..tn];
+            let band: fn(&[f64], &[f64], &mut [f64], usize, usize, usize) = match tier {
+                KernelTier::Exact => fused_axpy_band,
+                KernelTier::Fast => fused_axpy_band_fast,
+            };
             if threads <= 1 || p < 2 {
-                for (k, &rv) in rs.iter().enumerate() {
-                    let r = r0 + k;
-                    axpy(rv, &o[r * p..(r + 1) * p], os);
-                }
+                band(o, rs, os, r0, p, 0);
             } else {
                 let per = p.div_ceil(threads);
                 std::thread::scope(|s| {
                     for (ci, ochunk) in os.chunks_mut(per).enumerate() {
                         let j0 = ci * per;
-                        s.spawn(move || {
-                            let jn = ochunk.len();
-                            for (k, &rv) in rs.iter().enumerate() {
-                                let r = r0 + k;
-                                axpy(rv, &o[r * p + j0..r * p + j0 + jn], ochunk);
-                            }
-                        });
+                        s.spawn(move || band(o, rs, ochunk, r0, p, j0));
                     }
                 });
             }
@@ -249,8 +460,17 @@ pub fn fused_ls_grad_range(
         return;
     }
     // General d: residual rows computed as in the reference kernel
-    // (copy-negate target, zero-skip accumulate), then the AᵀB band
-    // accumulation per tile.
+    // (copy-negate target, zero-skip accumulate; the fast tier unrolls
+    // the feature walk four deep), then the AᵀB band accumulation per
+    // tile — all d targets of the tile in one pass on either tier.
+    let resid: fn(&[f64], &[f64], &[f64], &mut [f64], usize, usize, usize) = match tier {
+        KernelTier::Exact => resid_rows,
+        KernelTier::Fast => resid_rows_fast,
+    };
+    let accum: AccumBandFn = match tier {
+        KernelTier::Exact => accum_at_b_band_into,
+        KernelTier::Fast => accum_at_b_band_into_fast,
+    };
     let os = out.as_mut_slice();
     let rs_all = resid_tile.as_mut_slice();
     let mut r0 = 0;
@@ -259,19 +479,19 @@ pub fn fused_ls_grad_range(
         let tn = r1 - r0;
         let rs = &mut rs_all[..tn * d];
         if threads <= 1 || tn < 2 {
-            resid_rows(o, t, xs, rs, r0, p, d);
+            resid(o, t, xs, rs, r0, p, d);
         } else {
             let per = tn.div_ceil(threads);
             std::thread::scope(|s| {
                 for (ci, chunk) in rs.chunks_mut(per * d).enumerate() {
                     let rbase = r0 + ci * per;
-                    s.spawn(move || resid_rows(o, t, xs, chunk, rbase, p, d));
+                    s.spawn(move || resid(o, t, xs, chunk, rbase, p, d));
                 }
             });
         }
         let rs = &rs_all[..tn * d];
         if threads <= 1 || p < 2 {
-            accum_at_b_band(o, rs, os, r0, tn, 0, p, d);
+            accum(o, rs, os, r0, tn, 0, p, p, d);
         } else {
             let per = p.div_ceil(threads);
             std::thread::scope(|s| {
@@ -279,7 +499,7 @@ pub fn fused_ls_grad_range(
                     let j0 = ci * per;
                     s.spawn(move || {
                         let jn = ochunk.len() / d;
-                        accum_at_b_band_into(o, rs, ochunk, r0, tn, j0, jn, p, d);
+                        accum(o, rs, ochunk, r0, tn, j0, jn, p, d);
                     });
                 }
             });
@@ -289,6 +509,44 @@ pub fn fused_ls_grad_range(
     let inv_m = 1.0 / m as f64;
     for v in os.iter_mut() {
         *v *= inv_m;
+    }
+}
+
+/// Exact-tier d == 1 accumulation band: `ochunk[j] += Σ_k rs[k] ·
+/// o[r0 + k][j0 + j]` — the reference axpy walk, one tile row per pass
+/// (sequential full-output call sites pass `j0 = 0`).
+fn fused_axpy_band(o: &[f64], rs: &[f64], ochunk: &mut [f64], r0: usize, p: usize, j0: usize) {
+    let jn = ochunk.len();
+    for (k, &rv) in rs.iter().enumerate() {
+        let r = r0 + k;
+        axpy(rv, &o[r * p + j0..r * p + j0 + jn], ochunk);
+    }
+}
+
+/// Fast-tier twin of [`fused_axpy_band`]: tile rows unrolled four deep,
+/// each output element accumulating a pairwise-summed `[f64; 4]`
+/// product lane per pass.
+fn fused_axpy_band_fast(o: &[f64], rs: &[f64], ochunk: &mut [f64], r0: usize, p: usize, j0: usize) {
+    let jn = ochunk.len();
+    let tn = rs.len();
+    let t4 = tn / 4 * 4;
+    let mut k = 0;
+    while k < t4 {
+        let (v0, v1, v2, v3) = (rs[k], rs[k + 1], rs[k + 2], rs[k + 3]);
+        let r = r0 + k;
+        let o0 = &o[r * p + j0..r * p + j0 + jn];
+        let o1 = &o[(r + 1) * p + j0..(r + 1) * p + j0 + jn];
+        let o2 = &o[(r + 2) * p + j0..(r + 2) * p + j0 + jn];
+        let o3 = &o[(r + 3) * p + j0..(r + 3) * p + j0 + jn];
+        for (j, ov) in ochunk.iter_mut().enumerate() {
+            let lane = [v0 * o0[j], v1 * o1[j], v2 * o2[j], v3 * o3[j]];
+            *ov += (lane[0] + lane[1]) + (lane[2] + lane[3]);
+        }
+        k += 4;
+    }
+    for kk in t4..tn {
+        let r = r0 + kk;
+        axpy(rs[kk], &o[r * p + j0..r * p + j0 + jn], ochunk);
     }
 }
 
@@ -314,12 +572,63 @@ fn resid_rows(o: &[f64], t: &[f64], xs: &[f64], rs: &mut [f64], rbase: usize, p:
     }
 }
 
+/// Fast-tier twin of [`resid_rows`]: the feature walk of `O·x` is
+/// unrolled four features deep, each target accumulating a
+/// pairwise-summed `[f64; 4]` product lane per pass — all `d` targets
+/// of the row in one sweep.
+fn resid_rows_fast(
+    o: &[f64],
+    t: &[f64],
+    xs: &[f64],
+    rs: &mut [f64],
+    rbase: usize,
+    p: usize,
+    d: usize,
+) {
+    let p4 = p / 4 * 4;
+    for (k, rrow) in rs.chunks_exact_mut(d).enumerate() {
+        let r = rbase + k;
+        let orow = &o[r * p..(r + 1) * p];
+        let trow = &t[r * d..(r + 1) * d];
+        for (c, rv) in rrow.iter_mut().enumerate() {
+            *rv = -trow[c];
+        }
+        let mut j = 0;
+        while j < p4 {
+            let ov = [orow[j], orow[j + 1], orow[j + 2], orow[j + 3]];
+            let x0 = &xs[j * d..(j + 1) * d];
+            let x1 = &xs[(j + 1) * d..(j + 2) * d];
+            let x2 = &xs[(j + 2) * d..(j + 3) * d];
+            let x3 = &xs[(j + 3) * d..(j + 4) * d];
+            for (c, rv) in rrow.iter_mut().enumerate() {
+                let lane = [ov[0] * x0[c], ov[1] * x1[c], ov[2] * x2[c], ov[3] * x3[c]];
+                *rv += (lane[0] + lane[1]) + (lane[2] + lane[3]);
+            }
+            j += 4;
+        }
+        for jj in p4..p {
+            let ov = orow[jj];
+            if ov == 0.0 {
+                continue;
+            }
+            let xrow = &xs[jj * d..(jj + 1) * d];
+            for (c, rv) in rrow.iter_mut().enumerate() {
+                *rv += ov * xrow[c];
+            }
+        }
+    }
+}
+
 /// `os[j*d..] += Σ_r o[r][j]·rs[r]` over the tile rows, full output.
 #[allow(clippy::too_many_arguments)]
 fn accum_at_b_band(o: &[f64], rs: &[f64], os: &mut [f64], r0: usize, tn: usize, j0: usize, p: usize, d: usize) {
     let jn = os.len() / d - j0;
     accum_at_b_band_into(o, rs, &mut os[j0 * d..(j0 + jn) * d], r0, tn, j0, jn, p, d);
 }
+
+/// The band-accumulation signature both tiers implement
+/// (`(o, rs, ochunk, r0, tn, j0, jn, p, d)`).
+type AccumBandFn = fn(&[f64], &[f64], &mut [f64], usize, usize, usize, usize, usize, usize);
 
 /// Output-row band `[j0, j0 + jn)` of the `AᵀB` accumulation for one
 /// residual tile (data-row walk sequential, zero-skip preserved).
@@ -339,6 +648,59 @@ fn accum_at_b_band_into(
         let r = r0 + k;
         let orow = &o[r * p + j0..r * p + j0 + jn];
         let rrow = &rs[k * d..(k + 1) * d];
+        for (lj, &ov) in orow.iter().enumerate() {
+            if ov == 0.0 {
+                continue;
+            }
+            let gout = &mut ochunk[lj * d..(lj + 1) * d];
+            for c in 0..d {
+                gout[c] += ov * rrow[c];
+            }
+        }
+    }
+}
+
+/// Fast-tier twin of [`accum_at_b_band_into`]: tile rows unrolled four
+/// deep, every `(feature, target)` output element accumulating a
+/// pairwise-summed `[f64; 4]` product lane per pass — the whole
+/// multi-target tile in one sweep.
+#[allow(clippy::too_many_arguments)]
+fn accum_at_b_band_into_fast(
+    o: &[f64],
+    rs: &[f64],
+    ochunk: &mut [f64],
+    r0: usize,
+    tn: usize,
+    j0: usize,
+    jn: usize,
+    p: usize,
+    d: usize,
+) {
+    let t4 = tn / 4 * 4;
+    let mut k = 0;
+    while k < t4 {
+        let r = r0 + k;
+        let o0 = &o[r * p + j0..r * p + j0 + jn];
+        let o1 = &o[(r + 1) * p + j0..(r + 1) * p + j0 + jn];
+        let o2 = &o[(r + 2) * p + j0..(r + 2) * p + j0 + jn];
+        let o3 = &o[(r + 3) * p + j0..(r + 3) * p + j0 + jn];
+        let b0 = &rs[k * d..(k + 1) * d];
+        let b1 = &rs[(k + 1) * d..(k + 2) * d];
+        let b2 = &rs[(k + 2) * d..(k + 3) * d];
+        let b3 = &rs[(k + 3) * d..(k + 4) * d];
+        for lj in 0..jn {
+            let gout = &mut ochunk[lj * d..(lj + 1) * d];
+            for (c, g) in gout.iter_mut().enumerate() {
+                let lane = [o0[lj] * b0[c], o1[lj] * b1[c], o2[lj] * b2[c], o3[lj] * b3[c]];
+                *g += (lane[0] + lane[1]) + (lane[2] + lane[3]);
+            }
+        }
+        k += 4;
+    }
+    for kk in t4..tn {
+        let r = r0 + kk;
+        let orow = &o[r * p + j0..r * p + j0 + jn];
+        let rrow = &rs[kk * d..(kk + 1) * d];
         for (lj, &ov) in orow.iter().enumerate() {
             if ov == 0.0 {
                 continue;
@@ -455,6 +817,160 @@ mod tests {
                         "rows {lo}..{hi} p={p} d={d} tile={tile} t={threads}"
                     );
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn kernel_tier_tokens_round_trip() {
+        for tier in KernelTier::ALL {
+            assert_eq!(KernelTier::parse(tier.as_str()), Some(tier));
+        }
+        assert_eq!(KernelTier::default(), KernelTier::Exact);
+        assert_eq!(KernelTier::parse("warp"), None);
+        assert_eq!(KernelTier::parse(""), None);
+    }
+
+    /// Max relative elementwise error, with an absolute floor so exact
+    /// zeros (and catastrophic-cancellation elements near zero) compare
+    /// against the matrices' scale rather than against themselves.
+    fn rel_err(a: &Matrix, b: &Matrix) -> f64 {
+        let scale = a.as_slice().iter().fold(1.0_f64, |acc, v| acc.max(v.abs()));
+        a.as_slice()
+            .iter()
+            .zip(b.as_slice())
+            .map(|(&x, &y)| (x - y).abs() / scale)
+            .fold(0.0_f64, f64::max)
+    }
+
+    /// The tier-parity satellite suite: the fast tier agrees with the
+    /// exact tier to ≤ 1e-12 relative error on random shapes — tall,
+    /// wide, d ∈ {1, 4}, ragged (non-multiple-of-4) edges — for every
+    /// kernel, and is itself bitwise deterministic across thread counts
+    /// (output-split fan-out preserves each element's chain per tier).
+    #[test]
+    fn fast_tier_matches_exact_tier_to_1e12() {
+        property("fast tier parity", 25, |rng| {
+            // Tall (m >> n) and wide (n > m) shapes both land here, and
+            // the +1 offsets guarantee ragged 4-lane remainders appear.
+            let m = 1 + rng.below(150) as usize;
+            let k = 1 + rng.below(80) as usize;
+            let n = 1 + rng.below(24) as usize;
+            let a = random_matrix(rng, m, k);
+            let b = random_matrix(rng, k, n);
+            let mut exact = Matrix::zeros(m, n);
+            matmul_blocked_into_tiered(&a, &b, &mut exact, 1, KernelTier::Exact);
+            let mut fast1 = Matrix::zeros(m, n);
+            matmul_blocked_into_tiered(&a, &b, &mut fast1, 1, KernelTier::Fast);
+            assert!(rel_err(&exact, &fast1) <= 1e-12, "matmul {m}x{k}x{n}");
+            let mut atb_exact = Matrix::zeros(k, n);
+            matmul_at_b_blocked_tiered(&a, &b, &mut atb_exact, 1, KernelTier::Exact);
+            let mut atb_fast = Matrix::zeros(k, n);
+            matmul_at_b_blocked_tiered(&a, &b, &mut atb_fast, 1, KernelTier::Fast);
+            assert!(rel_err(&atb_exact, &atb_fast) <= 1e-12, "at_b {m}x{k}x{n}");
+            for threads in [2usize, 3, 4] {
+                let mut got = Matrix::zeros(m, n);
+                matmul_blocked_into_tiered(&a, &b, &mut got, threads, KernelTier::Fast);
+                assert_eq!(bits(&got), bits(&fast1), "fast matmul t={threads}");
+                let mut atb = Matrix::zeros(k, n);
+                matmul_at_b_blocked_tiered(&a, &b, &mut atb, threads, KernelTier::Fast);
+                assert_eq!(bits(&atb), bits(&atb_fast), "fast at_b t={threads}");
+            }
+        });
+    }
+
+    /// Fast-tier fused gradient: ≤ 1e-12 parity with the exact-tier
+    /// (reference-order) result over ranges, tiles and both the d == 1
+    /// and the one-pass multi-target (d = 4) path, plus bitwise
+    /// thread-stability at a fixed tile.
+    #[test]
+    fn fast_fused_grad_matches_exact_and_is_thread_stable() {
+        property("fast fused grad parity", 20, |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let p = 1 + rng.below(30) as usize;
+            let d = if rng.below(2) == 0 { 1 } else { 4 };
+            let lo = rng.below(n as u64) as usize;
+            let hi = lo + 1 + rng.below((n - lo) as u64) as usize;
+            let o = random_matrix(rng, n, p);
+            let t = random_matrix(rng, n, d);
+            let x = random_matrix(rng, p, d);
+            let exact = reference_grad_range(&o, &t, lo, hi, &x);
+            for tile in [1usize, 3, 64, TILE_ROWS] {
+                let mut scratch = Matrix::zeros(tile.min(hi - lo), d);
+                let mut fast1 = Matrix::zeros(p, d);
+                fused_ls_grad_range_tiered(
+                    &o,
+                    &t,
+                    lo,
+                    hi,
+                    &x,
+                    &mut scratch,
+                    &mut fast1,
+                    1,
+                    KernelTier::Fast,
+                );
+                assert!(
+                    rel_err(&exact, &fast1) <= 1e-12,
+                    "rows {lo}..{hi} p={p} d={d} tile={tile}"
+                );
+                for threads in [2usize, 4] {
+                    let mut out = Matrix::zeros(p, d);
+                    fused_ls_grad_range_tiered(
+                        &o,
+                        &t,
+                        lo,
+                        hi,
+                        &x,
+                        &mut scratch,
+                        &mut out,
+                        threads,
+                        KernelTier::Fast,
+                    );
+                    assert_eq!(
+                        bits(&out),
+                        bits(&fast1),
+                        "fast fused tile={tile} t={threads}"
+                    );
+                }
+            }
+        });
+    }
+
+    /// The multi-target one-pass fast path against a naive per-column
+    /// reference: each target column solved as an independent d == 1
+    /// gradient must agree with the fused multi-target sweep.
+    #[test]
+    fn fast_multi_target_path_matches_per_column_reference() {
+        property("fast d>1 vs per-column", 15, |rng| {
+            let n = 2 + rng.below(120) as usize;
+            let p = 1 + rng.below(20) as usize;
+            let d = 2 + rng.below(5) as usize;
+            let o = random_matrix(rng, n, p);
+            let t = random_matrix(rng, n, d);
+            let x = random_matrix(rng, p, d);
+            let mut scratch = Matrix::zeros(TILE_ROWS.min(n), d);
+            let mut fused = Matrix::zeros(p, d);
+            fused_ls_grad_range_tiered(
+                &o,
+                &t,
+                0,
+                n,
+                &x,
+                &mut scratch,
+                &mut fused,
+                1,
+                KernelTier::Fast,
+            );
+            for c in 0..d {
+                let tc = Matrix::from_vec(n, 1, (0..n).map(|r| t[(r, c)]).collect()).unwrap();
+                let xc = Matrix::from_vec(p, 1, (0..p).map(|j| x[(j, c)]).collect()).unwrap();
+                let col = reference_grad_range(&o, &tc, 0, n, &xc);
+                let fused_col =
+                    Matrix::from_vec(p, 1, (0..p).map(|j| fused[(j, c)]).collect()).unwrap();
+                assert!(
+                    rel_err(&col, &fused_col) <= 1e-12,
+                    "column {c} of d={d} n={n} p={p}"
+                );
             }
         });
     }

@@ -8,11 +8,17 @@
 //!   for the hot path (see `benches/perf_hotpath.rs`).
 //! * `solve` — Cholesky (SPD) and partial-pivot LU solvers
 //!   ([`cholesky_solve`], [`lu_solve`]), used for exact ADMM x-updates
-//!   and for the global optimum `x*`.
+//!   and for the global optimum `x*` — plus their blocked right-looking
+//!   twins ([`cholesky_factor_blocked`], [`lu_solve_blocked`]): panel
+//!   factor + [`matmul_blocked_into`] trailing update over a reusable
+//!   [`SolveScratch`] arena, same NaN-poison pivot guards.
 //! * `kernels` — the fused/blocked engine core ([`fused_ls_grad_range`],
 //!   [`matmul_blocked_into`], [`matmul_at_b_blocked`]): bitwise-identical
 //!   to the reference kernels for any tile size and `shard_threads`
-//!   count (see the module docs for the determinism contract).
+//!   count (see the module docs for the determinism contract) — and the
+//!   two-tier kernel policy ([`KernelTier`]): the `*_tiered` entry
+//!   points select between the reference-order `Exact` path and the
+//!   4-lane `Fast` path (`--kernel fast`, ≤ 1e-12 relative parity).
 //!
 //! Shapes follow the paper: model `x ∈ R^{p×d}`, data `O ∈ R^{m×p}`,
 //! targets `T ∈ R^{m×d}`.
@@ -22,7 +28,14 @@ mod matrix;
 mod ops;
 mod solve;
 
-pub use kernels::{fused_ls_grad_range, matmul_at_b_blocked, matmul_blocked_into, TILE_ROWS};
+pub use kernels::{
+    fused_ls_grad_range, fused_ls_grad_range_tiered, matmul_at_b_blocked,
+    matmul_at_b_blocked_tiered, matmul_blocked_into, matmul_blocked_into_tiered, KernelTier,
+    TILE_ROWS,
+};
 pub use matrix::Matrix;
 pub use ops::{axpy, dot, matmul, matmul_at_b, matmul_into, nrm2};
-pub use solve::{cholesky_factor, cholesky_solve, lu_solve, CholeskyFactor};
+pub use solve::{
+    cholesky_factor, cholesky_factor_blocked, cholesky_factor_blocked_with, cholesky_solve,
+    lu_solve, lu_solve_blocked, CholeskyFactor, SolveScratch,
+};

@@ -4,9 +4,63 @@
 //! global optimum `x*` of the decentralized least-squares problem, and
 //! (c) MDS decoding (`aᵀ B_F = 1ᵀ` least-squares solves in
 //! [`crate::coding`]).
+//!
+//! Each solver comes in two forms: the unblocked reference
+//! ([`cholesky_factor`], [`lu_solve`]) and a blocked right-looking twin
+//! ([`cholesky_factor_blocked`], [`lu_solve_blocked`]) that factors an
+//! [`NB`]-column panel at a time and applies the trailing-submatrix
+//! update through the tiled [`super::matmul_blocked_into`] kernel, with
+//! a reusable [`SolveScratch`] arena holding the panel copies and the
+//! update product. Systems of `n ≤ NB` delegate to the unblocked path
+//! bit-for-bit; larger systems agree to the factorization's usual
+//! roundoff (asserted by the blocked-vs-unblocked property tests). The
+//! NaN-poison pivot guards are identical on both paths.
 
+use super::kernels::matmul_blocked_into;
 use super::Matrix;
 use crate::error::{Error, Result};
+
+/// Panel width of the blocked right-looking factorizations. One panel
+/// plus its transposed copy stays cache-resident next to the trailing
+/// tile; correctness never depends on the value (any `NB ≥ 1` walks the
+/// same math), only throughput does.
+const NB: usize = 32;
+
+/// Reusable scratch arena for the blocked factorizations: the panel
+/// copy, its transpose, and the trailing-update product. Buffers
+/// reallocate only when the requested shape changes, so repeated
+/// factorizations of same-shaped systems (one Gram factor per agent in
+/// [`crate::baselines`], the prox caches in [`crate::problem`])
+/// allocate only on the first.
+#[derive(Debug)]
+pub struct SolveScratch {
+    panel: Matrix,
+    panel_t: Matrix,
+    update: Matrix,
+}
+
+impl Default for SolveScratch {
+    fn default() -> Self {
+        SolveScratch {
+            panel: Matrix::zeros(0, 0),
+            panel_t: Matrix::zeros(0, 0),
+            update: Matrix::zeros(0, 0),
+        }
+    }
+}
+
+impl SolveScratch {
+    /// A fresh (empty) arena; buffers grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(buf: &mut Matrix, rows: usize, cols: usize) {
+        if buf.shape() != (rows, cols) {
+            *buf = Matrix::zeros(rows, cols);
+        }
+    }
+}
 
 /// A cached Cholesky factorization `A = L·Lᵀ` of an SPD matrix.
 ///
@@ -94,6 +148,89 @@ pub fn cholesky_solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     Ok(cholesky_factor(a)?.solve(b))
 }
 
+/// Blocked right-looking Cholesky: factor an [`NB`]-column panel
+/// unblocked, then rank-update the trailing submatrix
+/// `A22 -= L21·L21ᵀ` through the tiled [`matmul_blocked_into`] kernel.
+/// Systems of `n ≤ NB` delegate to [`cholesky_factor`] bit-for-bit;
+/// larger systems agree to factorization roundoff. Fails on
+/// non-positive (or NaN — see the unblocked pivot guard) pivots with
+/// the same error shape as the unblocked path.
+pub fn cholesky_factor_blocked(a: &Matrix) -> Result<CholeskyFactor> {
+    cholesky_factor_blocked_with(a, &mut SolveScratch::new())
+}
+
+/// [`cholesky_factor_blocked`] against a caller-held [`SolveScratch`],
+/// so factor-per-agent loops reuse the panel buffers across agents.
+pub fn cholesky_factor_blocked_with(
+    a: &Matrix,
+    scratch: &mut SolveScratch,
+) -> Result<CholeskyFactor> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Linalg(format!("cholesky: non-square {}x{}", a.rows(), a.cols())));
+    }
+    if n <= NB {
+        return cholesky_factor(a);
+    }
+    // Lower-triangular working copy; upper entries are never read.
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            l[(i, j)] = a[(i, j)];
+        }
+    }
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + NB).min(n);
+        // Panel factor: unblocked Cholesky of columns [k0, k1) over all
+        // rows below the diagonal. Contributions from columns < k0 were
+        // already subtracted by earlier trailing updates, so only
+        // in-panel terms remain.
+        for j in k0..k1 {
+            let mut s = l[(j, j)];
+            for k in k0..j {
+                s -= l[(j, k)] * l[(j, k)];
+            }
+            if !(s > 0.0) {
+                return Err(Error::Linalg(format!("cholesky: non-positive pivot {s:.3e} at {j}")));
+            }
+            let dj = s.sqrt();
+            l[(j, j)] = dj;
+            for i in (j + 1)..n {
+                let mut s = l[(i, j)];
+                for k in k0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                l[(i, j)] = s / dj;
+            }
+        }
+        // Trailing update: A22 -= L21 · L21ᵀ, through the blocked
+        // kernel on the arena's panel copies.
+        let rest = n - k1;
+        if rest > 0 {
+            let nb = k1 - k0;
+            SolveScratch::ensure(&mut scratch.panel, rest, nb);
+            SolveScratch::ensure(&mut scratch.panel_t, nb, rest);
+            for r in 0..rest {
+                for c in 0..nb {
+                    let v = l[(k1 + r, k0 + c)];
+                    scratch.panel[(r, c)] = v;
+                    scratch.panel_t[(c, r)] = v;
+                }
+            }
+            SolveScratch::ensure(&mut scratch.update, rest, rest);
+            matmul_blocked_into(&scratch.panel, &scratch.panel_t, &mut scratch.update, 1);
+            for i in 0..rest {
+                for j in 0..=i {
+                    l[(k1 + i, k1 + j)] -= scratch.update[(i, j)];
+                }
+            }
+        }
+        k0 = k1;
+    }
+    Ok(CholeskyFactor { l })
+}
+
 /// Partial-pivot LU solve `A X = B` for general square `A` (used by the
 /// cyclic-repetition MDS decoder, whose systems are square but not SPD).
 pub fn lu_solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
@@ -159,6 +296,137 @@ pub fn lu_solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
             let lik = lu[(i, k)];
             for c in 0..d {
                 let v = lik * x[(k, c)];
+                x[(i, c)] -= v;
+            }
+        }
+        let dii = lu[(i, i)];
+        for c in 0..d {
+            x[(i, c)] /= dii;
+        }
+    }
+    Ok(x)
+}
+
+/// Blocked right-looking partial-pivot LU solve: factor an [`NB`]-column
+/// panel unblocked (pivot search over the fully-updated column, row
+/// swaps applied across the whole matrix and the rhs, exactly as in
+/// [`lu_solve`]), triangular-solve the panel's `U12` block, then update
+/// the trailing submatrix `A22 -= L21·U12` through the tiled
+/// [`matmul_blocked_into`] kernel. Systems of `n ≤ NB` delegate to
+/// [`lu_solve`] bit-for-bit; larger systems agree to factorization
+/// roundoff. The `!(vmax >= 1e-12)` NaN-poison singularity guard is
+/// identical to the unblocked path.
+pub fn lu_solve_blocked(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Linalg(format!("lu: non-square {}x{}", a.rows(), a.cols())));
+    }
+    if b.rows() != n {
+        return Err(Error::Linalg("lu: rhs rows mismatch".into()));
+    }
+    if n <= NB {
+        return lu_solve(a, b);
+    }
+    let d = b.cols();
+    let mut lu = a.clone();
+    let mut x = b.clone();
+    let mut scratch = SolveScratch::new();
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + NB).min(n);
+        // Panel factor: partial pivoting over rows [col, n), elimination
+        // restricted to the panel's own columns.
+        for col in k0..k1 {
+            let mut pmax = col;
+            let mut vmax = lu[(col, col)].abs();
+            for r in (col + 1)..n {
+                let v = lu[(r, col)].abs();
+                if v > vmax {
+                    vmax = v;
+                    pmax = r;
+                }
+            }
+            if !(vmax >= 1e-12) {
+                return Err(Error::Linalg(format!("lu: (near-)singular at col {col}")));
+            }
+            if pmax != col {
+                // Whole-row swap: stored L factors of earlier columns
+                // ride along, and the rhs mirrors the permutation.
+                for c in 0..n {
+                    let t = lu[(col, c)];
+                    lu[(col, c)] = lu[(pmax, c)];
+                    lu[(pmax, c)] = t;
+                }
+                for c in 0..d {
+                    let t = x[(col, c)];
+                    x[(col, c)] = x[(pmax, c)];
+                    x[(pmax, c)] = t;
+                }
+            }
+            let pivv = lu[(col, col)];
+            for r in (col + 1)..n {
+                let f = lu[(r, col)] / pivv;
+                lu[(r, col)] = f;
+                for c in (col + 1)..k1 {
+                    let v = f * lu[(col, c)];
+                    lu[(r, c)] -= v;
+                }
+            }
+        }
+        let rest = n - k1;
+        if rest > 0 {
+            // U12 = L11⁻¹ · A12: unit-lower triangular solve over the
+            // panel rows, columns [k1, n).
+            for i in k0..k1 {
+                for r in (i + 1)..k1 {
+                    let f = lu[(r, i)];
+                    for c in k1..n {
+                        let v = f * lu[(i, c)];
+                        lu[(r, c)] -= v;
+                    }
+                }
+            }
+            // Trailing update: A22 -= L21 · U12 through the blocked
+            // kernel on the arena's panel copies.
+            let nb = k1 - k0;
+            SolveScratch::ensure(&mut scratch.panel, rest, nb);
+            SolveScratch::ensure(&mut scratch.panel_t, nb, rest);
+            for r in 0..rest {
+                for c in 0..nb {
+                    scratch.panel[(r, c)] = lu[(k1 + r, k0 + c)];
+                }
+            }
+            for r in 0..nb {
+                for c in 0..rest {
+                    scratch.panel_t[(r, c)] = lu[(k0 + r, k1 + c)];
+                }
+            }
+            SolveScratch::ensure(&mut scratch.update, rest, rest);
+            matmul_blocked_into(&scratch.panel, &scratch.panel_t, &mut scratch.update, 1);
+            for i in 0..rest {
+                for j in 0..rest {
+                    lu[(k1 + i, k1 + j)] -= scratch.update[(i, j)];
+                }
+            }
+        }
+        k0 = k1;
+    }
+    // Forward substitution `L y = P b` (unit lower, stored multipliers),
+    // then the back substitution shared with the unblocked path.
+    for i in 0..n {
+        for k in 0..i {
+            let f = lu[(i, k)];
+            for c in 0..d {
+                let v = f * x[(k, c)];
+                x[(i, c)] -= v;
+            }
+        }
+    }
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            let uik = lu[(i, k)];
+            for c in 0..d {
+                let v = uik * x[(k, c)];
                 x[(i, c)] -= v;
             }
         }
@@ -280,5 +548,103 @@ mod tests {
         let x = lu_solve(&a, &b).unwrap();
         assert!((x[(0, 0)] - 3.0).abs() < 1e-12);
         assert!((x[(1, 0)] - 2.0).abs() < 1e-12);
+    }
+
+    /// Blocked-vs-unblocked Cholesky: factors agree elementwise to the
+    /// reconstruction tolerance on sizes spanning one panel, ragged
+    /// multi-panel and exact panel-multiple shapes; `n ≤ NB` delegates
+    /// to the unblocked path bit-for-bit.
+    #[test]
+    fn blocked_cholesky_matches_unblocked() {
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        for &n in &[8, NB, NB + 1, 50, 2 * NB, 100, 3 * NB + 5] {
+            let a = random_spd(n, &mut rng);
+            let reference = cholesky_factor(&a).unwrap();
+            let blocked = cholesky_factor_blocked(&a).unwrap();
+            if n <= NB {
+                assert_eq!(
+                    blocked.l.as_slice(),
+                    reference.l.as_slice(),
+                    "n={n} ≤ NB must delegate bit-for-bit"
+                );
+            } else {
+                assert!(
+                    blocked.l.max_abs_diff(&reference.l) < 1e-9,
+                    "n={n}: blocked factor drifted from unblocked"
+                );
+            }
+            // And the factor actually solves: A·x = b round-trips.
+            let x_true =
+                Matrix::from_vec(n, 3, (0..n * 3).map(|_| rng.normal()).collect()).unwrap();
+            let b = a.matmul(&x_true);
+            assert!(blocked.solve(&b).max_abs_diff(&x_true) < 1e-8, "n={n}");
+        }
+    }
+
+    /// Blocked-vs-unblocked LU: same solution to the solver tolerance
+    /// over panel-spanning sizes, `n ≤ NB` delegating bit-for-bit.
+    #[test]
+    fn blocked_lu_matches_unblocked() {
+        let mut rng = Xoshiro256pp::seed_from_u64(32);
+        for &n in &[5, NB, NB + 3, 2 * NB, 90] {
+            let a = Matrix::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect()).unwrap();
+            let x_true =
+                Matrix::from_vec(n, 2, (0..n * 2).map(|_| rng.normal()).collect()).unwrap();
+            let b = a.matmul(&x_true);
+            let reference = lu_solve(&a, &b).unwrap();
+            let blocked = lu_solve_blocked(&a, &b).unwrap();
+            if n <= NB {
+                assert_eq!(
+                    blocked.as_slice(),
+                    reference.as_slice(),
+                    "n={n} ≤ NB must delegate bit-for-bit"
+                );
+            }
+            assert!(blocked.max_abs_diff(&x_true) < 1e-6, "n={n} vs x_true");
+            assert!(blocked.max_abs_diff(&reference) < 1e-8, "n={n} vs unblocked");
+        }
+    }
+
+    /// The blocked paths keep the unblocked guards: indefinite /
+    /// singular / NaN-poisoned inputs are clean `Error::Linalg`s, never
+    /// a poisoned factor — including when the bad pivot sits past the
+    /// first panel.
+    #[test]
+    fn blocked_solvers_keep_the_poison_guards() {
+        let mut rng = Xoshiro256pp::seed_from_u64(33);
+        let n = 2 * NB + 3;
+        // NaN planted in the second panel's block.
+        let mut a = random_spd(n, &mut rng);
+        a[(NB + 4, NB + 4)] = f64::NAN;
+        assert!(cholesky_factor_blocked(&a).is_err(), "cholesky accepted a NaN pivot");
+        let b = Matrix::from_vec(n, 1, (0..n).map(|_| rng.normal()).collect()).unwrap();
+        assert!(lu_solve_blocked(&a, &b).is_err(), "lu accepted a NaN column");
+        // Indefinite for Cholesky: a negative eigenvalue direction past
+        // the first panel.
+        let mut indef = random_spd(n, &mut rng);
+        indef[(NB + 1, NB + 1)] = -1e3;
+        assert!(cholesky_factor_blocked(&indef).is_err());
+        // Singular for LU: a zero column past the first panel stays
+        // exactly zero under row operations, so the pivot search finds
+        // vmax = 0 there.
+        let mut sing = random_spd(n, &mut rng);
+        for r in 0..n {
+            sing[(r, NB + 1)] = 0.0;
+        }
+        assert!(lu_solve_blocked(&sing, &b).is_err());
+    }
+
+    /// A caller-held scratch arena reuses buffers across factorizations
+    /// without perturbing results (the factor-per-agent loop pattern).
+    #[test]
+    fn solve_scratch_reuse_is_result_neutral() {
+        let mut rng = Xoshiro256pp::seed_from_u64(34);
+        let mut scratch = SolveScratch::new();
+        for &n in &[NB + 7, 2 * NB, NB + 7] {
+            let a = random_spd(n, &mut rng);
+            let fresh = cholesky_factor_blocked(&a).unwrap();
+            let reused = cholesky_factor_blocked_with(&a, &mut scratch).unwrap();
+            assert_eq!(fresh.l.as_slice(), reused.l.as_slice(), "n={n}");
+        }
     }
 }

@@ -29,6 +29,7 @@ use csadmm::data::DatasetName;
 use csadmm::ecn::{run_worker, BackendKind, ResponseModel, TransportKind};
 use csadmm::experiments::{self, load_dataset, ROOT_SEED};
 use csadmm::latency::LatencyKind;
+use csadmm::linalg::KernelTier;
 use csadmm::problem::ObjectiveKind;
 use csadmm::runtime::{EngineFactory, NativeEngineFactory, PjrtEngineFactory};
 use csadmm::sweep::{default_workers, run_sweep, SweepSpec, SweepSummary};
@@ -78,6 +79,18 @@ fn parse_backend_list(list: &str) -> Result<Vec<BackendKind>> {
             let t = t.trim();
             BackendKind::parse(t)
                 .ok_or_else(|| Error::Config(format!("unknown backend '{t}' (see usage)")))
+        })
+        .collect()
+}
+
+/// Parse a comma-separated `--kernel` list (`exact,fast`).
+fn parse_kernel_list(list: &str) -> Result<Vec<KernelTier>> {
+    list.split(',')
+        .map(|t| {
+            let t = t.trim();
+            KernelTier::parse(t).ok_or_else(|| {
+                Error::Config(format!("unknown kernel '{t}' (expected exact or fast)"))
+            })
         })
         .collect()
 }
@@ -192,6 +205,15 @@ fn main() -> Result<()> {
                 }
                 cfg.backend = kinds[0];
             }
+            if let Some(tok) = args.get("kernel") {
+                let tiers = parse_kernel_list(tok)?;
+                if tiers.len() != 1 {
+                    return Err(Error::Config(
+                        "run takes exactly one --kernel (use `sweep` for an axis)".into(),
+                    ));
+                }
+                cfg.kernel = tiers[0];
+            }
             if let Some(tok) = args.get("compress") {
                 let specs = parse_compress_list(tok, Some(&doc))?;
                 if specs.len() != 1 {
@@ -253,7 +275,7 @@ fn main() -> Result<()> {
             let ds = load_dataset(dataset, quick);
             let mut engine = factory.create()?;
             println!(
-                "running {} [{}] on {} (N={}, K={}, M={}, lat={}, backend={}, cx={}, topo={}, engine={})",
+                "running {} [{}] on {} (N={}, K={}, M={}, lat={}, backend={}, cx={}, topo={}, kern={}, engine={})",
                 cfg.algo.label(),
                 cfg.objective.as_str(),
                 dataset.as_str(),
@@ -264,6 +286,7 @@ fn main() -> Result<()> {
                 cfg.backend.as_str(),
                 cfg.codec_spec()?.as_str(),
                 cfg.dynamics.as_str(),
+                cfg.kernel.as_str(),
                 engine.name()
             );
             // Objective-specific column label (classification error for
@@ -310,6 +333,9 @@ fn main() -> Result<()> {
             }
             if let Some(list) = args.get("backend") {
                 spec = spec.backends(parse_backend_list(list)?);
+            }
+            if let Some(list) = args.get("kernel") {
+                spec = spec.kernels(parse_kernel_list(list)?);
             }
             if let Some(list) = args.get("compress") {
                 spec = spec.compress(parse_compress_list(list, doc.as_ref())?);
@@ -420,11 +446,16 @@ fn main() -> Result<()> {
                     t
                 }
             };
-            let out = args.get("out").unwrap_or("BENCH_pr9.json");
+            let tiers = match args.get("kernel") {
+                None => KernelTier::ALL.to_vec(),
+                Some(list) => parse_kernel_list(list)?,
+            };
+            let out = args.get("out").unwrap_or("BENCH_pr10.json");
             experiments::bench_scale::run(
                 quick,
                 factory.as_ref(),
                 threads,
+                &tiers,
                 std::path::Path::new(out),
             )?;
         }

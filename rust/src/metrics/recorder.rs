@@ -33,6 +33,12 @@ pub struct Trace {
     /// exactly the historical shape, so the blessed golden trace (and
     /// every pre-refactor consumer) sees byte-identical output.
     pub codec: Option<String>,
+    /// Kernel-tier label (`"fast"`) when the run used a non-default
+    /// tier; `None` on the exact path. Stamped so a byte-compare of a
+    /// fast-tier artifact against a blessed exact-tier (golden) trace
+    /// fails loudly on this field rather than silently diverging — or
+    /// worse, silently matching on shapes too small to reassociate.
+    pub kernel: Option<String>,
     /// Membership change points stamped by the dynamic-topology walk
     /// planner (disruption-window shading in figure plots). Empty on a
     /// static schedule — and, like `codec`, gating the JSON export: the
@@ -44,7 +50,7 @@ pub struct Trace {
 impl Trace {
     /// New empty trace.
     pub fn new(label: &str) -> Self {
-        Self { label: label.to_string(), codec: None, epochs: vec![], points: vec![] }
+        Self { label: label.to_string(), codec: None, kernel: None, epochs: vec![], points: vec![] }
     }
 
     /// Append a point.
@@ -125,6 +131,9 @@ impl Trace {
                 .str("codec", codec)
                 .field("comm_bytes", Json::arr_f64(self.points.iter().map(|p| p.comm_bytes)));
         }
+        if let Some(kernel) = &self.kernel {
+            b = b.str("kernel", kernel);
+        }
         if !self.epochs.is_empty() {
             b = b.field(
                 "epochs",
@@ -193,10 +202,21 @@ mod tests {
         let s = t.to_json().to_string();
         assert!(s.contains("\"label\":\"sI-ADMM\""));
         assert!(s.contains("\"accuracy\":[0.9]"));
-        // Default path: historical shape, no byte columns, no epochs.
+        // Default path: historical shape, no byte columns, no epochs,
+        // no kernel stamp.
         assert!(!s.contains("comm_bytes"));
         assert!(!s.contains("codec"));
         assert!(!s.contains("epochs"));
+        assert!(!s.contains("kernel"));
+    }
+
+    #[test]
+    fn json_gains_kernel_stamp_only_off_the_exact_tier() {
+        let mut t = Trace::new("sI-ADMM");
+        t.push(pt(1, 0.9));
+        t.kernel = Some("fast".into());
+        let s = t.to_json().to_string();
+        assert!(s.contains("\"kernel\":\"fast\""));
     }
 
     #[test]

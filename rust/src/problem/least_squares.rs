@@ -4,7 +4,10 @@
 use super::Objective;
 use crate::data::Split;
 use crate::error::Result;
-use crate::linalg::{cholesky_factor, cholesky_solve, matmul_at_b, CholeskyFactor, Matrix};
+use crate::linalg::{
+    cholesky_factor_blocked, cholesky_solve, matmul_at_b, matmul_at_b_blocked, CholeskyFactor,
+    Matrix,
+};
 use crate::runtime::Engine;
 use std::borrow::Borrow;
 use std::cell::RefCell;
@@ -46,11 +49,15 @@ impl LeastSquares {
         let b = self.data.len() as f64;
         let p = o.cols();
         let d = t.cols();
+        // Blocked AᵀB is bitwise-identical to the reference kernel for
+        // any tile size (the PR 9 determinism contract), so the Gram
+        // bits — and everything downstream, e.g. `lipschitz` on the
+        // golden path — are unchanged.
         let mut gram = Matrix::zeros(p, p);
-        matmul_at_b(o, o, &mut gram);
+        matmul_at_b_blocked(o, o, &mut gram, 1);
         gram.scale(1.0 / b);
         let mut cross = Matrix::zeros(p, d);
-        matmul_at_b(o, t, &mut cross);
+        matmul_at_b_blocked(o, t, &mut cross, 1);
         cross.scale(1.0 / b);
         *self.gram_over_b.borrow_mut() = Some(gram);
         *self.cross_over_b.borrow_mut() = Some(cross);
@@ -113,7 +120,10 @@ impl Objective for LeastSquares {
         for i in 0..p {
             a[(i, i)] += rho;
         }
-        let f = cholesky_factor(&a).expect("Gram + rho I is SPD");
+        // SPD by construction: OᵀO/b ⪰ 0 and ρ > 0 shifts every
+        // eigenvalue off zero, so the blocked factor cannot fail on
+        // finite data.
+        let f = cholesky_factor_blocked(&a).expect("Gram + rho I is SPD");
         let mut rhs = cross.clone();
         rhs.add_scaled(rho, z);
         rhs += y;
@@ -190,6 +200,10 @@ pub fn global_optimum<T: Borrow<LeastSquares>>(objectives: &[T], lambda: f64) ->
     for i in 0..p {
         gram[(i, i)] += lambda;
     }
+    // Deliberately the *unblocked* solver: x* feeds the accuracy metric
+    // of every trace, so its bits are part of the golden-trace
+    // contract; the blocked factor reassociates the trailing update and
+    // would move them for p > its panel width.
     cholesky_solve(&gram, &cross)
 }
 

@@ -13,7 +13,7 @@
 //! the same machinery the least-squares prox caches) converges in a
 //! handful of iterations.
 
-use crate::linalg::{cholesky_factor, Matrix};
+use crate::linalg::{cholesky_factor_blocked_with, Matrix, SolveScratch};
 
 /// Per-example margin family: given the margin `m = ⟨o_j, v⟩` and the
 /// example's reference value `y_j` (label or target), return
@@ -75,6 +75,9 @@ pub(crate) fn newton_prox_column(
     let mut phi_cur = phi(&v, &m);
     let mut dl = vec![0.0; b];
     let mut w = vec![0.0; b];
+    // One Cholesky per Newton step: the blocked factor's panel arena is
+    // reused across all iterations (the Hessian shape never changes).
+    let mut scratch = SolveScratch::new();
     for _ in 0..100 {
         for j in 0..b {
             let (_, d1, d2) = family(m[j], ys[j]);
@@ -117,7 +120,7 @@ pub(crate) fn newton_prox_column(
             }
             h[(a, a)] += reg + rho;
         }
-        let dir = match cholesky_factor(&h) {
+        let dir = match cholesky_factor_blocked_with(&h, &mut scratch) {
             Ok(f) => f.solve(&g),
             // Measure-zero fallback: a plain gradient step scaled by the
             // strong-convexity modulus still descends.

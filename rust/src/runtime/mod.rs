@@ -30,7 +30,7 @@ pub use pjrt::{artifact_name, PjrtEngine};
 pub use workspace::Workspace;
 
 use crate::error::Result;
-use crate::linalg::Matrix;
+use crate::linalg::{KernelTier, Matrix};
 
 /// The per-agent compute interface used on the request path.
 ///
@@ -101,6 +101,16 @@ pub trait Engine {
     /// thread count produces the same bytes.
     fn set_shard_threads(&mut self, threads: usize) {
         let _ = threads;
+    }
+
+    /// Select the kernel tier (`[run] kernel` / `--kernel`):
+    /// [`KernelTier::Exact`] (default) keeps the reference accumulation
+    /// order — golden-trace byte identity holds; [`KernelTier::Fast`]
+    /// runs the 4-lane reassociated inner loops (≤ 1e-12 relative
+    /// parity, no byte-identity guarantee). Engines whose kernels have
+    /// a single numeric path ignore the hint.
+    fn set_kernel_tier(&mut self, tier: KernelTier) {
+        let _ = tier;
     }
 
     /// Engine name for logs.

@@ -3,23 +3,29 @@
 
 use super::{Engine, Workspace};
 use crate::error::Result;
-use crate::linalg::{fused_ls_grad_range, matmul_at_b_blocked, matmul_blocked_into, Matrix, TILE_ROWS};
+use crate::linalg::{
+    fused_ls_grad_range_tiered, matmul_at_b_blocked_tiered, matmul_blocked_into_tiered, KernelTier,
+    Matrix, TILE_ROWS,
+};
 
 /// Native engine over the fused/blocked kernel layer
 /// (`linalg::kernels`), with a [`Workspace`] scratch arena so the hot
-/// loop performs no allocation after warm-up, and optional intra-shard
+/// loop performs no allocation after warm-up, optional intra-shard
 /// scoped-thread parallelism (`shard_threads`; bitwise-identical for
-/// every value — see the kernel module's determinism contract).
+/// every value — see the kernel module's determinism contract), and a
+/// selectable [`KernelTier`] (`Exact` keeps golden byte-identity,
+/// `Fast` runs the 4-lane reassociated loops at ≤ 1e-12 parity).
 #[derive(Default)]
 pub struct NativeEngine {
     ws: Workspace,
     shard_threads: usize,
+    kernel_tier: KernelTier,
 }
 
 impl NativeEngine {
-    /// New engine (sequential: `shard_threads = 1`).
+    /// New engine (sequential: `shard_threads = 1`, tier `Exact`).
     pub fn new() -> Self {
-        Self { ws: Workspace::new(), shard_threads: 1 }
+        Self { ws: Workspace::new(), shard_threads: 1, kernel_tier: KernelTier::Exact }
     }
 
     /// The engine's scratch arena — exposed so tests can assert the
@@ -40,11 +46,12 @@ impl Engine for NativeEngine {
         debug_assert_eq!(o.cols(), p);
         debug_assert_eq!(t.shape(), (m, d));
         let threads = self.threads();
+        let tier = self.kernel_tier;
         let resid = self.ws.resid_full(m, d);
-        matmul_blocked_into(o, x, resid, threads); // resid = O x
-        *resid -= t; //                               resid = O x − T
+        matmul_blocked_into_tiered(o, x, resid, threads, tier); // resid = O x
+        *resid -= t; //                                            resid = O x − T
         let mut out = Matrix::zeros(p, d);
-        matmul_at_b_blocked(o, resid, &mut out, threads); // out = Oᵀ resid
+        matmul_at_b_blocked_tiered(o, resid, &mut out, threads, tier); // out = Oᵀ resid
         out.scale(1.0 / m as f64);
         Ok(out)
     }
@@ -69,12 +76,16 @@ impl Engine for NativeEngine {
         debug_assert_eq!(out.shape(), (p, d));
         let threads = self.threads();
         let tile = self.ws.resid_tile(TILE_ROWS.min(m).max(1), d);
-        fused_ls_grad_range(o_full, t_full, lo, hi, x, tile, out, threads);
+        fused_ls_grad_range_tiered(o_full, t_full, lo, hi, x, tile, out, threads, self.kernel_tier);
         Ok(())
     }
 
     fn set_shard_threads(&mut self, threads: usize) {
         self.shard_threads = threads.max(1);
+    }
+
+    fn set_kernel_tier(&mut self, tier: KernelTier) {
+        self.kernel_tier = tier;
     }
 
     fn name(&self) -> &'static str {
@@ -164,9 +175,41 @@ mod tests {
         }
     }
 
+    /// The fast tier agrees with the exact tier to ≤ 1e-12 relative
+    /// error through the public engine API, and keeps the same
+    /// zero-allocation steady state.
+    #[test]
+    fn fast_tier_matches_exact_tier_through_engine() {
+        let mut rng = Xoshiro256pp::seed_from_u64(85);
+        for &(n, p, d) in &[(70usize, 9usize, 1usize), (48, 13, 4)] {
+            let o = Matrix::from_vec(n, p, (0..n * p).map(|_| rng.normal()).collect()).unwrap();
+            let t = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.normal()).collect()).unwrap();
+            let x = Matrix::from_vec(p, d, (0..p * d).map(|_| rng.normal()).collect()).unwrap();
+            let mut exact_eng = NativeEngine::new();
+            let mut fast_eng = NativeEngine::new();
+            fast_eng.set_kernel_tier(KernelTier::Fast);
+            let ge = exact_eng.grad_batch(&o, &t, &x).unwrap();
+            let gf = fast_eng.grad_batch(&o, &t, &x).unwrap();
+            let scale = ge.as_slice().iter().fold(1.0_f64, |acc, v| acc.max(v.abs()));
+            assert!(ge.max_abs_diff(&gf) / scale < 1e-12, "grad_batch tier gap ({p}x{d})");
+            let mut re = Matrix::zeros(p, d);
+            let mut rf = Matrix::zeros(p, d);
+            exact_eng.grad_batch_range(&o, &t, 2, n - 3, &x, &mut re).unwrap();
+            fast_eng.grad_batch_range(&o, &t, 2, n - 3, &x, &mut rf).unwrap();
+            assert!(re.max_abs_diff(&rf) / scale < 1e-12, "range tier gap ({p}x{d})");
+            // Steady state stays allocation-free on the fast tier too.
+            let warm = fast_eng.workspace().allocations();
+            for _ in 0..5 {
+                fast_eng.grad_batch_range(&o, &t, 2, n - 3, &x, &mut rf).unwrap();
+            }
+            assert_eq!(fast_eng.workspace().allocations(), warm, "fast tier allocated");
+        }
+    }
+
     /// The engine produces bitwise-identical gradients for every
     /// `shard_threads` value — the contract `[run] shard_threads`
-    /// relies on.
+    /// relies on. Holds on *both* tiers: each tier splits only the
+    /// kernel output across threads.
     #[test]
     fn shard_threads_is_bitwise_neutral() {
         let mut rng = Xoshiro256pp::seed_from_u64(84);
@@ -174,22 +217,29 @@ mod tests {
             let o = Matrix::from_vec(n, p, (0..n * p).map(|_| rng.normal()).collect()).unwrap();
             let t = Matrix::from_vec(n, d, (0..n * d).map(|_| rng.normal()).collect()).unwrap();
             let x = Matrix::from_vec(p, d, (0..p * d).map(|_| rng.normal()).collect()).unwrap();
-            let mut reference: Option<Vec<u64>> = None;
-            for threads in [1usize, 2, 3, 4, 7] {
-                let mut eng = NativeEngine::new();
-                eng.set_shard_threads(threads);
-                let mut out = Matrix::zeros(p, d);
-                eng.grad_batch_range(&o, &t, 3, n - 5, &x, &mut out).unwrap();
-                let g = eng.grad_batch(&o, &t, &x).unwrap();
-                let bits: Vec<u64> = out
-                    .as_slice()
-                    .iter()
-                    .chain(g.as_slice())
-                    .map(|v| v.to_bits())
-                    .collect();
-                match &reference {
-                    None => reference = Some(bits),
-                    Some(r) => assert_eq!(r, &bits, "threads {threads} moved bytes ({p}x{d})"),
+            for tier in KernelTier::ALL {
+                let mut reference: Option<Vec<u64>> = None;
+                for threads in [1usize, 2, 3, 4, 7] {
+                    let mut eng = NativeEngine::new();
+                    eng.set_shard_threads(threads);
+                    eng.set_kernel_tier(tier);
+                    let mut out = Matrix::zeros(p, d);
+                    eng.grad_batch_range(&o, &t, 3, n - 5, &x, &mut out).unwrap();
+                    let g = eng.grad_batch(&o, &t, &x).unwrap();
+                    let bits: Vec<u64> = out
+                        .as_slice()
+                        .iter()
+                        .chain(g.as_slice())
+                        .map(|v| v.to_bits())
+                        .collect();
+                    match &reference {
+                        None => reference = Some(bits),
+                        Some(r) => assert_eq!(
+                            r,
+                            &bits,
+                            "threads {threads} moved bytes ({p}x{d}, {tier:?})"
+                        ),
+                    }
                 }
             }
         }

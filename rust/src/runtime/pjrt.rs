@@ -213,6 +213,10 @@ mod real {
             self.fallback.set_shard_threads(threads);
         }
 
+        fn set_kernel_tier(&mut self, tier: crate::linalg::KernelTier) {
+            self.fallback.set_kernel_tier(tier);
+        }
+
         fn name(&self) -> &'static str {
             "pjrt"
         }
@@ -315,6 +319,10 @@ mod stub {
 
         fn set_shard_threads(&mut self, threads: usize) {
             self.fallback.set_shard_threads(threads);
+        }
+
+        fn set_kernel_tier(&mut self, tier: crate::linalg::KernelTier) {
+            self.fallback.set_kernel_tier(tier);
         }
 
         fn name(&self) -> &'static str {

@@ -2,13 +2,13 @@
 //!
 //! A [`Workspace`] owns the named, shape-keyed scratch buffers the
 //! gradient hot loop needs — the residual tile of the fused kernel, the
-//! full residual of `grad_batch`, and the evaluation residual of the
-//! test-loss path — so steady-state rounds perform **zero heap
-//! allocation**: a buffer is (re)allocated only when its requested
+//! full residual of `grad_batch`, the evaluation residual of the
+//! test-loss path, and the blocked-solver panel arena — so steady-state
+//! rounds perform **zero heap allocation**: a buffer is (re)allocated only when its requested
 //! shape changes, and `allocations()` counts exactly those events,
 //! which is what the reuse tests assert.
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SolveScratch};
 
 /// Named scratch buffers with an allocation counter.
 ///
@@ -22,6 +22,9 @@ pub struct Workspace {
     resid_full: Matrix,
     /// Evaluation residual for the test-loss path.
     eval: Matrix,
+    /// Panel/update scratch for the blocked solvers
+    /// ([`crate::linalg::cholesky_factor_blocked_with`]).
+    solve: SolveScratch,
     /// Number of buffer (re)allocations since construction.
     allocations: u64,
 }
@@ -33,6 +36,7 @@ impl Workspace {
             resid_tile: Matrix::zeros(0, 0),
             resid_full: Matrix::zeros(0, 0),
             eval: Matrix::zeros(0, 0),
+            solve: SolveScratch::new(),
             allocations: 0,
         }
     }
@@ -62,6 +66,13 @@ impl Workspace {
     pub fn eval(&mut self, rows: usize, cols: usize) -> &mut Matrix {
         Self::ensure(&mut self.eval, rows, cols, &mut self.allocations);
         &mut self.eval
+    }
+
+    /// Blocked-solver scratch arena ([`SolveScratch`] keeps its own
+    /// reallocate-only-on-shape-change panels, so repeated factors of
+    /// the same-size Gram matrix stay allocation-free).
+    pub fn solve(&mut self) -> &mut SolveScratch {
+        &mut self.solve
     }
 
     /// Number of buffer (re)allocations since construction. Constant

@@ -10,6 +10,7 @@ use crate::data::DatasetName;
 use crate::ecn::BackendKind;
 use crate::error::{Error, Result};
 use crate::latency::LatencyKind;
+use crate::linalg::KernelTier;
 use crate::problem::ObjectiveKind;
 use crate::topology::{ScenarioKind, TopologySpec};
 
@@ -21,9 +22,9 @@ use crate::topology::{ScenarioKind, TopologySpec};
 /// same *cell* and are aggregated by [`crate::sweep::SweepSummary`].
 ///
 /// Expansion order is fixed (objective → algo → S → ε → latency →
-/// backend → topo → M → ρ → quantize-bits → compress → seed, seeds
-/// innermost), so job and cell ids are stable across processes and
-/// independent of how many workers execute the grid.
+/// backend → topo → M → ρ → quantize-bits → compress → kernel → seed,
+/// seeds innermost), so job and cell ids are stable across processes
+/// and independent of how many workers execute the grid.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
     /// Template config; axis values override its fields per job.
@@ -61,6 +62,11 @@ pub struct SweepSpec {
     /// `q<bits>`, `topk`, `randk`, each optionally `+ef`); `cx=` cell
     /// labels. Expands innermost of the non-seed axes.
     pub compress: Vec<CodecSpec>,
+    /// Kernel-tier axis (`[sweep] kernel = exact, fast`; `kern=` cell
+    /// labels): runs the same grid cell on both kernel tiers so their
+    /// traces/summaries are comparable cell-for-cell. Innermost of the
+    /// non-seed axes.
+    pub kernels: Vec<KernelTier>,
     /// Seed axis — runs per cell, aggregated in summaries.
     pub seeds: Vec<u64>,
 }
@@ -80,6 +86,7 @@ impl SweepSpec {
             rhos: vec![base.rho],
             quantize_bits: vec![base.quantize_bits],
             compress: vec![base.comm],
+            kernels: vec![base.kernel],
             seeds: vec![base.seed],
             base,
         }
@@ -151,6 +158,12 @@ impl SweepSpec {
         self
     }
 
+    /// Set the kernel-tier axis.
+    pub fn kernels(mut self, v: Vec<KernelTier>) -> Self {
+        self.kernels = v;
+        self
+    }
+
     /// Set the seed axis.
     pub fn seeds(mut self, v: Vec<u64>) -> Self {
         self.seeds = v;
@@ -170,6 +183,7 @@ impl SweepSpec {
             * self.rhos.len()
             * self.quantize_bits.len()
             * self.compress.len()
+            * self.kernels.len()
     }
 
     /// Total jobs (cells × seeds).
@@ -217,19 +231,22 @@ impl SweepSpec {
                                         for &rho in &self.rhos {
                                             for &bits in &self.quantize_bits {
                                                 for &cx in &self.compress {
-                                                    let mut cfg = self.base.clone();
-                                                    cfg.objective = objective;
-                                                    cfg.algo = algo;
-                                                    cfg.s_tolerated = s;
-                                                    cfg.response.straggler_delay = eps;
-                                                    cfg.latency.kind = lat;
-                                                    cfg.backend = backend;
-                                                    cfg.dynamics = topo.clone();
-                                                    cfg.minibatch = m;
-                                                    cfg.rho = rho;
-                                                    cfg.quantize_bits = bits;
-                                                    cfg.comm = cx;
-                                                    cells.push(cfg);
+                                                    for &kern in &self.kernels {
+                                                        let mut cfg = self.base.clone();
+                                                        cfg.objective = objective;
+                                                        cfg.algo = algo;
+                                                        cfg.s_tolerated = s;
+                                                        cfg.response.straggler_delay = eps;
+                                                        cfg.latency.kind = lat;
+                                                        cfg.backend = backend;
+                                                        cfg.dynamics = topo.clone();
+                                                        cfg.minibatch = m;
+                                                        cfg.rho = rho;
+                                                        cfg.quantize_bits = bits;
+                                                        cfg.comm = cx;
+                                                        cfg.kernel = kern;
+                                                        cells.push(cfg);
+                                                    }
                                                 }
                                             }
                                         }
@@ -297,6 +314,9 @@ impl SweepSpec {
         if self.compress.len() > 1 {
             label.push_str(&format!(" cx={}", cfg.comm.as_str()));
         }
+        if self.kernels.len() > 1 {
+            label.push_str(&format!(" kern={}", cfg.kernel.as_str()));
+        }
         label
     }
 
@@ -322,6 +342,8 @@ impl SweepSpec {
     /// minibatch = 16, 32
     /// rho = 0.08
     /// compress = identity, q8, topk+ef # token-codec axis (the compressor zoo)
+    /// kernel = exact, fast             # kernel-tier axis (cell-for-cell
+    /// #                                  exact-vs-fast comparisons)
     /// # quantize_bits = none, 16       # legacy alias of compress (q<bits>);
     /// #                                  crossing it with a non-identity
     /// #                                  compress axis is rejected by expand()
@@ -429,6 +451,16 @@ impl SweepSpec {
                         Error::Config(format!("sweep.compress: unknown codec '{t}'"))
                     })?;
                     crate::config::apply_comm_params(parsed, doc)
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(tokens) = doc.get_list(sec, "kernel") {
+            spec.kernels = tokens
+                .iter()
+                .map(|t| {
+                    KernelTier::parse(t).ok_or_else(|| {
+                        Error::Config(format!("sweep.kernel: unknown kernel tier '{t}'"))
+                    })
                 })
                 .collect::<Result<Vec<_>>>()?;
         }
@@ -702,6 +734,35 @@ mod tests {
         // Single-value compress axis stays out of labels entirely.
         let jobs = SweepSpec::new(RunConfig::default()).minibatches(vec![8, 16]).expand().unwrap();
         assert_eq!(jobs[0].label, "sI-ADMM M=8");
+    }
+
+    #[test]
+    fn kernel_axis_expands_innermost_with_labels() {
+        let spec = SweepSpec::new(RunConfig::default())
+            .minibatches(vec![8, 16])
+            .kernels(vec![KernelTier::Exact, KernelTier::Fast]);
+        assert_eq!(spec.num_cells(), 4);
+        let jobs = spec.expand().unwrap();
+        // Kernel is the innermost non-seed axis: tiers cycle fastest,
+        // so exact/fast of the same M land in adjacent cells.
+        assert_eq!(jobs[0].cfg.kernel, KernelTier::Exact);
+        assert_eq!(jobs[1].cfg.kernel, KernelTier::Fast);
+        assert_eq!(jobs[1].cfg.minibatch, 8);
+        assert_eq!(jobs[2].cfg.minibatch, 16);
+        assert_eq!(jobs[0].label, "sI-ADMM M=8 kern=exact");
+        assert_eq!(jobs[3].label, "sI-ADMM M=16 kern=fast");
+        // Single-value kernel axis stays out of labels entirely.
+        let jobs = SweepSpec::new(RunConfig::default()).minibatches(vec![8, 16]).expand().unwrap();
+        assert_eq!(jobs[0].label, "sI-ADMM M=8");
+    }
+
+    #[test]
+    fn from_doc_reads_kernel_axis() {
+        let doc = ConfigDoc::parse("[run]\nk_ecn = 2\n\n[sweep]\nkernel = exact, fast\n").unwrap();
+        let (spec, _) = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.kernels, vec![KernelTier::Exact, KernelTier::Fast]);
+        let bad = ConfigDoc::parse("[sweep]\nkernel = warp\n").unwrap();
+        assert!(SweepSpec::from_doc(&bad).is_err());
     }
 
     #[test]

@@ -88,6 +88,31 @@ fn run_sweep_and_every_flag_parse_path() {
         "--shard-threads 2 must be byte-identical to the sequential run"
     );
 
+    // Kernel tiers: an explicit --kernel exact is byte-identical to
+    // the default artifact (the golden guarantee), while a fast-tier
+    // artifact carries the "kernel":"fast" stamp — so byte-comparing
+    // it against an exact (golden) trace fails loudly rather than
+    // silently diverging (or silently matching on shapes too small
+    // for the 4-lane loops to reassociate anything).
+    assert_ok(&["run", "--quick", "--config", CONFIG]);
+    let default_bytes = std::fs::read(&trace).expect("default trace artifact");
+    assert_ok(&["run", "--quick", "--config", CONFIG, "--kernel", "exact"]);
+    let exact_bytes = std::fs::read(&trace).expect("exact-tier trace artifact");
+    assert_eq!(
+        default_bytes, exact_bytes,
+        "--kernel exact must be byte-identical to the default run"
+    );
+    assert_ok(&["run", "--quick", "--config", CONFIG, "--kernel", "fast"]);
+    let fast_bytes = std::fs::read(&trace).expect("fast-tier trace artifact");
+    assert!(
+        String::from_utf8_lossy(&fast_bytes).contains("\"kernel\": \"fast\""),
+        "fast-tier artifact must carry the kernel stamp"
+    );
+    assert_ne!(
+        fast_bytes, exact_bytes,
+        "a fast-tier artifact must never byte-match an exact (golden) trace"
+    );
+
     // The whole latency zoo.
     for latency in ["uniform", "shifted-exp", "pareto", "slownode", "bimodal"] {
         assert_ok(&["run", "--quick", "--config", CONFIG, "--latency", latency]);
@@ -102,7 +127,7 @@ fn run_sweep_and_every_flag_parse_path() {
     }
 
     // The bench-scale harness, quick grid, to its own artifact path
-    // (never the default BENCH_pr9.json — that file is the committed
+    // (never the default BENCH_pr10.json — that file is the committed
     // baseline and must stay clean under the test tree).
     assert_ok(&[
         "bench-scale",
@@ -139,8 +164,19 @@ fn bad_flag_values_fail_cleanly() {
     assert_config_error(&["run", "--quick", "--config", CONFIG, "--latency", "warp"]);
     assert_config_error(&["run", "--quick", "--config", CONFIG, "--compress", "zip"]);
     assert_config_error(&["run", "--quick", "--config", CONFIG, "--topology", "mesh"]);
+    assert_config_error(&["run", "--quick", "--config", CONFIG, "--kernel", "warp"]);
     // `run` takes exactly one value per flag; lists belong to `sweep`.
     assert_config_error(&["run", "--quick", "--config", CONFIG, "--backend", "sim,threaded"]);
+    assert_config_error(&["run", "--quick", "--config", CONFIG, "--kernel", "exact,fast"]);
+    // bench-scale rejects an unknown tier before touching the grid.
+    assert_config_error(&[
+        "bench-scale",
+        "--quick",
+        "--kernel",
+        "warp",
+        "--out",
+        "results/cli_smoke_bench_reject.json",
+    ]);
     // shard_threads = 0 is a config error on both subcommands that
     // accept it (1 is the sequential floor).
     assert_config_error(&["run", "--quick", "--config", CONFIG, "--shard-threads", "0"]);

@@ -14,6 +14,7 @@
 
 use csadmm::coordinator::{Driver, RunConfig};
 use csadmm::data::synthetic_small;
+use csadmm::linalg::KernelTier;
 use csadmm::runtime::NativeEngine;
 use std::path::Path;
 
@@ -87,6 +88,34 @@ fn shard_threads_render_the_exact_golden_bytes() {
             "shard_threads = {threads} perturbed the golden trace bytes"
         );
     }
+}
+
+/// The exact kernel tier is the byte-identity tier: requesting it
+/// explicitly (rather than by default) renders exactly the golden
+/// bytes. The fast tier, by contract, stamps `"kernel":"fast"` into
+/// the artifact, so it can never silently pass this comparison — the
+/// CI guard relies on both halves.
+#[test]
+fn exact_kernel_tier_renders_the_exact_golden_bytes() {
+    let sequential = render_trace();
+    let ds = synthetic_small(400, 40, 0.1, 77);
+    let cfg = RunConfig { kernel: KernelTier::Exact, ..golden_cfg() };
+    let mut driver = Driver::new(cfg, &ds).expect("exact-tier golden driver builds");
+    let trace = driver.run(&mut NativeEngine::new()).expect("exact-tier golden run succeeds");
+    assert_eq!(
+        trace.to_json().to_string(),
+        sequential,
+        "kernel = exact perturbed the golden trace bytes"
+    );
+    let fast_cfg = RunConfig { kernel: KernelTier::Fast, ..golden_cfg() };
+    let mut driver = Driver::new(fast_cfg, &ds).expect("fast-tier golden driver builds");
+    let trace = driver.run(&mut NativeEngine::new()).expect("fast-tier golden run succeeds");
+    assert_ne!(
+        trace.to_json().to_string(),
+        sequential,
+        "a fast-tier artifact must never byte-match the golden trace (the kernel \
+         stamp guarantees this even where the 4-lane loops happen not to reassociate)"
+    );
 }
 
 /// The golden config sanity-checks itself: evaluation points land where
